@@ -1,0 +1,58 @@
+"""Tables 8-10: ablations — |D| hops, sample count, decay function."""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import EstimatorConfig
+from repro.index import (
+    AdaEfConfig,
+    brute_force_topk_chunked,
+    build_ada_index,
+    build_index,
+    prepare_queries,
+    recall_at_k,
+)
+from .common import DATASETS, emit, recall_stats
+
+
+def run(dataset="zipf_cluster", k=10, quick=True):
+    data, queries = DATASETS[dataset]()
+    if quick:
+        data, queries = data[:5000], queries[:128]
+    qp = prepare_queries(jnp.asarray(queries), "cos_dist")
+    _, gt = brute_force_topk_chunked(qp, data, k=k)
+    gt = jnp.asarray(gt)
+    host = build_index(data, m=8, ef_construction=100)
+
+    # Table 8: |D| hops
+    for hops in (1, 2, 3):
+        idx = build_ada_index(data, k=k, target_recall=0.95, m=8, ef_cap=400,
+                              num_samples=96, host_index=host,
+                              ada_cfg=AdaEfConfig(hops=hops))
+        res = idx.query(queries)
+        rec = np.asarray(recall_at_k(res.ids, gt))
+        emit(f"ablation.hops{hops}", idx.timings.ef_table_s * 1e6,
+             f"{recall_stats(rec)} ndist={np.asarray(res.ndist).mean():.0f}")
+
+    # Table 9: sample count
+    for num in (50, 200, 500):
+        idx = build_ada_index(data, k=k, target_recall=0.95, m=8, ef_cap=400,
+                              num_samples=num, host_index=host)
+        res = idx.query(queries)
+        rec = np.asarray(recall_at_k(res.ids, gt))
+        emit(f"ablation.samples{num}",
+             (idx.timings.sample_s + idx.timings.ef_table_s) * 1e6,
+             f"{recall_stats(rec)} ndist={np.asarray(res.ndist).mean():.0f}")
+
+    # Table 10: decay function
+    for decay in ("none", "linear", "exp"):
+        idx = build_ada_index(data, k=k, target_recall=0.95, m=8, ef_cap=400,
+                              num_samples=96, host_index=host,
+                              ada_cfg=AdaEfConfig(estimator=EstimatorConfig(decay=decay)))
+        res = idx.query(queries)
+        rec = np.asarray(recall_at_k(res.ids, gt))
+        emit(f"ablation.decay_{decay}", 0.0,
+             f"{recall_stats(rec)} ndist={np.asarray(res.ndist).mean():.0f}")
+
+
+if __name__ == "__main__":
+    run()

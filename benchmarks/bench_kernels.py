@@ -1,0 +1,55 @@
+"""Kernel micro-benchmarks: Pallas (interpret) vs jnp reference wall-time on
+CPU is NOT meaningful for TPU perf — this bench validates numerics at bench
+shapes and reports the jnp-reference throughput as the CPU baseline."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops, ref
+from .common import emit, timed
+
+RNG = np.random.default_rng(0)
+
+
+def run(quick=True):
+    # distance: ef-search frontier shape
+    q = jnp.asarray(RNG.normal(0, 1, (256, 512)).astype(np.float32))
+    v = jnp.asarray(RNG.normal(0, 1, (4096, 512)).astype(np.float32))
+    ref_fn = jax.jit(lambda a, b: ref.distance_ref(a, b))
+    _, dt = timed(lambda: jax.block_until_ready(ref_fn(q, v)), repeats=5)
+    got = ops.pairwise_distance(q, v, use_kernel=True, interpret=True)
+    err = float(jnp.max(jnp.abs(got - ref_fn(q, v))))
+    emit("kernels.distance.256x4096x512", dt * 1e6, f"interpret_maxerr={err:.2e}")
+
+    sigma = RNG.normal(0, 1, (1536, 1536)).astype(np.float32)
+    sigma = sigma @ sigma.T / 1536
+    qq = jnp.asarray(RNG.normal(0, 1, (64, 1536)).astype(np.float32))
+    ref_fn = jax.jit(lambda a, s: ref.qform_ref(a, s))
+    _, dt = timed(lambda: jax.block_until_ready(ref_fn(qq, jnp.asarray(sigma))), repeats=5)
+    got = ops.quadratic_form(qq, jnp.asarray(sigma), use_kernel=True, interpret=True)
+    err = float(jnp.max(jnp.abs(got - ref_fn(qq, jnp.asarray(sigma))) / jnp.abs(ref_fn(qq, jnp.asarray(sigma)))))
+    emit("kernels.qform.64x1536", dt * 1e6, f"interpret_relerr={err:.2e}")
+
+    d = jnp.asarray(np.sort(RNG.normal(1, 0.1, (128, 1088))).astype(np.float32))
+    t = jnp.asarray(np.sort(RNG.normal(0.9, 0.05, (128, 10)), axis=1).astype(np.float32))
+    w = jnp.asarray((100 * np.exp(-np.arange(10))).astype(np.float32))
+    valid = jnp.ones((128, 1088), jnp.float32)
+    ref_fn = jax.jit(lambda *a: ref.binscore_ref(*a))
+    _, dt = timed(lambda: jax.block_until_ready(ref_fn(d, t, w, valid)), repeats=5)
+    got = ops.binscore_raw(d, t, w, valid, use_kernel=True, interpret=True)
+    err = float(jnp.max(jnp.abs(got - ref_fn(d, t, w, valid))))
+    emit("kernels.binscore.128x1088x10", dt * 1e6, f"interpret_maxerr={err:.2e}")
+
+    b, h, hk, s, dd = 1, 8, 2, 1024, 64
+    qa = jnp.asarray(RNG.normal(0, 1, (b, h, s, dd)).astype(np.float32))
+    ka = jnp.asarray(RNG.normal(0, 1, (b, hk, s, dd)).astype(np.float32))
+    va = jnp.asarray(RNG.normal(0, 1, (b, hk, s, dd)).astype(np.float32))
+    ref_fn = jax.jit(lambda *a: ref.mha_ref(*a, causal=True))
+    _, dt = timed(lambda: jax.block_until_ready(ref_fn(qa, ka, va)), repeats=3)
+    got = ops.flash_attention(qa, ka, va, causal=True, use_kernel=True, bq=256, bk=256, interpret=True)
+    err = float(jnp.max(jnp.abs(got - ref_fn(qa, ka, va))))
+    emit("kernels.flash_attn.1x8x1024x64", dt * 1e6, f"interpret_maxerr={err:.2e}")
+
+
+if __name__ == "__main__":
+    run()

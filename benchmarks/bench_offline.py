@@ -1,0 +1,53 @@
+"""Tables 2-3: offline computation time and memory, Ada-ef vs LAET/DARTH."""
+import numpy as np
+
+from repro.core import stats_nbytes
+from repro.index import build_ada_index, build_index, fit_darth, fit_laet
+from .common import DATASETS, emit, timed
+
+
+def run(datasets=("glove_like", "zipf_cluster"), k=10, quick=True):
+    for name in datasets:
+        data, _ = DATASETS[name]()
+        if quick:
+            data = data[:5000]
+        # HNSW construction reference
+        import time
+
+        t0 = time.perf_counter()
+        host = build_index(data, m=8, ef_construction=100)
+        t_index = time.perf_counter() - t0
+        emit(f"offline.{name}.hnsw_build", t_index * 1e6, f"n={len(data)}")
+
+        t0 = time.perf_counter()
+        idx = build_ada_index(data, k=k, target_recall=0.95, m=8,
+                              ef_construction=100, ef_cap=400, num_samples=128,
+                              host_index=host)
+        t_ada = idx.timings
+        emit(
+            f"offline.{name}.ada_ef",
+            t_ada.total_s * 1e6,
+            f"stats={t_ada.stats_s:.2f}s samp={t_ada.sample_s:.2f}s "
+            f"table={t_ada.ef_table_s:.2f}s frac_of_index={t_ada.total_s / t_index:.3f}",
+        )
+        mem_ada = stats_nbytes(idx.stats) + idx.table.nbytes() + idx.sample_gt.nbytes
+        emit(f"offline.{name}.ada_ef_mem", 0.0,
+             f"bytes={mem_ada} index_bytes={host.freeze().nbytes()}")
+
+        # learned baselines offline cost
+        laet = fit_laet(idx.graph, data, cfg=idx.search_cfg, num_learn=256 if quick else 1000)
+        t = laet.offline_seconds
+        total = sum(t.values())
+        emit(f"offline.{name}.laet", total * 1e6,
+             f"lvec_gt={t['lvec_gt_s']:.2f}s tdata={t['tdata_s']:.2f}s train={t['train_s']:.2f}s "
+             f"x{total / max(t_ada.total_s, 1e-9):.1f} vs ada")
+        darth = fit_darth(idx.graph, data, cfg=idx.search_cfg, num_learn=256 if quick else 1000)
+        t = darth.offline_seconds
+        total = sum(t.values())
+        emit(f"offline.{name}.darth", total * 1e6,
+             f"lvec_gt={t['lvec_gt_s']:.2f}s tdata={t['tdata_s']:.2f}s train={t['train_s']:.2f}s "
+             f"x{total / max(t_ada.total_s, 1e-9):.1f} vs ada")
+
+
+if __name__ == "__main__":
+    run()

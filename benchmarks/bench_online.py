@@ -1,0 +1,114 @@
+"""Figure 4/5/6: online search — Ada-ef vs static HNSW vs PiP vs LAET/DARTH.
+
+Reports, per dataset: avg/P5/P1 recall, wall time per query batch, and the
+paper's hardware-neutral work metric (distance computations/query).  Also
+emits the adaptive-ef distribution (Fig 5) and per-query latency-proxy CDF
+deciles (Fig 6).
+"""
+from __future__ import annotations
+
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.index import (
+    SearchConfig,
+    brute_force_topk_chunked,
+    build_ada_index,
+    fit_darth,
+    fit_laet,
+    prepare_queries,
+    recall_at_k,
+    search,
+)
+from .common import DATASETS, emit, recall_stats
+
+
+def run(datasets=("glove_like", "zipf_cluster"), k=10, target=0.95, quick=True):
+    for name in datasets:
+        data, queries = DATASETS[name]()
+        if quick:
+            data, queries = data[:6000], queries[:192]
+        qp = prepare_queries(jnp.asarray(queries), "cos_dist")
+        _, gt = brute_force_topk_chunked(qp, data, k=k)
+        gt = jnp.asarray(gt)
+
+        idx = build_ada_index(
+            data, k=k, target_recall=target, m=8, ef_construction=100,
+            ef_cap=400, num_samples=128,
+        )
+
+        # --- Ada-ef ---------------------------------------------------------
+        res = idx.query(queries)  # includes compile
+        t0 = time.perf_counter()
+        res = idx.query(queries)
+        dt = time.perf_counter() - t0
+        rec = np.asarray(recall_at_k(res.ids, gt))
+        nd = np.asarray(res.ndist)
+        emit(
+            f"online.{name}.ada_ef",
+            dt / len(queries) * 1e6,
+            f"{recall_stats(rec)} ndist={nd.mean():.0f}",
+        )
+        efs = np.asarray(res.ef_used)
+        emit(
+            f"online.{name}.ada_ef.ef_dist",
+            0.0,
+            "p0/25/50/75/95/100=" + "/".join(str(int(x)) for x in np.percentile(efs, [0, 25, 50, 75, 95, 100])),
+        )
+        emit(
+            f"online.{name}.ada_ef.latency_cdf",
+            0.0,
+            "ndist_deciles=" + "/".join(str(int(x)) for x in np.percentile(nd, np.arange(10, 101, 10))),
+        )
+
+        # --- static HNSW sweep (HNSWlib/FAISS reference behavior) ------------
+        for ef in (k, 2 * k, 4 * k, 10 * k):
+            r = idx.query_static(queries, ef)
+            t0 = time.perf_counter()
+            r = idx.query_static(queries, ef)
+            dt = time.perf_counter() - t0
+            rr = np.asarray(recall_at_k(r.ids, gt))
+            emit(
+                f"online.{name}.static_ef{ef}",
+                dt / len(queries) * 1e6,
+                f"{recall_stats(rr)} ndist={np.asarray(r.ndist).mean():.0f}",
+            )
+
+        # --- PiP -------------------------------------------------------------
+        cfgp = SearchConfig(k=k, ef_cap=400, patience=30)
+        r = search(idx.graph, jnp.asarray(queries), 400, cfgp)
+        t0 = time.perf_counter()
+        r = search(idx.graph, jnp.asarray(queries), 400, cfgp)
+        dt = time.perf_counter() - t0
+        rr = np.asarray(recall_at_k(r.ids, gt))
+        emit(
+            f"online.{name}.pip",
+            dt / len(queries) * 1e6,
+            f"{recall_stats(rr)} ndist={np.asarray(r.ndist).mean():.0f}",
+        )
+
+        # --- learned baselines (LAET / DARTH style) --------------------------
+        laet = fit_laet(idx.graph, data, cfg=idx.search_cfg, target_recall=target,
+                        num_learn=256 if quick else 1000)
+        r = laet.query(queries, target)
+        rr = np.asarray(recall_at_k(jnp.asarray(np.asarray(r.ids)), gt))
+        emit(
+            f"online.{name}.laet",
+            0.0,
+            f"{recall_stats(rr)} ndist={np.asarray(r.ndist).mean():.0f}",
+        )
+        darth = fit_darth(idx.graph, data, cfg=idx.search_cfg,
+                          num_learn=256 if quick else 1000)
+        r = darth.query(queries, target)
+        rr = np.asarray(recall_at_k(jnp.asarray(np.asarray(r.ids)), gt))
+        emit(
+            f"online.{name}.darth",
+            0.0,
+            f"{recall_stats(rr)} ndist={np.asarray(r.ndist).mean():.0f}",
+        )
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,35 @@
+"""Figure 1: recall distribution of static-ef HNSW search (motivating example).
+
+Shows the paper's two observations: (i) different datasets need different ef
+for the same recall; (ii) a large fraction of queries sit far above/below the
+average (over/under-searching)."""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.index import brute_force_topk_chunked, build_ada_index, prepare_queries, recall_at_k
+from .common import DATASETS, emit
+
+
+def run(datasets=("glove_like", "openai_like"), k=10, quick=True):
+    for name in datasets:
+        data, queries = DATASETS[name]()
+        if quick:
+            data, queries = data[:5000], queries[:192]
+        qp = prepare_queries(jnp.asarray(queries), "cos_dist")
+        _, gt = brute_force_topk_chunked(qp, data, k=k)
+        gt = jnp.asarray(gt)
+        idx = build_ada_index(data, k=k, target_recall=0.95, m=8,
+                              ef_construction=100, ef_cap=400, num_samples=64)
+        for ef in (k, 2 * k):
+            res = idx.query_static(queries, ef)
+            rec = np.asarray(recall_at_k(res.ids, gt))
+            hist, _ = np.histogram(rec, bins=np.linspace(0, 1.0001, 11))
+            emit(
+                f"recall_dist.{name}.ef{ef}",
+                0.0,
+                f"avg={rec.mean():.3f} hist10={'/'.join(map(str, hist))}",
+            )
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,30 @@
+"""Figure 7: sensitivity to k and target recall."""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.index import brute_force_topk_chunked, build_ada_index, prepare_queries, recall_at_k
+from .common import DATASETS, emit, recall_stats
+
+
+def run(dataset="zipf_cluster", quick=True):
+    data, queries = DATASETS[dataset]()
+    if quick:
+        data, queries = data[:5000], queries[:128]
+    for k in (10, 50):
+        qp = prepare_queries(jnp.asarray(queries), "cos_dist")
+        _, gt = brute_force_topk_chunked(qp, data, k=k)
+        gt = jnp.asarray(gt)
+        idx = build_ada_index(data, k=k, target_recall=0.95, m=8,
+                              ef_construction=100, ef_cap=500, num_samples=96)
+        for target in (0.9, 0.95, 0.99):
+            res = idx.query(queries, target_recall=target)
+            rec = np.asarray(recall_at_k(res.ids, gt))
+            emit(
+                f"sensitivity.{dataset}.k{k}.target{target}",
+                0.0,
+                f"{recall_stats(rec)} ndist={np.asarray(res.ndist).mean():.0f}",
+            )
+
+
+if __name__ == "__main__":
+    run()

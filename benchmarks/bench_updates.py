@@ -1,0 +1,61 @@
+"""Tables 4-7: incremental insertion/deletion — stale vs incremental vs recomputed."""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.index import brute_force_topk_chunked, build_ada_index, prepare_queries, recall_at_k
+from .common import DATASETS, emit, recall_stats
+
+
+def _eval(idx, queries, data_now, k):
+    qp = prepare_queries(jnp.asarray(queries), "cos_dist")
+    _, gt = brute_force_topk_chunked(qp, data_now, k=k)
+    res = idx.query(queries)
+    rec = np.asarray(recall_at_k(res.ids, jnp.asarray(gt)))
+    return rec, np.asarray(res.ndist).mean()
+
+
+def run(dataset="zipf_cluster", k=10, quick=True):
+    data, queries = DATASETS[dataset]()
+    if quick:
+        data, queries = data[:6000], queries[:128]
+    for frac in (0.1, 0.5):
+        n_upd = int(len(data) * frac / (1 + frac))
+        base, extra = data[:-n_upd], data[-n_upd:]
+
+        # ---- insertion ----
+        idx = build_ada_index(base, k=k, target_recall=0.95, m=8,
+                              ef_construction=80, ef_cap=400, num_samples=96)
+        stale_stats = idx.stats  # snapshot for "stale" variant
+        stale_table = idx.table
+        t = idx.insert(extra)  # incremental (§6.3)
+        emit(f"updates.insert.bs{int(frac*100)}.time", t["stats_s"] * 1e6,
+             f"stats={t['stats_s']:.3f}s samp={t['sample_s']:.3f}s table={t['ef_table_s']:.3f}s "
+             f"index={t['index_s']:.1f}s")
+        rec, nd = _eval(idx, queries, data, k)
+        emit(f"updates.insert.bs{int(frac*100)}.incr", 0.0, f"{recall_stats(rec)} ndist={nd:.0f}")
+        # stale: old stats/table on the updated graph
+        incr_stats, incr_table = idx.stats, idx.table
+        idx.stats, idx.table = stale_stats, stale_table
+        rec, nd = _eval(idx, queries, data, k)
+        emit(f"updates.insert.bs{int(frac*100)}.stale", 0.0, f"{recall_stats(rec)} ndist={nd:.0f}")
+        idx.stats, idx.table = incr_stats, incr_table
+
+        # recomputed from scratch
+        reco = build_ada_index(data, k=k, target_recall=0.95, m=8,
+                               ef_construction=80, ef_cap=400, num_samples=96)
+        rec, nd = _eval(reco, queries, data, k)
+        emit(f"updates.insert.bs{int(frac*100)}.reco", 0.0, f"{recall_stats(rec)} ndist={nd:.0f}")
+
+        # ---- deletion ----
+        idx2 = build_ada_index(data, k=k, target_recall=0.95, m=8,
+                               ef_construction=80, ef_cap=400, num_samples=96)
+        dead = np.arange(len(data) - n_upd, len(data))
+        t = idx2.delete(dead)
+        emit(f"updates.delete.bs{int(frac*100)}.time", t["stats_s"] * 1e6,
+             f"stats={t['stats_s']:.3f}s samp={t['sample_s']:.3f}s table={t['ef_table_s']:.3f}s")
+        rec, nd = _eval(idx2, queries, base, k)
+        emit(f"updates.delete.bs{int(frac*100)}.incr", 0.0, f"{recall_stats(rec)} ndist={nd:.0f}")
+
+
+if __name__ == "__main__":
+    run()

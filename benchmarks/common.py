@@ -1,0 +1,106 @@
+"""Shared benchmark infrastructure: dataset generators matching the paper's
+workload statistics (§7.1), timing, and CSV reporting.
+
+The paper's six real datasets are not redistributable offline; generators
+reproduce their *distributional character* at a documented scale factor:
+
+- ``glove_like``    : anisotropic low-d word-style vectors with frequency-skew
+                      hubs (norm + direction concentration).
+- ``openai_like``   : high-d (1536) normalized embeddings clustered on a cone
+                      (ada-002-style anisotropy).
+- ``uniform_cluster`` / ``zipf_cluster``: the paper's own synthetic suites
+                      (Gaussian clusters; equal vs Zipf(1) sizes), downscaled.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, Tuple
+
+import numpy as np
+
+SCALE_NOTE = "scaled: n~=1e4 vs paper 1e7 (factor ~1e3); trends, not absolutes"
+
+
+def glove_like(n=8000, d=100, nq=256, seed=0):
+    rng = np.random.default_rng(seed)
+    nc = 64
+    freq = 1.0 / np.arange(1, nc + 1) ** 1.1
+    freq /= freq.sum()
+    centers = rng.normal(0, 1, (nc, d))
+    # frequency-correlated norms: frequent words have larger norms (hubness)
+    norms = 1.0 + 3.0 * freq[:, None] / freq.max()
+    assign = rng.choice(nc, size=n, p=freq)
+    data = centers[assign] * norms[assign] + 0.45 * rng.normal(0, 1, (n, d))
+    qa = rng.choice(nc, size=nq, p=freq)
+    queries = centers[qa] * norms[qa] + 0.45 * rng.normal(0, 1, (nq, d))
+    return data.astype(np.float32), queries.astype(np.float32)
+
+
+def openai_like(n=6000, d=512, nq=192, seed=1):
+    rng = np.random.default_rng(seed)
+    nc = 48
+    # anisotropic cone: shared dominant direction + cluster offsets
+    dom = rng.normal(0, 1, (1, d))
+    dom /= np.linalg.norm(dom)
+    centers = 2.0 * dom + 0.7 * rng.normal(0, 1, (nc, d))
+    assign = rng.integers(0, nc, n)
+    data = centers[assign] + 0.25 * rng.normal(0, 1, (n, d))
+    data /= np.linalg.norm(data, axis=1, keepdims=True)
+    qa = rng.integers(0, nc, nq)
+    queries = centers[qa] + 0.25 * rng.normal(0, 1, (nq, d))
+    queries /= np.linalg.norm(queries, axis=1, keepdims=True)
+    return data.astype(np.float32), queries.astype(np.float32)
+
+
+def _cluster(n, d, nq, seed, zipf: bool):
+    rng = np.random.default_rng(seed)
+    nc = 100
+    w = (1.0 / np.arange(1, nc + 1)) if zipf else np.ones(nc)
+    w = w / w.sum()
+    centers = rng.normal(0, 1, (nc, d))
+    assign = rng.choice(nc, size=n, p=w)
+    data = centers[assign] + 0.3 * rng.normal(0, 1, (n, d))
+    qa = rng.choice(nc, size=nq, p=w)
+    queries = centers[qa] + 0.3 * rng.normal(0, 1, (nq, d))
+    return data.astype(np.float32), queries.astype(np.float32)
+
+
+def uniform_cluster(n=8000, d=100, nq=256, seed=2):
+    return _cluster(n, d, nq, seed, zipf=False)
+
+
+def zipf_cluster(n=8000, d=100, nq=256, seed=3):
+    return _cluster(n, d, nq, seed, zipf=True)
+
+
+DATASETS: Dict[str, Callable[[], Tuple[np.ndarray, np.ndarray]]] = {
+    "glove_like": glove_like,
+    "openai_like": openai_like,
+    "uniform_cluster": uniform_cluster,
+    "zipf_cluster": zipf_cluster,
+}
+
+
+def timed(fn, *args, repeats=1, **kwargs):
+    fn(*args, **kwargs)  # warmup / compile
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        out = fn(*args, **kwargs)
+    dt = (time.perf_counter() - t0) / repeats
+    return out, dt
+
+
+_rows = []
+
+
+def emit(name: str, us_per_call: float, derived: str = ""):
+    """CSV contract: name,us_per_call,derived."""
+    _rows.append((name, us_per_call, derived))
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def recall_stats(rec: np.ndarray) -> str:
+    return (
+        f"avg={rec.mean():.3f} p5={np.percentile(rec, 5):.3f} "
+        f"p1={np.percentile(rec, 1):.3f}"
+    )

@@ -1,0 +1,129 @@
+"""§Roofline: derive the three roofline terms per (arch x shape x mesh) from
+the dry-run's compiled artifacts (results/dryrun_*.json).
+
+Hardware model (TPU v5e): 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+
+All extracted quantities (flops / bytes / collective bytes) are PER-CHIP
+(the compiled module is the per-device SPMD program), so:
+
+    compute    = flops_per_chip / 197e12          [s]
+    memory     = bytes_per_chip / 819e9           [s]
+    collective = coll_bytes_per_chip / 50e9       [s]
+
+MODEL_FLOPS uses 6*N*D (train) / 2*N*D (prefill) / 2*N*B (decode) with
+N = active non-embedding params (MoE: top-k fraction); the ratio
+MODEL_FLOPS / HLO_FLOPS exposes remat/redundancy waste.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, List
+
+from .common import emit
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+CHIPS = {"single": 256, "multi": 512}
+
+SHAPE_TOKENS = {
+    "train_4k": 4096 * 256,
+    "prefill_32k": 32768 * 32,
+    "decode_32k": 128,        # one token per sequence
+    "long_500k": 1,
+}
+
+
+def model_flops(rec: Dict) -> float:
+    n_active = rec["params"]["non_embedding"] * rec.get("active_fraction", 1.0)
+    tokens = SHAPE_TOKENS[rec["shape"]]
+    mult = 6.0 if rec["kind"] == "train" else 2.0
+    return mult * n_active * tokens
+
+
+def bottleneck_advice(rec: Dict, dom: str) -> str:
+    if dom == "compute":
+        if rec.get("useful_ratio", 1) < 0.5:
+            return "reduce recompute (remat policy / flash-bwd reuse)"
+        return "increase per-chip arithmetic intensity (larger microbatch)"
+    if dom == "memory":
+        if rec["kind"] == "decode":
+            return "KV-cache streaming dominates; quantize cache or widen batch"
+        return "fuse elementwise chains / cut fp32 intermediates to bf16"
+    return "reshard to cut collective volume (FSDP gather batching, EP locality)"
+
+
+def analyze(paths=("results/dryrun_single.json", "results/dryrun_multi.json"),
+            out_md="results/roofline.md") -> List[Dict]:
+    rows = []
+    for path in paths:
+        if not os.path.exists(path):
+            continue
+        for rec in json.load(open(path)):
+            if rec.get("status") != "ok":
+                continue
+            flops = rec.get("weighted_flops") or rec.get("flops", 0.0)
+            byts = rec.get("weighted_bytes") or rec.get("bytes_accessed", 0.0)
+            coll = rec.get("collectives", {}).get("total", 0)
+            t_c = flops / PEAK_FLOPS
+            t_m = byts / HBM_BW
+            t_n = coll / LINK_BW
+            dom = max((("compute", t_c), ("memory", t_m), ("collective", t_n)),
+                      key=lambda kv: kv[1])[0]
+            mf = model_flops(rec)
+            chips = CHIPS[rec["mesh"]]
+            ratio = (mf / chips) / max(flops, 1.0)
+            step_time = max(t_c, t_m, t_n)
+            mfu = (mf / chips / max(step_time, 1e-12)) / PEAK_FLOPS
+            row = {
+                "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+                "kind": rec["kind"],
+                "compute_s": t_c, "memory_s": t_m, "collective_s": t_n,
+                "dominant": dom, "model_flops": mf, "useful_ratio": ratio,
+                "roofline_mfu": mfu,
+                "mem_gb": rec["memory"]["temp_size_in_bytes"] / 1e9
+                + rec["memory"]["argument_size_in_bytes"] / 1e9,
+            }
+            row["advice"] = bottleneck_advice({**rec, **row}, dom)
+            rows.append(row)
+
+    rows.sort(key=lambda r: (r["mesh"], r["arch"], r["shape"]))
+    lines = [
+        "| arch | shape | mesh | compute s | memory s | collective s | dominant | "
+        "useful ratio | roofline MFU | per-chip GB |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['compute_s']:.3f} | "
+            f"{r['memory_s']:.3f} | {r['collective_s']:.3f} | {r['dominant']} | "
+            f"{r['useful_ratio']:.2f} | {r['roofline_mfu']:.3f} | {r['mem_gb']:.1f} |"
+        )
+    os.makedirs(os.path.dirname(out_md) or ".", exist_ok=True)
+    with open(out_md, "w") as f:
+        f.write("\n".join(lines) + "\n")
+    return rows
+
+
+def run(quick=True):
+    rows = analyze()
+    if not rows:
+        emit("roofline", 0.0, "no dry-run results found (run repro.launch.dryrun first)")
+        return
+    for r in rows:
+        if r["mesh"] == "single":
+            emit(
+                f"roofline.{r['arch']}.{r['shape']}",
+                max(r["compute_s"], r["memory_s"], r["collective_s"]) * 1e6,
+                f"dom={r['dominant']} useful={r['useful_ratio']:.2f} mfu={r['roofline_mfu']:.3f}",
+            )
+    n_dom = {}
+    for r in rows:
+        n_dom[r["dominant"]] = n_dom.get(r["dominant"], 0) + 1
+    emit("roofline.summary", 0.0, f"dominant_terms={n_dom} table=results/roofline.md")
+
+
+if __name__ == "__main__":
+    run()

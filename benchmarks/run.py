@@ -1,0 +1,62 @@
+"""Benchmark harness entry point — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (see benchmarks/common.py).
+
+    PYTHONPATH=src python -m benchmarks.run [--full] [--only MODULE]
+"""
+import argparse
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--full", action="store_true", help="paper-scale (slow)")
+    ap.add_argument("--only", default="", help="run a single module")
+    args = ap.parse_args()
+    quick = not args.full
+
+    from . import (
+        bench_fdl,
+        bench_recall_dist,
+        bench_online,
+        bench_offline,
+        bench_sensitivity,
+        bench_updates,
+        bench_ablation,
+        bench_kernels,
+        roofline,
+    )
+
+    modules = {
+        "fdl": bench_fdl,
+        "recall_dist": bench_recall_dist,
+        "online": bench_online,
+        "offline": bench_offline,
+        "sensitivity": bench_sensitivity,
+        "updates": bench_updates,
+        "ablation": bench_ablation,
+        "kernels": bench_kernels,
+        "roofline": roofline,
+    }
+    if args.only:
+        modules = {args.only: modules[args.only]}
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, mod in modules.items():
+        t0 = time.perf_counter()
+        try:
+            mod.run(quick=quick)
+        except Exception:
+            failures += 1
+            print(f"{name},0,ERROR", file=sys.stderr)
+            traceback.print_exc()
+        print(f"_module.{name}.wall,{(time.perf_counter() - t0) * 1e6:.0f},", flush=True)
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""Quickstart: build an Ada-ef index, search with a declarative target recall.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+import jax.numpy as jnp
+
+from repro.index import (
+    brute_force_topk,
+    build_ada_index,
+    prepare_database,
+    prepare_queries,
+    recall_at_k,
+)
+
+
+def main():
+    # --- data: 8k vectors in 10 Zipf-skewed clusters (paper §7.1 style) -----
+    rng = np.random.default_rng(0)
+    n, d, nq, k = 8000, 64, 256, 10
+    nc = 50
+    w = 1.0 / np.arange(1, nc + 1)
+    w /= w.sum()
+    centers = rng.normal(0, 1, (nc, d))
+    data = (centers[rng.choice(nc, n, p=w)] + 0.25 * rng.normal(0, 1, (n, d))).astype(np.float32)
+    queries = (centers[rng.choice(nc, nq, p=w)] + 0.25 * rng.normal(0, 1, (nq, d))).astype(np.float32)
+
+    # --- offline: HNSW build + Ada-ef statistics / ef-table (Figure 2) ------
+    print("building index + Ada-ef offline artifacts ...")
+    index = build_ada_index(data, k=k, target_recall=0.95, m=8,
+                            ef_construction=100, ef_cap=400, num_samples=128)
+    t = index.timings
+    print(f"offline: stats={t.stats_s:.2f}s sample={t.sample_s:.2f}s table={t.ef_table_s:.2f}s"
+          f"  (WAE={float(index.table.wae):.0f})")
+
+    # --- ground truth for evaluation ----------------------------------------
+    gt = brute_force_topk(prepare_queries(jnp.asarray(queries), "cos_dist"),
+                          prepare_database(jnp.asarray(data), "cos_dist"), k=k)[1]
+
+    # --- online: adaptive-ef search at the declarative target ---------------
+    res = index.query(queries)                       # <- no ef parameter!
+    rec = np.asarray(recall_at_k(res.ids, gt))
+    efs = np.asarray(res.ef_used)
+    print(f"\nAda-ef @ target 0.95: avg recall={rec.mean():.3f} "
+          f"P5={np.percentile(rec, 5):.2f} work={np.asarray(res.ndist).mean():.0f} dists/query")
+    print(f"adaptive ef range: min={efs.min()} median={int(np.median(efs))} max={efs.max()}")
+
+    # --- versus static ef (what HNSWlib/FAISS users do today) ----------------
+    for ef in (k, 4 * k):
+        r = index.query_static(queries, ef)
+        rr = np.asarray(recall_at_k(r.ids, gt))
+        print(f"static ef={ef:3d}:       avg recall={rr.mean():.3f} "
+              f"P5={np.percentile(rr, 5):.2f} work={np.asarray(r.ndist).mean():.0f} dists/query")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""End-to-end serving driver (the paper's deployment context): a batched LM
+serving loop where every request runs Ada-ef retrieval at a declarative
+target recall before decoding.
+
+    PYTHONPATH=src python examples/rag_serve.py --requests 4 --new-tokens 12
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCHS
+from repro.index import build_ada_index
+from repro.models import build_model
+from repro.serve import Engine, ServeConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--new-tokens", type=int, default=12)
+    ap.add_argument("--corpus", type=int, default=3000)
+    args = ap.parse_args()
+
+    cfg = ARCHS["qwen2-0.5b"].reduced()
+    model = build_model(cfg, impl="naive")
+    params = model.init(jax.random.PRNGKey(0))
+
+    rng = np.random.default_rng(0)
+    centers = rng.normal(0, 1, (32, cfg.d_model))
+    corpus = (centers[rng.integers(0, 32, args.corpus)]
+              + 0.3 * rng.normal(0, 1, (args.corpus, cfg.d_model))).astype(np.float32)
+    print("building retrieval corpus index ...")
+    index = build_ada_index(corpus, k=10, target_recall=0.95, m=8,
+                            ef_construction=60, ef_cap=200, num_samples=64)
+
+    engine = Engine(model, params,
+                    ServeConfig(max_new_tokens=args.new_tokens, target_recall=0.95),
+                    index=index)
+    batch = {"tokens": jnp.asarray(
+        rng.integers(0, cfg.vocab_size, (args.requests, args.prompt_len)), jnp.int32)}
+    t0 = time.perf_counter()
+    res = engine.serve(batch)
+    print(f"\nserved {args.requests} requests x {args.new_tokens} tokens "
+          f"in {time.perf_counter() - t0:.1f}s")
+    print("generated:", res.tokens[:, :8], "...")
+    print("retrieved neighbor ids (req 0):", res.retrieved_ids[0])
+    print("per-request adaptive ef:", res.ef_used)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+"""repro: Ada-ef (Distribution-Aware Adaptive HNSW Search) + multi-pod JAX framework."""
+__version__ = "1.0.0"

@@ -1,0 +1,44 @@
+"""Assigned-architecture configs (exact sizes from the assignment table)."""
+from .base import (  # noqa: F401
+    ArchConfig,
+    ShapeConfig,
+    SHAPES,
+    TRAIN_4K,
+    PREFILL_32K,
+    DECODE_32K,
+    LONG_500K,
+    cell_applicable,
+    shape_by_name,
+)
+from .qwen3_moe_30b_a3b import CONFIG as QWEN3_MOE_30B_A3B
+from .qwen2_moe_a2_7b import CONFIG as QWEN2_MOE_A2_7B
+from .qwen3_14b import CONFIG as QWEN3_14B
+from .stablelm_1_6b import CONFIG as STABLELM_1_6B
+from .qwen1_5_32b import CONFIG as QWEN1_5_32B
+from .qwen2_0_5b import CONFIG as QWEN2_0_5B
+from .seamless_m4t_large_v2 import CONFIG as SEAMLESS_M4T_LARGE_V2
+from .zamba2_2_7b import CONFIG as ZAMBA2_2_7B
+from .xlstm_350m import CONFIG as XLSTM_350M
+from .phi_3_vision_4_2b import CONFIG as PHI_3_VISION_4_2B
+
+ARCHS = {
+    c.name: c
+    for c in (
+        QWEN3_MOE_30B_A3B,
+        QWEN2_MOE_A2_7B,
+        QWEN3_14B,
+        STABLELM_1_6B,
+        QWEN1_5_32B,
+        QWEN2_0_5B,
+        SEAMLESS_M4T_LARGE_V2,
+        ZAMBA2_2_7B,
+        XLSTM_350M,
+        PHI_3_VISION_4_2B,
+    )
+}
+
+
+def arch_by_name(name: str) -> ArchConfig:
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(ARCHS)}")
+    return ARCHS[name]

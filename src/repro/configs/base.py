@@ -1,0 +1,120 @@
+"""Architecture + shape configuration system.
+
+One :class:`ArchConfig` per assigned architecture (exact sizes from the
+assignment table), plus :class:`ShapeConfig` for the four assigned input
+shapes.  ``reduced()`` produces the smoke-test scale-down of the same family.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str                      # dense | moe | audio | hybrid | ssm | vlm
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0                # 0 -> d_model // num_heads
+    qk_norm: bool = False
+    qkv_bias: bool = False
+    # --- MoE ---
+    num_experts: int = 0
+    num_experts_per_tok: int = 0
+    num_shared_experts: int = 0
+    moe_d_ff: int = 0                # per-routed-expert hidden dim
+    norm_topk_prob: bool = True
+    capacity_factor: float = 1.25
+    # --- encoder-decoder ---
+    is_encoder_decoder: bool = False
+    num_encoder_layers: int = 0
+    # --- SSM / hybrid ---
+    ssm_state: int = 0
+    ssm_heads: int = 0
+    ssm_expand: int = 2
+    ssm_conv_width: int = 4
+    ssm_chunk: int = 256
+    slstm_every: int = 0             # xLSTM: every n-th block is sLSTM
+    shared_attn_every: int = 0       # Zamba2: shared attn block cadence
+    # --- modality frontend (stub) ---
+    frontend: str = "none"           # none | audio_frames | vision_patches
+    frontend_dim: int = 0            # precomputed embedding dim
+    num_frontend_tokens: int = 0
+    # --- misc ---
+    rope_theta: float = 1_000_000.0
+    norm_eps: float = 1e-6
+    tie_embeddings: bool = False
+    remat: bool = True
+    remat_policy: str = "nothing"   # nothing | dots | none
+    sub_quadratic: bool = False      # eligible for long_500k
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.num_heads
+
+    @property
+    def is_moe(self) -> bool:
+        return self.num_experts > 0
+
+    def reduced(self) -> "ArchConfig":
+        """Smoke-test config: same family/topology, tiny sizes."""
+        return dataclasses.replace(
+            self,
+            num_layers=min(self.num_layers, 4 if self.shared_attn_every else 2)
+            if not self.slstm_every
+            else min(self.num_layers, max(2, self.slstm_every)),
+            num_encoder_layers=min(self.num_encoder_layers, 2),
+            d_model=128,
+            num_heads=4,
+            num_kv_heads=min(self.num_kv_heads, 2) if self.num_kv_heads < self.num_heads else 4,
+            head_dim=32,
+            d_ff=256 if self.d_ff else 0,
+            moe_d_ff=128 if self.moe_d_ff else 0,
+            vocab_size=512,
+            num_experts=min(self.num_experts, 8),
+            num_experts_per_tok=min(self.num_experts_per_tok, 2),
+            num_shared_experts=min(self.num_shared_experts, 1),
+            ssm_state=min(self.ssm_state, 16),
+            ssm_heads=min(self.ssm_heads, 4) if self.ssm_heads else 0,
+            ssm_chunk=32,
+            frontend_dim=min(self.frontend_dim, 64) if self.frontend_dim else 0,
+            num_frontend_tokens=min(self.num_frontend_tokens, 16),
+            shared_attn_every=min(self.shared_attn_every, 2) if self.shared_attn_every else 0,
+            slstm_every=min(self.slstm_every, 2) if self.slstm_every else 0,
+            remat=False,
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str            # "train" | "prefill" | "decode"
+
+
+TRAIN_4K = ShapeConfig("train_4k", 4096, 256, "train")
+PREFILL_32K = ShapeConfig("prefill_32k", 32_768, 32, "prefill")
+DECODE_32K = ShapeConfig("decode_32k", 32_768, 128, "decode")
+LONG_500K = ShapeConfig("long_500k", 524_288, 1, "decode")
+
+SHAPES: Tuple[ShapeConfig, ...] = (TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K)
+
+
+def shape_by_name(name: str) -> ShapeConfig:
+    for s in SHAPES:
+        if s.name == name:
+            return s
+    raise KeyError(name)
+
+
+def cell_applicable(arch: ArchConfig, shape: ShapeConfig) -> Tuple[bool, str]:
+    """Whether the (arch x shape) dry-run cell runs, and why not if skipped."""
+    if shape.name == "long_500k" and not arch.sub_quadratic:
+        return False, "long_500k skipped: pure full-attention arch (assignment rule)"
+    return True, ""

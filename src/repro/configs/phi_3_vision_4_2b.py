@@ -1,0 +1,18 @@
+"""phi-3-vision-4.2b — 32L d_model=3072 32H d_ff=8192 + CLIP stub frontend.
+input_specs provides precomputed patch embeddings. [hf:microsoft/Phi-3-vision-128k-instruct; hf]"""
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="phi-3-vision-4.2b",
+    family="vlm",
+    num_layers=32,
+    d_model=3072,
+    num_heads=32,
+    num_kv_heads=32,
+    d_ff=8192,
+    vocab_size=32064,
+    frontend="vision_patches",
+    frontend_dim=1024,       # CLIP-L/14 embedding dim
+    num_frontend_tokens=576, # 24x24 patch grid stub
+    rope_theta=10000.0,
+)

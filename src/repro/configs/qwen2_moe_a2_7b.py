@@ -1,0 +1,21 @@
+"""qwen2-moe-a2.7b — 24L d_model=2048 16H (kv=16) MoE 60e top-4 + 4 shared, moe_ff=1408.
+[hf:Qwen/Qwen1.5-MoE-A2.7B; hf]"""
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="qwen2-moe-a2.7b",
+    family="moe",
+    num_layers=24,
+    d_model=2048,
+    num_heads=16,
+    num_kv_heads=16,
+    d_ff=1408,
+    moe_d_ff=1408,
+    vocab_size=151936,
+    qkv_bias=True,
+    num_experts=60,      # padded to 64 for the 16-way model axis (router-masked)
+    num_experts_per_tok=4,
+    num_shared_experts=4,
+    norm_topk_prob=False,
+    rope_theta=1e6,
+)

@@ -1,0 +1,21 @@
+"""qwen3-moe-30b-a3b — 48L d_model=2048 32H (GQA kv=4) MoE 128e top-8, moe_ff=768.
+[hf:Qwen/Qwen3-30B-A3B; hf]"""
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="qwen3-moe-30b-a3b",
+    family="moe",
+    num_layers=48,
+    d_model=2048,
+    num_heads=32,
+    num_kv_heads=4,
+    d_ff=768,            # listed ff = per-expert moe ff
+    moe_d_ff=768,
+    vocab_size=151936,
+    head_dim=128,
+    qk_norm=True,
+    num_experts=128,
+    num_experts_per_tok=8,
+    norm_topk_prob=True,
+    rope_theta=1e6,
+)

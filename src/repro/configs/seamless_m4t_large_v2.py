@@ -1,0 +1,20 @@
+"""seamless-m4t-large-v2 — enc-dec 24L+24L d_model=1024 16H d_ff=8192 vocab=256206.
+Audio frontend stubbed: input_specs provides precomputed frame embeddings.
+[arXiv:2308.11596; hf]"""
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="seamless-m4t-large-v2",
+    family="audio",
+    num_layers=24,            # decoder layers
+    num_encoder_layers=24,
+    is_encoder_decoder=True,
+    d_model=1024,
+    num_heads=16,
+    num_kv_heads=16,
+    d_ff=8192,
+    vocab_size=256206,
+    frontend="audio_frames",
+    frontend_dim=160,         # fbank-frame stub embedding dim
+    rope_theta=10000.0,
+)

@@ -1,0 +1,17 @@
+"""xlstm-350m — 24L d_model=1024 4H, sLSTM + mLSTM blocks (1 sLSTM per 6).
+[arXiv:2405.04517; unverified]"""
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="xlstm-350m",
+    family="ssm",
+    num_layers=24,
+    d_model=1024,
+    num_heads=4,
+    num_kv_heads=4,
+    d_ff=0,                 # xLSTM blocks own their projections; no separate FFN
+    vocab_size=50304,
+    slstm_every=6,          # groups of 5 mLSTM + 1 sLSTM
+    ssm_chunk=256,
+    sub_quadratic=True,
+)

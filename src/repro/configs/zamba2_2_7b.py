@@ -1,0 +1,20 @@
+"""zamba2-2.7b — 54L Mamba2 backbone d_model=2560 + shared attention block (32H),
+d_ff=10240, ssm_state=64. [arXiv:2411.15242; hf]"""
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="zamba2-2.7b",
+    family="hybrid",
+    num_layers=54,
+    d_model=2560,
+    num_heads=32,
+    num_kv_heads=32,
+    d_ff=10240,
+    vocab_size=32000,
+    ssm_state=64,
+    ssm_heads=40,           # d_inner = 2*2560 = 5120 -> 40 heads x 128
+    ssm_expand=2,
+    shared_attn_every=6,    # shared block applied every 6 mamba layers
+    sub_quadratic=True,
+    rope_theta=10000.0,
+)

@@ -1,0 +1,30 @@
+"""Ada-ef core: the paper's contribution (FDL theory + query scoring + ef table)."""
+from .stats import (  # noqa: F401
+    DatasetStats,
+    compute_stats,
+    merge_stats,
+    unmerge_stats,
+    quadratic_form,
+    stats_nbytes,
+)
+from .fdl import (  # noqa: F401
+    FDLParams,
+    estimate_fdl,
+    fdl_quantile,
+    fdl_cdf,
+    METRIC_IP,
+    METRIC_COSINE_SIM,
+    METRIC_COSINE_DIST,
+)
+from .scoring import (  # noqa: F401
+    bin_thresholds,
+    bin_counts,
+    bin_weights,
+    query_score,
+    score_query,
+    DECAY_EXP,
+    DECAY_LINEAR,
+    DECAY_NONE,
+)
+from .ef_table import EfTable, build_ef_table, default_ef_ladder, lookup_ef  # noqa: F401
+from .estimator import EstimatorConfig, estimate_ef, query_scores  # noqa: F401

@@ -1,0 +1,154 @@
+"""EF-estimation table (paper §6.2) + WAE.
+
+Offline, ``G`` data vectors (default 200) are sampled as proxy queries; each gets
+a query score (integer-cast) and is searched with a ladder of increasing ef
+values until the target recall is met.  The resulting ``score -> [(ef, recall)]``
+mapping is stored densely:
+
+    ef_ladder   (E,)   ascending candidate ef values
+    recall      (S, E) average recall of score-group s at ef_ladder[e]
+    counts      (S,)   number of proxies in score-group s (g_i in the WAE)
+    wae         ()     weighted-average ef  =  sum_i g_i ef_i / G   (paper §6.2)
+
+Score groups with no proxies inherit the nearest populated group (preferring the
+*lower* = harder score so the fallback over-searches rather than under-searches).
+
+The online lookup (Algorithm 1, lines 6-11) is pure jnp and fully batched.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+MAX_SCORE = 100  # w_1 = 100 and sum_i c_i <= |D|  =>  s(q) in [0, 100]
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class EfTable:
+    ef_ladder: Array  # (E,) int32, ascending
+    recall: Array     # (S, E) float32
+    counts: Array     # (S,) int32
+    wae: Array        # () float32
+
+    def tree_flatten(self):
+        return (self.ef_ladder, self.recall, self.counts, self.wae), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    @property
+    def num_groups(self) -> int:
+        return self.recall.shape[0]
+
+    def nbytes(self) -> int:
+        return int(sum(x.size * x.dtype.itemsize for x in jax.tree_util.tree_leaves(self)))
+
+
+def default_ef_ladder(k: int, ef_max: int = 5000) -> np.ndarray:
+    """Geometric ladder from k/4 to ef_max (paper probes progressively larger ef)."""
+    vals = []
+    ef = max(k // 4, 8)
+    while ef < ef_max:
+        vals.append(ef)
+        ef = int(np.ceil(ef * 1.6))
+    vals.append(ef_max)
+    return np.unique(np.asarray(vals, np.int32))
+
+
+def build_ef_table(
+    proxy_scores: np.ndarray,
+    recall_at_ef: Callable[[int, np.ndarray], np.ndarray],
+    *,
+    target_recall: float,
+    ef_ladder: Sequence[int],
+    num_groups: int = MAX_SCORE + 1,
+) -> EfTable:
+    """Construct the ef-estimation table (offline, adaptive probing).
+
+    Parameters
+    ----------
+    proxy_scores: (G,) float scores of the sampled proxy queries.
+    recall_at_ef: callable ``(ef, subset_indices) -> (len(subset),) recalls`` —
+        runs the *actual HNSW search* for the given proxies at that ef and
+        evaluates recall against their ground truth.  Evaluation is adaptive:
+        once a score group's average recall reaches the target, larger efs are
+        not probed for it (its recall is carried forward), matching §6.2.
+    """
+    g = np.clip(np.floor(np.asarray(proxy_scores)).astype(np.int64), 0, num_groups - 1)
+    ladder = np.asarray(sorted(int(e) for e in ef_ladder), np.int64)
+    num_e = len(ladder)
+    recall_tbl = np.zeros((num_groups, num_e), np.float32)
+    counts = np.bincount(g, minlength=num_groups).astype(np.int32)
+
+    active = np.ones(len(g), bool)  # proxies whose group has not hit target yet
+    last_group_recall = np.zeros(num_groups, np.float32)
+    for e, ef in enumerate(ladder):
+        idx = np.nonzero(active)[0]
+        per_proxy = np.zeros(len(g), np.float32)
+        if len(idx) > 0:
+            per_proxy[idx] = np.asarray(recall_at_ef(int(ef), idx))
+        # Per-group mean over *probed* proxies; carried forward for satisfied groups.
+        for s in np.unique(g):
+            members = g == s
+            if active[members].any():
+                last_group_recall[s] = float(per_proxy[members & active].mean())
+            recall_tbl[s, e] = last_group_recall[s]
+        # Deactivate satisfied groups (adaptive probing).
+        for s in np.unique(g):
+            if last_group_recall[s] >= target_recall:
+                active[g == s] = False
+        if not active.any():
+            recall_tbl[:, e + 1:] = recall_tbl[:, e : e + 1]
+            break
+
+    # Fill empty score groups from the nearest populated one (prefer lower score).
+    populated = np.nonzero(counts > 0)[0]
+    if len(populated) == 0:
+        raise ValueError("no proxy queries provided")
+    for s in range(num_groups):
+        if counts[s] == 0:
+            below = populated[populated < s]
+            src = below.max() if len(below) else populated.min()
+            recall_tbl[s] = recall_tbl[src]
+
+    # WAE over populated groups: smallest ef meeting target (else ladder max).
+    wae_num = 0.0
+    for s in populated:
+        meets = np.nonzero(recall_tbl[s] >= target_recall)[0]
+        ef_s = ladder[meets[0]] if len(meets) else ladder[-1]
+        wae_num += counts[s] * float(ef_s)
+    wae = wae_num / max(int(counts.sum()), 1)
+
+    return EfTable(
+        ef_ladder=jnp.asarray(ladder, jnp.int32),
+        recall=jnp.asarray(recall_tbl),
+        counts=jnp.asarray(counts),
+        wae=jnp.asarray(wae, jnp.float32),
+    )
+
+
+@jax.jit
+def lookup_ef(table: EfTable, score: Array, target_recall: Array) -> Array:
+    """Algorithm 1, lines 6-11 — batched.
+
+    Pick the smallest ladder ef whose recorded recall for the score group meets
+    the target; floor it at WAE; if no ladder entry meets the target, return the
+    largest ef of the row.
+    """
+    s = jnp.clip(jnp.floor(score).astype(jnp.int32), 0, table.num_groups - 1)
+    row = table.recall[s]                      # (..., E)
+    meets = row >= target_recall
+    any_meets = jnp.any(meets, axis=-1)
+    first = jnp.argmax(meets, axis=-1)         # first True (0 if none)
+    ef_meet = table.ef_ladder[first]
+    ef_meet = jnp.maximum(ef_meet, table.wae.astype(jnp.int32))  # line 10
+    ef_fallback = table.ef_ladder[-1]          # line 7 default: largest EF
+    return jnp.where(any_meets, ef_meet, ef_fallback).astype(jnp.int32)

@@ -1,0 +1,94 @@
+"""ESTIMATE-EF (paper Algorithm 1) — the end-to-end per-query ef estimator.
+
+Combines the FDL Gaussian moments (§5), the quantile-bin query score (§6.1) and
+the ef-estimation table lookup (§6.2).  Pure jnp, jittable, batched: inside the
+adaptive search it is invoked under ``lax.cond`` once ``l`` distances have been
+collected.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .ef_table import EfTable, lookup_ef
+from .fdl import METRIC_COSINE_DIST, estimate_fdl
+from .scoring import DEFAULT_DELTA, DEFAULT_M, DECAY_EXP, score_query
+from .stats import DatasetStats
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class EstimatorConfig:
+    metric: str = METRIC_COSINE_DIST
+    m: int = DEFAULT_M
+    delta: float = DEFAULT_DELTA
+    decay: str = DECAY_EXP
+    use_kernel: bool = False  # route scoring through the Pallas binscore kernel
+
+
+@partial(jax.jit, static_argnames=("config",))
+def estimate_ef(
+    stats: DatasetStats,
+    table: EfTable,
+    q: Array,
+    distances: Array,
+    target_recall: Array,
+    *,
+    valid: Optional[Array] = None,
+    config: EstimatorConfig = EstimatorConfig(),
+) -> Array:
+    """Algorithm 1.  ``q``: (..., d); ``distances``: (..., L) collected list D.
+
+    Returns int32 estimated ef with the leading batch shape of ``q``.
+    """
+    params = estimate_fdl(stats, q, metric=config.metric)       # lines 1-2
+    if config.use_kernel:
+        from repro.kernels import ops as kernel_ops
+
+        score = kernel_ops.score(
+            params,
+            distances,
+            valid=valid,
+            m=config.m,
+            delta=config.delta,
+            metric=config.metric,
+            decay=config.decay,
+        )
+    else:
+        score = score_query(                                     # lines 3-5
+            params,
+            distances,
+            valid=valid,
+            m=config.m,
+            delta=config.delta,
+            metric=config.metric,
+            decay=config.decay,
+        )
+    return lookup_ef(table, score, target_recall)                # lines 6-11
+
+
+@partial(jax.jit, static_argnames=("config",))
+def query_scores(
+    stats: DatasetStats,
+    q: Array,
+    distances: Array,
+    *,
+    valid: Optional[Array] = None,
+    config: EstimatorConfig = EstimatorConfig(),
+) -> Array:
+    """Score-only entry point (used by offline table construction)."""
+    params = estimate_fdl(stats, q, metric=config.metric)
+    return score_query(
+        params,
+        distances,
+        valid=valid,
+        m=config.m,
+        delta=config.delta,
+        metric=config.metric,
+        decay=config.decay,
+    )

@@ -1,0 +1,74 @@
+"""FDL (Full Distance List) distribution estimation (paper §5).
+
+Given precomputed :class:`~repro.core.stats.DatasetStats` and a query ``q``,
+estimate the Gaussian ``N(mu, sigma^2)`` that the FDL converges to (Thm 5.2):
+
+- inner product  (Eq. 1):  mu = q . mean(V),        sigma^2 = q Sigma q^T
+- cosine similarity (Eq. 2): same with q and V row-normalized
+- cosine distance (Eq. 3):   affine map  mu -> 1 - mu_CS, sigma unchanged
+
+The online cost is one matvec (``q Sigma``) + two dots — no database access.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .stats import DatasetStats, quadratic_form
+
+Array = jax.Array
+
+METRIC_IP = "ip"            # inner-product *similarity* (larger = closer)
+METRIC_COSINE_SIM = "cos_sim"
+METRIC_COSINE_DIST = "cos_dist"  # 1 - cos_sim (smaller = closer) — paper default
+
+METRICS = (METRIC_IP, METRIC_COSINE_SIM, METRIC_COSINE_DIST)
+
+
+class FDLParams(NamedTuple):
+    """Per-query Gaussian parameters of the FDL."""
+
+    mu: Array     # (...,)
+    sigma: Array  # (...,)
+
+
+def _normalize(q: Array, eps: float = 1e-12) -> Array:
+    return q / jnp.maximum(jnp.linalg.norm(q, axis=-1, keepdims=True), eps)
+
+
+@partial(jax.jit, static_argnames=("metric",))
+def estimate_fdl(stats: DatasetStats, q: Array, *, metric: str = METRIC_COSINE_DIST) -> FDLParams:
+    """Estimate the FDL Gaussian for query/queries ``q`` of shape ``(..., d)``.
+
+    For cosine metrics, ``stats`` must have been computed with ``normalize=True``
+    (statistics of the row-normalized database, §5.2).
+    """
+    if metric not in METRICS:
+        raise ValueError(f"unknown metric {metric!r}; expected one of {METRICS}")
+    q = q.astype(jnp.float32)
+    if metric in (METRIC_COSINE_SIM, METRIC_COSINE_DIST):
+        q = _normalize(q)
+    mu = jnp.einsum("...d,d->...", q, stats.mean)
+    var = quadratic_form(stats, q)
+    sigma = jnp.sqrt(jnp.maximum(var, 1e-20))
+    if metric == METRIC_COSINE_DIST:
+        mu = 1.0 - mu  # affine map, Eq. (3); sigma preserved
+    return FDLParams(mu=mu, sigma=sigma)
+
+
+def fdl_quantile(params: FDLParams, p: Array) -> Array:
+    """p-th percentile distance of the estimated FDL (inverse CDF).
+
+    For *distance* metrics small quantiles are the nearest neighbors. For
+    *similarity* metrics callers should pass ``1 - p`` (handled by scoring).
+    """
+    return params.mu + params.sigma * jax.scipy.special.ndtri(p)
+
+
+def fdl_cdf(params: FDLParams, x: Array) -> Array:
+    """P[FDL <= x] under the estimated Gaussian."""
+    z = (x - params.mu[..., None]) / params.sigma[..., None]
+    return jax.scipy.special.ndtr(z)

@@ -1,0 +1,141 @@
+"""Query scoring model (paper §6.1, Eqs. 4-6).
+
+The estimated FDL Gaussian is discretized into ``m`` consecutive quantile bins
+of width ``delta``; the distances collected near the entry point are counted
+into the bins; the score is a weighted, normalized sum of bin counts with
+exponentially decaying weights ``w_i = 100 * e^{-i+1}``.
+
+High score  =>  many collected distances sit in the extreme-favorable quantiles
+            =>  "easy" query  =>  small ef suffices (paper Appendix C example).
+
+All functions are jittable and batched: ``distances`` may be ``(L,)`` or
+``(B, L)`` with an optional validity mask (fixed-shape search buffers pad).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .fdl import (
+    METRIC_COSINE_DIST,
+    METRIC_COSINE_SIM,
+    METRIC_IP,
+    FDLParams,
+)
+
+Array = jax.Array
+
+DECAY_EXP = "exp"
+DECAY_LINEAR = "linear"
+DECAY_NONE = "none"
+
+DEFAULT_M = 10        # number of quantile bins
+DEFAULT_DELTA = 1e-3  # quantile width per bin (paper uses delta = 0.001)
+
+
+def bin_weights(m: int, decay: str = DECAY_EXP) -> Array:
+    """Per-bin importance weights (paper Eq. 6 + Table-10 ablation variants)."""
+    i = jnp.arange(1, m + 1, dtype=jnp.float32)
+    if decay == DECAY_EXP:
+        return 100.0 * jnp.exp(-i + 1.0)      # w_i = 100 e^{-i+1}
+    if decay == DECAY_LINEAR:
+        return 100.0 * (m - i + 1.0) / m      # linearly decreasing
+    if decay == DECAY_NONE:
+        return jnp.full((m,), 100.0 / m)      # uniform
+    raise ValueError(f"unknown decay {decay!r}")
+
+
+@partial(jax.jit, static_argnames=("m", "metric"))
+def bin_thresholds(
+    params: FDLParams,
+    *,
+    m: int = DEFAULT_M,
+    delta: float = DEFAULT_DELTA,
+    metric: str = METRIC_COSINE_DIST,
+) -> Array:
+    """Quantile thresholds  theta_i = mu + sigma * ndtri(delta * i)  (Eq. 4).
+
+    Returns ``(..., m)``. For similarity metrics (larger = closer) the favorable
+    tail is the upper one: theta_i = mu + sigma * ndtri(1 - delta * i), and bin
+    membership flips direction (handled in :func:`bin_counts`).
+    """
+    i = jnp.arange(1, m + 1, dtype=jnp.float32)
+    if metric in (METRIC_IP, METRIC_COSINE_SIM):
+        qs = 1.0 - delta * i
+    else:
+        qs = delta * i
+    z = jax.scipy.special.ndtri(qs)
+    return params.mu[..., None] + params.sigma[..., None] * z
+
+
+@partial(jax.jit, static_argnames=("metric",))
+def bin_counts(
+    distances: Array,
+    thresholds: Array,
+    *,
+    valid: Optional[Array] = None,
+    metric: str = METRIC_COSINE_DIST,
+) -> Array:
+    """Count collected distances into quantile bins (Eq. 5).
+
+    distances:  (..., L) collected values (distance *or* similarity, per metric)
+    thresholds: (..., m) from :func:`bin_thresholds`
+    valid:      optional (..., L) bool mask for padded entries
+    Returns (..., m) float32 counts.
+    """
+    d = distances[..., :, None]          # (..., L, 1)
+    t = thresholds[..., None, :]         # (..., 1, m)
+    if metric in (METRIC_IP, METRIC_COSINE_SIM):
+        # larger = closer: bin_1 is d > theta_1 (top delta quantile); bin_i is
+        # theta_i < d <= theta_{i-1}.
+        below = d > t                    # (..., L, m) cumulative membership
+    else:
+        below = d <= t
+    # Convert cumulative membership into per-bin membership: bin_i = cum_i - cum_{i-1}.
+    cum = below.astype(jnp.float32)
+    per_bin = jnp.diff(cum, axis=-1, prepend=jnp.zeros_like(cum[..., :1]))
+    if valid is not None:
+        per_bin = per_bin * valid[..., :, None].astype(jnp.float32)
+    return jnp.sum(per_bin, axis=-2)     # (..., m)
+
+
+@partial(jax.jit, static_argnames=("decay",))
+def query_score(
+    counts: Array,
+    num_collected: Array,
+    *,
+    decay: str = DECAY_EXP,
+) -> Array:
+    """Weighted, normalized score  s(q) = sum_i w_i * c_i / |D|  (Eq. 6)."""
+    m = counts.shape[-1]
+    w = bin_weights(m, decay)
+    denom = jnp.maximum(num_collected.astype(jnp.float32), 1.0)
+    return jnp.sum(counts * w, axis=-1) / denom
+
+
+@partial(jax.jit, static_argnames=("m", "metric", "decay"))
+def score_query(
+    params: FDLParams,
+    distances: Array,
+    *,
+    valid: Optional[Array] = None,
+    m: int = DEFAULT_M,
+    delta: float = DEFAULT_DELTA,
+    metric: str = METRIC_COSINE_DIST,
+    decay: str = DECAY_EXP,
+) -> Array:
+    """End-to-end scoring: thresholds -> counts -> weighted score.
+
+    This is the pure-jnp reference path; ``repro.kernels.binscore`` provides the
+    fused Pallas kernel with identical semantics.
+    """
+    thresholds = bin_thresholds(params, m=m, delta=delta, metric=metric)
+    counts = bin_counts(distances, thresholds, valid=valid, metric=metric)
+    if valid is None:
+        num = jnp.full(counts.shape[:-1], distances.shape[-1], jnp.float32)
+    else:
+        num = jnp.sum(valid.astype(jnp.float32), axis=-1)
+    return query_score(counts, num, decay=decay)

@@ -1,0 +1,234 @@
+"""Dataset-level statistics for FDL estimation (paper §5.4, §6.3).
+
+Offline we precompute, for a database ``V`` of shape ``(n, d)``:
+
+- the **mean vector** ``E[v_i]`` per column (``(d,)``),
+- the **covariance matrix** ``Cov(v_i, v_j)`` (``(d, d)``), whose diagonal is the
+  per-column variance.
+
+Both are needed online to evaluate the FDL Gaussian moments
+``mu_IP = q . mean`` and ``sigma^2_IP + Delta_IP = q Sigma q^T`` (Thm 5.2 + Eq. 1).
+
+For cosine metrics the same statistics are computed over the *row-normalized*
+database (paper §5.2): ``v_hat = v / ||v||``.
+
+§6.3 gives exact streaming **merge** (insertion) and **unmerge** (deletion)
+formulas; we implement both, and they are exact (tested against recomputation).
+
+Covariance modes
+----------------
+``full``      the paper's d x d matrix (default; d up to a few thousand).
+``diag``      variance-only (Delta = 0) — the i.i.d. Theorem-5.2 model.
+``lowrank``   diag + rank-r correction ``Sigma ~ D + U U^T`` via randomized PCA of
+              the centered data — a beyond-paper option that cuts the online
+              quadratic form from O(d^2) to O(d r) and storage from O(d^2) to
+              O(d r); used by the perf hillclimb.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class DatasetStats:
+    """Sufficient statistics of a (possibly normalized) vector database.
+
+    Attributes
+    ----------
+    n:        number of rows summarized (scalar int32 array so it stays a leaf).
+    mean:     (d,) column means.
+    cov:      (d, d) column covariance (``full`` mode) or None.
+    var:      (d,) column variances (always present; = diag(cov) in full mode).
+    cov_u:    (d, r) low-rank factor (``lowrank`` mode) or None.
+    """
+
+    n: Array
+    mean: Array
+    var: Array
+    cov: Optional[Array] = None
+    cov_u: Optional[Array] = None
+
+    # -- pytree plumbing ---------------------------------------------------
+    def tree_flatten(self):
+        return (self.n, self.mean, self.var, self.cov, self.cov_u), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    @property
+    def dim(self) -> int:
+        return self.mean.shape[-1]
+
+    @property
+    def mode(self) -> str:
+        if self.cov is not None:
+            return "full"
+        if self.cov_u is not None:
+            return "lowrank"
+        return "diag"
+
+
+def _normalize_rows(v: Array, eps: float = 1e-12) -> Array:
+    nrm = jnp.linalg.norm(v, axis=-1, keepdims=True)
+    return v / jnp.maximum(nrm, eps)
+
+
+@partial(jax.jit, static_argnames=("mode", "rank", "normalize"))
+def compute_stats(
+    v: Array,
+    *,
+    mode: str = "full",
+    rank: int = 16,
+    normalize: bool = False,
+) -> DatasetStats:
+    """Compute :class:`DatasetStats` of database ``v`` with shape ``(n, d)``.
+
+    ``normalize=True`` computes the statistics of the row-normalized database
+    (needed for cosine similarity / distance, paper §5.2).
+    """
+    v = v.astype(jnp.float32)
+    if normalize:
+        v = _normalize_rows(v)
+    n = v.shape[0]
+    mean = jnp.mean(v, axis=0)
+    centered = v - mean
+    # Unbiased (n-1) as in the paper.
+    denom = jnp.maximum(n - 1, 1)
+    var = jnp.sum(centered * centered, axis=0) / denom
+    cov = cov_u = None
+    if mode == "full":
+        cov = centered.T @ centered / denom
+        var = jnp.diagonal(cov)
+    elif mode == "lowrank":
+        # Randomized range finder on the centered matrix: Sigma ~ diag + U U^T.
+        key = jax.random.PRNGKey(0)
+        omega = jax.random.normal(key, (v.shape[1], rank), dtype=v.dtype)
+        y = centered @ omega  # (n, r)
+        q, _ = jnp.linalg.qr(centered.T @ y)  # (d, r) orthonormal basis
+        b = centered @ q  # (n, r)
+        # Sigma ~= q (b^T b / denom) q^T ; fold the small (r,r) eigh into U.
+        core = b.T @ b / denom
+        w, vecs = jnp.linalg.eigh(core)
+        w = jnp.maximum(w, 0.0)
+        cov_u = q @ (vecs * jnp.sqrt(w)[None, :])
+    elif mode != "diag":
+        raise ValueError(f"unknown covariance mode: {mode}")
+    return DatasetStats(
+        n=jnp.asarray(n, jnp.int32), mean=mean, var=var, cov=cov, cov_u=cov_u
+    )
+
+
+# ---------------------------------------------------------------------------
+# §6.3 — exact streaming updates
+# ---------------------------------------------------------------------------
+
+
+@jax.jit
+def merge_stats(a: DatasetStats, b: DatasetStats) -> DatasetStats:
+    """Exact merge of two stats (paper §6.3, insertion formulas).
+
+    M'' = (n M + n' M') / n''
+    S'' = [ (n-1) S + (n'-1) S' + n n'/n'' (M - M')^T (M - M') ] / (n'' - 1)
+    """
+    n_a = a.n.astype(jnp.float32)
+    n_b = b.n.astype(jnp.float32)
+    n_ab = n_a + n_b
+    mean = (n_a * a.mean + n_b * b.mean) / n_ab
+    dm = a.mean - b.mean
+    coeff = n_a * n_b / n_ab
+    denom = jnp.maximum(n_ab - 1.0, 1.0)
+    var = ((n_a - 1.0) * a.var + (n_b - 1.0) * b.var + coeff * dm * dm) / denom
+    cov = None
+    if a.cov is not None and b.cov is not None:
+        cov = (
+            (n_a - 1.0) * a.cov + (n_b - 1.0) * b.cov + coeff * jnp.outer(dm, dm)
+        ) / denom
+        var = jnp.diagonal(cov)
+    return DatasetStats(
+        n=(a.n + b.n).astype(jnp.int32), mean=mean, var=var, cov=cov, cov_u=None
+    )
+
+
+@jax.jit
+def unmerge_stats(ab: DatasetStats, b: DatasetStats) -> DatasetStats:
+    """Exact removal of ``b`` from the merged stats (paper §6.3, deletion).
+
+    M = (n'' M'' - n' M') / n
+    S = [ (n''-1) S'' - (n'-1) S' - n' n''/n (M'' - M')^T (M'' - M') ] / (n - 1)
+
+    Note the paper's deletion formula uses (M'' - M'); with M recovered first the
+    identity  n n'/n'' (M - M') = n' n''/n (M'' - M') * (n/n'')... we use the
+    direct algebraic inverse of merge for exactness.
+    """
+    n_ab = ab.n.astype(jnp.float32)
+    n_b = b.n.astype(jnp.float32)
+    n_a = n_ab - n_b
+    mean = (n_ab * ab.mean - n_b * b.mean) / n_a
+    dm = mean - b.mean  # (M - M') of the merge we are inverting
+    coeff = n_a * n_b / n_ab
+    denom = jnp.maximum(n_a - 1.0, 1.0)
+    var = (
+        (n_ab - 1.0) * ab.var - (n_b - 1.0) * b.var - coeff * dm * dm
+    ) / denom
+    cov = None
+    if ab.cov is not None and b.cov is not None:
+        cov = (
+            (n_ab - 1.0) * ab.cov
+            - (n_b - 1.0) * b.cov
+            - coeff * jnp.outer(dm, dm)
+        ) / denom
+        var = jnp.diagonal(cov)
+    return DatasetStats(
+        n=(ab.n - b.n).astype(jnp.int32), mean=mean, var=var, cov=cov, cov_u=None
+    )
+
+
+# ---------------------------------------------------------------------------
+# Online quadratic form  q Sigma q^T  (paper §5.4 "online computation")
+# ---------------------------------------------------------------------------
+
+
+def quadratic_form(stats: DatasetStats, q: Array) -> Array:
+    """``q Sigma q^T`` for a single query or batch ``(..., d)`` of queries.
+
+    full:    q Sigma q^T           (O(d^2), optionally via the Pallas kernel)
+    diag:    sum(q^2 var)          (Theorem 5.2 i.i.d. model, Delta = 0)
+    lowrank: sum(q^2 var_resid) + ||U^T q||^2
+    """
+    q = q.astype(jnp.float32)
+    if stats.cov is not None:
+        return jnp.einsum("...i,ij,...j->...", q, stats.cov, q)
+    if stats.cov_u is not None:
+        proj = jnp.einsum("...d,dr->...r", q, stats.cov_u)
+        resid = jnp.maximum(
+            stats.var - jnp.sum(stats.cov_u * stats.cov_u, axis=-1), 0.0
+        )
+        return jnp.sum(q * q * resid, axis=-1) + jnp.sum(proj * proj, axis=-1)
+    return jnp.sum(q * q * stats.var, axis=-1)
+
+
+def stats_nbytes(stats: DatasetStats) -> int:
+    """Storage footprint of the offline statistics (for Table-3 style reporting)."""
+    total = 0
+    for leaf in jax.tree_util.tree_leaves(stats):
+        total += leaf.size * leaf.dtype.itemsize
+    return int(total)
+
+
+def as_numpy(stats: DatasetStats) -> dict:
+    out = {"n": np.asarray(stats.n), "mean": np.asarray(stats.mean), "var": np.asarray(stats.var)}
+    if stats.cov is not None:
+        out["cov"] = np.asarray(stats.cov)
+    if stats.cov_u is not None:
+        out["cov_u"] = np.asarray(stats.cov_u)
+    return out

@@ -1,0 +1,29 @@
+"""ANN substrate: HNSW construction, batched JAX search, Ada-ef pipeline."""
+from .distances import (  # noqa: F401
+    brute_force_topk,
+    brute_force_topk_chunked,
+    gathered,
+    key_sign,
+    pairwise,
+    prepare_database,
+    prepare_queries,
+)
+from .hnsw import HNSWGraph, HNSWIndex, HNSWParams, build_index  # noqa: F401
+from .search import (  # noqa: F401
+    AdaEfConfig,
+    DeviceGraph,
+    SearchConfig,
+    SearchResult,
+    adaptive_search,
+    device_graph,
+    recall_at_k,
+    search,
+)
+from .pipeline import AdaEfIndex, build_ada_index, collect_distances  # noqa: F401
+from .baselines import DarthBaseline, LaetBaseline, fit_darth, fit_laet  # noqa: F401
+from .distributed import (  # noqa: F401
+    ShardedAdaEfIndex,
+    build_sharded,
+    make_retrieve_step,
+    retrieve_vmap,
+)

@@ -1,0 +1,120 @@
+"""Distance computation for the ANN substrate.
+
+HNSWlib computes one AVX dot product per (query, node) pair; on TPU we compute
+whole frontiers as MXU contractions.  Two shapes matter:
+
+- ``pairwise(Q, V)``      : (B, d) x (n, d)   -> (B, n)     brute force / oracle
+- ``gathered(Q, V, ids)`` : (B, d), (B, G) ids -> (B, G)    frontier expansion
+
+The perf-critical paths dispatch to the Pallas kernels in ``repro.kernels``
+when ``use_kernel=True`` (TPU target; validated in interpret mode on CPU).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.fdl import METRIC_COSINE_DIST, METRIC_COSINE_SIM, METRIC_IP
+
+Array = jax.Array
+
+
+def normalize_rows(x: Array, eps: float = 1e-12) -> Array:
+    return x / jnp.maximum(jnp.linalg.norm(x, axis=-1, keepdims=True), eps)
+
+
+def prepare_database(v: Array, metric: str) -> Array:
+    """Pre-normalize once for cosine metrics so the hot loop is a pure matmul."""
+    v = v.astype(jnp.float32)
+    if metric in (METRIC_COSINE_SIM, METRIC_COSINE_DIST):
+        return normalize_rows(v)
+    return v
+
+
+def prepare_queries(q: Array, metric: str) -> Array:
+    q = q.astype(jnp.float32)
+    if metric in (METRIC_COSINE_SIM, METRIC_COSINE_DIST):
+        return normalize_rows(q)
+    return q
+
+
+@partial(jax.jit, static_argnames=("metric",))
+def pairwise(q: Array, v: Array, *, metric: str = METRIC_COSINE_DIST) -> Array:
+    """Distances between all queries (B, d) and all rows (n, d) -> (B, n).
+
+    Inputs must already be prepared (normalized for cosine metrics).
+    Convention: output is oriented so that *smaller = closer* for distance
+    metrics and handled by callers for similarity metrics via ``key_sign``.
+    """
+    sims = q @ v.T
+    if metric == METRIC_COSINE_DIST:
+        return 1.0 - sims
+    return sims
+
+
+@partial(jax.jit, static_argnames=("metric",))
+def gathered(q: Array, v: Array, ids: Array, *, metric: str = METRIC_COSINE_DIST) -> Array:
+    """Distances from each query to its own gathered candidate rows.
+
+    q: (B, d); ids: (B, G) int32 (negative = padding, distance -> +inf/-inf);
+    returns (B, G).
+    """
+    safe = jnp.maximum(ids, 0)
+    rows = v[safe]                      # (B, G, d)
+    sims = jnp.einsum("bd,bgd->bg", q, rows)
+    if metric == METRIC_COSINE_DIST:
+        out = 1.0 - sims
+        pad = jnp.inf
+    else:
+        out = sims
+        pad = -jnp.inf
+    return jnp.where(ids >= 0, out, pad)
+
+
+def key_sign(metric: str) -> float:
+    """+1 if smaller = closer (distances), -1 if larger = closer (similarities).
+
+    The search loops operate on ``key = key_sign * value`` so that smaller keys
+    are always better, uniformly across metrics.
+    """
+    return 1.0 if metric == METRIC_COSINE_DIST else -1.0
+
+
+@partial(jax.jit, static_argnames=("k", "metric"))
+def brute_force_topk(q: Array, v: Array, *, k: int, metric: str = METRIC_COSINE_DIST):
+    """Exact top-k oracle (ground truth).  Returns (dists, ids) each (B, k)."""
+    d = pairwise(q, v, metric=metric)
+    key = d * key_sign(metric)
+    neg_key, ids = jax.lax.top_k(-key, k)
+    return -neg_key * key_sign(metric), ids
+
+
+def brute_force_topk_chunked(q, v, *, k: int, metric: str = METRIC_COSINE_DIST, chunk: int = 8192):
+    """Host-side chunked oracle for large n (keeps the (B, n) matrix bounded).
+
+    ``q`` must be prepared; raw database chunks are prepared here (idempotent
+    for already-normalized rows).
+    """
+    import numpy as np
+
+    q = jnp.asarray(q)
+    best_d = None
+    best_i = None
+    sign = key_sign(metric)
+    for start in range(0, v.shape[0], chunk):
+        block = prepare_database(jnp.asarray(v[start : start + chunk]), metric)
+        d = pairwise(q, block, metric=metric)
+        ids = jnp.arange(start, start + block.shape[0], dtype=jnp.int32)[None, :]
+        ids = jnp.broadcast_to(ids, d.shape)
+        if best_d is None:
+            cat_d, cat_i = d, ids
+        else:
+            cat_d = jnp.concatenate([best_d, d], axis=1)
+            cat_i = jnp.concatenate([best_i, ids], axis=1)
+        key = cat_d * sign
+        _, sel = jax.lax.top_k(-key, min(k, cat_d.shape[1]))
+        best_d = jnp.take_along_axis(cat_d, sel, axis=1)
+        best_i = jnp.take_along_axis(cat_i, sel, axis=1)
+    return np.asarray(best_d), np.asarray(best_i)

@@ -1,0 +1,208 @@
+"""Distributed (multi-device / multi-pod) vector search.
+
+Scale-out layout (DESIGN.md §3): the database is partitioned into ``S`` shards;
+each shard owns a *local* HNSW sub-index plus its own Ada-ef statistics and
+ef-estimation table (the paper's machinery applied to the shard's
+sub-database).  A query is broadcast to all shards, each runs adaptive-ef
+search locally, and the global result is a k-way merge of per-shard top-k —
+the standard layout of production vector databases (Milvus, Vespa, ES).
+
+Two execution paths with identical math:
+
+- :func:`retrieve_vmap`    — ``vmap`` over the stacked shard axis (single
+  device; used by tests/benchmarks on CPU),
+- :func:`retrieve_sharded` — ``shard_map`` over a mesh axis with one shard per
+  device and an ``all_gather`` + static merge (the production path; lowered
+  and compiled against the 512-device mesh in the multi-pod dry-run).
+
+Shard statistics merge with the §6.3 formulas (`merge_stats` is associative),
+so a *global* FDL model is also available for cross-shard scoring.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core import DatasetStats, EfTable, merge_stats
+from .distances import key_sign
+from .pipeline import AdaEfIndex, build_ada_index
+from .search import (
+    AdaEfConfig,
+    DeviceGraph,
+    SearchConfig,
+    SearchResult,
+    adaptive_search,
+)
+
+Array = jax.Array
+
+
+@dataclasses.dataclass
+class ShardedAdaEfIndex:
+    """Stacked per-shard arrays: leading axis = shard."""
+
+    graph: DeviceGraph        # each leaf has leading shard axis
+    stats: DatasetStats       # stacked
+    table: EfTable            # stacked
+    shard_offsets: Array      # (S,) global id of each shard's row 0
+    shard_size: int
+    num_shards: int
+    k: int
+    target_recall: float
+    search_cfg: SearchConfig
+    ada_cfg: AdaEfConfig
+    global_stats: DatasetStats  # §6.3 merge of all shard stats
+
+
+def build_sharded(
+    data: np.ndarray,
+    *,
+    num_shards: int,
+    k: int,
+    target_recall: float = 0.95,
+    **kwargs,
+) -> ShardedAdaEfIndex:
+    """Partition ``data`` row-round-robin-free (contiguous blocks) and build
+    one AdaEfIndex per shard; stack the device arrays."""
+    n = len(data) - len(data) % num_shards
+    data = np.asarray(data[:n], np.float32)
+    shard_size = n // num_shards
+    shards: list[AdaEfIndex] = []
+    for s in range(num_shards):
+        block = data[s * shard_size : (s + 1) * shard_size]
+        shards.append(
+            build_ada_index(block, k=k, target_recall=target_recall, seed=s, **kwargs)
+        )
+    # shards may have different upper-level counts: pad to the max
+    max_lv = max(s.graph.upper_adj.shape[0] for s in shards)
+    padded = []
+    for sh in shards:
+        g = sh.graph
+        lv = g.upper_adj.shape[0]
+        if lv < max_lv:
+            pad = jnp.full((max_lv - lv,) + g.upper_adj.shape[1:], -1, g.upper_adj.dtype)
+            g = g._replace(upper_adj=jnp.concatenate([g.upper_adj, pad], axis=0))
+        padded.append(g)
+    graph = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *padded)
+    stats = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *[s.stats for s in shards])
+    table = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *[s.table for s in shards])
+    gstats = shards[0].stats
+    for s in shards[1:]:
+        gstats = merge_stats(gstats, s.stats)
+    return ShardedAdaEfIndex(
+        graph=graph,
+        stats=stats,
+        table=table,
+        shard_offsets=jnp.arange(num_shards, dtype=jnp.int32) * shard_size,
+        shard_size=shard_size,
+        num_shards=num_shards,
+        k=k,
+        target_recall=target_recall,
+        search_cfg=shards[0].search_cfg,
+        ada_cfg=shards[0].ada_cfg,
+        global_stats=gstats,
+    )
+
+
+def _merge_topk(keys: Array, gids: Array, k: int):
+    """(S, B, k) per-shard results -> (B, k) global top-k."""
+    s, b, kk = keys.shape
+    flat_k = jnp.transpose(keys, (1, 0, 2)).reshape(b, s * kk)
+    flat_i = jnp.transpose(gids, (1, 0, 2)).reshape(b, s * kk)
+    neg, sel = jax.lax.top_k(-flat_k, k)
+    return -neg, jnp.take_along_axis(flat_i, sel, axis=1)
+
+
+@partial(jax.jit, static_argnames=("cfg", "ada", "k"))
+def _retrieve_stacked(
+    graph: DeviceGraph,
+    stats: DatasetStats,
+    table: EfTable,
+    offsets: Array,
+    queries: Array,
+    target_recall: Array,
+    cfg: SearchConfig,
+    ada: AdaEfConfig,
+    k: int,
+) -> SearchResult:
+    sign = key_sign(cfg.metric)
+
+    def per_shard(g, st, tb, off):
+        res = adaptive_search(g, queries, st, tb, target_recall, cfg, ada)
+        gid = jnp.where(res.ids >= 0, res.ids + off, -1)
+        key = jnp.where(res.ids >= 0, res.dists * sign, jnp.inf)
+        return key, gid, res.ndist, res.ef_used
+
+    keys, gids, ndist, efs = jax.vmap(per_shard)(graph, stats, table, offsets)
+    mk, mi = _merge_topk(keys, gids, k)
+    return SearchResult(
+        ids=mi,
+        dists=mk * sign,
+        ndist=jnp.sum(ndist, axis=0),           # total work across shards
+        iters=jnp.zeros_like(mi[:, 0]),
+        ef_used=jnp.max(efs, axis=0),
+    )
+
+
+def retrieve_vmap(
+    idx: ShardedAdaEfIndex, queries, target_recall: Optional[float] = None
+) -> SearchResult:
+    r = idx.target_recall if target_recall is None else target_recall
+    return _retrieve_stacked(
+        idx.graph,
+        idx.stats,
+        idx.table,
+        idx.shard_offsets,
+        jnp.asarray(queries),
+        jnp.asarray(r, jnp.float32),
+        idx.search_cfg,
+        idx.ada_cfg,
+        idx.k,
+    )
+
+
+# --------------------------------------------------------------------------
+# shard_map production path (one shard per device along mesh axis "shard")
+# --------------------------------------------------------------------------
+
+
+def make_retrieve_step(mesh: Mesh, axis: str, cfg: SearchConfig, ada: AdaEfConfig, k: int):
+    """Build the jitted multi-device retrieve step for the dry-run / serving.
+
+    Inputs are the *stacked* shard arrays sharded along ``axis``; queries and
+    target are replicated; output is the merged global top-k (replicated).
+    """
+    sign = key_sign(cfg.metric)
+
+    def local(graph, stats, table, offsets, queries, target_recall):
+        # leaves arrive with leading local shard axis of size S/devices
+        def per_shard(g, st, tb, off):
+            res = adaptive_search(g, queries, st, tb, target_recall, cfg, ada)
+            gid = jnp.where(res.ids >= 0, res.ids + off, -1)
+            key = jnp.where(res.ids >= 0, res.dists * sign, jnp.inf)
+            return key, gid, res.ndist
+
+        keys, gids, ndist = jax.vmap(per_shard)(graph, stats, table, offsets)
+        keys = jax.lax.all_gather(keys, axis, axis=0, tiled=True)   # (S, B, k)
+        gids = jax.lax.all_gather(gids, axis, axis=0, tiled=True)
+        mk, mi = _merge_topk(keys, gids, k)
+        total = jax.lax.psum(jnp.sum(ndist, axis=0), axis)
+        return mk * sign, mi, total
+
+    shard_spec = P(axis)
+    from jax.experimental.shard_map import shard_map
+
+    mapped = shard_map(
+        local,
+        mesh=mesh,
+        in_specs=(shard_spec, shard_spec, shard_spec, shard_spec, P(), P()),
+        out_specs=(P(), P(), P()),
+        check_rep=False,
+    )
+    return jax.jit(mapped)

@@ -1,0 +1,277 @@
+"""HNSW index construction (Malkov & Yashunin) — host-side offline job.
+
+The paper treats index construction as given (it operates on *pre-built*
+indexes; §3 "we consider scenarios where an HNSW index has already been
+constructed").  We implement the reference construction algorithm in numpy —
+random geometric levels, efConstruction best-first insertion, and the
+select-neighbors *heuristic* with keepPrunedConnections — and export the graph
+as flat, static-shape arrays that the JAX/TPU search consumes:
+
+    base_adj  : (n, M0)          int32, -1 padded   (level-0 adjacency, M0 = 2M)
+    upper_adj : (L, n, M)        int32, -1 padded   (levels 1..L)
+    levels    : (n,)             int32              (node's top level)
+    entry     : ()               int32
+    vectors   : (n, d)           float32            (prepared: normalized for cosine)
+
+Supports incremental ``add`` (used by the §7.5 update benchmarks) and soft
+``delete`` via a tombstone mask (HNSWlib has no in-place delete either; the
+paper rebuilds — we benchmark both paths).
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import List, Optional
+
+import numpy as np
+
+from repro.core.fdl import METRIC_COSINE_DIST
+from .distances import key_sign
+
+Array = np.ndarray
+
+
+@dataclasses.dataclass
+class HNSWParams:
+    m: int = 16                 # max outgoing degree, upper layers
+    ef_construction: int = 200
+    metric: str = METRIC_COSINE_DIST
+    seed: int = 0
+    keep_pruned: bool = True
+
+    @property
+    def m0(self) -> int:        # base-layer max degree (hnswlib: 2M)
+        return 2 * self.m
+
+
+class HNSWIndex:
+    """Mutable host-side index.  ``freeze()`` exports JAX-ready arrays."""
+
+    def __init__(self, dim: int, params: Optional[HNSWParams] = None, capacity: int = 1024):
+        self.p = params or HNSWParams()
+        self.dim = dim
+        self.rng = np.random.default_rng(self.p.seed)
+        self.ml = 1.0 / np.log(self.p.m)
+        self.sign = key_sign(self.p.metric)
+        self.vectors = np.zeros((capacity, dim), np.float32)
+        self.n = 0
+        self.levels = np.zeros((capacity,), np.int32)
+        self.alive = np.zeros((capacity,), bool)
+        # adjacency per level: level 0 has degree M0, others M.
+        self.neighbors: List[List[np.ndarray]] = []  # neighbors[node][level] -> int32 ids
+        self.entry = -1
+        self.max_level = -1
+
+    # ------------------------------------------------------------------ utils
+    def _grow(self, need: int):
+        cap = self.vectors.shape[0]
+        if need <= cap:
+            return
+        new_cap = max(need, cap * 2)
+        self.vectors = np.resize(self.vectors, (new_cap, self.dim))
+        self.levels = np.resize(self.levels, (new_cap,))
+        self.alive = np.resize(self.alive, (new_cap,))
+        self.alive[self.n:] = False
+
+    def _dist(self, q: Array, ids: Array) -> Array:
+        """Keys (smaller = better) from q to rows ids."""
+        sims = self.vectors[ids] @ q
+        if self.p.metric == METRIC_COSINE_DIST:
+            return 1.0 - sims
+        return -sims  # similarity -> key
+
+    def _prepare(self, x: Array) -> Array:
+        x = np.asarray(x, np.float32)
+        if self.p.metric == METRIC_COSINE_DIST or self.p.metric == "cos_sim":
+            nrm = np.linalg.norm(x, axis=-1, keepdims=True)
+            x = x / np.maximum(nrm, 1e-12)
+        return x
+
+    # ----------------------------------------------------------- search layer
+    def _search_layer(self, q: Array, eps: List[int], ef: int, level: int):
+        """Best-first search on one layer; returns [(key, id)] sorted ascending."""
+        visited = set(eps)
+        ep_keys = self._dist(q, np.asarray(eps, np.int64))
+        cand = [(float(k), e) for k, e in zip(ep_keys, eps)]
+        heapq.heapify(cand)
+        res = [(-float(k), e) for k, e in zip(ep_keys, eps)]  # max-heap by key
+        heapq.heapify(res)
+        while cand:
+            ck, c = heapq.heappop(cand)
+            fk = -res[0][0]
+            if ck > fk and len(res) >= ef:
+                break
+            nbrs = self.neighbors[c][level] if level < len(self.neighbors[c]) else None
+            if nbrs is None or len(nbrs) == 0:
+                continue
+            new = [int(x) for x in nbrs if int(x) not in visited]
+            if not new:
+                continue
+            visited.update(new)
+            keys = self._dist(q, np.asarray(new, np.int64))
+            for nk, nid in zip(keys, new):
+                nk = float(nk)
+                if len(res) < ef or nk < -res[0][0]:
+                    heapq.heappush(cand, (nk, nid))
+                    heapq.heappush(res, (-nk, nid))
+                    if len(res) > ef:
+                        heapq.heappop(res)
+        out = sorted(((-nk, nid) for nk, nid in res))
+        return out
+
+    # ----------------------------------------------- select neighbors (Alg 4)
+    def _select_heuristic(self, cand: List, m: int):
+        """HNSW Algorithm 4 with keepPrunedConnections."""
+        cand = sorted(cand)  # by key ascending
+        selected: List[int] = []
+        discarded: List = []
+        for key, cid in cand:
+            if len(selected) >= m:
+                break
+            ok = True
+            if selected:
+                d_to_sel = self._dist(self.vectors[cid], np.asarray(selected, np.int64))
+                if np.any(d_to_sel < key):
+                    ok = False
+            if ok:
+                selected.append(cid)
+            else:
+                discarded.append((key, cid))
+        if self.p.keep_pruned:
+            for key, cid in discarded:
+                if len(selected) >= m:
+                    break
+                selected.append(cid)
+        return selected
+
+    # ------------------------------------------------------------------- add
+    def add(self, data: Array):
+        """Insert a batch of raw vectors (rows)."""
+        data = self._prepare(np.atleast_2d(data))
+        for row in data:
+            self._insert(row)
+
+    def _insert(self, q: Array):
+        self._grow(self.n + 1)
+        idx = self.n
+        self.n += 1
+        self.vectors[idx] = q
+        self.alive[idx] = True
+        lvl = int(-np.log(max(self.rng.random(), 1e-12)) * self.ml)
+        self.levels[idx] = lvl
+        self.neighbors.append([np.empty(0, np.int32) for _ in range(lvl + 1)])
+
+        if self.entry < 0:
+            self.entry = idx
+            self.max_level = lvl
+            return
+
+        ep = [self.entry]
+        # zoom down through levels above lvl
+        for level in range(self.max_level, lvl, -1):
+            res = self._search_layer(q, ep, 1, level)
+            ep = [res[0][1]]
+        # insert at each level from min(lvl, max_level) down to 0
+        for level in range(min(lvl, self.max_level), -1, -1):
+            res = self._search_layer(q, ep, self.p.ef_construction, level)
+            m_l = self.p.m0 if level == 0 else self.p.m
+            selected = self._select_heuristic(res, self.p.m)
+            self.neighbors[idx][level] = np.asarray(selected, np.int32)
+            # bidirectional edges + shrink
+            for s in selected:
+                cur = self.neighbors[s][level]
+                cur = np.append(cur, idx).astype(np.int32)
+                if len(cur) > m_l:
+                    keys = self._dist(self.vectors[s], cur.astype(np.int64))
+                    cur = np.asarray(
+                        self._select_heuristic(list(zip(keys.tolist(), cur.tolist())), m_l),
+                        np.int32,
+                    )
+                self.neighbors[s][level] = cur
+            ep = [r[1] for r in res]
+        if lvl > self.max_level:
+            self.max_level = lvl
+            self.entry = idx
+
+    # ---------------------------------------------------------------- delete
+    def mark_deleted(self, ids):
+        """Tombstone delete (search filters dead results; graph keeps routing)."""
+        self.alive[np.asarray(ids, np.int64)] = False
+
+    # ---------------------------------------------------------------- export
+    def freeze(self) -> "HNSWGraph":
+        n = self.n
+        m0, m = self.p.m0, self.p.m
+        nlv = max(self.max_level, 0)
+        base = np.full((n, m0), -1, np.int32)
+        upper = np.full((nlv, n, m), -1, np.int32)
+        for i in range(n):
+            lv = self.neighbors[i]
+            b = lv[0][:m0]
+            base[i, : len(b)] = b
+            for l in range(1, min(len(lv), nlv + 1)):
+                u = lv[l][:m]
+                upper[l - 1, i, : len(u)] = u
+        return HNSWGraph(
+            base_adj=base,
+            upper_adj=upper,
+            levels=self.levels[:n].copy(),
+            entry=np.int32(self.entry),
+            vectors=self.vectors[:n].copy(),
+            alive=self.alive[:n].copy(),
+            metric=self.p.metric,
+            m=self.p.m,
+        )
+
+
+@dataclasses.dataclass
+class HNSWGraph:
+    """Frozen, array-only graph (host numpy; move to device via jnp.asarray)."""
+
+    base_adj: Array    # (n, M0)
+    upper_adj: Array   # (L, n, M)
+    levels: Array      # (n,)
+    entry: Array       # ()
+    vectors: Array     # (n, d) prepared
+    alive: Array       # (n,) bool
+    metric: str
+    m: int
+
+    @property
+    def n(self) -> int:
+        return self.base_adj.shape[0]
+
+    @property
+    def dim(self) -> int:
+        return self.vectors.shape[1]
+
+    @property
+    def num_upper_levels(self) -> int:
+        return self.upper_adj.shape[0]
+
+    def nbytes(self) -> int:
+        return int(
+            self.base_adj.nbytes
+            + self.upper_adj.nbytes
+            + self.levels.nbytes
+            + self.vectors.nbytes
+            + self.alive.nbytes
+        )
+
+
+def build_index(
+    data: Array,
+    *,
+    m: int = 16,
+    ef_construction: int = 200,
+    metric: str = METRIC_COSINE_DIST,
+    seed: int = 0,
+) -> HNSWIndex:
+    data = np.asarray(data, np.float32)
+    idx = HNSWIndex(
+        data.shape[1],
+        HNSWParams(m=m, ef_construction=ef_construction, metric=metric, seed=seed),
+        capacity=len(data),
+    )
+    idx.add(data)
+    return idx

@@ -1,0 +1,321 @@
+"""End-to-end Ada-ef pipeline (paper Figure 2).
+
+Offline stage:
+  1. dataset-level statistics (mean vector + covariance) — §5,
+  2. sample G data vectors as proxy queries + their ground truth — §6.2,
+  3. build the ef-estimation table by probing the real HNSW search — §6.2.
+
+Online stage: :func:`repro.index.search.adaptive_search` (Alg. 2).
+
+The pipeline also implements §6.3 incremental updates: ``insert``/``delete``
+update the HNSW index, merge/unmerge the statistics, refresh the sample ground
+truth incrementally, and rebuild only the (cheap) ef table.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (
+    DatasetStats,
+    EfTable,
+    EstimatorConfig,
+    build_ef_table,
+    compute_stats,
+    default_ef_ladder,
+    estimate_fdl,
+    merge_stats,
+    unmerge_stats,
+)
+from repro.core.scoring import score_query
+from repro.core.fdl import METRIC_COSINE_DIST, METRIC_COSINE_SIM
+from .distances import brute_force_topk_chunked, prepare_queries
+from .hnsw import HNSWIndex, HNSWParams, build_index
+from .search import (
+    AdaEfConfig,
+    DeviceGraph,
+    SearchConfig,
+    SearchResult,
+    adaptive_search,
+    device_graph,
+    recall_at_k,
+    search,
+)
+
+Array = jax.Array
+
+
+@partial(jax.jit, static_argnames=("cfg", "ada"))
+def collect_distances(
+    g: DeviceGraph, queries: Array, cfg: SearchConfig, ada: AdaEfConfig
+):
+    """Phase A only (distance collection) — used for offline proxy scoring."""
+    from .search import _expand, _init_state, _not_done  # shared internals
+    from .distances import key_sign
+
+    sign = key_sign(cfg.metric)
+    queries = queries.astype(jnp.float32)
+    if cfg.metric in (METRIC_COSINE_DIST, METRIC_COSINE_SIM):
+        queries = queries / jnp.maximum(
+            jnp.linalg.norm(queries, axis=-1, keepdims=True), 1e-12
+        )
+    m0 = g.base_adj.shape[1]
+    lmax = ada.buf(m0)
+    ef_inf = jnp.asarray(cfg.ef_cap, jnp.int32)
+
+    def one(q):
+        s = _init_state(g, q, cfg, ef_inf, lmax=lmax, hops=ada.hops)
+
+        def cond(s):
+            return _not_done(s) & (s.dcount < s.lgoal) & (s.iters < cfg.iters())
+
+        def body(s):
+            return _expand(g, q, s, sign, collect=True, lmax=lmax)
+
+        s = jax.lax.while_loop(cond, body, s)
+        return s.dbuf, s.dcount
+
+    return jax.vmap(one)(queries)
+
+
+@dataclasses.dataclass
+class OfflineTimings:
+    stats_s: float = 0.0
+    sample_s: float = 0.0
+    ef_table_s: float = 0.0
+
+    @property
+    def total_s(self) -> float:
+        return self.stats_s + self.sample_s + self.ef_table_s
+
+
+@dataclasses.dataclass
+class AdaEfIndex:
+    """HNSW index + the Ada-ef offline artifacts; the deployable unit."""
+
+    host_index: HNSWIndex
+    graph: DeviceGraph
+    stats: DatasetStats
+    table: EfTable
+    k: int
+    target_recall: float
+    search_cfg: SearchConfig
+    ada_cfg: AdaEfConfig
+    sample_ids: np.ndarray          # proxy-query row ids
+    sample_gt: np.ndarray           # (G, k) ground-truth ids of proxies
+    timings: OfflineTimings
+    raw_data: Optional[np.ndarray] = None  # kept for incremental GT refresh
+
+    # ------------------------------------------------------------- online API
+    def query(self, queries, target_recall: Optional[float] = None) -> SearchResult:
+        r = self.target_recall if target_recall is None else target_recall
+        return adaptive_search(
+            self.graph,
+            jnp.asarray(queries),
+            self.stats,
+            self.table,
+            jnp.asarray(r, jnp.float32),
+            self.search_cfg,
+            self.ada_cfg,
+        )
+
+    def query_static(self, queries, ef: int) -> SearchResult:
+        return search(self.graph, jnp.asarray(queries), ef, self.search_cfg)
+
+    # -------------------------------------------------------------- updates
+    def insert(self, new_data: np.ndarray, *, refresh_table: bool = True):
+        """§6.3 insertion: index add + stats merge + incremental GT + table."""
+        new_data = np.atleast_2d(np.asarray(new_data, np.float32))
+        t0 = time.perf_counter()
+        self.host_index.add(new_data)
+        self.graph = device_graph(self.host_index.freeze())
+        t_index = time.perf_counter() - t0
+
+        t0 = time.perf_counter()
+        normalize = self.search_cfg.metric in (METRIC_COSINE_DIST, METRIC_COSINE_SIM)
+        new_stats = compute_stats(
+            jnp.asarray(new_data), mode=self.stats.mode, normalize=normalize
+        )
+        self.stats = merge_stats(self.stats, new_stats)
+        t_stats = time.perf_counter() - t0
+
+        t0 = time.perf_counter()
+        # incremental GT: distances of proxies to ONLY the new rows (paper §6.3)
+        qs = prepare_queries(jnp.asarray(self.raw_data[self.sample_ids]), self.search_cfg.metric)
+        nd, ni = brute_force_topk_chunked(
+            qs, new_data, k=min(self.k, len(new_data)), metric=self.search_cfg.metric
+        )
+        base_n = len(self.raw_data)
+        self.raw_data = np.concatenate([self.raw_data, new_data], axis=0)
+        self._merge_gt(nd, ni + base_n)
+        t_sample = time.perf_counter() - t0
+
+        t_table = 0.0
+        if refresh_table:
+            t0 = time.perf_counter()
+            self._rebuild_table()
+            t_table = time.perf_counter() - t0
+        self.timings = OfflineTimings(t_stats, t_sample, t_table)
+        return {"index_s": t_index, "stats_s": t_stats, "sample_s": t_sample, "ef_table_s": t_table}
+
+    def delete(self, ids: np.ndarray, *, refresh_table: bool = True):
+        """§6.3 deletion: tombstone + stats unmerge + GT refresh + table."""
+        ids = np.asarray(ids, np.int64)
+        t0 = time.perf_counter()
+        self.host_index.mark_deleted(ids)
+        self.graph = device_graph(self.host_index.freeze())
+        t_index = time.perf_counter() - t0
+
+        t0 = time.perf_counter()
+        normalize = self.search_cfg.metric in (METRIC_COSINE_DIST, METRIC_COSINE_SIM)
+        del_stats = compute_stats(
+            jnp.asarray(self.raw_data[ids]), mode=self.stats.mode, normalize=normalize
+        )
+        self.stats = unmerge_stats(self.stats, del_stats)
+        t_stats = time.perf_counter() - t0
+
+        t0 = time.perf_counter()
+        # drop deleted proxies; refresh GT rows that contained deleted ids
+        alive_mask = np.ones(len(self.raw_data), bool)
+        alive_mask[ids] = False
+        keep = alive_mask[self.sample_ids]
+        self.sample_ids = self.sample_ids[keep]
+        self.sample_gt = self.sample_gt[keep]
+        dirty = ~alive_mask[self.sample_gt].all(axis=1)
+        if dirty.any():
+            qs = prepare_queries(
+                jnp.asarray(self.raw_data[self.sample_ids[dirty]]), self.search_cfg.metric
+            )
+            alive_rows = np.nonzero(alive_mask)[0]
+            _, gi = brute_force_topk_chunked(
+                qs, self.raw_data[alive_rows], k=self.k, metric=self.search_cfg.metric
+            )
+            self.sample_gt[dirty] = alive_rows[gi]
+        t_sample = time.perf_counter() - t0
+
+        t_table = 0.0
+        if refresh_table:
+            t0 = time.perf_counter()
+            self._rebuild_table()
+            t_table = time.perf_counter() - t0
+        self.timings = OfflineTimings(t_stats, t_sample, t_table)
+        return {"index_s": t_index, "stats_s": t_stats, "sample_s": t_sample, "ef_table_s": t_table}
+
+    # -------------------------------------------------------------- internals
+    def _merge_gt(self, new_d: np.ndarray, new_i: np.ndarray):
+        """Merge top-k over the new rows into the stored proxy ground truth."""
+        from .distances import gathered, prepare_database
+
+        qs = prepare_queries(jnp.asarray(self.raw_data[self.sample_ids]), self.search_cfg.metric)
+        vp = prepare_database(jnp.asarray(self.raw_data), self.search_cfg.metric)
+        old_d = np.asarray(
+            gathered(qs, vp, jnp.asarray(self.sample_gt), metric=self.search_cfg.metric)
+        )
+        cat_d = np.concatenate([old_d, new_d], axis=1)
+        cat_i = np.concatenate([self.sample_gt, new_i], axis=1)
+        from .distances import key_sign
+
+        order = np.argsort(cat_d * key_sign(self.search_cfg.metric), axis=1)[:, : self.k]
+        self.sample_gt = np.take_along_axis(cat_i, order, axis=1)
+
+    def _proxy_scores(self) -> np.ndarray:
+        qs = jnp.asarray(self.raw_data[self.sample_ids])
+        dbuf, dcount = collect_distances(self.graph, qs, self.search_cfg, self.ada_cfg)
+        qs_p = prepare_queries(qs, self.search_cfg.metric)
+        params = estimate_fdl(self.stats, qs_p, metric=self.ada_cfg.estimator.metric)
+        valid = jnp.arange(dbuf.shape[1])[None, :] < dcount[:, None]
+        scores = score_query(
+            params,
+            dbuf,
+            valid=valid,
+            m=self.ada_cfg.estimator.m,
+            delta=self.ada_cfg.estimator.delta,
+            metric=self.ada_cfg.estimator.metric,
+            decay=self.ada_cfg.estimator.decay,
+        )
+        return np.asarray(scores)
+
+    def _rebuild_table(self):
+        scores = self._proxy_scores()
+        qs = jnp.asarray(self.raw_data[self.sample_ids])
+        gt = jnp.asarray(self.sample_gt)
+
+        def recall_at_ef(ef: int, subset: np.ndarray) -> np.ndarray:
+            res = search(self.graph, qs[subset], ef, self.search_cfg)
+            return np.asarray(recall_at_k(res.ids, gt[subset]))
+
+        self.table = build_ef_table(
+            scores,
+            recall_at_ef,
+            target_recall=self.target_recall,
+            ef_ladder=default_ef_ladder(self.k, ef_max=self.search_cfg.ef_cap),
+        )
+
+
+def build_ada_index(
+    data: np.ndarray,
+    *,
+    k: int,
+    target_recall: float = 0.95,
+    metric: str = METRIC_COSINE_DIST,
+    m: int = 16,
+    ef_construction: int = 200,
+    ef_cap: int = 600,
+    num_samples: int = 200,
+    cov_mode: str = "full",
+    ada_cfg: Optional[AdaEfConfig] = None,
+    host_index: Optional[HNSWIndex] = None,
+    seed: int = 0,
+) -> AdaEfIndex:
+    """Offline stage of Figure 2; returns the deployable AdaEfIndex."""
+    data = np.asarray(data, np.float32)
+    if host_index is None:
+        host_index = build_index(
+            data, m=m, ef_construction=ef_construction, metric=metric, seed=seed
+        )
+    graph = device_graph(host_index.freeze())
+    cfg = SearchConfig(k=k, ef_cap=ef_cap, metric=metric)
+    ada = ada_cfg or AdaEfConfig(estimator=EstimatorConfig(metric=metric))
+
+    # (i) dataset statistics
+    t0 = time.perf_counter()
+    normalize = metric in (METRIC_COSINE_DIST, METRIC_COSINE_SIM)
+    stats = compute_stats(jnp.asarray(data), mode=cov_mode, normalize=normalize)
+    jax.block_until_ready(stats.mean)
+    t_stats = time.perf_counter() - t0
+
+    # (ii) sample proxies + ground truth
+    t0 = time.perf_counter()
+    rng = np.random.default_rng(seed)
+    sample_ids = rng.choice(len(data), size=min(num_samples, len(data)), replace=False)
+    qs = prepare_queries(jnp.asarray(data[sample_ids]), metric)
+    _, gt = brute_force_topk_chunked(qs, data, k=k, metric=metric)
+    t_sample = time.perf_counter() - t0
+
+    out = AdaEfIndex(
+        host_index=host_index,
+        graph=graph,
+        stats=stats,
+        table=None,  # built below
+        k=k,
+        target_recall=target_recall,
+        search_cfg=cfg,
+        ada_cfg=ada,
+        sample_ids=sample_ids,
+        sample_gt=gt,
+        timings=OfflineTimings(),
+        raw_data=data,
+    )
+
+    # (iii) ef-estimation table
+    t0 = time.perf_counter()
+    out._rebuild_table()
+    t_table = time.perf_counter() - t0
+    out.timings = OfflineTimings(t_stats, t_sample, t_table)
+    return out

@@ -1,0 +1,435 @@
+"""Batched HNSW search in JAX (static shapes, `lax.while_loop`).
+
+TPU adaptation of HNSWlib's pointer-chasing best-first search:
+
+- candidate heap ``C`` and result heap ``W`` are fixed-capacity *sorted arrays*
+  of (key, id) pairs (key = ``key_sign(metric) * value`` so smaller = better),
+- the visited set is a per-query bitmask with a spare slot for padded writes,
+- one loop iteration pops the best unexpanded candidate, gathers its adjacency
+  row, computes the whole frontier's distances as one contraction, and merges
+  into ``C``/``W`` with a key-value ``lax.sort``,
+- queries batch via ``vmap`` (JAX's while-loop batching rule applies per-element
+  masking, so early-finishing queries stop updating their state).
+
+Termination policies:
+- static ef (standard HNSW; also with PiP patience early-termination),
+- **Ada-ef** (paper Alg. 2): phase A collects the first ``l`` distances with
+  ef = inf, calls ESTIMATE-EF once, phase B continues with the estimated ef.
+
+The dynamic ef trick: capacities are static (``ef_cap``) while the *effective*
+ef is a runtime int32 — every bound reads ``W[ef_dyn - 1]`` with a dynamic
+index, which is exactly "truncate W to ef" semantics for the search control.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import DatasetStats, EfTable, EstimatorConfig, estimate_ef
+from repro.core.fdl import METRIC_COSINE_DIST
+from .distances import key_sign
+from .hnsw import HNSWGraph
+
+Array = jax.Array
+INF = jnp.inf
+
+
+class DeviceGraph(NamedTuple):
+    base_adj: Array   # (n, M0) int32, -1 pad
+    upper_adj: Array  # (L, n, M) int32, -1 pad
+    entry: Array      # () int32
+    vectors: Array    # (n, d) float32 prepared
+    alive: Array      # (n,) bool
+
+
+def device_graph(g: HNSWGraph) -> DeviceGraph:
+    return DeviceGraph(
+        base_adj=jnp.asarray(g.base_adj),
+        upper_adj=jnp.asarray(g.upper_adj),
+        entry=jnp.asarray(g.entry, jnp.int32),
+        vectors=jnp.asarray(g.vectors, jnp.float32),
+        alive=jnp.asarray(g.alive),
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class SearchConfig:
+    k: int
+    ef_cap: int                   # static W/C capacity (>= any runtime ef)
+    metric: str = METRIC_COSINE_DIST
+    max_iters: int = 0            # 0 -> auto (4 * ef_cap + 64)
+    patience: int = 0             # >0 enables PiP early termination
+    use_distance_kernel: bool = False
+
+    def iters(self) -> int:
+        return self.max_iters if self.max_iters > 0 else 4 * self.ef_cap + 64
+
+    def __post_init__(self):
+        if self.k > self.ef_cap:
+            raise ValueError(f"k={self.k} > ef_cap={self.ef_cap}")
+
+
+class SearchState(NamedTuple):
+    ck: Array        # (C,) candidate keys, sorted ascending, +inf empty
+    ci: Array        # (C,) candidate ids
+    rk: Array        # (W,) result keys, sorted ascending, +inf empty
+    ri: Array        # (W,) result ids
+    visited: Array   # (n+1,) bool
+    ef_dyn: Array    # () int32 effective ef
+    ndist: Array     # () int32 distance computations so far
+    iters: Array     # () int32
+    dbuf: Array      # (lmax,) collected raw distances (metric orientation)
+    dcount: Array    # () int32 number collected
+    lgoal: Array     # () int32 collection goal (|2-hop(ep)| by default)
+    stale: Array     # () int32 PiP staleness counter
+    bound_prev: Array  # () float32 previous top-k bound (PiP)
+
+
+class SearchResult(NamedTuple):
+    ids: Array       # (B, k)
+    dists: Array     # (B, k) metric-oriented values
+    ndist: Array     # (B,) distance computations (the paper's cost proxy)
+    iters: Array     # (B,)
+    ef_used: Array   # (B,) effective ef at termination
+
+
+# --------------------------------------------------------------------------
+# upper-layer greedy descent
+# --------------------------------------------------------------------------
+
+
+def _gather_keys(g: DeviceGraph, q: Array, ids: Array, sign: float):
+    """Keys from q to graph rows; padded ids (-1) -> +inf."""
+    safe = jnp.maximum(ids, 0)
+    sims = g.vectors[safe] @ q
+    vals = 1.0 - sims if sign > 0 else sims  # cos_dist vs similarity
+    keys = vals * 1.0 if sign > 0 else -vals
+    return jnp.where(ids >= 0, keys, INF), jnp.where(ids >= 0, vals, INF * sign)
+
+
+def _descend(g: DeviceGraph, q: Array, sign: float):
+    """Greedy top-down walk through the upper layers; returns base entry id+key."""
+    ep = g.entry
+    ep_key, _ = _gather_keys(g, q, ep[None], sign)
+    ep_key = ep_key[0]
+    num_levels = g.upper_adj.shape[0]
+    for level in range(num_levels - 1, -1, -1):
+        adj_l = g.upper_adj[level]
+
+        def cond(c):
+            _, _, moved = c
+            return moved
+
+        def body(c):
+            cur, cur_key, _ = c
+            nbrs = adj_l[cur]
+            keys, _ = _gather_keys(g, q, nbrs, sign)
+            j = jnp.argmin(keys)
+            bk, bi = keys[j], nbrs[j]
+            better = bk < cur_key
+            return (
+                jnp.where(better, bi, cur),
+                jnp.where(better, bk, cur_key),
+                better,
+            )
+
+        ep, ep_key, _ = jax.lax.while_loop(
+            cond, body, (ep, ep_key, jnp.asarray(True))
+        )
+    return ep, ep_key
+
+
+# --------------------------------------------------------------------------
+# base-layer expansion step (shared by all policies)
+# --------------------------------------------------------------------------
+
+
+def _merge_sorted(keys: Array, ids: Array, new_keys: Array, new_ids: Array, cap: int):
+    """Merge new entries into a sorted (keys, ids) array, keep best ``cap``."""
+    all_k = jnp.concatenate([keys, new_keys])
+    all_i = jnp.concatenate([ids, new_ids])
+    sk, si = jax.lax.sort((all_k, all_i), num_keys=1)
+    return sk[:cap], si[:cap]
+
+
+def _expand(g: DeviceGraph, q: Array, s: SearchState, sign: float, collect: bool, lmax: int):
+    """Pop best candidate, expand its adjacency row, merge into C and W."""
+    n = g.vectors.shape[0]
+    c_id = s.ci[0]
+    # pop front (arrays are sorted; shift left)
+    ck = jnp.concatenate([s.ck[1:], jnp.full((1,), INF, s.ck.dtype)])
+    ci = jnp.concatenate([s.ci[1:], jnp.full((1,), -1, s.ci.dtype)])
+
+    nbrs = g.base_adj[jnp.maximum(c_id, 0)]
+    valid = (nbrs >= 0) & ~s.visited[jnp.minimum(jnp.maximum(nbrs, 0), n - 1)]
+    # mark visited (padded/invalid writes go to spare slot n)
+    write_idx = jnp.where(valid, nbrs, n)
+    visited = s.visited.at[write_idx].set(True)
+
+    keys, vals = _gather_keys(g, q, jnp.where(valid, nbrs, -1), sign)
+    ndist = s.ndist + jnp.sum(valid).astype(jnp.int32)
+
+    # admission: key < W[ef_dyn - 1]  (inf while W not full  => always admit)
+    bound = jnp.take(s.rk, s.ef_dyn - 1)
+    admit_c = valid & (keys < bound)
+    admit_w = admit_c & g.alive[jnp.maximum(nbrs, 0)]
+
+    keys_w = jnp.where(admit_w, keys, INF)
+    keys_c = jnp.where(admit_c, keys, INF)
+    ids_new = jnp.where(valid, nbrs, -1)
+
+    rk, ri = _merge_sorted(s.rk, s.ri, keys_w, ids_new, s.rk.shape[0])
+    ck, ci = _merge_sorted(ck, ci, keys_c, ids_new, ck.shape[0])
+
+    dbuf, dcount = s.dbuf, s.dcount
+    if collect:
+        # record every *computed* distance (Alg. 2 lines 19-20)
+        offs = jnp.cumsum(valid.astype(jnp.int32)) - 1
+        pos = s.dcount + offs
+        ok = valid & (pos < lmax)
+        dbuf = s.dbuf.at[jnp.where(ok, pos, lmax)].set(
+            jnp.where(ok, vals, 0.0), mode="drop"
+        )
+        dcount = jnp.minimum(s.dcount + jnp.sum(valid).astype(jnp.int32), lmax)
+
+    # PiP bookkeeping: did the k-th best improve this iteration?
+    return s._replace(
+        ck=ck,
+        ci=ci,
+        rk=rk,
+        ri=ri,
+        visited=visited,
+        ndist=ndist,
+        iters=s.iters + 1,
+        dbuf=dbuf,
+        dcount=dcount,
+    )
+
+
+def _not_done(s: SearchState) -> Array:
+    bound = jnp.take(s.rk, s.ef_dyn - 1)
+    return (s.ck[0] <= bound) & jnp.isfinite(s.ck[0])
+
+
+# --------------------------------------------------------------------------
+# initialization
+# --------------------------------------------------------------------------
+
+
+def _two_hop_goal(g: DeviceGraph, ep: Array, hops: int, lmax: int) -> Array:
+    """l = number of nodes reachable within ``hops`` hops of ep (paper §4)."""
+    if hops <= 1:
+        nb1 = g.base_adj[ep]
+        cnt = 1 + jnp.sum(nb1 >= 0)
+        return jnp.minimum(cnt, lmax).astype(jnp.int32)
+    nb1 = g.base_adj[ep]                       # (M0,)
+    nb2 = g.base_adj[jnp.maximum(nb1, 0)]      # (M0, M0)
+    nb2 = jnp.where((nb1 >= 0)[:, None], nb2, -1)
+    if hops >= 3:
+        nb3 = g.base_adj[jnp.maximum(nb2, 0)]
+        nb3 = jnp.where((nb2 >= 0)[..., None], nb3, -1)
+        ids = jnp.concatenate([ep[None], nb1.ravel(), nb2.ravel(), nb3.ravel()])
+    else:
+        ids = jnp.concatenate([ep[None], nb1.ravel(), nb2.ravel()])
+    sids = jnp.sort(ids)
+    uniq = (sids >= 0) & jnp.concatenate([jnp.asarray([True]), sids[1:] != sids[:-1]])
+    cnt = jnp.sum(uniq)
+    return jnp.minimum(cnt, lmax).astype(jnp.int32)
+
+
+def _init_state(
+    g: DeviceGraph, q: Array, cfg: SearchConfig, ef0: Array, lmax: int, hops: int
+) -> SearchState:
+    sign = key_sign(cfg.metric)
+    n = g.vectors.shape[0]
+    ep, ep_key = _descend(g, q, sign)
+    cap = cfg.ef_cap
+    ck = jnp.full((cap,), INF).at[0].set(ep_key)
+    ci = jnp.full((cap,), -1, jnp.int32).at[0].set(ep)
+    ep_alive = g.alive[ep]
+    rk = jnp.full((cap,), INF).at[0].set(jnp.where(ep_alive, ep_key, INF))
+    ri = jnp.full((cap,), -1, jnp.int32).at[0].set(jnp.where(ep_alive, ep, -1))
+    rk, ri = jax.lax.sort((rk, ri), num_keys=1)
+    visited = jnp.zeros((n + 1,), bool).at[ep].set(True)
+    dbuf = jnp.zeros((lmax,), jnp.float32).at[0].set(ep_key * sign)  # D <- dist(ep, q)
+    return SearchState(
+        ck=ck,
+        ci=ci,
+        rk=rk,
+        ri=ri,
+        visited=visited,
+        ef_dyn=ef0.astype(jnp.int32),
+        ndist=jnp.asarray(1, jnp.int32),
+        iters=jnp.asarray(0, jnp.int32),
+        dbuf=dbuf,
+        dcount=jnp.asarray(1, jnp.int32),
+        lgoal=_two_hop_goal(g, ep, hops, lmax),
+        stale=jnp.asarray(0, jnp.int32),
+        bound_prev=jnp.asarray(INF, jnp.float32),
+    )
+
+
+def _extract(s: SearchState, cfg: SearchConfig, sign: float) -> SearchResult:
+    rk = s.rk[: cfg.k]
+    ri = s.ri[: cfg.k]
+    return SearchResult(
+        ids=jnp.where(jnp.isfinite(rk), ri, -1),
+        dists=rk * sign,
+        ndist=s.ndist,
+        iters=s.iters,
+        ef_used=s.ef_dyn,
+    )
+
+
+# --------------------------------------------------------------------------
+# policy: static ef (+ optional PiP patience)
+# --------------------------------------------------------------------------
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def search(g: DeviceGraph, queries: Array, ef: Array, cfg: SearchConfig) -> SearchResult:
+    """Standard HNSW search with a (runtime) static ef, batched over queries.
+
+    ``ef`` may be a scalar or a per-query (B,) int array (this is also the
+    execution path for *pre-estimated* adaptive efs).
+    """
+    sign = key_sign(cfg.metric)
+    queries = queries.astype(jnp.float32)
+    if cfg.metric == METRIC_COSINE_DIST or cfg.metric == "cos_sim":
+        queries = queries / jnp.maximum(
+            jnp.linalg.norm(queries, axis=-1, keepdims=True), 1e-12
+        )
+    ef_b = jnp.broadcast_to(jnp.asarray(ef, jnp.int32), queries.shape[:1])
+    ef_b = jnp.clip(ef_b, cfg.k, cfg.ef_cap)
+
+    def one(q, ef1):
+        s = _init_state(g, q, cfg, ef1, lmax=1, hops=1)
+
+        def cond(s):
+            go = _not_done(s) & (s.iters < cfg.iters())
+            if cfg.patience > 0:
+                go = go & (s.stale < cfg.patience)
+            return go
+
+        def body(s):
+            s2 = _expand(g, q, s, sign, collect=False, lmax=1)
+            if cfg.patience > 0:
+                bound_k = jnp.take(s2.rk, jnp.minimum(cfg.k, s2.ef_dyn) - 1)
+                improved = bound_k < s.bound_prev
+                s2 = s2._replace(
+                    stale=jnp.where(improved, 0, s.stale + 1),
+                    bound_prev=jnp.minimum(bound_k, s.bound_prev),
+                )
+            return s2
+
+        s = jax.lax.while_loop(cond, body, s)
+        return _extract(s, cfg, sign)
+
+    return jax.vmap(one)(queries, ef_b)
+
+
+# --------------------------------------------------------------------------
+# policy: Ada-ef (paper Algorithm 2)
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class AdaEfConfig:
+    hops: int = 2                 # |D| bound = |hops-hop(ep)| (Table 8 ablation)
+    lmax: int = 0                 # D buffer capacity; 0 -> auto 1 + M0 + M0^2
+    estimator: EstimatorConfig = EstimatorConfig()
+
+    def buf(self, m0: int) -> int:
+        if self.lmax > 0:
+            return self.lmax
+        if self.hops <= 1:
+            return 1 + m0
+        return 1 + m0 + m0 * m0  # capped 2-hop budget (also used for hops=3)
+
+
+@partial(jax.jit, static_argnames=("cfg", "ada"))
+def adaptive_search(
+    g: DeviceGraph,
+    queries: Array,
+    stats: DatasetStats,
+    table: EfTable,
+    target_recall: Array,
+    cfg: SearchConfig,
+    ada: AdaEfConfig = AdaEfConfig(),
+) -> SearchResult:
+    """Paper Algorithm 2: ef = inf until ``l`` distances collected, then
+    ESTIMATE-EF once, then continue with the estimated ef."""
+    sign = key_sign(cfg.metric)
+    queries = queries.astype(jnp.float32)
+    if cfg.metric == METRIC_COSINE_DIST or cfg.metric == "cos_sim":
+        queries = queries / jnp.maximum(
+            jnp.linalg.norm(queries, axis=-1, keepdims=True), 1e-12
+        )
+    m0 = g.base_adj.shape[1]
+    lmax = ada.buf(m0)
+    ef_inf = jnp.asarray(cfg.ef_cap, jnp.int32)
+
+    # ---- phase A: collect (ef = inf) --------------------------------------
+    def phase_a(q):
+        s = _init_state(g, q, cfg, ef_inf, lmax=lmax, hops=ada.hops)
+
+        def cond(s):
+            return _not_done(s) & (s.dcount < s.lgoal) & (s.iters < cfg.iters())
+
+        def body(s):
+            return _expand(g, q, s, sign, collect=True, lmax=lmax)
+
+        return jax.lax.while_loop(cond, body, s)
+
+    states = jax.vmap(phase_a)(queries)
+
+    # ---- ESTIMATE-EF (Algorithm 1), batched once --------------------------
+    valid = jnp.arange(lmax)[None, :] < states.dcount[:, None]
+    ef_est = estimate_ef(
+        stats,
+        table,
+        queries,
+        states.dbuf,
+        jnp.asarray(target_recall, jnp.float32),
+        valid=valid,
+        config=ada.estimator,
+    )
+    ef_est = jnp.clip(ef_est, cfg.k, cfg.ef_cap)
+
+    # ---- phase B: continue with estimated ef (W truncated via ef_dyn) -----
+    def phase_b(s: SearchState, q, ef1):
+        s = s._replace(ef_dyn=ef1)
+
+        def cond(s):
+            return _not_done(s) & (s.iters < cfg.iters())
+
+        def body(s):
+            return _expand(g, q, s, sign, collect=False, lmax=lmax)
+
+        return jax.lax.while_loop(cond, body, s)
+
+    states = jax.vmap(phase_b)(states, queries, ef_est)
+    res = jax.vmap(lambda s: _extract(s, cfg, sign))(states)
+    return res._replace(ef_used=ef_est)
+
+
+# --------------------------------------------------------------------------
+# recall
+# --------------------------------------------------------------------------
+
+
+def recall_at_k(pred_ids: Array, true_ids: Array) -> Array:
+    """Recall@k = |pred ∩ true| / k, batched. Arrays (B, k) int32."""
+    eq = pred_ids[:, :, None] == true_ids[:, None, :]
+    eq = eq & (pred_ids >= 0)[:, :, None]
+    hits = jnp.sum(jnp.any(eq, axis=-1), axis=-1)
+    return hits.astype(jnp.float32) / true_ids.shape[1]
+
+
+def as_host(res: SearchResult):
+    return jax.tree_util.tree_map(np.asarray, res)

@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the perf-critical compute layers.
+
+Paper hot spots: fused pairwise distance, the qSigmaq^T quadratic form, fused
+quantile-bin scoring.  Serving substrate: flash attention (prefill) + blocked
+decode attention.  Validated in interpret mode against ``ref.py`` oracles.
+"""
+from . import ops, ref  # noqa: F401
+from .distance import pairwise_distance  # noqa: F401
+from .qform import quadratic_form  # noqa: F401
+from .binscore import binscore  # noqa: F401
+from .flash_attention import decode_attention, flash_attention  # noqa: F401

@@ -1,0 +1,81 @@
+"""Fused quantile-bin scoring Pallas kernel (paper Eqs. 5-6).
+
+One pass over the collected distance list computes the per-bin counts *and*
+the weighted score — no (B, L, m) intermediate like the jnp reference builds.
+The m thresholds/weights per query are tiny and live alongside the (bb, L)
+distance panel in VMEM.
+
+Grid: (B / bb,).  Inside: counts_i = sum_l valid_l * [theta_{i-1} < d_l <= theta_i]
+computed as a difference of cumulative comparisons; score = counts @ w / |D|.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+Array = jax.Array
+
+DEFAULT_BB = 128
+
+
+def _binscore_kernel(d_ref, t_ref, w_ref, v_ref, out_ref):
+    d = d_ref[...].astype(jnp.float32)          # (bb, L)
+    t = t_ref[...].astype(jnp.float32)          # (bb, m)
+    w = w_ref[...].astype(jnp.float32)          # (1, m)
+    valid = v_ref[...].astype(jnp.float32)      # (bb, L)
+    # cumulative membership per bin edge: (bb, L, m) would blow VMEM for large
+    # L*m; instead loop over the (small, static) m with a running "previous
+    # cumulative count" so the working set stays (bb, L).
+    m = t.shape[1]
+    denom = jnp.maximum(jnp.sum(valid, axis=1, keepdims=True), 1.0)  # (bb, 1)
+    score = jnp.zeros_like(denom)
+    prev = jnp.zeros_like(denom)
+    for i in range(m):
+        cum_i = jnp.sum(
+            jnp.where(d <= t[:, i : i + 1], valid, 0.0), axis=1, keepdims=True
+        )
+        count_i = cum_i - prev
+        score += count_i * w[0, i]
+        prev = cum_i
+    out_ref[...] = score / denom
+
+
+@functools.partial(jax.jit, static_argnames=("bb", "interpret"))
+def binscore(
+    distances: Array,
+    thresholds: Array,
+    weights: Array,
+    valid: Array,
+    *,
+    bb: int = DEFAULT_BB,
+    interpret: bool = False,
+) -> Array:
+    """distances (B, L), thresholds (B, m), weights (m,), valid (B, L) -> (B,)."""
+    b, l = distances.shape
+    m = thresholds.shape[1]
+    bb = min(bb, max(8, b))
+    bp = (b + bb - 1) // bb * bb
+    lp = (l + 127) // 128 * 128
+    d = jnp.pad(distances.astype(jnp.float32), ((0, bp - b), (0, lp - l)),
+                constant_values=jnp.inf)
+    t = jnp.pad(thresholds.astype(jnp.float32), ((0, bp - b), (0, 0)))
+    v = jnp.pad(valid.astype(jnp.float32), ((0, bp - b), (0, lp - l)))
+    w = weights.astype(jnp.float32)[None, :]
+
+    out = pl.pallas_call(
+        _binscore_kernel,
+        grid=(bp // bb,),
+        in_specs=[
+            pl.BlockSpec((bb, lp), lambda i: (i, 0)),
+            pl.BlockSpec((bb, m), lambda i: (i, 0)),
+            pl.BlockSpec((1, m), lambda i: (0, 0)),
+            pl.BlockSpec((bb, lp), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((bb, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bp, 1), jnp.float32),
+        interpret=interpret,
+    )(d, t, w, v)
+    return out[:b, 0]

@@ -1,0 +1,208 @@
+"""Flash-attention Pallas kernels (serving/training substrate hot spot).
+
+Two kernels, both GQA-aware:
+
+- :func:`flash_attention` — blocked causal attention for prefill/training
+  forward.  Grid ``(B, H, Sq/bq, Skv/bk)`` with the KV axis innermost; online
+  softmax state (m, l, acc) lives in VMEM scratch and the output tile is
+  written once on the last KV step.  Never materializes the (Sq, Skv) score
+  matrix — the working set is O(bq*bk + bq*D).
+- :func:`decode_attention` — single-token decode against a (possibly ring)
+  KV cache with a runtime valid length.  Grid ``(B, S/bs)``; rows are the
+  (H, D) query panel so the MXU stays busy at batch-of-heads granularity.
+
+Numerics: scores are computed in fp32 with a -1e30 additive mask (avoids
+-inf NaN propagation); outputs cast back to the query dtype.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+Array = jax.Array
+
+NEG = -1e30
+
+
+# --------------------------------------------------------------------------
+# prefill / training forward
+# --------------------------------------------------------------------------
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *, bq, bk, sq, skv, scale, causal):
+    ik = pl.program_id(3)
+    iq = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale          # (bq, D)
+    k = k_ref[0, 0].astype(jnp.float32)                  # (bk, D)
+    v = v_ref[0, 0].astype(jnp.float32)                  # (bk, D)
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )                                                    # (bq, bk)
+    if causal:
+        off = skv - sq
+        qpos = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0) + off
+        kpos = ik * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        s = jnp.where(qpos >= kpos, s, NEG)
+
+    m_prev = m_scr[...]                                  # (bq, 1)
+    m_cur = jnp.max(s, axis=1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)                               # (bq, bk)
+    l_new = l_scr[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+    acc = acc_scr[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+    acc_scr[...] = acc
+
+    @pl.when(ik == pl.num_programs(3) - 1)
+    def _fini():
+        o_ref[0, 0] = (acc / jnp.maximum(l_new, 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "bq", "bk", "interpret")
+)
+def flash_attention(
+    q: Array,
+    k: Array,
+    v: Array,
+    *,
+    causal: bool = True,
+    bq: int = 256,
+    bk: int = 256,
+    interpret: bool = False,
+) -> Array:
+    """q (B, H, Sq, D); k/v (B, Hk, Skv, D) -> (B, H, Sq, D)."""
+    b, h, sq, dh = q.shape
+    hk, skv = k.shape[1], k.shape[2]
+    rep = h // hk
+    bq = min(bq, sq)
+    bk = min(bk, skv)
+    assert sq % bq == 0 and skv % bk == 0, "pad seq lens to block multiples"
+    scale = 1.0 / (dh ** 0.5)
+
+    grid = (b, h, sq // bq, skv // bk)
+    kern = functools.partial(
+        _flash_kernel, bq=bq, bk=bk, sq=sq, skv=skv, scale=scale, causal=causal
+    )
+    from jax.experimental.pallas import tpu as pltpu
+
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, dh), lambda ib, ih, iq, ik: (ib, ih, iq, 0)),
+            pl.BlockSpec((1, 1, bk, dh), lambda ib, ih, iq, ik, rep=rep: (ib, ih // rep, ik, 0)),
+            pl.BlockSpec((1, 1, bk, dh), lambda ib, ih, iq, ik, rep=rep: (ib, ih // rep, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, dh), lambda ib, ih, iq, ik: (ib, ih, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, dh), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+
+
+# --------------------------------------------------------------------------
+# decode (one new token, long KV cache)
+# --------------------------------------------------------------------------
+
+
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *, bs, hk, rep, scale):
+    ik = pl.program_id(1)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32) * scale             # (H, D)
+    k = k_ref[0].astype(jnp.float32)                     # (bs, Hk, D)
+    v = v_ref[0].astype(jnp.float32)
+    h, dh = q.shape
+    qr = q.reshape(hk, rep, dh)
+    kt = jnp.transpose(k, (1, 2, 0))                     # (Hk, D, bs)
+    s = jax.lax.dot_general(
+        qr, kt, (((2,), (1,)), ((0,), (0,))), preferred_element_type=jnp.float32
+    )                                                    # (Hk, rep, bs)
+    s = s.reshape(h, bs)
+    kv_len = len_ref[0, 0]
+    pos = ik * bs + jax.lax.broadcasted_iota(jnp.int32, (h, bs), 1)
+    s = jnp.where(pos < kv_len, s, NEG)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)                               # (H, bs)
+    l_new = l_scr[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+    vt = jnp.transpose(v, (1, 0, 2))                     # (Hk, bs, D)
+    pr = p.reshape(hk, rep, bs)
+    av = jax.lax.dot_general(
+        pr, vt, (((2,), (1,)), ((0,), (0,))), preferred_element_type=jnp.float32
+    )                                                    # (Hk, rep, D)
+    acc = acc_scr[...] * alpha + av.reshape(h, dh)
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+    acc_scr[...] = acc
+
+    @pl.when(ik == pl.num_programs(1) - 1)
+    def _fini():
+        o_ref[0] = (acc / jnp.maximum(l_new, 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bs", "interpret"))
+def decode_attention(
+    q: Array,
+    k: Array,
+    v: Array,
+    kv_len: Array,
+    *,
+    bs: int = 512,
+    interpret: bool = False,
+) -> Array:
+    """q (B, H, D); k/v (B, S, Hk, D); kv_len (B,) -> (B, H, D)."""
+    b, h, dh = q.shape
+    s, hk = k.shape[1], k.shape[2]
+    rep = h // hk
+    bs = min(bs, s)
+    assert s % bs == 0, "pad cache length to block multiple"
+    scale = 1.0 / (dh ** 0.5)
+    lens = kv_len.astype(jnp.int32).reshape(b, 1)
+    from jax.experimental.pallas import tpu as pltpu
+
+    kern = functools.partial(_decode_kernel, bs=bs, hk=hk, rep=rep, scale=scale)
+    return pl.pallas_call(
+        kern,
+        grid=(b, s // bs),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda ib, ik: (ib, 0)),
+            pl.BlockSpec((1, h, dh), lambda ib, ik: (ib, 0, 0)),
+            pl.BlockSpec((1, bs, hk, dh), lambda ib, ik: (ib, ik, 0, 0)),
+            pl.BlockSpec((1, bs, hk, dh), lambda ib, ik: (ib, ik, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, h, dh), lambda ib, ik: (ib, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((h, 1), jnp.float32),
+            pltpu.VMEM((h, 1), jnp.float32),
+            pltpu.VMEM((h, dh), jnp.float32),
+        ],
+        interpret=interpret,
+    )(lens, q, k, v)

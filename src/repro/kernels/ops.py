@@ -1,0 +1,95 @@
+"""Jit'd public wrappers around the Pallas kernels (the ``ops.py`` contract).
+
+Every op dispatches between the Pallas kernel (TPU target; ``interpret=True``
+on CPU for validation) and the pure-jnp reference, controlled per call.  The
+framework's higher layers import from here, never from the kernels directly.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .binscore import binscore as _binscore_kernel
+from .distance import pairwise_distance as _distance_kernel
+from .flash_attention import decode_attention as _decode_kernel
+from .flash_attention import flash_attention as _flash_kernel
+from .qform import quadratic_form as _qform_kernel
+
+Array = jax.Array
+
+_ON_TPU = jax.default_backend() == "tpu"
+
+
+def pairwise_distance(q, v, *, metric: str = "cos_dist", use_kernel: bool = False,
+                      interpret: Optional[bool] = None) -> Array:
+    if use_kernel:
+        return _distance_kernel(
+            q, v, metric=metric, interpret=(not _ON_TPU) if interpret is None else interpret
+        )
+    return ref.distance_ref(q, v, metric=metric)
+
+
+def quadratic_form(q, sigma, *, use_kernel: bool = False,
+                   interpret: Optional[bool] = None) -> Array:
+    if use_kernel:
+        return _qform_kernel(
+            q, sigma, interpret=(not _ON_TPU) if interpret is None else interpret
+        )
+    return ref.qform_ref(q, sigma)
+
+
+def binscore_raw(distances, thresholds, weights, valid, *, use_kernel: bool = True,
+                 interpret: Optional[bool] = None) -> Array:
+    if use_kernel:
+        return _binscore_kernel(
+            distances, thresholds, weights, valid,
+            interpret=(not _ON_TPU) if interpret is None else interpret,
+        )
+    return ref.binscore_ref(distances, thresholds, weights, valid)
+
+
+def score(params, distances, *, valid=None, m: int = 10, delta: float = 1e-3,
+          metric: str = "cos_dist", decay: str = "exp",
+          interpret: Optional[bool] = None) -> Array:
+    """Kernel-backed version of `repro.core.scoring.score_query` (same semantics)."""
+    from repro.core.scoring import bin_thresholds, bin_weights
+
+    thresholds = bin_thresholds(params, m=m, delta=delta, metric=metric)
+    weights = bin_weights(m, decay)
+    if valid is None:
+        valid = jnp.ones(distances.shape, jnp.float32)
+    sign = 1.0 if metric == "cos_dist" else -1.0
+    # kernel works in distance orientation (ascending thresholds)
+    d = distances * sign
+    t = thresholds * sign
+    if sign < 0:
+        t = t[..., :]  # similarity thresholds negated are ascending already
+    return binscore_raw(
+        d, t, weights, valid,
+        interpret=(not _ON_TPU) if interpret is None else interpret,
+    )
+
+
+def flash_attention(q, k, v, *, causal: bool = True, use_kernel: bool = False,
+                    bq: int = 256, bk: int = 256,
+                    interpret: Optional[bool] = None) -> Array:
+    if use_kernel:
+        return _flash_kernel(
+            q, k, v, causal=causal, bq=bq, bk=bk,
+            interpret=(not _ON_TPU) if interpret is None else interpret,
+        )
+    return ref.mha_ref(q, k, v, causal=causal)
+
+
+def decode_attention(q, k, v, kv_len, *, use_kernel: bool = False, bs: int = 512,
+                     interpret: Optional[bool] = None) -> Array:
+    if use_kernel:
+        return _decode_kernel(
+            q, k, v, kv_len, bs=bs,
+            interpret=(not _ON_TPU) if interpret is None else interpret,
+        )
+    return ref.decode_attention_ref(q, k, v, kv_len)

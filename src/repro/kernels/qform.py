@@ -1,0 +1,68 @@
+"""Quadratic-form Pallas kernel:  y_b = q_b Sigma q_b^T  (paper §5.4 online).
+
+The per-query FDL variance is a d x d quadratic form; for OpenAI-ada2 scale
+(d = 1536) Sigma is 9.4 MiB fp32, too large to keep resident next to the
+activations — we stream it through VMEM in (bd, bd) panels and accumulate the
+(B,) result in the output block across the reduction grid.
+
+Grid: (d/bd, d/bd) with both axes reductions; the output BlockSpec maps every
+step to the same (B, 1) block (revisited accumulation — the standard Pallas
+reduction idiom).  Per step:  acc += rowsum( (Q_i @ S_ij) * Q_j ).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+Array = jax.Array
+
+DEFAULT_BD = 256
+
+
+def _qform_kernel(qi_ref, sij_ref, qj_ref, out_ref):
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when((i == 0) & (j == 0))
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    qi = qi_ref[...].astype(jnp.float32)        # (B, bd)
+    s = sij_ref[...].astype(jnp.float32)        # (bd, bd)
+    qj = qj_ref[...].astype(jnp.float32)        # (B, bd)
+    t = jax.lax.dot_general(
+        qi, s, dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )                                           # (B, bd)
+    out_ref[...] += jnp.sum(t * qj, axis=1, keepdims=True)
+
+
+@functools.partial(jax.jit, static_argnames=("bd", "interpret"))
+def quadratic_form(
+    q: Array, sigma: Array, *, bd: int = DEFAULT_BD, interpret: bool = False
+) -> Array:
+    """q (B, d), sigma (d, d) -> (B,) fp32."""
+    b, d = q.shape
+    bd = min(bd, max(128, d))
+    dp = (d + bd - 1) // bd * bd
+    bp = max((b + 7) // 8 * 8, 8)
+    qp = jnp.pad(q.astype(jnp.float32), ((0, bp - b), (0, dp - d)))
+    sp = jnp.pad(sigma.astype(jnp.float32), ((0, dp - d), (0, dp - d)))
+    nb = dp // bd
+
+    out = pl.pallas_call(
+        _qform_kernel,
+        grid=(nb, nb),
+        in_specs=[
+            pl.BlockSpec((bp, bd), lambda i, j: (0, i)),
+            pl.BlockSpec((bd, bd), lambda i, j: (i, j)),
+            pl.BlockSpec((bp, bd), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bp, 1), lambda i, j: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((bp, 1), jnp.float32),
+        interpret=interpret,
+    )(qp, sp, qp)
+    return out[:b, 0]

@@ -1,0 +1,101 @@
+"""Pure-jnp oracles for every Pallas kernel (the ``ref.py`` contract).
+
+Each function is the semantic ground truth the kernels are tested against
+(interpret mode on CPU, shape/dtype sweeps in tests/test_kernels_*.py).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def distance_ref(q: Array, v: Array, *, metric: str = "cos_dist") -> Array:
+    """Pairwise distances: q (B, d) x v (n, d) -> (B, n).
+
+    Inputs are *prepared* (normalized for cosine metrics).
+    """
+    sims = jnp.dot(q.astype(jnp.float32), v.astype(jnp.float32).T)
+    if metric == "cos_dist":
+        return 1.0 - sims
+    return sims
+
+
+def qform_ref(q: Array, sigma: Array) -> Array:
+    """Quadratic form q Sigma q^T, batched: q (B, d), sigma (d, d) -> (B,)."""
+    q = q.astype(jnp.float32)
+    return jnp.einsum("bi,ij,bj->b", q, sigma.astype(jnp.float32), q)
+
+
+def binscore_ref(
+    distances: Array,
+    thresholds: Array,
+    weights: Array,
+    valid: Array,
+) -> Array:
+    """Fused quantile-bin weighted score (paper Eqs. 5-6).
+
+    distances  (B, L) collected values (distance orientation: smaller=closer)
+    thresholds (B, m) ascending bin upper edges
+    weights    (m,)
+    valid      (B, L) float/bool mask
+    Returns (B,) scores  s = sum_i w_i c_i / |D|.
+    """
+    d = distances[:, :, None]
+    t = thresholds[:, None, :]
+    cum = (d <= t).astype(jnp.float32)
+    per_bin = jnp.diff(cum, axis=-1, prepend=jnp.zeros_like(cum[..., :1]))
+    per_bin = per_bin * valid.astype(jnp.float32)[:, :, None]
+    counts = jnp.sum(per_bin, axis=1)  # (B, m)
+    denom = jnp.maximum(jnp.sum(valid.astype(jnp.float32), axis=1), 1.0)
+    return jnp.sum(counts * weights[None, :], axis=-1) / denom
+
+
+def mha_ref(
+    q: Array, k: Array, v: Array, *, causal: bool = True, q_offset: int | None = None
+) -> Array:
+    """Multi-head attention oracle with GQA.
+
+    q (B, H, Sq, D); k/v (B, Hk, Skv, D); H % Hk == 0.
+    ``q_offset``: absolute position of q row 0 (defaults to Skv - Sq, i.e. the
+    query block is the suffix — the decode/prefill convention).
+    """
+    b, h, sq, dh = q.shape
+    hk = k.shape[1]
+    rep = h // hk
+    kf = jnp.repeat(k, rep, axis=1)
+    vf = jnp.repeat(v, rep, axis=1)
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), kf.astype(jnp.float32))
+    scores = scores / jnp.sqrt(jnp.asarray(dh, jnp.float32))
+    if causal:
+        skv = k.shape[2]
+        off = skv - sq if q_offset is None else q_offset
+        qpos = jnp.arange(sq)[:, None] + off
+        kpos = jnp.arange(skv)[None, :]
+        mask = qpos >= kpos
+        scores = jnp.where(mask[None, None], scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", probs, vf.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def decode_attention_ref(q: Array, k: Array, v: Array, kv_len: Array) -> Array:
+    """Single-token decode attention oracle.
+
+    q (B, H, D); k/v (B, S, Hk, D) rings with valid prefix ``kv_len`` (B,).
+    Returns (B, H, D).
+    """
+    b, h, dh = q.shape
+    hk = k.shape[2]
+    rep = h // hk
+    kf = jnp.repeat(k, rep, axis=2)  # (B, S, H, D)
+    vf = jnp.repeat(v, rep, axis=2)
+    scores = jnp.einsum("bhd,bshd->bhs", q.astype(jnp.float32), kf.astype(jnp.float32))
+    scores = scores / jnp.sqrt(jnp.asarray(dh, jnp.float32))
+    s = k.shape[1]
+    mask = jnp.arange(s)[None, None, :] < kv_len[:, None, None]
+    scores = jnp.where(mask, scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhs,bshd->bhd", probs, vf.astype(jnp.float32))
+    return out.astype(q.dtype)

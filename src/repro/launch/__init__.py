@@ -1,0 +1,9 @@
+"""Launch layer: meshes, sharding rules, dry-run, train/serve drivers, elastic."""
+from .mesh import dp_axes, dp_size, make_debug_mesh, make_production_mesh, model_size  # noqa: F401
+from .sharding import (  # noqa: F401
+    activation_rules,
+    batch_shardings,
+    cache_shardings,
+    opt_state_shardings,
+    params_shardings,
+)

@@ -1,0 +1,67 @@
+"""Elastic scaling + failure handling.
+
+Mechanisms (exercised by tests/test_elastic.py):
+
+- **Checkpoint re-shard**: checkpoints are mesh-agnostic (host-gathered
+  arrays + manifest); :func:`reshard_restore` restores onto a *different*
+  mesh by passing the new mesh's sharding tree to ``restore_checkpoint`` —
+  scale 512 -> 256 chips (pod loss) or up without conversion tools.
+- **Mesh shrink**: :func:`surviving_mesh` builds the largest valid
+  (data, model) mesh from a surviving device count, keeping the model axis
+  (TP degree must match the checkpoint's weight layout constraints only in
+  that divisibility is preserved — weights are re-sharded on restore).
+- **Data rebalance**: the synthetic pipeline is a pure function of
+  (seed, step), so after a shrink the batch simply re-shards across the new
+  data axis — no shard manifests to rebuild.  For real corpora the same
+  contract holds if the loader is keyed by (step, global_rank_count).
+- **Straggler mitigation**: with synchronous SPMD the unit of recovery is the
+  step; the driver (launch/train.py) checkpoints asynchronously and handles
+  SIGTERM, so a straggling/preempted host costs at most ``ckpt_every`` steps.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh
+
+from repro.configs.base import ArchConfig
+from repro.train.checkpoint import restore_checkpoint
+from .sharding import opt_state_shardings, params_shardings
+
+
+def surviving_mesh(n_devices: int, *, model_axis: int = 16) -> Mesh:
+    """Largest (data, model) mesh from ``n_devices`` keeping the TP degree."""
+    devs = jax.devices()[:n_devices]
+    model = min(model_axis, len(devs))
+    data = len(devs) // model
+    if data < 1:
+        raise ValueError(f"not enough devices ({n_devices}) for model axis {model_axis}")
+    import numpy as np
+
+    arr = np.asarray(devs[: data * model]).reshape(data, model)
+    return Mesh(arr, ("data", "model"))
+
+
+def reshard_restore(
+    ckpt_dir: str,
+    step: Optional[int],
+    model,
+    new_mesh: Mesh,
+    *,
+    fsdp: Optional[bool] = None,
+) -> Tuple[object, object]:
+    """Restore (params, opt_state) from a checkpoint onto ``new_mesh``."""
+    from repro.train.optimizer import init_optimizer
+
+    abstract_params = model.abstract_params()
+    abstract_opt = jax.eval_shape(init_optimizer, abstract_params)
+    p_shard = params_shardings(abstract_params, model.cfg, new_mesh, fsdp=fsdp)
+    o_shard = opt_state_shardings(abstract_opt, p_shard, new_mesh)
+    restored = restore_checkpoint(
+        ckpt_dir,
+        step,
+        {"params": abstract_params, "opt": abstract_opt},
+        shardings={"params": p_shard, "opt": o_shard},
+    )
+    return restored["params"], restored["opt"]

@@ -1,0 +1,42 @@
+"""Production mesh construction.
+
+Single pod: (16, 16) over ("data", "model") — 256 chips (one v5e pod).
+Multi-pod: (2, 16, 16) over ("pod", "data", "model") — 512 chips.
+
+Defined as a FUNCTION so importing this module never touches jax device
+state; only ``dryrun.py`` (which sets XLA_FLAGS first) materializes the
+512-device host platform.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def dp_axes(mesh: Mesh) -> Tuple[str, ...]:
+    """The data-parallel axes: ("pod", "data") on multi-pod, ("data",) single."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def dp_size(mesh: Mesh) -> int:
+    n = 1
+    for a in dp_axes(mesh):
+        n *= mesh.shape[a]
+    return n
+
+
+def model_size(mesh: Mesh) -> int:
+    return mesh.shape.get("model", 1)
+
+
+def make_debug_mesh(n_data: int = 1, n_model: int = 1) -> Mesh:
+    """Tiny mesh over however many real devices exist (tests)."""
+    return jax.make_mesh((n_data, n_model), ("data", "model"))

@@ -1,0 +1,198 @@
+"""Per-architecture sharding rules: parameters, optimizer state, activations,
+batches, KV caches.
+
+Strategy (DESIGN.md §5): TP over "model" (heads / d_ff / experts / vocab),
+DP over ("pod","data"), FSDP-style parameter sharding of the non-TP dim over
+"data" for large archs.  KV caches shard heads over "model" when divisible,
+else the sequence dim; batch over DP when divisible.
+
+All rules return ``PartitionSpec``s on *trailing* dimensions, padded with
+``None`` on the left, so the same rule covers plain and layer-stacked leaves.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from .mesh import dp_axes, dp_size, model_size
+
+MODEL = "model"
+
+
+def _dp(mesh: Mesh):
+    ax = dp_axes(mesh)
+    return ax if len(ax) > 1 else (ax[0] if ax else None)
+
+
+# --------------------------------------------------------------------------
+# parameter rules
+# --------------------------------------------------------------------------
+
+# (path regex, trailing-dims spec builder). FSDP token resolved at build time.
+FSDP = "__fsdp__"
+
+_PARAM_RULES: Tuple[Tuple[str, Tuple], ...] = (
+    (r"\bembed$", ("model", FSDP)),              # (V, D)
+    (r"\bhead$", (FSDP, "model")),               # (D, V)
+    (r"frontend_proj.*\bw1$", (None, "model")),
+    (r"frontend_proj.*\bw2$", ("model", None)),
+    (r"\bwq$|\bwk$|\bwv$", (FSDP, "model", None)),   # (D, H, hd): shard heads
+    (r"\bwqkv$|\bwz$|\bwx$|\bwif$", (FSDP, "model")),
+    (r"\bwo$", ("model", None, FSDP)),                # (H, hd, D)
+    (r"\bbq$|\bbk$|\bbv$", ("model", None)),
+    (r"moe.*\bw_gate$|moe.*\bw_up$", ("model", FSDP, None)),   # (E, D, F)
+    (r"moe.*\bw_down$", ("model", None, FSDP)),                # (E, F, D)
+    (r"\brouter$", (FSDP, "model")),                           # (D, E)
+    (r"\bw_gate$|\bw_up$", (FSDP, "model")),     # dense swiglu (D, F)
+    (r"\bw_down$", ("model", FSDP)),             # (F, D)
+    (r"\bin_proj$", (FSDP, "model")),            # mamba/zamba (D, X)
+    (r"\bout_proj$", ("model", FSDP)),           # (X, D)
+    (r"\bconv_w$", (None, "model")),             # (W, C)
+    (r"\bconv_b$", ("model",)),
+    (r"\bdt_bias$|\ba_log$|\bd_skip$", (None,)),
+    (r"\br$", (None, None, None)),               # slstm recurrence, replicated
+    (r"\bshared_gate$", (None, None)),
+)
+
+
+def param_spec(path: str, ndim: int, mesh: Mesh, *, fsdp: bool) -> P:
+    fsdp_ax = "data" if (fsdp and "data" in mesh.axis_names) else None
+    for pattern, trailing in _PARAM_RULES:
+        if re.search(pattern, path):
+            spec = [None] * ndim
+            t = [fsdp_ax if x == FSDP else x for x in trailing]
+            k = min(len(t), ndim)
+            spec[ndim - k :] = t[len(t) - k :]
+            # drop axes that don't exist on this mesh
+            spec = [s if (s is None or s in mesh.axis_names) else None for s in spec]
+            return P(*spec)
+    return P()  # norms, scalars: replicated
+
+
+def _tree_paths(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    paths = [".".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path) for path, _ in flat]
+    return flat, treedef, paths
+
+
+def params_shardings(abstract_params, cfg: ArchConfig, mesh: Mesh, *, fsdp: Optional[bool] = None):
+    """NamedSharding pytree for params (and reusable for AdamW m/v)."""
+    if fsdp is None:
+        fsdp = cfg.d_model * cfg.num_layers >= 2048 * 24  # on for >~1B models
+    flat, treedef, paths = _tree_paths(abstract_params)
+
+    def shardable(spec: P, shape) -> P:
+        # verify divisibility; drop axes that don't divide
+        out = []
+        for dim, s in zip(shape, spec + (None,) * (len(shape) - len(spec))):
+            if s is None:
+                out.append(None)
+                continue
+            axes = s if isinstance(s, tuple) else (s,)
+            n = 1
+            for a in axes:
+                n *= mesh.shape[a]
+            out.append(s if dim % n == 0 else None)
+        return P(*out)
+
+    leaves = []
+    for (path, leaf), pstr in zip(flat, paths):
+        spec = param_spec(pstr, leaf.ndim, mesh, fsdp=fsdp)
+        spec = shardable(spec, leaf.shape)
+        leaves.append(NamedSharding(mesh, spec))
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def opt_state_shardings(abstract_opt_state, params_shard, mesh: Mesh):
+    """AdamW state: step replicated; m/v shard like params."""
+    from repro.train.optimizer import AdamWState
+
+    return AdamWState(
+        step=NamedSharding(mesh, P()),
+        m=params_shard,
+        v=jax.tree_util.tree_map(lambda s: s, params_shard),
+    )
+
+
+# --------------------------------------------------------------------------
+# batch / cache rules
+# --------------------------------------------------------------------------
+
+
+def batch_shardings(abstract_batch, mesh: Mesh):
+    dp = _dp(mesh)
+    nd = dp_size(mesh)
+
+    def spec(leaf):
+        if leaf.ndim >= 1 and leaf.shape[0] % nd == 0 and leaf.shape[0] > 1:
+            return NamedSharding(mesh, P(dp, *([None] * (leaf.ndim - 1))))
+        return NamedSharding(mesh, P())
+
+    return jax.tree_util.tree_map(spec, abstract_batch)
+
+
+def _kv_cache_spec(shape, cfg: ArchConfig, mesh: Mesh) -> P:
+    """(L, B, S, Hk, hd) or (nseg, B, S, Hk, hd)."""
+    dp = _dp(mesh)
+    nd = dp_size(mesh)
+    nm = model_size(mesh)
+    _, b, s, hk, _ = shape
+    batch_ax = dp if (b % nd == 0 and b >= nd) else None
+    if hk % nm == 0:
+        return P(None, batch_ax, None, MODEL, None)
+    if s % nm == 0:
+        if batch_ax is None and s % (nd * nm) == 0:
+            # B=1 long-context: shard seq over every axis we have
+            return P(None, None, (*dp_axes(mesh), MODEL), None, None)
+        return P(None, batch_ax, MODEL, None, None)
+    return P(None, batch_ax, None, None, None)
+
+
+def cache_shardings(abstract_cache, cfg: ArchConfig, mesh: Mesh):
+    dp = _dp(mesh)
+    nd = dp_size(mesh)
+
+    def spec(leaf):
+        if leaf.ndim == 5:  # stacked KV cache
+            return NamedSharding(mesh, _kv_cache_spec(leaf.shape, cfg, mesh))
+        # state caches (mamba ssm/conv, xlstm): shard batch when divisible
+        for i, d in enumerate(leaf.shape):
+            if i >= 1 and d % nd == 0 and d >= nd and i <= 2:
+                return NamedSharding(
+                    mesh, P(*([None] * i), dp, *([None] * (leaf.ndim - i - 1)))
+                )
+        return NamedSharding(mesh, P())
+
+    return jax.tree_util.tree_map(spec, abstract_cache)
+
+
+# --------------------------------------------------------------------------
+# activation rules (logical names used by repro.partitioning.constrain)
+# --------------------------------------------------------------------------
+
+
+def activation_rules(cfg: ArchConfig, mesh: Mesh, shape: Optional[ShapeConfig] = None):
+    dp = _dp(mesh)
+    nm = model_size(mesh)
+    batchable = shape is None or (
+        shape.global_batch % dp_size(mesh) == 0 and shape.global_batch > 1
+    )
+    b_ax = dp if batchable else None
+    # q heads always shard on "model": GSPMD pads non-divisible head
+    # counts (e.g. 14 on 16) — a few idle shards beat replicating the
+    # O(S^2) score computation across the whole model axis.
+    h_ax = MODEL
+    kv_ax = MODEL if cfg.num_kv_heads % nm == 0 else None
+    return {
+        "act_btd": P(b_ax, None, None),
+        "logits": P(b_ax, None, MODEL),
+        "moe_ecd": P(MODEL, b_ax, None),
+        "moe_ecf": P(MODEL, b_ax, None),
+        "act_q_bshd": P(b_ax, None, h_ax, None),
+        "act_kv_bshd": P(b_ax, None, kv_ax, None),
+    }

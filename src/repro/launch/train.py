@@ -1,0 +1,141 @@
+"""End-to-end training driver.
+
+Fault-tolerant loop: deterministic data from (seed, step), checkpoint every N
+steps (atomic + async), resume from LATEST on restart, optional elastic
+re-shard when the mesh changed between runs.  On CPU it trains reduced
+configs for real (examples/train_lm.py drives a ~100M model); under the
+production mesh the same code path trains the full configs.
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen2-0.5b --reduced \
+        --steps 200 --batch 8 --seq 256 --ckpt-dir /tmp/ckpt
+"""
+from __future__ import annotations
+
+import argparse
+import signal
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import ARCHS
+from repro.configs.base import ShapeConfig
+from repro.models import build_model
+from repro.train import (
+    DataConfig,
+    OptimizerConfig,
+    TrainConfig,
+    init_optimizer,
+    latest_step,
+    make_batch,
+    make_train_step,
+    restore_checkpoint,
+    save_checkpoint,
+    wait_async,
+)
+
+_PREEMPTED = False
+
+
+def _on_sigterm(signum, frame):  # graceful preemption: checkpoint then exit
+    global _PREEMPTED
+    _PREEMPTED = True
+
+
+def train_loop(
+    arch_name: str,
+    *,
+    reduced: bool = True,
+    steps: int = 100,
+    batch: int = 8,
+    seq: int = 128,
+    ckpt_dir: str = "",
+    ckpt_every: int = 50,
+    microbatches: int = 1,
+    lr: float = 3e-4,
+    log_every: int = 10,
+    impl: str = "jnp_flash",
+    seed: int = 0,
+):
+    cfg = ARCHS[arch_name]
+    if reduced:
+        cfg = cfg.reduced()
+    model = build_model(cfg, impl=impl)
+    shape = ShapeConfig("cli", seq, batch, "train")
+    tcfg = TrainConfig(
+        microbatches=microbatches,
+        opt=OptimizerConfig(lr=lr, warmup_steps=max(steps // 20, 5), total_steps=steps),
+    )
+    step_fn = jax.jit(make_train_step(model, tcfg), donate_argnums=(0, 1))
+
+    start = 0
+    params = model.init(jax.random.PRNGKey(seed))
+    opt = init_optimizer(params)
+    if ckpt_dir:
+        last = latest_step(ckpt_dir)
+        if last is not None:
+            restored = restore_checkpoint(ckpt_dir, last, {"params": params, "opt": opt})
+            params, opt = restored["params"], restored["opt"]
+            start = last
+            print(f"resumed from step {start}")
+
+    signal.signal(signal.SIGTERM, _on_sigterm)
+    losses = []
+    last_saved = start
+    t0 = time.perf_counter()
+    for step in range(start, steps):
+        b = make_batch(cfg, shape, step, DataConfig(seed=seed))
+        params, opt, metrics = step_fn(params, opt, b)
+        if step % log_every == 0 or step == steps - 1:
+            loss = float(metrics["loss"])
+            losses.append((step, loss))
+            dt = time.perf_counter() - t0
+            print(f"step {step:5d} loss {loss:.4f} lr {float(metrics['lr']):.2e} ({dt:.1f}s)")
+        if ckpt_dir and (step + 1) % ckpt_every == 0:
+            save_checkpoint(ckpt_dir, step + 1, {"params": params, "opt": opt}, blocking=False)
+            last_saved = step + 1
+        if _PREEMPTED:
+            print("preempted: writing final checkpoint")
+            break
+    if ckpt_dir:
+        wait_async()  # never race the async writer on the same step dir
+        final = min(step + 1, steps)
+        if final != last_saved:
+            save_checkpoint(ckpt_dir, final, {"params": params, "opt": opt})
+    return params, opt, losses
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="qwen2-0.5b", choices=sorted(ARCHS))
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--full", dest="reduced", action="store_false")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--impl", default="jnp_flash")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    _, _, losses = train_loop(
+        args.arch,
+        reduced=args.reduced,
+        steps=args.steps,
+        batch=args.batch,
+        seq=args.seq,
+        ckpt_dir=args.ckpt_dir,
+        ckpt_every=args.ckpt_every,
+        microbatches=args.microbatches,
+        lr=args.lr,
+        impl=args.impl,
+        seed=args.seed,
+    )
+    first, last = losses[0][1], losses[-1][1]
+    print(f"loss {first:.4f} -> {last:.4f}")
+
+
+if __name__ == "__main__":
+    main()

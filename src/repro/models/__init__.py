@@ -1,0 +1,2 @@
+"""Model zoo: assigned architectures behind a unified Model API."""
+from .model_zoo import Model, build_model  # noqa: F401

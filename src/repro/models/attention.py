@@ -1,0 +1,512 @@
+"""GQA attention layer (qk-norm / QKV-bias variants) with three exec paths:
+
+- ``jnp_flash``  — blocked online-softmax attention in pure jnp (double
+  ``lax.scan`` over q/kv blocks).  This is what the dry-run lowers: the
+  (Sq, Skv) score matrix is never materialized, so 32k-prefill memory stays
+  bounded; XLA/TPU fuses each block's QK^T-softmax-PV chain.
+- ``pallas``     — `repro.kernels.flash_attention` (TPU deployment path).
+- ``naive``      — materialized reference (smoke tests / tiny shapes).
+
+Decode attends against a pre-allocated KV cache with a runtime length.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.partitioning import constrain
+from .layers import apply_rope, cast, dense_init, rmsnorm, rmsnorm_params
+
+Array = jax.Array
+
+
+def attention_params(key, cfg: ArchConfig) -> dict:
+    """Head-major 3D projection weights: the head dim is a real tensor axis so
+    weight sharding pads identically to activation sharding (40 heads on a
+    16-way model axis) — flattened (D, H*hd) layouts forced per-layer
+    all-gathers at every reshape boundary (EXPERIMENTS.md §Perf, iter 3)."""
+    hd = cfg.hd
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (cfg.d_model, cfg.num_heads, hd), scale=1.0 / (cfg.d_model ** 0.5)),
+        "wk": dense_init(ks[1], (cfg.d_model, cfg.num_kv_heads, hd), scale=1.0 / (cfg.d_model ** 0.5)),
+        "wv": dense_init(ks[2], (cfg.d_model, cfg.num_kv_heads, hd), scale=1.0 / (cfg.d_model ** 0.5)),
+        "wo": dense_init(ks[3], (cfg.num_heads, hd, cfg.d_model), scale=1.0 / ((cfg.num_heads * hd) ** 0.5)),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((cfg.num_heads, hd), jnp.float32)
+        p["bk"] = jnp.zeros((cfg.num_kv_heads, hd), jnp.float32)
+        p["bv"] = jnp.zeros((cfg.num_kv_heads, hd), jnp.float32)
+    if cfg.qk_norm:
+        p["q_norm"] = rmsnorm_params(hd)
+        p["k_norm"] = rmsnorm_params(hd)
+    return p
+
+
+def _project_qkv(p: dict, cfg: ArchConfig, x: Array, positions: Array, rope: bool = True):
+    b, s, _ = x.shape
+    hd = cfg.hd
+    q = jnp.einsum("bsd,dhk->bshk", x, cast(p["wq"]))
+    k = jnp.einsum("bsd,dhk->bshk", x, cast(p["wk"]))
+    v = jnp.einsum("bsd,dhk->bshk", x, cast(p["wv"]))
+    if cfg.qkv_bias:
+        q = q + cast(p["bq"])
+        k = k + cast(p["bk"])
+        v = v + cast(p["bv"])
+    if cfg.qk_norm:
+        q = rmsnorm(p["q_norm"], q, cfg.norm_eps)
+        k = rmsnorm(p["k_norm"], k, cfg.norm_eps)
+    if rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    # pin layouts: heads shard on "model" when divisible (rules decide), else
+    # replicate — prevents GSPMD from inventing activation reshards inside the
+    # attention scans (which showed up as per-layer (B,S,D) all-reduces).
+    q = constrain(q, "act_q_bshd")
+    k = constrain(k, "act_kv_bshd")
+    v = constrain(v, "act_kv_bshd")
+    return q, k, v
+
+
+# --------------------------------------------------------------------------
+# blocked attention in pure jnp (lowered by the dry-run)
+# --------------------------------------------------------------------------
+
+NEG = -1e30
+
+
+def flash_attention_jnp(
+    q: Array,            # (B, Sq, H, hd)
+    k: Array,            # (B, Skv, Hk, hd)
+    v: Array,            # (B, Skv, Hk, hd)
+    *,
+    causal: bool,
+    q_offset: int = 0,   # absolute position of q row 0 minus kv row 0
+    q_block: int = 512,
+    kv_block: int = 1024,
+    kv_len: Optional[Array] = None,  # (B,) runtime valid kv length
+) -> Array:
+    """Blocked online-softmax attention.
+
+    The differentiable path (kv_len=None: train/prefill) routes through a
+    ``custom_vjp`` whose backward recomputes the score blocks (true
+    flash-attention backward) — without it, autodiff-of-scan saves every
+    (qb, kb) probability tile and training memory explodes.  The decode path
+    (runtime kv_len) has no backward and uses the plain scan.
+    """
+    if kv_len is None:
+        b, sq, h, hd = q.shape
+        skv = k.shape[1]
+        qb = min(q_block, sq)
+        kb = min(kv_block, skv)
+        sq_p = (sq + qb - 1) // qb * qb
+        skv_p = (skv + kb - 1) // kb * kb
+        qp = jnp.pad(q, ((0, 0), (0, sq_p - sq), (0, 0), (0, 0)))
+        kp = jnp.pad(k, ((0, 0), (0, skv_p - skv), (0, 0), (0, 0)))
+        vp = jnp.pad(v, ((0, 0), (0, skv_p - skv), (0, 0), (0, 0)))
+        # padded kv columns masked via a virtual kv_len == skv
+        out = _flash_cvjp(qp, kp, vp, causal, q_offset, qb, kb, skv)
+        return out[:, :sq]
+    return _flash_scan(
+        q, k, v, causal=causal, q_offset=q_offset, q_block=q_block,
+        kv_block=kv_block, kv_len=kv_len,
+    )
+
+
+# ---- differentiable core (custom_vjp, padded block-multiple inputs) --------
+
+
+def _fwd_blocks(q, k, v, causal, q_offset, qb, kb, valid_kv):
+    """Returns (o, lse) with o (B, Sq, H, hd), lse (B, H, Sq)."""
+    b, sq, h, hd = q.shape
+    skv, hk = k.shape[1], k.shape[2]
+    rep = h // hk
+    scale = 1.0 / (hd ** 0.5)
+    nq, nk = sq // qb, skv // kb
+    qs = jnp.moveaxis(q.reshape(b, nq, qb, h, hd), 1, 0)
+    # hoist the GQA head-repeat out of the loops: an in-loop repeat of the
+    # (replicated) kv against model-sharded q heads made GSPMD reshard 50 MB
+    # blocks x nq x nk x layers (EXPERIMENTS.md §Perf, iter 2)
+    kf = jnp.repeat(k, rep, axis=2)
+    vf = jnp.repeat(v, rep, axis=2)
+    from repro.partitioning import constrain as _constrain
+
+    kf = _constrain(kf, "act_q_bshd")
+    vf = _constrain(vf, "act_q_bshd")
+    ks = jnp.moveaxis(kf.reshape(b, nk, kb, h, hd), 1, 0)
+    vs = jnp.moveaxis(vf.reshape(b, nk, kb, h, hd), 1, 0)
+
+    def q_step(_, iq_qi):
+        iq, qi = iq_qi
+        qi = qi.astype(jnp.float32) * scale
+
+        def kv_step(carry, ik_kv):
+            m_p, l_p, acc = carry
+            ik, kr, vr = ik_kv
+            kr = kr.astype(jnp.float32)
+            vr = vr.astype(jnp.float32)
+            s = jnp.einsum("bqhd,bkhd->bhqk", qi, kr)
+            qpos = iq * qb + jnp.arange(qb)[:, None] + q_offset
+            kpos = ik * kb + jnp.arange(kb)[None, :]
+            mask = kpos < valid_kv
+            if causal:
+                mask = mask & (qpos >= kpos)
+            s = jnp.where(mask[None, None], s, NEG)
+            m_c = jnp.max(s, axis=-1, keepdims=True)
+            m_n = jnp.maximum(m_p, m_c)
+            alpha = jnp.exp(m_p - m_n)
+            p = jnp.exp(s - m_n)
+            l_n = l_p * alpha + jnp.sum(p, axis=-1, keepdims=True)
+            acc = acc * alpha + jnp.einsum("bhqk,bkhd->bhqd", p, vr)
+            return (m_n, l_n, acc), None
+
+        m0 = jnp.full((b, h, qb, 1), NEG, jnp.float32)
+        l0 = jnp.zeros((b, h, qb, 1), jnp.float32)
+        a0 = jnp.zeros((b, h, qb, hd), jnp.float32)
+        (m_f, l_f, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), (jnp.arange(nk), ks, vs))
+        o = (acc / jnp.maximum(l_f, 1e-30)).astype(q.dtype)       # (B,H,qb,hd)
+        lse = (m_f + jnp.log(jnp.maximum(l_f, 1e-30)))[..., 0]    # (B,H,qb)
+        return None, (o, lse)
+
+    _, (outs, lses) = jax.lax.scan(q_step, None, (jnp.arange(nq), qs))
+    o = jnp.moveaxis(outs, 0, 1)                                  # (B,nq,H,qb,hd)
+    o = jnp.transpose(o, (0, 1, 3, 2, 4)).reshape(b, sq, h, hd)
+    lse = jnp.moveaxis(lses, 0, 2).reshape(b, h, sq)              # (B,H,Sq)
+    return o, lse
+
+
+from functools import partial as _partial
+
+
+@_partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
+def _flash_cvjp(q, k, v, causal, q_offset, qb, kb, valid_kv):
+    o, _ = _fwd_blocks(q, k, v, causal, q_offset, qb, kb, valid_kv)
+    return o
+
+
+def _flash_cvjp_fwd(q, k, v, causal, q_offset, qb, kb, valid_kv):
+    o, lse = _fwd_blocks(q, k, v, causal, q_offset, qb, kb, valid_kv)
+    return o, (q, k, v, o, lse)
+
+
+def _flash_cvjp_bwd(causal, q_offset, qb, kb, valid_kv, res, do):
+    q, k, v, o, lse = res
+    b, sq, h, hd = q.shape
+    skv, hk = k.shape[1], k.shape[2]
+    rep = h // hk
+    scale = 1.0 / (hd ** 0.5)
+    nq, nk = sq // qb, skv // kb
+
+    qf = q.astype(jnp.float32)
+    dof = do.astype(jnp.float32)
+    delta = jnp.sum(dof * o.astype(jnp.float32), axis=-1)          # (B,Sq,H)
+    delta = jnp.transpose(delta, (0, 2, 1))                        # (B,H,Sq)
+
+    qs = jnp.moveaxis(qf.reshape(b, nq, qb, h, hd), 1, 0)
+    dos = jnp.moveaxis(dof.reshape(b, nq, qb, h, hd), 1, 0)
+    lses = jnp.moveaxis(lse.reshape(b, h, nq, qb), 2, 0)           # (nq,B,H,qb)
+    deltas = jnp.moveaxis(delta.reshape(b, h, nq, qb), 2, 0)
+    from repro.partitioning import constrain as _constrain
+
+    kf = _constrain(jnp.repeat(k, rep, axis=2), "act_q_bshd").astype(jnp.float32)
+    vf = _constrain(jnp.repeat(v, rep, axis=2), "act_q_bshd").astype(jnp.float32)
+    ks = jnp.moveaxis(kf.reshape(b, nk, kb, h, hd), 1, 0)
+    vs = jnp.moveaxis(vf.reshape(b, nk, kb, h, hd), 1, 0)
+
+    def _p_ds(iq, ik, qi, kr, lse_i, delta_i, do_i, vr):
+        """Recompute probability and score-grad tiles for block (iq, ik)."""
+        s = jnp.einsum("bqhd,bkhd->bhqk", qi * scale, kr)
+        qpos = iq * qb + jnp.arange(qb)[:, None] + q_offset
+        kpos = ik * kb + jnp.arange(kb)[None, :]
+        mask = kpos < valid_kv
+        if causal:
+            mask = mask & (qpos >= kpos)
+        s = jnp.where(mask[None, None], s, NEG)
+        p = jnp.exp(s - lse_i[..., None])                          # (B,H,qb,kb)
+        dp = jnp.einsum("bqhd,bkhd->bhqk", do_i, vr)
+        ds = p * (dp - delta_i[..., None]) * scale
+        return p, ds
+
+    # ---- dq: outer q blocks, inner kv blocks ------------------------------
+    def dq_qstep(_, inp):
+        iq, qi, do_i, lse_i, delta_i = inp
+
+        def kv_step(dq_acc, ik_kv):
+            ik, kr, vr = ik_kv
+            p, ds = _p_ds(iq, ik, qi, kr, lse_i, delta_i, do_i, vr)
+            dq_acc = dq_acc + jnp.einsum("bhqk,bkhd->bqhd", ds, kr)
+            return dq_acc, None
+
+        dq0 = jnp.zeros((b, qb, h, hd), jnp.float32)
+        dq_i, _ = jax.lax.scan(kv_step, dq0, (jnp.arange(nk), ks, vs))
+        return None, dq_i
+
+    _, dq_blocks = jax.lax.scan(dq_qstep, None, (jnp.arange(nq), qs, dos, lses, deltas))
+    dq = jnp.moveaxis(dq_blocks, 0, 1).reshape(b, sq, h, hd)
+
+    # ---- dk/dv: outer kv blocks, inner q blocks ---------------------------
+    # Accumulate in FULL head space and do the GQA group-reduce ONCE at the
+    # end: a (hk, rep) reshape of the model-axis-sharded head dim inside the
+    # inner loop forced GSPMD to all-gather 400 MB activation blocks on every
+    # (iq, ik) step (2 x 515 GB/chip on qwen3-14b train_4k); hoisting the
+    # reshape out removes those collectives (EXPERIMENTS.md §Perf, iter 1).
+    def dkv_kstep(_, inp):
+        ik, kr, vr = inp
+
+        def q_step(carry, iq_q):
+            dk_acc, dv_acc = carry
+            iq, qi, do_i, lse_i, delta_i = iq_q
+            p, ds = _p_ds(iq, ik, qi, kr, lse_i, delta_i, do_i, vr)
+            dk_acc = dk_acc + jnp.einsum("bhqk,bqhd->bkhd", ds, qi)  # (B,kb,H,hd)
+            dv_acc = dv_acc + jnp.einsum("bhqk,bqhd->bkhd", p, do_i)
+            return (dk_acc, dv_acc), None
+
+        z = jnp.zeros((b, kb, h, hd), jnp.float32)
+        (dk_j, dv_j), _ = jax.lax.scan(
+            q_step, (z, z), (jnp.arange(nq), qs, dos, lses, deltas)
+        )
+        return None, (dk_j, dv_j)
+
+    _, (dk_blocks, dv_blocks) = jax.lax.scan(dkv_kstep, None, (jnp.arange(nk), ks, vs))
+    dk_full = jnp.moveaxis(dk_blocks, 0, 1).reshape(b, skv, h, hd)
+    dv_full = jnp.moveaxis(dv_blocks, 0, 1).reshape(b, skv, h, hd)
+    dk = dk_full.reshape(b, skv, hk, rep, hd).sum(3)
+    dv = dv_full.reshape(b, skv, hk, rep, hd).sum(3)
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+_flash_cvjp.defvjp(_flash_cvjp_fwd, _flash_cvjp_bwd)
+
+
+def _flash_scan(
+    q: Array,
+    k: Array,
+    v: Array,
+    *,
+    causal: bool,
+    q_offset: int = 0,
+    q_block: int = 512,
+    kv_block: int = 1024,
+    kv_len: Optional[Array] = None,
+) -> Array:
+    b, sq, h, hd = q.shape
+    skv, hk = k.shape[1], k.shape[2]
+    rep = h // hk
+    qb = min(q_block, sq)
+    kb = min(kv_block, skv)
+    # pad to block multiples
+    sq_p = (sq + qb - 1) // qb * qb
+    skv_p = (skv + kb - 1) // kb * kb
+    q = jnp.pad(q, ((0, 0), (0, sq_p - sq), (0, 0), (0, 0)))
+    k = jnp.pad(k, ((0, 0), (0, skv_p - skv), (0, 0), (0, 0)))
+    v = jnp.pad(v, ((0, 0), (0, skv_p - skv), (0, 0), (0, 0)))
+    if kv_len is None:
+        kv_len = jnp.full((b,), skv, jnp.int32)
+
+    scale = 1.0 / (hd ** 0.5)
+    nq, nk = sq_p // qb, skv_p // kb
+    # (nq, B, qb, H, hd) / (nk, B, kb, Hk, hd)
+    qs = jnp.moveaxis(q.reshape(b, nq, qb, h, hd), 1, 0)
+    ks = jnp.moveaxis(k.reshape(b, nk, kb, hk, hd), 1, 0)
+    vs = jnp.moveaxis(v.reshape(b, nk, kb, hk, hd), 1, 0)
+
+    def q_step(_, iq_qi):
+        iq, qi = iq_qi                                   # qi (B, qb, H, hd)
+        qi = (qi.astype(jnp.float32) * scale).astype(qi.dtype)
+
+        def kv_step(carry, ik_kv):
+            m_p, l_p, acc = carry
+            ik, ki, vi = ik_kv                           # ki (B, kb, Hk, hd)
+            kr = jnp.repeat(ki, rep, axis=2)             # (B, kb, H, hd)
+            vr = jnp.repeat(vi, rep, axis=2)
+            s = jnp.einsum(
+                "bqhd,bkhd->bhqk", qi, kr, preferred_element_type=jnp.float32
+            )                                            # (B, H, qb, kb)
+            qpos = iq * qb + jnp.arange(qb)[:, None] + q_offset
+            kpos = ik * kb + jnp.arange(kb)[None, :]
+            mask = kpos < kv_len[:, None, None, None]    # runtime length
+            if causal:
+                mask = mask & (qpos >= kpos)[None, None]
+            s = jnp.where(mask, s, NEG)
+            m_c = jnp.max(s, axis=-1, keepdims=True)     # (B, H, qb, 1)
+            m_n = jnp.maximum(m_p, m_c)
+            alpha = jnp.exp(m_p - m_n)
+            p = jnp.exp(s - m_n)
+            l_n = l_p * alpha + jnp.sum(p, axis=-1, keepdims=True)
+            pv = jnp.einsum(
+                "bhqk,bkhd->bhqd", p.astype(vr.dtype), vr,
+                preferred_element_type=jnp.float32,
+            )
+            acc = acc * alpha + pv
+            return (m_n, l_n, acc), None
+
+        m0 = jnp.full((b, h, qb, 1), NEG, jnp.float32)
+        l0 = jnp.zeros((b, h, qb, 1), jnp.float32)
+        a0 = jnp.zeros((b, h, qb, hd), jnp.float32)
+        (m_f, l_f, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0), (jnp.arange(nk), ks, vs)
+        )
+        out = acc / jnp.maximum(l_f, 1e-30)              # (B, H, qb, hd)
+        return None, out.astype(q.dtype)
+
+    _, outs = jax.lax.scan(q_step, None, (jnp.arange(nq), qs))
+    out = jnp.moveaxis(outs, 0, 1)                       # (B, nq, H, qb, hd)
+    out = jnp.transpose(out, (0, 1, 3, 2, 4)).reshape(b, sq_p, h, hd)
+    return out[:, :sq]
+
+
+def _decode_attention_onepass(q, k, v, kv_len: Array) -> Array:
+    """q (B, 1, H, hd); k/v (B, S, Hk, hd); kv_len (B,) -> (B, 1, H, hd)."""
+    b, _, h, hd = q.shape
+    skv, hk = k.shape[1], k.shape[2]
+    rep = h // hk
+    # bf16 cache reads with fp32 accumulation: casting the whole cache to
+    # f32 doubled decode HBM traffic (§Perf cell 3, iter 3)
+    qg = (q[:, 0] / (hd ** 0.5)).astype(k.dtype).reshape(b, hk, rep, hd)
+    s = jnp.einsum("bgrd,bsgd->bgrs", qg, k, preferred_element_type=jnp.float32)
+    mask = jnp.arange(skv)[None, None, None, :] < kv_len[:, None, None, None]
+    s = jnp.where(mask, s, NEG)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    o = jnp.einsum(
+        "bgrs,bsgd->bgrd", p.astype(k.dtype), v, preferred_element_type=jnp.float32
+    )
+    o = (o / jnp.maximum(l, 1e-30)).reshape(b, h, hd)
+    return o[:, None].astype(q.dtype)
+
+
+def _naive_attention(q, k, v, *, causal: bool, q_offset: int = 0,
+                     kv_len: Optional[Array] = None) -> Array:
+    b, sq, h, hd = q.shape
+    skv, hk = k.shape[1], k.shape[2]
+    rep = h // hk
+    kr = jnp.repeat(k, rep, axis=2)
+    vr = jnp.repeat(v, rep, axis=2)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, kr, preferred_element_type=jnp.float32)
+    s = s / (hd ** 0.5)
+    qpos = jnp.arange(sq)[:, None] + q_offset
+    kpos = jnp.arange(skv)[None, :]
+    mask = jnp.ones((sq, skv), bool) if not causal else (qpos >= kpos)
+    mask = mask[None, None]
+    if kv_len is not None:
+        mask = mask & (kpos[None, None] < kv_len[:, None, None, None])
+    s = jnp.where(mask, s, NEG)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p.astype(vr.dtype), vr)
+    return out
+
+
+# --------------------------------------------------------------------------
+# layer-level apply
+# --------------------------------------------------------------------------
+
+
+def attention_full(
+    p: dict,
+    cfg: ArchConfig,
+    x: Array,                      # (B, S, D)
+    *,
+    causal: bool = True,
+    impl: str = "jnp_flash",
+    positions: Optional[Array] = None,
+    rope: bool = True,
+) -> Tuple[Array, Tuple[Array, Array]]:
+    """Whole-sequence attention (train / prefill).  Returns (out, (k, v))."""
+    b, s, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(s)[None, :]
+    q, k, v = _project_qkv(p, cfg, x, positions, rope=rope)
+    if impl == "pallas":
+        from repro.kernels import ops as kops
+
+        o = kops.flash_attention(
+            jnp.transpose(q, (0, 2, 1, 3)),
+            jnp.transpose(k, (0, 2, 1, 3)),
+            jnp.transpose(v, (0, 2, 1, 3)),
+            causal=causal,
+            use_kernel=True,
+        )
+        o = jnp.transpose(o, (0, 2, 1, 3))
+    elif impl == "naive":
+        o = _naive_attention(q, k, v, causal=causal)
+    else:
+        o = flash_attention_jnp(q, k, v, causal=causal)
+    out = jnp.einsum("bshk,hkd->bsd", o, cast(p["wo"]))
+    return out, (k, v)
+
+
+def attention_cross(
+    p: dict,
+    cfg: ArchConfig,
+    x: Array,                      # (B, Sq, D)
+    memory_kv: Tuple[Array, Array],  # precomputed (B, Sm, Hk, hd) pair
+    *,
+    impl: str = "jnp_flash",
+) -> Array:
+    b, s, _ = x.shape
+    hd = cfg.hd
+    q = jnp.einsum("bsd,dhk->bshk", x, cast(p["wq"]))
+    if cfg.qk_norm:
+        q = rmsnorm(p["q_norm"], q, cfg.norm_eps)
+    k, v = memory_kv
+    if impl == "naive":
+        o = _naive_attention(q, k, v, causal=False)
+    else:
+        o = flash_attention_jnp(q, k, v, causal=False)
+    return jnp.einsum("bshk,hkd->bsd", o, cast(p["wo"]))
+
+
+def cross_memory(p: dict, cfg: ArchConfig, memory: Array) -> Tuple[Array, Array]:
+    """Project encoder memory once into cross-attention K/V."""
+    b, s, _ = memory.shape
+    hd = cfg.hd
+    k = jnp.einsum("bsd,dhk->bshk", memory, cast(p["wk"]))
+    v = jnp.einsum("bsd,dhk->bshk", memory, cast(p["wv"]))
+    if cfg.qk_norm:
+        k = rmsnorm(p["k_norm"], k, cfg.norm_eps)
+    return k, v
+
+
+def attention_decode(
+    p: dict,
+    cfg: ArchConfig,
+    x: Array,                      # (B, 1, D)
+    cache_k: Array,                # (B, Smax, Hk, hd)
+    cache_v: Array,
+    pos: Array,                    # (B,) current position (= kv_len so far)
+    *,
+    impl: str = "jnp_flash",
+    kv_block: int = 1024,
+) -> Tuple[Array, Array, Array]:
+    """One-token decode: update cache at ``pos``, attend over the valid prefix."""
+    b = x.shape[0]
+    positions = pos[:, None]
+    q, k, v = _project_qkv(p, cfg, x, positions)
+    # scatter new kv at pos
+    bidx = jnp.arange(b)
+    cache_k = cache_k.at[bidx, pos].set(k[:, 0].astype(cache_k.dtype))
+    cache_v = cache_v.at[bidx, pos].set(v[:, 0].astype(cache_v.dtype))
+    kv_len = pos + 1
+    if impl == "pallas":
+        from repro.kernels import ops as kops
+
+        o = kops.decode_attention(
+            q[:, 0], cache_k, cache_v, kv_len, use_kernel=True
+        )[:, None]
+    else:
+        # single-token decode: one-pass masked attention over the whole cache.
+        # The blocked scan dynamic-sliced the model-axis-sharded seq dim,
+        # forcing GSPMD to all-gather 537 MB cache blocks per layer per block
+        # (52 GB/step on qwen3-moe decode_32k — §Perf cell 3, iter 2).  The
+        # unblocked contraction partitions cleanly over the sharded seq dim
+        # (partial softmax stats all-reduce is bytes, not gigabytes), and the
+        # score row is only (B, H, S) ~ tens of MB even at 524k context.
+        o = _decode_attention_onepass(
+            q, cache_k.astype(q.dtype), cache_v.astype(q.dtype), kv_len
+        )
+    out = jnp.einsum("bshk,hkd->bsd", o, cast(p["wo"]))
+    return out, cache_k, cache_v

@@ -1,0 +1,138 @@
+"""Encoder-decoder stack (seamless-m4t backbone; audio frontend stubbed).
+
+Encoder: bidirectional self-attention over precomputed frame embeddings
+(the modality frontend is a stub per the assignment — ``input_specs()``
+provides (B, S_enc, frontend_dim) frames).  Decoder: causal self-attention +
+cross-attention to the encoder memory.  Cross-attention K/V are projected once
+per layer at prefill and carried in the cache for decode.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.partitioning import constrain
+from .attention import (
+    attention_decode,
+    attention_cross,
+    attention_full,
+    attention_params,
+    cross_memory,
+)
+from .layers import cast, rmsnorm, rmsnorm_params, swiglu, swiglu_params
+from .transformer import remat_policy, stacked_init
+
+Array = jax.Array
+
+
+class EncDecCache(NamedTuple):
+    self_k: Array    # (L, B, S, Hk, hd)
+    self_v: Array
+    cross_k: Array   # (L, B, Sm, Hk, hd) — static after prefill
+    cross_v: Array
+
+
+def encoder_layer_init(key, cfg: ArchConfig) -> dict:
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": rmsnorm_params(cfg.d_model),
+        "attn": attention_params(k1, cfg),
+        "ln2": rmsnorm_params(cfg.d_model),
+        "mlp": swiglu_params(k2, cfg.d_model, cfg.d_ff),
+    }
+
+
+def decoder_layer_init(key, cfg: ArchConfig) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "ln1": rmsnorm_params(cfg.d_model),
+        "attn": attention_params(k1, cfg),
+        "lnx": rmsnorm_params(cfg.d_model),
+        "xattn": attention_params(k2, cfg),
+        "ln2": rmsnorm_params(cfg.d_model),
+        "mlp": swiglu_params(k3, cfg.d_model, cfg.d_ff),
+    }
+
+
+def encdec_init(key, cfg: ArchConfig) -> dict:
+    k1, k2 = jax.random.split(key)
+    return {
+        "encoder": stacked_init(encoder_layer_init, k1, cfg, cfg.num_encoder_layers),
+        "decoder": stacked_init(decoder_layer_init, k2, cfg, cfg.num_layers),
+    }
+
+
+def encoder_full(params, cfg: ArchConfig, x: Array, *, impl="jnp_flash") -> Array:
+    def body(h, lp):
+        a_in = rmsnorm(lp["ln1"], h, cfg.norm_eps)
+        out, _ = attention_full(lp["attn"], cfg, a_in, causal=False, impl=impl)
+        h = h + out
+        h = h + swiglu(lp["mlp"], rmsnorm(lp["ln2"], h, cfg.norm_eps))
+        h = constrain(h, "act_btd")
+        return h, None
+
+    if cfg.remat:
+        body = jax.checkpoint(body, policy=remat_policy(cfg))
+    x, _ = jax.lax.scan(body, x, params["encoder"])
+    return x
+
+
+def decoder_full(
+    params,
+    cfg: ArchConfig,
+    x: Array,
+    memory: Array,
+    *,
+    impl="jnp_flash",
+    want_cache: bool = False,
+):
+    def body(h, lp):
+        a_in = rmsnorm(lp["ln1"], h, cfg.norm_eps)
+        out, kv = attention_full(lp["attn"], cfg, a_in, causal=True, impl=impl)
+        h = h + out
+        mem_kv = cross_memory(lp["xattn"], cfg, memory)
+        h = h + attention_cross(
+            lp["xattn"], cfg, rmsnorm(lp["lnx"], h, cfg.norm_eps), mem_kv, impl=impl
+        )
+        h = h + swiglu(lp["mlp"], rmsnorm(lp["ln2"], h, cfg.norm_eps))
+        h = constrain(h, "act_btd")
+        ys = (kv, mem_kv) if want_cache else None
+        return h, ys
+
+    if cfg.remat:
+        body = jax.checkpoint(body, policy=remat_policy(cfg))
+    x, ys = jax.lax.scan(body, x, params["decoder"])
+    cache = None
+    if want_cache:
+        (sk, sv), (ck, cv) = ys
+        cache = EncDecCache(self_k=sk, self_v=sv, cross_k=ck, cross_v=cv)
+    return x, cache
+
+
+def decoder_step(
+    params,
+    cfg: ArchConfig,
+    x: Array,            # (B, 1, D)
+    cache: EncDecCache,
+    pos: Array,
+    *,
+    impl="jnp_flash",
+):
+    def body(h, xs):
+        lp, sk, sv, ck, cv = xs
+        a_in = rmsnorm(lp["ln1"], h, cfg.norm_eps)
+        out, sk, sv = attention_decode(lp["attn"], cfg, a_in, sk, sv, pos, impl=impl)
+        h = h + out
+        h = h + attention_cross(
+            lp["xattn"], cfg, rmsnorm(lp["lnx"], h, cfg.norm_eps), (ck, cv), impl=impl
+        )
+        h = h + swiglu(lp["mlp"], rmsnorm(lp["ln2"], h, cfg.norm_eps))
+        return h, (sk, sv)
+
+    x, (sk, sv) = jax.lax.scan(
+        body, x, (params["decoder"], cache.self_k, cache.self_v, cache.cross_k, cache.cross_v)
+    )
+    return x, EncDecCache(self_k=sk, self_v=sv, cross_k=cache.cross_k, cross_v=cache.cross_v)

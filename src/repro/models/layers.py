@@ -1,0 +1,125 @@
+"""Shared model layers: norms, projections, RoPE, embeddings, losses.
+
+Parameter convention: nested dicts of fp32 ``jnp`` arrays (pytrees).  Compute
+runs in bf16 (cast at the layer boundary); reductions and softmax in fp32.
+No flax/optax dependency — everything is explicit and pjit-friendly.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+COMPUTE_DTYPE = jnp.bfloat16
+
+
+def cast(x: Array) -> Array:
+    return x.astype(COMPUTE_DTYPE)
+
+
+# ------------------------------------------------------------------ init
+def dense_init(key, shape, scale: Optional[float] = None) -> Array:
+    fan_in = shape[0] if len(shape) >= 2 else 1
+    scale = scale if scale is not None else 1.0 / jnp.sqrt(fan_in)
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32) * scale)
+
+
+def embed_init(key, shape) -> Array:
+    return jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+
+
+# ------------------------------------------------------------------ norms
+def rmsnorm_params(dim: int) -> dict:
+    return {"scale": jnp.ones((dim,), jnp.float32)}
+
+
+def rmsnorm(params: dict, x: Array, eps: float = 1e-6) -> Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * params["scale"]
+    return out.astype(x.dtype)
+
+
+def layernorm_params(dim: int) -> dict:
+    return {"scale": jnp.ones((dim,), jnp.float32), "bias": jnp.zeros((dim,), jnp.float32)}
+
+
+def layernorm(params: dict, x: Array, eps: float = 1e-6) -> Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean((xf - mu) ** 2, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps) * params["scale"] + params["bias"]
+    return out.astype(x.dtype)
+
+
+# ------------------------------------------------------------------ RoPE
+def rope_freqs(hd: int, theta: float) -> Array:
+    return 1.0 / (theta ** (jnp.arange(0, hd, 2, dtype=jnp.float32) / hd))
+
+
+def apply_rope(x: Array, positions: Array, theta: float) -> Array:
+    """x (..., S, H, hd); positions (..., S)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                      # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    cos = jnp.cos(angles)[..., None, :]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ------------------------------------------------------------------ MLP
+def swiglu_params(key, d_model: int, d_ff: int) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(k1, (d_model, d_ff)),
+        "w_up": dense_init(k2, (d_model, d_ff)),
+        "w_down": dense_init(k3, (d_ff, d_model)),
+    }
+
+
+def swiglu(params: dict, x: Array) -> Array:
+    g = x @ cast(params["w_gate"])
+    u = x @ cast(params["w_up"])
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    return h @ cast(params["w_down"])
+
+
+# ------------------------------------------------------------------ loss
+def softmax_cross_entropy(logits: Array, labels: Array, mask: Optional[Array] = None) -> Array:
+    """logits (B, S, V) [bf16 ok], labels (B, S) int32; mean over valid tokens."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    if mask is not None:
+        m = mask.astype(jnp.float32)
+        return jnp.sum(nll * m) / jnp.maximum(jnp.sum(m), 1.0)
+    return jnp.mean(nll)
+
+
+# ---------------------------------------------------------------- grad barrier
+@jax.custom_vjp
+def bf16_grad_barrier(x: Array) -> Array:
+    """Identity fwd; backward casts the residual-stream cotangent to bf16.
+
+    XLA was fusing rmsnorm's fp32 upcast *before* the row-parallel all-reduce,
+    moving 2x the bytes per layer (EXPERIMENTS.md §Perf, iter 4).  bf16
+    gradient all-reduce on the residual stream is standard LLM practice; the
+    optimizer still accumulates in fp32.
+    """
+    return x
+
+
+def _bgb_fwd(x):
+    return x, None
+
+
+def _bgb_bwd(_, ct):
+    return (ct.astype(COMPUTE_DTYPE).astype(ct.dtype),)
+
+
+bf16_grad_barrier.defvjp(_bgb_fwd, _bgb_bwd)

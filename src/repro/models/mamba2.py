@@ -1,0 +1,202 @@
+"""Mamba-2 (SSD) block — chunked parallel scan for train/prefill, O(1)-state
+recurrence for decode.  Used by zamba2 (hybrid backbone).
+
+Layout follows the reference SSD formulation (Dao & Gu 2024) in its
+single-group ("MVA") form: heads H with head dim P, shared state dim N.
+Train/prefill splits the sequence into chunks of ``cfg.ssm_chunk``:
+intra-chunk attention-like term + inter-chunk carried state via ``lax.scan``
+— no (S, S) matrices, memory O(B * chunk^2 * H) per step.
+
+Decode carries (conv_state, ssm_state); cost independent of context length —
+this is why zamba2/xlstm run the ``long_500k`` cell that quadratic archs skip.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from .layers import cast, dense_init, rmsnorm, rmsnorm_params
+
+Array = jax.Array
+
+
+class MambaCache(NamedTuple):
+    conv: Array   # (B, W-1, d_conv_ch)
+    ssm: Array    # (B, H, N, P) fp32
+
+
+def _dims(cfg: ArchConfig):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    h = cfg.ssm_heads or max(d_inner // 64, 1)
+    p = d_inner // h
+    n = cfg.ssm_state
+    return d_inner, h, p, n
+
+
+def mamba2_params(key, cfg: ArchConfig) -> dict:
+    d_inner, h, p, n = _dims(cfg)
+    conv_ch = d_inner + 2 * n
+    ks = jax.random.split(key, 4)
+    return {
+        "in_proj": dense_init(ks[0], (cfg.d_model, 2 * d_inner + 2 * n + h)),
+        "conv_w": dense_init(ks[1], (cfg.ssm_conv_width, conv_ch), scale=0.5),
+        "conv_b": jnp.zeros((conv_ch,), jnp.float32),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, h)),
+        "d_skip": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(jnp.full((h,), 0.01))),  # softplus^-1(0.01)
+        "norm": rmsnorm_params(d_inner),
+        "out_proj": dense_init(ks[2], (d_inner, cfg.d_model)),
+    }
+
+
+def _causal_conv_full(w: Array, b: Array, x: Array) -> Array:
+    """Depthwise causal conv over (B, S, C) with kernel (W, C)."""
+    width = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x, dtype=jnp.float32)
+    for i in range(width):  # width is tiny (4): unrolled taps
+        out = out + xp[:, i : i + x.shape[1], :].astype(jnp.float32) * w[i][None, None, :]
+    return (out + b[None, None, :]).astype(x.dtype)
+
+
+def _segsum_decay(da_cum: Array) -> Array:
+    """exp(da_cum_i - da_cum_j) lower-triangular; da_cum (..., c, h)."""
+    diff = da_cum[..., :, None, :] - da_cum[..., None, :, :]   # (..., i, j, h)
+    c = da_cum.shape[-2]
+    tri = jnp.tril(jnp.ones((c, c), bool))
+    return jnp.where(tri[..., None], jnp.exp(diff), 0.0)
+
+
+def ssd_full(
+    x: Array,       # (B, S, H, P)
+    dt: Array,      # (B, S, H) post-softplus
+    a: Array,       # (H,) negative
+    bmat: Array,    # (B, S, N)
+    cmat: Array,    # (B, S, N)
+    chunk: int,
+    init_state: Optional[Array] = None,
+) -> Tuple[Array, Array]:
+    """Chunked SSD; returns (y (B,S,H,P), final_state (B,H,N,P))."""
+    b, s, h, p = x.shape
+    n = bmat.shape[-1]
+    c = min(chunk, s)
+    s_pad = (s + c - 1) // c * c
+    pad = s_pad - s
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        bmat = jnp.pad(bmat, ((0, 0), (0, pad), (0, 0)))
+        cmat = jnp.pad(cmat, ((0, 0), (0, pad), (0, 0)))
+    nc = s_pad // c
+
+    xc = x.reshape(b, nc, c, h, p).astype(jnp.float32)
+    dtc = dt.reshape(b, nc, c, h).astype(jnp.float32)
+    bc = bmat.reshape(b, nc, c, n).astype(jnp.float32)
+    cc = cmat.reshape(b, nc, c, n).astype(jnp.float32)
+
+    da = dtc * a[None, None, None, :]                      # (b, nc, c, h)
+    da_cum = jnp.cumsum(da, axis=2)
+    decay = _segsum_decay(da_cum)                          # (b, nc, c, c, h)
+    cb = jnp.einsum("bkin,bkjn->bkij", cc, bc)             # (b, nc, c, c)
+    scores = cb[..., None] * decay * dtc[:, :, None, :, :]  # (b,nc,i,j,h)
+    y_intra = jnp.einsum("bkijh,bkjhp->bkihp", scores, xc)
+
+    # per-chunk state contribution and total chunk decay
+    decay_to_end = jnp.exp(da_cum[:, :, -1:, :] - da_cum)  # (b, nc, c, h)
+    s_chunk = jnp.einsum(
+        "bkjn,bkjh,bkjhp->bkhnp", bc, dtc * decay_to_end, xc
+    )                                                      # (b, nc, h, n, p)
+    chunk_decay = jnp.exp(da_cum[:, :, -1, :])             # (b, nc, h)
+
+    def step(state, inp):
+        s_k, cd_k, c_k, dac_k = inp
+        # y_inter_i = (C_i exp(da_cum_i)) . state
+        y_inter = jnp.einsum(
+            "bin,bih,bhnp->bihp", c_k, jnp.exp(dac_k), state
+        )
+        new_state = state * cd_k[:, :, None, None] + s_k
+        return new_state, y_inter
+
+    s0 = (
+        init_state.astype(jnp.float32)
+        if init_state is not None
+        else jnp.zeros((b, h, n, p), jnp.float32)
+    )
+    xs = (
+        jnp.moveaxis(s_chunk, 1, 0),
+        jnp.moveaxis(chunk_decay, 1, 0),
+        jnp.moveaxis(cc, 1, 0),
+        jnp.moveaxis(da_cum, 1, 0),
+    )
+    final_state, y_inter = jax.lax.scan(step, s0, xs)
+    y = y_intra + jnp.moveaxis(y_inter, 0, 1)
+    y = y.reshape(b, s_pad, h, p)[:, :s]
+    return y, final_state
+
+
+def mamba2_full(
+    p: dict, cfg: ArchConfig, u: Array, cache: Optional[MambaCache] = None
+) -> Tuple[Array, MambaCache]:
+    """Whole-sequence forward (train / prefill). u (B, S, D)."""
+    d_inner, h, pd, n = _dims(cfg)
+    b, s, _ = u.shape
+    zxbcdt = u @ cast(p["in_proj"])
+    z, xbc, dt_raw = jnp.split(zxbcdt, [d_inner, 2 * d_inner + 2 * n], axis=-1)
+    xbc = _causal_conv_full(p["conv_w"], p["conv_b"], xbc)
+    xbc = jax.nn.silu(xbc.astype(jnp.float32)).astype(u.dtype)
+    x, bmat, cmat = jnp.split(xbc, [d_inner, d_inner + n], axis=-1)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    a = -jnp.exp(p["a_log"])
+    y, state = ssd_full(
+        x.reshape(b, s, h, pd), dt, a, bmat, cmat, cfg.ssm_chunk
+    )
+    y = y + x.reshape(b, s, h, pd).astype(jnp.float32) * p["d_skip"][None, None, :, None]
+    y = y.reshape(b, s, d_inner).astype(u.dtype)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(u.dtype)
+    y = rmsnorm(p["norm"], y, cfg.norm_eps)
+    out = y @ cast(p["out_proj"])
+    # conv cache = last (W-1) pre-activation conv inputs
+    xbc_raw = jnp.split(zxbcdt, [d_inner, 2 * d_inner + 2 * n], axis=-1)[1]
+    w1 = cfg.ssm_conv_width - 1
+    tail = xbc_raw[:, -w1:, :] if s >= w1 else jnp.pad(xbc_raw, ((0, 0), (w1 - s, 0), (0, 0)))
+    return out, MambaCache(conv=tail, ssm=state)
+
+
+def mamba2_step(
+    p: dict, cfg: ArchConfig, u: Array, cache: MambaCache
+) -> Tuple[Array, MambaCache]:
+    """Single-token decode. u (B, 1, D)."""
+    d_inner, h, pd, n = _dims(cfg)
+    b = u.shape[0]
+    zxbcdt = u[:, 0] @ cast(p["in_proj"])
+    z, xbc_new, dt_raw = jnp.split(zxbcdt, [d_inner, 2 * d_inner + 2 * n], axis=-1)
+    # rolling conv state
+    conv_in = jnp.concatenate([cache.conv, xbc_new[:, None, :]], axis=1)  # (B, W, C)
+    w = p["conv_w"]
+    xbc = jnp.einsum("bwc,wc->bc", conv_in.astype(jnp.float32), w) + p["conv_b"]
+    xbc = jax.nn.silu(xbc).astype(u.dtype)
+    x, bmat, cmat = jnp.split(xbc, [d_inner, d_inner + n], axis=-1)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])   # (B, H)
+    a = -jnp.exp(p["a_log"])
+    da = jnp.exp(dt * a)                                               # (B, H)
+    xh = x.reshape(b, h, pd).astype(jnp.float32)
+    inc = jnp.einsum("bn,bh,bhp->bhnp", bmat.astype(jnp.float32), dt, xh)
+    state = cache.ssm * da[:, :, None, None] + inc
+    y = jnp.einsum("bn,bhnp->bhp", cmat.astype(jnp.float32), state)
+    y = y + xh * p["d_skip"][None, :, None]
+    y = y.reshape(b, d_inner).astype(u.dtype)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(u.dtype)
+    y = rmsnorm(p["norm"], y[:, None, :], cfg.norm_eps)[:, 0]
+    out = (y @ cast(p["out_proj"]))[:, None, :]
+    return out, MambaCache(conv=conv_in[:, 1:], ssm=state)
+
+
+def init_mamba_cache(cfg: ArchConfig, batch: int, dtype=jnp.bfloat16) -> MambaCache:
+    d_inner, h, pd, n = _dims(cfg)
+    return MambaCache(
+        conv=jnp.zeros((batch, cfg.ssm_conv_width - 1, d_inner + 2 * n), dtype),
+        ssm=jnp.zeros((batch, h, n, pd), jnp.float32),
+    )

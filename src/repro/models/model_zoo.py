@@ -1,0 +1,324 @@
+"""Unified model API over all assigned architectures.
+
+Every architecture exposes the same four entry points (built by
+:func:`build_model`):
+
+- ``init(key)``                          -> params pytree (fp32)
+- ``loss_fn(params, batch)``             -> (loss, metrics)        [train]
+- ``prefill(params, batch)``             -> (last_logits, cache)   [serve]
+- ``decode(params, tokens, cache, pos)`` -> (logits, cache)        [serve]
+- ``init_cache(batch, max_seq)``         -> cache pytree
+- ``input_specs(shape)``                 -> abstract inputs (dry-run)
+
+Modality frontends (audio frames / vision patches) are stubs per the
+assignment: ``input_specs`` provides precomputed frame/patch embeddings and
+the model owns only the projector.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.partitioning import constrain
+from .encdec import (
+    EncDecCache,
+    decoder_full,
+    decoder_step,
+    encdec_init,
+    encoder_full,
+)
+from .layers import (
+    cast,
+    dense_init,
+    embed_init,
+    rmsnorm,
+    rmsnorm_params,
+    softmax_cross_entropy,
+)
+from .transformer import (
+    XLSTMCache,
+    Zamba2Cache,
+    init_xlstm_cache,
+    init_zamba2_cache,
+    stacked_init,
+    standard_layer_init,
+    standard_stack_full,
+    standard_stack_step,
+    xlstm_full,
+    xlstm_init,
+    xlstm_step,
+    zamba2_full,
+    zamba2_init,
+    zamba2_step,
+)
+
+Array = jax.Array
+AUX_COEF = 0.01
+
+
+# --------------------------------------------------------------------------
+# shared head / embedding helpers
+# --------------------------------------------------------------------------
+
+
+def _head_init(key, cfg: ArchConfig) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {
+        "embed": embed_init(k1, (cfg.vocab_size, cfg.d_model)),
+        "final_norm": rmsnorm_params(cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        p["head"] = dense_init(k2, (cfg.d_model, cfg.vocab_size))
+    if cfg.frontend != "none":
+        p["frontend_proj"] = {
+            "w1": dense_init(k3, (cfg.frontend_dim, cfg.d_model)),
+            "w2": dense_init(jax.random.fold_in(k3, 1), (cfg.d_model, cfg.d_model)),
+        }
+    return p
+
+
+def _embed(params, cfg: ArchConfig, tokens: Array) -> Array:
+    x = params["embed"][tokens].astype(jnp.bfloat16)
+    return constrain(x, "act_btd")
+
+
+def _logits(params, cfg: ArchConfig, x: Array) -> Array:
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    w = params["embed"].T if cfg.tie_embeddings else params["head"]
+    logits = x @ cast(w)
+    return constrain(logits, "logits")
+
+
+def _frontend(params, x_raw: Array) -> Array:
+    fp = params["frontend_proj"]
+    h = jax.nn.gelu((x_raw.astype(jnp.bfloat16) @ cast(fp["w1"])).astype(jnp.float32))
+    return (h.astype(jnp.bfloat16) @ cast(fp["w2"]))
+
+
+def chunked_cross_entropy(
+    params, cfg: ArchConfig, x: Array, labels: Array, mask: Optional[Array], chunk: int = 1024
+) -> Array:
+    """CE without materializing the full (B, S, V) logits: scan over S chunks.
+
+    Memory-side beyond-paper optimization (see EXPERIMENTS.md §Perf); flops
+    identical to the full-logits path.
+    """
+    b, s, d = x.shape
+    c = min(chunk, s)
+    if s % c:
+        pad = c - s % c
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)))
+        mask = jnp.pad(mask if mask is not None else jnp.ones((b, s), bool), ((0, 0), (0, pad)))
+    elif mask is None:
+        mask = jnp.ones((b, x.shape[1]), bool)
+    nch = x.shape[1] // c
+    xc = jnp.moveaxis(x.reshape(b, nch, c, d), 1, 0)
+    lc = jnp.moveaxis(labels.reshape(b, nch, c), 1, 0)
+    mc = jnp.moveaxis(mask.reshape(b, nch, c), 1, 0)
+
+    def body(acc, inp):
+        xx, ll, mm = inp
+        logits = _logits(params, cfg, xx).astype(jnp.float32)
+        lse = jax.scipy.special.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, ll[..., None], axis=-1)[..., 0]
+        nll = (lse - gold) * mm.astype(jnp.float32)
+        return (acc[0] + jnp.sum(nll), acc[1] + jnp.sum(mm.astype(jnp.float32))), None
+
+    body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+    (tot, cnt), _ = jax.lax.scan(body, (jnp.zeros(()), jnp.zeros(())), (xc, lc, mc))
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+# --------------------------------------------------------------------------
+# family backbones: full + step
+# --------------------------------------------------------------------------
+
+
+def _backbone_init(key, cfg: ArchConfig):
+    if cfg.family in ("dense", "moe", "vlm"):
+        return {"layers": stacked_init(standard_layer_init, key, cfg, cfg.num_layers)}
+    if cfg.family == "hybrid":
+        return zamba2_init(key, cfg)
+    if cfg.family == "ssm":
+        return xlstm_init(key, cfg)
+    if cfg.family == "audio":
+        return encdec_init(key, cfg)
+    raise ValueError(cfg.family)
+
+
+def _backbone_full(params, cfg: ArchConfig, x, *, impl, want_cache, memory=None):
+    if cfg.family in ("dense", "moe", "vlm"):
+        h, aux, kv = standard_stack_full(
+            params["layers"], cfg, x, impl=impl, want_cache=want_cache
+        )
+        cache = None
+        if want_cache:
+            cache = {"k": kv[0], "v": kv[1]}
+        return h, aux, cache
+    if cfg.family == "hybrid":
+        return zamba2_full(params, cfg, x, impl=impl, want_cache=want_cache)
+    if cfg.family == "ssm":
+        return xlstm_full(params, cfg, x, impl=impl, want_cache=want_cache)
+    if cfg.family == "audio":
+        h, cache = decoder_full(params, cfg, x, memory, impl=impl, want_cache=want_cache)
+        return h, jnp.zeros(()), cache
+    raise ValueError(cfg.family)
+
+
+# --------------------------------------------------------------------------
+# the Model container
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class Model:
+    cfg: ArchConfig
+    impl: str = "jnp_flash"
+
+    # ----------------------------------------------------------- init
+    def init(self, key) -> dict:
+        k1, k2 = jax.random.split(key)
+        params = _head_init(k1, self.cfg)
+        params.update(_backbone_init(k2, self.cfg))
+        return params
+
+    def abstract_params(self) -> Any:
+        return jax.eval_shape(lambda: self.init(jax.random.PRNGKey(0)))
+
+    # ----------------------------------------------------------- train
+    def loss_fn(self, params, batch: Dict[str, Array]) -> Tuple[Array, Dict]:
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        labels = batch["labels"]
+        mask = batch.get("loss_mask")
+        if cfg.family == "audio":
+            frames = batch["frames"]
+            memory = _frontend(params, frames)
+            memory = encoder_full(params, cfg, memory, impl=self.impl)
+            x = _embed(params, cfg, tokens)
+            h, aux, _ = _backbone_full(
+                params, cfg, x, impl=self.impl, want_cache=False, memory=memory
+            )
+        elif cfg.family == "vlm":
+            patches = batch["patches"]
+            pe = _frontend(params, patches)
+            te = _embed(params, cfg, tokens)
+            x = jnp.concatenate([pe, te], axis=1)
+            x = constrain(x, "act_btd")
+            h, aux, _ = _backbone_full(params, cfg, x, impl=self.impl, want_cache=False)
+            npatch = patches.shape[1]
+            h = h[:, npatch:]
+            # labels/mask already aligned to the text region
+        else:
+            x = _embed(params, cfg, tokens)
+            h, aux, _ = _backbone_full(params, cfg, x, impl=self.impl, want_cache=False)
+        loss = chunked_cross_entropy(params, cfg, h, labels, mask)
+        total = loss + AUX_COEF * aux
+        return total, {"ce": loss, "aux": aux}
+
+    # ----------------------------------------------------------- serve
+    def prefill(self, params, batch: Dict[str, Array]):
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        memory = None
+        if cfg.family == "audio":
+            frames = batch["frames"]
+            memory = _frontend(params, frames)
+            memory = encoder_full(params, cfg, memory, impl=self.impl)
+            x = _embed(params, cfg, tokens)
+        elif cfg.family == "vlm":
+            pe = _frontend(params, batch["patches"])
+            te = _embed(params, cfg, tokens)
+            x = jnp.concatenate([pe, te], axis=1)
+        else:
+            x = _embed(params, cfg, tokens)
+        h, _, cache = _backbone_full(
+            params, cfg, x, impl=self.impl, want_cache=True, memory=memory
+        )
+        logits = _logits(params, cfg, h[:, -1:])
+        return logits, cache
+
+    def decode(self, params, tokens: Array, cache, pos: Array):
+        """tokens (B, 1) int32; pos (B,) absolute position of this token."""
+        cfg = self.cfg
+        x = _embed(params, cfg, tokens)
+        if cfg.family in ("dense", "moe", "vlm"):
+            h, ck, cv = standard_stack_step(
+                params["layers"], cfg, x, cache["k"], cache["v"], pos, impl=self.impl
+            )
+            new_cache = {"k": ck, "v": cv}
+        elif cfg.family == "hybrid":
+            h, new_cache = zamba2_step(params, cfg, x, cache, pos, x, impl=self.impl)
+        elif cfg.family == "ssm":
+            h, new_cache = xlstm_step(params, cfg, x, cache, pos, impl=self.impl)
+        elif cfg.family == "audio":
+            h, new_cache = decoder_step(params, cfg, x, cache, pos, impl=self.impl)
+        else:
+            raise ValueError(cfg.family)
+        logits = _logits(params, cfg, h)
+        return logits, new_cache
+
+    # ----------------------------------------------------------- caches
+    def init_cache(self, batch: int, max_seq: int, dtype=jnp.bfloat16):
+        cfg = self.cfg
+        if cfg.family in ("dense", "moe", "vlm"):
+            shape = (cfg.num_layers, batch, max_seq, cfg.num_kv_heads, cfg.hd)
+            return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+        if cfg.family == "hybrid":
+            return init_zamba2_cache(cfg, batch, max_seq, dtype)
+        if cfg.family == "ssm":
+            return init_xlstm_cache(cfg, batch)
+        if cfg.family == "audio":
+            kv = (cfg.num_layers, batch, max_seq, cfg.num_kv_heads, cfg.hd)
+            return EncDecCache(
+                self_k=jnp.zeros(kv, dtype),
+                self_v=jnp.zeros(kv, dtype),
+                cross_k=jnp.zeros(kv, dtype),
+                cross_v=jnp.zeros(kv, dtype),
+            )
+        raise ValueError(cfg.family)
+
+    def abstract_cache(self, batch: int, max_seq: int, dtype=jnp.bfloat16):
+        return jax.eval_shape(lambda: self.init_cache(batch, max_seq, dtype))
+
+    # ----------------------------------------------------------- dry-run inputs
+    def input_specs(self, shape: ShapeConfig) -> Dict[str, Any]:
+        """Abstract (ShapeDtypeStruct) inputs for every entry point."""
+        cfg = self.cfg
+        b, s = shape.global_batch, shape.seq_len
+        i32 = jnp.int32
+        tok = jax.ShapeDtypeStruct((b, s), i32)
+        if shape.kind == "train":
+            batch = {"tokens": tok, "labels": tok}
+            if cfg.family == "audio":
+                batch["frames"] = jax.ShapeDtypeStruct((b, s, cfg.frontend_dim), jnp.float32)
+            if cfg.family == "vlm":
+                npatch = cfg.num_frontend_tokens
+                batch["tokens"] = jax.ShapeDtypeStruct((b, s - npatch), i32)
+                batch["labels"] = jax.ShapeDtypeStruct((b, s - npatch), i32)
+                batch["patches"] = jax.ShapeDtypeStruct((b, npatch, cfg.frontend_dim), jnp.float32)
+            return batch
+        if shape.kind == "prefill":
+            batch = {"tokens": tok}
+            if cfg.family == "audio":
+                batch["frames"] = jax.ShapeDtypeStruct((b, s, cfg.frontend_dim), jnp.float32)
+            if cfg.family == "vlm":
+                npatch = cfg.num_frontend_tokens
+                batch["tokens"] = jax.ShapeDtypeStruct((b, s - npatch), i32)
+                batch["patches"] = jax.ShapeDtypeStruct((b, npatch, cfg.frontend_dim), jnp.float32)
+            return batch
+        # decode: one token + cache of length s
+        return {
+            "tokens": jax.ShapeDtypeStruct((b, 1), i32),
+            "cache": self.abstract_cache(b, s),
+            "pos": jax.ShapeDtypeStruct((b,), i32),
+        }
+
+
+def build_model(cfg: ArchConfig, impl: str = "jnp_flash") -> Model:
+    return Model(cfg=cfg, impl=impl)

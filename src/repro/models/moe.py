@@ -1,0 +1,128 @@
+"""Mixture-of-Experts layer: top-k routing, sort-based dispatch, grouped GEMM.
+
+TPU adaptation notes (DESIGN.md §3): no dynamic per-expert ragged shapes —
+token->expert assignment is materialized as a *static-capacity* slot table via
+an argsort over expert ids (stable), and expert computation is one batched
+``(E, C, D) x (E, D, F)`` dot_general (grouped GEMM).  Overflowing tokens are
+dropped (standard capacity-factor semantics), dropped tokens pass through the
+residual unchanged.  Flop cost is the honest ``T*k*cf * 3*D*F`` — no GShard
+one-hot dispatch einsums (those are quadratic in tokens and would poison the
+roofline).
+
+Expert padding: when num_experts doesn't divide the mesh's model axis (e.g.
+qwen2-moe's 60), experts are padded to ``E_pad`` with router logits masked to
+-inf, so dead experts are never routed to (semantics preserved, layout even).
+
+Shared experts (qwen2-moe) run as a dense SwiGLU with a sigmoid gate, fused
+alongside the routed path.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.partitioning import constrain
+from .layers import cast, dense_init, swiglu, swiglu_params
+
+Array = jax.Array
+
+
+def padded_experts(cfg: ArchConfig, model_axis: int = 16) -> int:
+    e = cfg.num_experts
+    return (e + model_axis - 1) // model_axis * model_axis
+
+
+def capacity(cfg: ArchConfig, tokens: int, e_pad: int) -> int:
+    c = int(tokens * cfg.num_experts_per_tok * cfg.capacity_factor / cfg.num_experts)
+    return max((c + 127) // 128 * 128, 128)
+
+
+def moe_params(key, cfg: ArchConfig, model_axis: int = 16) -> dict:
+    e_pad = padded_experts(cfg, model_axis)
+    ks = jax.random.split(key, 6)
+    f = cfg.moe_d_ff
+    p = {
+        "router": dense_init(ks[0], (cfg.d_model, e_pad)),
+        "w_gate": dense_init(ks[1], (e_pad, cfg.d_model, f)),
+        "w_up": dense_init(ks[2], (e_pad, cfg.d_model, f)),
+        "w_down": dense_init(ks[3], (e_pad, f, cfg.d_model)),
+    }
+    if cfg.num_shared_experts > 0:
+        p["shared"] = swiglu_params(ks[4], cfg.d_model, cfg.num_shared_experts * f)
+        p["shared_gate"] = dense_init(ks[5], (cfg.d_model, 1))
+    return p
+
+
+def moe_apply(p: dict, cfg: ArchConfig, x: Array) -> Tuple[Array, Array]:
+    """x (B, S, D) -> (out (B, S, D), aux_loss ())."""
+    b, s, d = x.shape
+    t = b * s
+    e_pad = p["router"].shape[1]
+    e_real = cfg.num_experts
+    k = cfg.num_experts_per_tok
+    cap = capacity(cfg, t, e_pad)
+
+    xf = x.reshape(t, d)
+    logits = (xf @ cast(p["router"])).astype(jnp.float32)       # (T, E_pad)
+    logits = jnp.where(jnp.arange(e_pad)[None, :] < e_real, logits, -1e30)
+    probs_full = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs_full, k)                  # (T, k)
+    if cfg.norm_topk_prob:
+        top_p = top_p / jnp.maximum(jnp.sum(top_p, -1, keepdims=True), 1e-9)
+
+    # load-balancing auxiliary loss (Switch-style): E * sum_e f_e * P_e
+    me = jnp.mean(probs_full[:, :e_real], axis=0)
+    ce = jnp.zeros((e_pad,)).at[top_e.reshape(-1)].add(1.0)[:e_real] / (t * k)
+    aux = e_real * jnp.sum(me * ce)
+
+    # ---- sort-based dispatch ------------------------------------------------
+    e_flat = top_e.reshape(-1)                                   # (T*k,)
+    t_flat = jnp.repeat(jnp.arange(t, dtype=jnp.int32), k)
+    w_flat = top_p.reshape(-1).astype(jnp.float32)
+    order = jnp.argsort(e_flat)                                  # stable
+    e_sort = e_flat[order]
+    t_sort = t_flat[order]
+    w_sort = w_flat[order]
+    counts = jnp.bincount(e_flat, length=e_pad)                  # (E_pad,)
+    starts = jnp.cumsum(counts) - counts
+    pos_in_e = jnp.arange(t * k, dtype=jnp.int32) - starts[e_sort].astype(jnp.int32)
+    keep = pos_in_e < cap
+    slot = jnp.where(keep, e_sort * cap + pos_in_e, e_pad * cap)  # drop slot
+
+    token_of_slot = jnp.full((e_pad * cap + 1,), 0, jnp.int32).at[slot].set(
+        t_sort, mode="drop"
+    )[: e_pad * cap]
+    weight_of_slot = jnp.zeros((e_pad * cap + 1,), jnp.float32).at[slot].set(
+        w_sort, mode="drop"
+    )[: e_pad * cap]
+    valid_slot = jnp.zeros((e_pad * cap + 1,), jnp.float32).at[slot].set(
+        keep.astype(jnp.float32), mode="drop"
+    )[: e_pad * cap]
+
+    xg = xf[token_of_slot] * valid_slot[:, None].astype(xf.dtype)
+    xg = xg.reshape(e_pad, cap, d)
+    xg = constrain(xg, "moe_ecd")
+
+    # ---- grouped GEMM expert MLP (SwiGLU) ----------------------------------
+    g = jnp.einsum("ecd,edf->ecf", xg, cast(p["w_gate"]))
+    u = jnp.einsum("ecd,edf->ecf", xg, cast(p["w_up"]))
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(xg.dtype) * u
+    h = constrain(h, "moe_ecf")
+    yg = jnp.einsum("ecf,efd->ecd", h, cast(p["w_down"]))
+    yg = constrain(yg, "moe_ecd")
+
+    # ---- combine ------------------------------------------------------------
+    yflat = yg.reshape(e_pad * cap, d) * (weight_of_slot * valid_slot)[:, None].astype(
+        yg.dtype
+    )
+    out = jnp.zeros((t, d), yg.dtype).at[token_of_slot].add(yflat)
+    out = constrain(out.reshape(b, s, d), "act_btd")
+
+    if cfg.num_shared_experts > 0:
+        gate = jax.nn.sigmoid((xf @ cast(p["shared_gate"])).astype(jnp.float32))
+        shared = swiglu(p["shared"], x) * gate.reshape(b, s, 1).astype(x.dtype)
+        out = out + shared
+    return out, aux

@@ -1,0 +1,345 @@
+"""Layer stacks: uniform decoder (dense/MoE), Zamba2 hybrid, xLSTM.
+
+All stacks scan over *stacked* per-layer parameters (leading axis = layer), so
+the lowered HLO contains one while-loop body per stack regardless of depth —
+essential to keep 64-layer dry-run compiles tractable and remat policies
+uniform.  Residual-stream activations are sharding-annotated via
+``repro.partitioning.constrain`` at every block boundary.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.partitioning import constrain
+from .attention import attention_decode, attention_full
+from .layers import cast, rmsnorm, rmsnorm_params, swiglu, swiglu_params
+from .mamba2 import (
+    MambaCache,
+    init_mamba_cache,
+    mamba2_full,
+    mamba2_params,
+    mamba2_step,
+)
+from .moe import moe_apply, moe_params
+from .xlstm import (
+    MLSTMCache,
+    SLSTMCache,
+    init_mlstm_cache,
+    init_slstm_cache,
+    mlstm_full,
+    mlstm_params,
+    mlstm_step,
+    slstm_full,
+    slstm_params,
+    slstm_step,
+)
+from .attention import attention_params
+
+Array = jax.Array
+
+def remat_policy(cfg):
+    if cfg.remat_policy == "dots":
+        return jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+    return jax.checkpoint_policies.nothing_saveable
+
+
+REMAT_POLICY = jax.checkpoint_policies.nothing_saveable
+
+
+# ==========================================================================
+# uniform decoder stack (dense / MoE / vlm backbone / enc-dec halves)
+# ==========================================================================
+
+
+def standard_layer_init(key, cfg: ArchConfig) -> dict:
+    k1, k2 = jax.random.split(key)
+    p = {
+        "ln1": rmsnorm_params(cfg.d_model),
+        "attn": attention_params(k1, cfg),
+        "ln2": rmsnorm_params(cfg.d_model),
+    }
+    if cfg.is_moe:
+        p["moe"] = moe_params(k2, cfg)
+    else:
+        p["mlp"] = swiglu_params(k2, cfg.d_model, cfg.d_ff)
+    return p
+
+
+def stacked_init(layer_init, key, cfg: ArchConfig, n: int):
+    keys = jax.random.split(key, n)
+    return jax.vmap(lambda k: layer_init(k, cfg))(keys)
+
+
+def standard_stack_full(
+    layers: dict,
+    cfg: ArchConfig,
+    x: Array,
+    *,
+    causal: bool = True,
+    impl: str = "jnp_flash",
+    positions: Optional[Array] = None,
+    want_cache: bool = False,
+):
+    """Whole-sequence pass.  Returns (x, aux_loss, kv_caches | None)."""
+
+    def body(carry, lp):
+        h, aux = carry
+        a_in = rmsnorm(lp["ln1"], h, cfg.norm_eps)
+        attn_out, kv = attention_full(
+            lp["attn"], cfg, a_in, causal=causal, impl=impl, positions=positions
+        )
+        h = h + attn_out
+        h = constrain(h, "act_btd")
+        m_in = rmsnorm(lp["ln2"], h, cfg.norm_eps)
+        if cfg.is_moe:
+            m_out, a = moe_apply(lp["moe"], cfg, m_in)
+            aux = aux + a
+        else:
+            m_out = swiglu(lp["mlp"], m_in)
+        h = h + m_out
+        h = constrain(h, "act_btd")
+        ys = kv if want_cache else None
+        return (h, aux), ys
+
+    if cfg.remat:
+        body = jax.checkpoint(body, policy=remat_policy(cfg))
+    (x, aux), caches = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)), layers)
+    return x, aux, caches
+
+
+def standard_stack_step(
+    layers: dict,
+    cfg: ArchConfig,
+    x: Array,                 # (B, 1, D)
+    cache_k: Array,           # (L, B, S, Hk, hd)
+    cache_v: Array,
+    pos: Array,               # (B,)
+    *,
+    impl: str = "jnp_flash",
+):
+    def body(h, xs):
+        lp, ck, cv = xs
+        a_in = rmsnorm(lp["ln1"], h, cfg.norm_eps)
+        attn_out, ck, cv = attention_decode(lp["attn"], cfg, a_in, ck, cv, pos, impl=impl)
+        h = h + attn_out
+        m_in = rmsnorm(lp["ln2"], h, cfg.norm_eps)
+        if cfg.is_moe:
+            m_out, _ = moe_apply(lp["moe"], cfg, m_in)
+        else:
+            m_out = swiglu(lp["mlp"], m_in)
+        h = h + m_out
+        return h, (ck, cv)
+
+    x, (cache_k, cache_v) = jax.lax.scan(body, x, (layers, cache_k, cache_v))
+    return x, cache_k, cache_v
+
+
+# ==========================================================================
+# Zamba2 hybrid stack: Mamba2 backbone + shared attention block
+# ==========================================================================
+
+
+class Zamba2Cache(NamedTuple):
+    mamba: MambaCache          # stacked (L, ...)
+    shared_k: Array            # (nseg, B, S, Hk, hd)
+    shared_v: Array
+
+
+def zamba2_shared_init(key, cfg: ArchConfig) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "in_proj": jax.random.truncated_normal(k3, -2, 2, (2 * cfg.d_model, cfg.d_model), jnp.float32)
+        * (1.0 / jnp.sqrt(2 * cfg.d_model)),
+        "ln1": rmsnorm_params(cfg.d_model),
+        "attn": attention_params(k1, cfg),
+        "ln2": rmsnorm_params(cfg.d_model),
+        "mlp": swiglu_params(k2, cfg.d_model, cfg.d_ff),
+    }
+
+
+def zamba2_init(key, cfg: ArchConfig) -> dict:
+    k1, k2 = jax.random.split(key)
+    return {
+        "mamba": stacked_init(lambda k, c: mamba2_params(k, c), k1, cfg, cfg.num_layers),
+        "shared": zamba2_shared_init(k2, cfg),
+    }
+
+
+def _shared_block_full(sp, cfg, x, x0, impl, pos=None):
+    u = jnp.concatenate([x, x0], axis=-1) @ cast(sp["in_proj"])
+    a_in = rmsnorm(sp["ln1"], u, cfg.norm_eps)
+    attn_out, kv = attention_full(sp["attn"], cfg, a_in, causal=True, impl=impl)
+    u = u + attn_out
+    m_in = rmsnorm(sp["ln2"], u, cfg.norm_eps)
+    u = u + swiglu(sp["mlp"], m_in)
+    return x + u, kv
+
+
+def zamba2_full(params, cfg: ArchConfig, x: Array, *, impl="jnp_flash", want_cache=False):
+    every = cfg.shared_attn_every or cfg.num_layers
+    nseg = max(cfg.num_layers // every, 1)
+    x0 = x
+    mamba_stacked = params["mamba"]
+    seg_params = jax.tree_util.tree_map(
+        lambda a: a.reshape((nseg, every) + a.shape[1:]), mamba_stacked
+    )
+
+    def seg_body(carry, sp_seg):
+        h = carry
+
+        def layer_body(hh, lp):
+            out, cache = mamba2_full(lp, cfg, hh)
+            hh = hh + out
+            hh = constrain(hh, "act_btd")
+            return hh, cache
+
+        inner = layer_body
+        if cfg.remat:
+            inner = jax.checkpoint(inner, policy=remat_policy(cfg))
+        h, caches = jax.lax.scan(inner, h, sp_seg)
+        h, kv = _shared_block_full(params["shared"], cfg, h, x0, impl)
+        h = constrain(h, "act_btd")
+        return h, (caches, kv)
+
+    x, (mcaches, kvs) = jax.lax.scan(seg_body, x, seg_params)
+    if not want_cache:
+        return x, jnp.zeros((), jnp.float32), None
+    mcaches = jax.tree_util.tree_map(
+        lambda a: a.reshape((cfg.num_layers,) + a.shape[2:]), mcaches
+    )
+    cache = Zamba2Cache(mamba=mcaches, shared_k=kvs[0], shared_v=kvs[1])
+    return x, jnp.zeros((), jnp.float32), cache
+
+
+def zamba2_step(params, cfg: ArchConfig, x: Array, cache: Zamba2Cache, pos: Array, x0_embed: Array, *, impl="jnp_flash"):
+    every = cfg.shared_attn_every or cfg.num_layers
+    nseg = max(cfg.num_layers // every, 1)
+    seg_params = jax.tree_util.tree_map(
+        lambda a: a.reshape((nseg, every) + a.shape[1:]), params["mamba"]
+    )
+    seg_mcache = jax.tree_util.tree_map(
+        lambda a: a.reshape((nseg, every) + a.shape[1:]), cache.mamba
+    )
+
+    def seg_body(h, xs):
+        sp_seg, mc_seg, ck, cv = xs
+
+        def layer_body(hh, lxs):
+            lp, lc = lxs
+            out, lc = mamba2_step(lp, cfg, hh, lc)
+            return hh + out, lc
+
+        h, mc_seg = jax.lax.scan(layer_body, h, (sp_seg, mc_seg))
+        sp = params["shared"]
+        u = jnp.concatenate([h, x0_embed], axis=-1) @ cast(sp["in_proj"])
+        a_in = rmsnorm(sp["ln1"], u, cfg.norm_eps)
+        attn_out, ck, cv = attention_decode(sp["attn"], cfg, a_in, ck, cv, pos, impl=impl)
+        u = u + attn_out
+        u = u + swiglu(sp["mlp"], rmsnorm(sp["ln2"], u, cfg.norm_eps))
+        return h + u, (mc_seg, ck, cv)
+
+    x, (mc, ck, cv) = jax.lax.scan(
+        seg_body, x, (seg_params, seg_mcache, cache.shared_k, cache.shared_v)
+    )
+    mc = jax.tree_util.tree_map(
+        lambda a: a.reshape((cfg.num_layers,) + a.shape[2:]), mc
+    )
+    return x, Zamba2Cache(mamba=mc, shared_k=ck, shared_v=cv)
+
+
+def init_zamba2_cache(cfg: ArchConfig, batch: int, max_seq: int, dtype=jnp.bfloat16) -> Zamba2Cache:
+    every = cfg.shared_attn_every or cfg.num_layers
+    nseg = max(cfg.num_layers // every, 1)
+    mc = init_mamba_cache(cfg, batch, dtype)
+    mc = jax.tree_util.tree_map(
+        lambda a: jnp.broadcast_to(a[None], (cfg.num_layers,) + a.shape).copy(), mc
+    )
+    kv_shape = (nseg, batch, max_seq, cfg.num_kv_heads, cfg.hd)
+    return Zamba2Cache(
+        mamba=mc, shared_k=jnp.zeros(kv_shape, dtype), shared_v=jnp.zeros(kv_shape, dtype)
+    )
+
+
+# ==========================================================================
+# xLSTM stack: (slstm_every - 1) mLSTM + 1 sLSTM per group
+# ==========================================================================
+
+
+class XLSTMCache(NamedTuple):
+    mlstm: MLSTMCache   # stacked (G, m_per, ...)
+    slstm: SLSTMCache   # stacked (G, ...)
+
+
+def xlstm_init(key, cfg: ArchConfig) -> dict:
+    every = cfg.slstm_every or cfg.num_layers
+    groups = max(cfg.num_layers // every, 1)
+    m_per = every - 1
+    k1, k2 = jax.random.split(key)
+    gkeys = jax.random.split(k1, groups)
+    mk = jax.vmap(
+        lambda k: stacked_init(lambda kk, c: mlstm_params(kk, c), k, cfg, m_per)
+    )(gkeys)
+    sk = stacked_init(lambda kk, c: slstm_params(kk, c), k2, cfg, groups)
+    return {"mlstm": mk, "slstm": sk}
+
+
+def xlstm_full(params, cfg: ArchConfig, x: Array, *, impl="jnp_flash", want_cache=False):
+    def group_body(h, gp):
+        mp, sp = gp
+
+        def m_body(hh, lp):
+            out, c = mlstm_full(lp, cfg, hh)
+            hh = hh + out
+            hh = constrain(hh, "act_btd")
+            return hh, c
+
+        inner = m_body
+        if cfg.remat:
+            inner = jax.checkpoint(inner, policy=remat_policy(cfg))
+        h, mcaches = jax.lax.scan(inner, h, mp)
+        out, scache = slstm_full(sp, cfg, h)
+        h = h + out
+        h = constrain(h, "act_btd")
+        return h, (mcaches, scache)
+
+    x, (mc, sc) = jax.lax.scan(group_body, x, (params["mlstm"], params["slstm"]))
+    cache = XLSTMCache(mlstm=mc, slstm=sc) if want_cache else None
+    return x, jnp.zeros((), jnp.float32), cache
+
+
+def xlstm_step(params, cfg: ArchConfig, x: Array, cache: XLSTMCache, pos: Array, *, impl="jnp_flash"):
+    def group_body(h, xs):
+        mp, sp, mc, sc = xs
+
+        def m_body(hh, lxs):
+            lp, lc = lxs
+            out, lc = mlstm_step(lp, cfg, hh, lc)
+            return hh + out, lc
+
+        h, mc = jax.lax.scan(m_body, h, (mp, mc))
+        out, sc = slstm_step(sp, cfg, h, sc)
+        return h + out, (mc, sc)
+
+    x, (mc, sc) = jax.lax.scan(
+        group_body, x, (params["mlstm"], params["slstm"], cache.mlstm, cache.slstm)
+    )
+    return x, XLSTMCache(mlstm=mc, slstm=sc)
+
+
+def init_xlstm_cache(cfg: ArchConfig, batch: int) -> XLSTMCache:
+    every = cfg.slstm_every or cfg.num_layers
+    groups = max(cfg.num_layers // every, 1)
+    m_per = every - 1
+    mc = init_mlstm_cache(cfg, batch)
+    mc = jax.tree_util.tree_map(
+        lambda a: jnp.broadcast_to(a[None, None], (groups, m_per) + a.shape).copy(), mc
+    )
+    sc = init_slstm_cache(cfg, batch)
+    sc = jax.tree_util.tree_map(
+        lambda a: jnp.broadcast_to(a[None], (groups,) + a.shape).copy(), sc
+    )
+    return XLSTMCache(mlstm=mc, slstm=sc)

@@ -1,0 +1,256 @@
+"""xLSTM blocks (Beck et al. 2024): mLSTM (matrix memory, chunk-parallel) and
+sLSTM (scalar memory, recurrent scan).
+
+mLSTM runs in a chunked parallel form analogous to SSD: within-chunk
+decay-masked attention + inter-chunk carried (C, n) state — O(S) in sequence
+length, which is what qualifies xlstm-350m for the ``long_500k`` cell.
+Stabilization: input gates are exp-capped (documented simplification of the
+paper's m_t stabilizer; numerically equivalent in the regimes we train).
+
+sLSTM is inherently sequential (recurrent R h_{t-1} term): ``lax.scan`` over
+time with per-head block-diagonal recurrence, exactly as published.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.partitioning import constrain
+from .layers import cast, dense_init, rmsnorm, rmsnorm_params
+
+Array = jax.Array
+
+
+class MLSTMCache(NamedTuple):
+    c: Array   # (B, H, dk, dv) fp32
+    n: Array   # (B, H, dk) fp32
+    f_acc: Array  # (B, H) running log-decay (kept for interface symmetry)
+
+
+class SLSTMCache(NamedTuple):
+    c: Array   # (B, H, P)
+    n: Array   # (B, H, P)
+    h: Array   # (B, H, P)
+
+
+def _dims(cfg: ArchConfig):
+    h = cfg.num_heads
+    p = cfg.d_model // h
+    return h, p
+
+
+# --------------------------------------------------------------------------
+# mLSTM
+# --------------------------------------------------------------------------
+
+
+def mlstm_params(key, cfg: ArchConfig) -> dict:
+    h, p = _dims(cfg)
+    d = cfg.d_model
+    ks = jax.random.split(key, 6)
+    return {
+        "wqkv": dense_init(ks[0], (d, 3 * d)),
+        "wif": dense_init(ks[1], (d, 2 * h), scale=0.01),
+        "b_i": jnp.zeros((h,), jnp.float32),
+        "b_f": jnp.full((h,), 3.0, jnp.float32),  # init forget ~ sigmoid(3)
+        "wz": dense_init(ks[2], (d, d)),
+        "norm": rmsnorm_params(d),
+        "wo": dense_init(ks[3], (d, d)),
+    }
+
+
+def _mlstm_chunked(q, k, v, log_f, log_i, chunk: int, init: Optional[MLSTMCache]):
+    """q/k/v (B, S, H, P); log_f/log_i (B, S, H). Returns (y, cache)."""
+    b, s, h, p = q.shape
+    c = min(chunk, s)
+    s_pad = (s + c - 1) // c * c
+    pad = s_pad - s
+    if pad:
+        q, k, v = (jnp.pad(t, ((0, 0), (0, pad), (0, 0), (0, 0))) for t in (q, k, v))
+        log_f = jnp.pad(log_f, ((0, 0), (0, pad), (0, 0)))
+        log_i = jnp.pad(log_i, ((0, 0), (0, pad), (0, 0)), constant_values=-1e30)
+    nc = s_pad // c
+    qc = q.reshape(b, nc, c, h, p).astype(jnp.float32) / (p ** 0.5)
+    kc = k.reshape(b, nc, c, h, p).astype(jnp.float32)
+    vc = v.reshape(b, nc, c, h, p).astype(jnp.float32)
+    lf = log_f.reshape(b, nc, c, h).astype(jnp.float32)
+    li = jnp.minimum(log_i.reshape(b, nc, c, h).astype(jnp.float32), 10.0)
+
+    f_cum = jnp.cumsum(lf, axis=2)                          # (b, nc, c, h)
+    # intra: score[i,j] = (q_i . k_j) exp(F_i - F_j) i_j  (j <= i)
+    qk = jnp.einsum("bkihp,bkjhp->bkhij", qc, kc)
+    dec = f_cum[:, :, :, None, :] - f_cum[:, :, None, :, :]  # (b,nc,i,j,h)
+    gate = jnp.exp(dec + li[:, :, None, :, :])
+    tri = jnp.tril(jnp.ones((c, c), bool))
+    gate = jnp.where(tri[None, None, :, :, None], gate, 0.0)
+    scores = qk * jnp.moveaxis(gate, -1, 2)                  # (b,nc,h,i,j)
+    num_intra = jnp.einsum("bkhij,bkjhp->bkihp", scores, vc)
+    den_intra = jnp.sum(scores, axis=-1)                     # (b,nc,h,i)
+
+    # inter-chunk state
+    dec_end = jnp.exp(f_cum[:, :, -1:, :] - f_cum + li)      # (b,nc,c,h)
+    c_chunk = jnp.einsum("bkjh,bkjhp,bkjhq->bkhpq", dec_end, kc, vc)
+    n_chunk = jnp.einsum("bkjh,bkjhp->bkhp", dec_end, kc)
+    chunk_decay = jnp.exp(f_cum[:, :, -1, :])                # (b,nc,h)
+
+    def step(carry, inp):
+        cs, ns = carry
+        ck, nk, cd, q_k, fc = inp
+        qd = q_k * jnp.exp(fc)[..., None]                    # (b,c,h,p)
+        num_inter = jnp.einsum("bihp,bhpq->bihq", qd, cs)
+        den_inter = jnp.einsum("bihp,bhp->bih", qd, ns)
+        cs = cs * cd[:, :, None, None] + ck
+        ns = ns * cd[:, :, None] + nk
+        return (cs, ns), (num_inter, den_inter)
+
+    if init is None:
+        c0 = jnp.zeros((b, h, p, p), jnp.float32)
+        n0 = jnp.zeros((b, h, p), jnp.float32)
+    else:
+        c0, n0 = init.c, init.n
+    xs = (
+        jnp.moveaxis(c_chunk, 1, 0),
+        jnp.moveaxis(n_chunk, 1, 0),
+        jnp.moveaxis(chunk_decay, 1, 0),
+        jnp.moveaxis(qc, 1, 0),
+        jnp.moveaxis(f_cum, 1, 0),
+    )
+    (cf, nf), (num_inter, den_inter) = jax.lax.scan(step, (c0, n0), xs)
+    num = num_intra + jnp.moveaxis(num_inter, 0, 1)
+    den = jnp.transpose(den_intra, (0, 1, 3, 2)) + jnp.moveaxis(den_inter, 0, 1)
+    y = num / jnp.maximum(jnp.abs(den), 1.0)[..., None]
+    y = y.reshape(b, s_pad, h, p)[:, :s]
+    cache = MLSTMCache(c=cf, n=nf, f_acc=jnp.zeros((b, h), jnp.float32))
+    return y, cache
+
+
+def mlstm_full(p, cfg: ArchConfig, x: Array, cache=None) -> Tuple[Array, MLSTMCache]:
+    b, s, d = x.shape
+    h, pd = _dims(cfg)
+    qkv = x @ cast(p["wqkv"])
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+    q = q.reshape(b, s, h, pd)
+    k = k.reshape(b, s, h, pd)
+    v = v.reshape(b, s, h, pd)
+    gates = (x @ cast(p["wif"])).astype(jnp.float32)
+    gi, gf = jnp.split(gates, 2, axis=-1)
+    log_i = gi + p["b_i"]
+    log_f = jax.nn.log_sigmoid(gf + p["b_f"])
+    y, new_cache = _mlstm_chunked(q, k, v, log_f, log_i, cfg.ssm_chunk or 256, cache)
+    y = y.reshape(b, s, d).astype(x.dtype)
+    z = jax.nn.silu((x @ cast(p["wz"])).astype(jnp.float32)).astype(x.dtype)
+    y = rmsnorm(p["norm"], y * z, cfg.norm_eps)
+    return y @ cast(p["wo"]), new_cache
+
+
+def mlstm_step(p, cfg: ArchConfig, x: Array, cache: MLSTMCache) -> Tuple[Array, MLSTMCache]:
+    """x (B, 1, D) single-token decode."""
+    b, _, d = x.shape
+    h, pd = _dims(cfg)
+    x0 = x[:, 0]
+    qkv = x0 @ cast(p["wqkv"])
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+    q = q.reshape(b, h, pd).astype(jnp.float32) / (pd ** 0.5)
+    k = k.reshape(b, h, pd).astype(jnp.float32)
+    v = v.reshape(b, h, pd).astype(jnp.float32)
+    gates = (x0 @ cast(p["wif"])).astype(jnp.float32)
+    gi, gf = jnp.split(gates, 2, axis=-1)
+    i_t = jnp.exp(jnp.minimum(gi + p["b_i"], 10.0))
+    f_t = jax.nn.sigmoid(gf + p["b_f"])
+    c_new = cache.c * f_t[:, :, None, None] + i_t[:, :, None, None] * (
+        k[:, :, :, None] * v[:, :, None, :]
+    )
+    n_new = cache.n * f_t[:, :, None] + i_t[:, :, None] * k
+    num = jnp.einsum("bhp,bhpq->bhq", q, c_new)
+    den = jnp.einsum("bhp,bhp->bh", q, n_new)
+    y = num / jnp.maximum(jnp.abs(den), 1.0)[..., None]
+    y = y.reshape(b, 1, d).astype(x.dtype)
+    z = jax.nn.silu((x0 @ cast(p["wz"])).astype(jnp.float32)).astype(x.dtype)[:, None]
+    y = rmsnorm(p["norm"], y * z, cfg.norm_eps)
+    return y @ cast(p["wo"]), MLSTMCache(c=c_new, n=n_new, f_acc=cache.f_acc)
+
+
+# --------------------------------------------------------------------------
+# sLSTM
+# --------------------------------------------------------------------------
+
+
+def slstm_params(key, cfg: ArchConfig) -> dict:
+    h, p = _dims(cfg)
+    d = cfg.d_model
+    ks = jax.random.split(key, 3)
+    return {
+        "wx": dense_init(ks[0], (d, 4 * d)),
+        "r": dense_init(ks[1], (h, p, 4 * p), scale=0.1),
+        "b": jnp.zeros((4 * d,), jnp.float32),
+        "norm": rmsnorm_params(d),
+        "wo": dense_init(ks[2], (d, d)),
+    }
+
+
+def _slstm_cell(p, cfg, wx_t, state: SLSTMCache):
+    """One recurrence step. wx_t (B, 4D) precomputed input projection."""
+    h, pd = _dims(cfg)
+    b = wx_t.shape[0]
+    rh = jnp.einsum("bhp,hpq->bhq", state.h, p["r"].astype(jnp.float32))  # (B,H,4P)
+    pre = wx_t.astype(jnp.float32).reshape(b, h, 4 * pd) + rh + p["b"].reshape(h, 4 * pd)
+    gi, gf, gz, go = jnp.split(pre, 4, axis=-1)  # each (B,H,P)
+    i_t = jnp.exp(jnp.minimum(gi, 10.0))
+    f_t = jax.nn.sigmoid(gf)
+    z_t = jnp.tanh(gz)
+    o_t = jax.nn.sigmoid(go)
+    c_new = f_t * state.c + i_t * z_t
+    n_new = f_t * state.n + i_t
+    h_new = o_t * c_new / jnp.maximum(jnp.abs(n_new), 1.0)
+    return SLSTMCache(c=c_new, n=n_new, h=h_new)
+
+
+def slstm_full(p, cfg: ArchConfig, x: Array, cache=None) -> Tuple[Array, SLSTMCache]:
+    b, s, d = x.shape
+    h, pd = _dims(cfg)
+    wx = x @ cast(p["wx"])                                   # (B, S, 4D)
+    state = cache or SLSTMCache(
+        c=jnp.zeros((b, h, pd), jnp.float32),
+        n=jnp.zeros((b, h, pd), jnp.float32),
+        h=jnp.zeros((b, h, pd), jnp.float32),
+    )
+
+    def step(st, wx_t):
+        st = _slstm_cell(p, cfg, wx_t, st)
+        return st, st.h
+
+    # remat the per-timestep cell: autodiff-of-scan otherwise stacks ~8 gate
+    # tensors x 4096 steps as backward residuals (EXPERIMENTS.md §Perf cell 2)
+    step = jax.checkpoint(step, policy=jax.checkpoint_policies.nothing_saveable)
+    state, hs = jax.lax.scan(step, state, jnp.moveaxis(wx, 1, 0))
+    y = jnp.moveaxis(hs, 0, 1).reshape(b, s, d).astype(x.dtype)
+    y = rmsnorm(p["norm"], y, cfg.norm_eps)
+    return y @ cast(p["wo"]), state
+
+
+def slstm_step(p, cfg: ArchConfig, x: Array, cache: SLSTMCache) -> Tuple[Array, SLSTMCache]:
+    b, _, d = x.shape
+    wx = x[:, 0] @ cast(p["wx"])
+    state = _slstm_cell(p, cfg, wx, cache)
+    h, pd = _dims(cfg)
+    y = state.h.reshape(b, 1, d).astype(x.dtype)
+    y = rmsnorm(p["norm"], y, cfg.norm_eps)
+    return y @ cast(p["wo"]), state
+
+
+def init_mlstm_cache(cfg: ArchConfig, batch: int) -> MLSTMCache:
+    h, p = _dims(cfg)
+    return MLSTMCache(
+        c=jnp.zeros((batch, h, p, p), jnp.float32),
+        n=jnp.zeros((batch, h, p), jnp.float32),
+        f_acc=jnp.zeros((batch, h), jnp.float32),
+    )
+
+
+def init_slstm_cache(cfg: ArchConfig, batch: int) -> SLSTMCache:
+    h, p = _dims(cfg)
+    z = jnp.zeros((batch, h, p), jnp.float32)
+    return SLSTMCache(c=z, n=z, h=z)

@@ -1,0 +1,48 @@
+"""Logical-axis sharding context (hand-rolled flax-style ``logical axis rules``).
+
+Model code annotates activations with *semantic* names via :func:`constrain`;
+the launcher activates a mesh + a name -> PartitionSpec mapping with
+:func:`axis_rules`.  Outside a context every constraint is a no-op, so models
+run unmodified on a single CPU device (smoke tests) and fully sharded under
+the production mesh (dry-run / training) without code changes.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+_state = threading.local()
+
+
+def _current():
+    return getattr(_state, "ctx", None)
+
+
+@contextlib.contextmanager
+def axis_rules(mesh: Mesh, rules: Dict[str, PartitionSpec]):
+    prev = _current()
+    _state.ctx = (mesh, rules)
+    try:
+        yield
+    finally:
+        _state.ctx = prev
+
+
+def constrain(x, name: str):
+    ctx = _current()
+    if ctx is None:
+        return x
+    mesh, rules = ctx
+    spec = rules.get(name)
+    if spec is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def current_mesh() -> Optional[Mesh]:
+    ctx = _current()
+    return ctx[0] if ctx else None

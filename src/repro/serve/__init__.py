@@ -1,0 +1,3 @@
+"""Serving substrate: KV-cache management + batched RAG engine."""
+from .engine import Engine, ServeConfig, ServeResult  # noqa: F401
+from .kvcache import grow_cache  # noqa: F401

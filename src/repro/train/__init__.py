@@ -1,0 +1,22 @@
+"""Training substrate: optimizer, train step, data pipeline, checkpointing."""
+from .optimizer import (  # noqa: F401
+    AdamWState,
+    OptimizerConfig,
+    adamw_update,
+    init_optimizer,
+    lr_schedule,
+    global_norm,
+)
+from .train_step import (  # noqa: F401
+    TrainConfig,
+    make_train_step,
+    make_compressed_dp_step,
+    compressed_psum,
+)
+from .data import DataConfig, make_batch  # noqa: F401
+from .checkpoint import (  # noqa: F401
+    latest_step,
+    restore_checkpoint,
+    save_checkpoint,
+    wait_async,
+)

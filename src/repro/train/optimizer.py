@@ -1,0 +1,87 @@
+"""Hand-rolled AdamW (+ global-norm clipping, cosine schedule) — no optax.
+
+fp32 master weights and moments; works on arbitrary parameter pytrees; states
+are pytrees so they pjit-shard exactly like the parameters.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerConfig:
+    lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+
+
+class AdamWState(NamedTuple):
+    step: Array
+    m: object
+    v: object
+
+
+def lr_schedule(cfg: OptimizerConfig, step: Array) -> Array:
+    step = step.astype(jnp.float32)
+    warm = step / jnp.maximum(cfg.warmup_steps, 1)
+    prog = jnp.clip(
+        (step - cfg.warmup_steps) / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+        0.0,
+        1.0,
+    )
+    cos = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+def init_optimizer(params) -> AdamWState:
+    zeros = jax.tree_util.tree_map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+    return AdamWState(step=jnp.zeros((), jnp.int32), m=zeros, v=jax.tree_util.tree_map(jnp.copy, zeros))
+
+
+def global_norm(tree) -> Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree_util.tree_map(lambda g: g * scale, grads), norm
+
+
+def adamw_update(cfg: OptimizerConfig, grads, state: AdamWState, params):
+    """Returns (new_params, new_state, metrics)."""
+    grads = jax.tree_util.tree_map(lambda g: g.astype(jnp.float32), grads)
+    grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
+    step = state.step + 1
+    lr = lr_schedule(cfg, step)
+    b1, b2 = cfg.beta1, cfg.beta2
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    new_m = jax.tree_util.tree_map(lambda m, g: b1 * m + (1 - b1) * g, state.m, grads)
+    new_v = jax.tree_util.tree_map(lambda v, g: b2 * v + (1 - b2) * g * g, state.v, grads)
+
+    def upd(p, m, v):
+        mh = m / bc1
+        vh = v / bc2
+        step_val = mh / (jnp.sqrt(vh) + cfg.eps) + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * step_val).astype(p.dtype)
+
+    new_params = jax.tree_util.tree_map(upd, params, new_m, new_v)
+    return new_params, AdamWState(step=step, m=new_m, v=new_v), {
+        "lr": lr,
+        "grad_norm": gnorm,
+    }

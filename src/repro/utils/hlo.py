@@ -1,0 +1,260 @@
+"""HLO post-compile analysis: execution-weighted cost extraction for rooflines.
+
+XLA's ``compiled.cost_analysis()`` visits every computation ONCE — a while
+body from ``lax.scan`` over 64 layers contributes 1/64th of its true flops.
+This module re-derives execution-weighted costs directly from the optimized
+HLO text:
+
+1. split the module into computations (regions),
+2. build a name -> shape map per computation,
+3. per computation, accumulate
+   - collective output bytes (all-reduce / all-gather / reduce-scatter /
+     all-to-all / collective-permute, sync and async -start forms),
+   - dot flops (2 * out_elems * contracted_size) — matmuls dominate LLM flops,
+   - materialized bytes (sum of op output bytes; x2 for write+read) as the
+     HBM-traffic proxy,
+4. propagate bottom-up through while (x trip count from ``known_trip_count``
+   backend config, falling back to the loop-bound constant in the condition),
+   fusion/call edges (x1), and conditionals (worst-case branch).
+
+Byte convention for collectives: output size of the op (all-gather = gathered
+size, reduce-scatter = shard size, all-reduce = full size) — a consistent
+proxy for per-chip link traffic.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict, List, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+COLLECTIVE_KINDS = (
+    "all-reduce",
+    "all-gather",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+_RE_HEADER = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\{\s*$")
+_RE_DEF = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(\([^()]*\)|\S+)\s+([\w\-]+)")
+_RE_SHAPE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_RE_TRIP = re.compile(r"known_trip_count[^0-9]*(\d+)")
+_RE_OPERANDS = re.compile(r"\(([^()]*(?:\([^()]*\)[^()]*)*)\)")
+
+
+def _shape_elems(dims: str) -> int:
+    n = 1
+    if dims.strip():
+        for d in dims.split(","):
+            n *= int(d)
+    return n
+
+
+def _sig_bytes(sig: str) -> int:
+    return sum(
+        _shape_elems(dims) * _DTYPE_BYTES.get(dt, 4)
+        for dt, dims in _RE_SHAPE.findall(sig)
+    )
+
+
+def _split_computations(text: str) -> Dict[str, List[str]]:
+    comps: Dict[str, List[str]] = {}
+    cur = None
+    for line in text.splitlines():
+        if cur is None:
+            m = _RE_HEADER.match(line)
+            if m:
+                cur = m.group(1)
+                comps[cur] = [line]
+            continue
+        comps[cur].append(line)
+        if line.startswith("}"):
+            cur = None
+    return comps
+
+
+def _entry_name(text: str) -> str:
+    m = re.search(r"^ENTRY\s+%?([\w\.\-]+)", text, re.MULTILINE)
+    return m.group(1) if m else ""
+
+
+class HloCost(dict):
+    @property
+    def flops(self) -> float:
+        return self.get("flops", 0.0)
+
+    @property
+    def bytes(self) -> float:
+        return self.get("bytes", 0.0)
+
+    def collectives(self) -> Dict[str, float]:
+        return {k: v for k, v in self.items() if k in COLLECTIVE_KINDS}
+
+    @property
+    def collective_total(self) -> float:
+        return sum(self.collectives().values())
+
+
+def analyze_hlo(text: str) -> HloCost:
+    comps = _split_computations(text)
+    entry = _entry_name(text)
+    if entry not in comps:
+        entry = next(iter(comps)) if comps else ""
+    memo: Dict[str, Dict[str, float]] = {}
+
+    def analyze(name: str, stack=(), in_fusion: bool = False) -> Dict[str, float]:
+        key = (name, in_fusion)
+        if key in memo:
+            return memo[key]
+        if not name or name in stack or name not in comps:
+            return {}
+        lines = comps[name]
+        shapes: Dict[str, str] = {}
+        for ln in lines:
+            d = _RE_DEF.match(ln)
+            if d:
+                shapes[d.group(1)] = d.group(2)
+        acc: Dict[str, float] = defaultdict(float)
+        for ln in lines:
+            d = _RE_DEF.match(ln)
+            if not d:
+                continue
+            out_name, out_sig, op = d.groups()
+            out_bytes = _sig_bytes(out_sig)
+            if op == "dynamic-update-slice":
+                # in-place slice write: traffic = the update operand, not the
+                # whole aliased buffer (scan output stacking was overcounted)
+                om = _RE_OPERANDS.search(ln[ln.index("(") :])
+                ops_ = [o.strip().lstrip("%") for o in om.group(1).split(",")] if om else []
+                if len(ops_) >= 2 and ops_[1] in shapes:
+                    out_bytes = _sig_bytes(shapes[ops_[1]])
+            elif op == "fusion":
+                # fusions rooted at a dynamic-update-slice alias their output
+                # buffer; the written bytes are the update slice, not the
+                # whole scan-output stack
+                am = re.search(r"calls=%?([\w\.\-]+)", ln)
+                if am and am.group(1) in comps:
+                    dus_lines = []
+                    fshapes: Dict[str, str] = {}
+                    for fl in comps[am.group(1)]:
+                        fd = _RE_DEF.match(fl)
+                        if fd:
+                            fshapes[fd.group(1)] = fd.group(2)
+                            if fd.group(3) == "dynamic-update-slice":
+                                dus_lines.append(fl)
+                    # an in-place-update fusion (possibly bitcast/convert
+                    # rooted): written bytes = the update slice
+                    if len(dus_lines) == 1 and "dynamic-update-slice(" in dus_lines[0]:
+                        fom = _RE_OPERANDS.search(
+                            dus_lines[0][dus_lines[0].index("dynamic-update-slice(") :]
+                        )
+                        fops = (
+                            [o.strip().lstrip("%") for o in fom.group(1).split(",")]
+                            if fom
+                            else []
+                        )
+                        if len(fops) >= 2 and fops[1] in fshapes:
+                            out_bytes = _sig_bytes(fshapes[fops[1]])
+            if not in_fusion and op not in (
+                "bitcast",
+                "tuple",
+                "get-tuple-element",
+                "parameter",
+                "constant",
+                "after-all",
+                "partition-id",
+                "replica-id",
+            ):
+                # fusion-internal ops never touch HBM; only the fusion's own
+                # output (counted at the call site) does.  Zero-cost view ops
+                # excluded above.
+                acc["bytes"] += 2.0 * out_bytes  # write + subsequent read proxy
+            base_op = op.replace("-start", "").replace("-done", "")
+            if base_op in COLLECTIVE_KINDS and not op.endswith("-done"):
+                acc[base_op] += out_bytes
+            if op == "dot":
+                om = _RE_OPERANDS.search(ln[ln.index("dot(") :])
+                operands = [o.strip() for o in om.group(1).split(",")] if om else []
+                lhs = operands[0].lstrip("%") if operands else ""
+                lhs_sig = shapes.get(lhs, "")
+                lcd = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", ln)
+                contracted = 1
+                if lhs_sig and lcd:
+                    mdims = _RE_SHAPE.search(lhs_sig)
+                    if mdims:
+                        dims = [int(x) for x in mdims.group(2).split(",") if x]
+                        for idx in lcd.group(1).split(","):
+                            if idx.strip():
+                                contracted *= dims[int(idx)]
+                out_elems = sum(_shape_elems(dm) for _, dm in _RE_SHAPE.findall(out_sig))
+                acc["flops"] += 2.0 * out_elems * contracted
+            elif op == "convolution":
+                # rough: 2 * out_elems * (kernel_elems) — uncommon in our models
+                out_elems = sum(_shape_elems(dm) for _, dm in _RE_SHAPE.findall(out_sig))
+                acc["flops"] += 2.0 * out_elems
+            if op == "while":
+                cm = re.search(r"condition=%?([\w\.\-]+)", ln)
+                bm = re.search(r"body=%?([\w\.\-]+)", ln)
+                trips = 1
+                tm = _RE_TRIP.search(ln)
+                if tm:
+                    trips = int(tm.group(1))
+                elif cm and cm.group(1) in comps:
+                    consts = [
+                        int(c)
+                        for c in re.findall(r"constant\((\d+)\)", "\n".join(comps[cm.group(1)]))
+                    ]
+                    trips = max(consts) if consts else 1
+                if bm:
+                    sub = analyze(bm.group(1), stack + (name,), in_fusion)
+                    for k, v in sub.items():
+                        acc[k] += trips * v
+                if cm:
+                    sub = analyze(cm.group(1), stack + (name,), in_fusion)
+                    for k, v in sub.items():
+                        acc[k] += trips * v
+            elif op in ("fusion", "call", "custom-call", "async-start"):
+                child_fused = in_fusion or op in ("fusion", "custom-call")
+                for attr in ("calls", "to_apply", "called_computations"):
+                    am = re.search(rf"{attr}=\{{?%?([\w\.\-]+)", ln)
+                    if am:
+                        sub = analyze(am.group(1), stack + (name,), child_fused)
+                        for k, v in sub.items():
+                            acc[k] += v
+                        break
+            elif op == "conditional":
+                branches = []
+                bm = re.search(r"branch_computations=\{([^}]*)\}", ln)
+                if bm:
+                    branches = re.findall(r"%?([\w\.\-]+)", bm.group(1))
+                else:
+                    tm2 = re.search(
+                        r"true_computation=%?([\w\.\-]+), false_computation=%?([\w\.\-]+)", ln
+                    )
+                    if tm2:
+                        branches = [tm2.group(1), tm2.group(2)]
+                subs = [analyze(b, stack + (name,), in_fusion) for b in branches if b]
+                if subs:
+                    for k in set().union(*subs):
+                        acc[k] += max(s.get(k, 0.0) for s in subs)
+        memo[key] = dict(acc)
+        return memo[key]
+
+    return HloCost(analyze(entry))
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    cost = analyze_hlo(hlo_text)
+    out = {k: int(v) for k, v in cost.collectives().items()}
+    out["total"] = int(cost.collective_total)
+    return out
+
+
+def count_ops(hlo_text: str, name: str) -> int:
+    return len(re.findall(rf"\b{name}\(", hlo_text))

@@ -1,0 +1,37 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — tests see the single real CPU
+device; only launch/dryrun.py materializes the 512-device host platform."""
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+def make_clustered(rng, n, d, nc=32, spread=0.3, zipf=False):
+    """Clustered vectors (Zipf-skewed sizes when zipf=True, paper §7.1)."""
+    centers = rng.normal(0, 1, (nc, d))
+    if zipf:
+        w = 1.0 / np.arange(1, nc + 1)
+    else:
+        w = np.ones(nc)
+    w = w / w.sum()
+    assign = rng.choice(nc, size=n, p=w)
+    return (centers[assign] + spread * rng.normal(0, 1, (n, d))).astype(np.float32), centers, w
+
+
+@pytest.fixture(scope="session")
+def small_db(rng):
+    data, centers, w = make_clustered(rng, 3000, 48, nc=24, zipf=True)
+    return data, centers, w
+
+
+@pytest.fixture(scope="session")
+def small_index(small_db):
+    from repro.index import build_ada_index
+
+    data, _, _ = small_db
+    return build_ada_index(
+        data, k=10, target_recall=0.9, m=8, ef_construction=80, ef_cap=240, num_samples=80
+    )

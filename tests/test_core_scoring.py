@@ -1,0 +1,104 @@
+"""Query scoring model (Eqs. 4-6) + ef table + estimator."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    DECAY_EXP,
+    DECAY_LINEAR,
+    DECAY_NONE,
+    EfTable,
+    FDLParams,
+    bin_thresholds,
+    bin_weights,
+    build_ef_table,
+    default_ef_ladder,
+    lookup_ef,
+    score_query,
+)
+
+
+def _params(b=1, mu=0.9, sigma=0.08):
+    return FDLParams(
+        mu=jnp.full((b,), mu, jnp.float32), sigma=jnp.full((b,), sigma, jnp.float32)
+    )
+
+
+def test_paper_appendix_c_example():
+    """Reproduce the worked example from Appendix C."""
+    p = FDLParams(mu=jnp.asarray([0.936]), sigma=jnp.asarray([0.0739]))
+    th = np.asarray(bin_thresholds(p, m=5, delta=0.001))
+    np.testing.assert_allclose(th[0, 0], 0.7076, atol=2e-3)
+    np.testing.assert_allclose(th[0, 1], 0.7233, atol=2e-3)
+    # counts c1=90, c2=5, c3=5 of |D|=100 -> score ~ 92.516
+    d = np.concatenate([
+        np.full(90, 0.70), np.full(5, 0.715), np.full(5, 0.728)
+    ]).astype(np.float32)
+    s = float(score_query(p, jnp.asarray(d[None, :]), m=5, delta=0.001)[0])
+    np.testing.assert_allclose(s, 92.516, atol=0.5)
+
+
+def test_weights_decay_variants():
+    for decay, first_over_second in ((DECAY_EXP, np.e), (DECAY_LINEAR, 10 / 9)):
+        w = np.asarray(bin_weights(10, decay))
+        assert w[0] > w[1] > 0
+        np.testing.assert_allclose(w[0] / w[1], first_over_second, rtol=1e-5)
+    w = np.asarray(bin_weights(10, DECAY_NONE))
+    assert np.allclose(w, w[0])
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    nd=st.integers(min_value=1, max_value=200),
+    mu=st.floats(min_value=0.5, max_value=1.5),
+    sigma=st.floats(min_value=0.01, max_value=0.3),
+)
+def test_score_bounds(nd, mu, sigma):
+    """0 <= s(q) <= 100 always (w1 = 100, sum c_i <= |D|)."""
+    rng = np.random.default_rng(nd)
+    d = rng.normal(mu, sigma, (1, nd)).astype(np.float32)
+    s = float(score_query(_params(mu=mu, sigma=sigma), jnp.asarray(d))[0])
+    assert 0.0 <= s <= 100.0 + 1e-4
+
+
+def test_score_orders_difficulty():
+    """All-near-quantile-0 distances must outscore spread distances."""
+    p = _params()
+    easy = jnp.full((1, 100), 0.9 + 0.08 * -3.3)  # ~ below the 0.001 quantile
+    hard = jnp.asarray(np.random.default_rng(0).normal(0.9, 0.08, (1, 100)), jnp.float32)
+    assert float(score_query(p, easy)[0]) > float(score_query(p, hard)[0])
+
+
+def test_ef_ladder_and_table():
+    ladder = default_ef_ladder(100, ef_max=2000)
+    assert ladder[0] >= 25 and ladder[-1] == 2000
+    assert (np.diff(ladder) > 0).all()
+
+    scores = np.asarray([3.0, 3.2, 50.0, 50.5, 97.0, 97.5])
+
+    def recall_at_ef(ef, idx):
+        # hard (low score) queries need ef >= 400; easy ones ef >= 50
+        need = np.where(scores[idx] < 10, 400, np.where(scores[idx] < 90, 100, 50))
+        return (ef >= need).astype(np.float32)
+
+    tbl = build_ef_table(scores, recall_at_ef, target_recall=0.95, ef_ladder=ladder)
+    ef_hard = int(lookup_ef(tbl, jnp.asarray([3.0]), jnp.asarray(0.95))[0])
+    ef_mid = int(lookup_ef(tbl, jnp.asarray([50.0]), jnp.asarray(0.95))[0])
+    ef_easy = int(lookup_ef(tbl, jnp.asarray([97.0]), jnp.asarray(0.95))[0])
+    assert ef_hard >= 400
+    assert ef_hard > ef_mid >= ef_easy
+    # WAE floor (Alg 1 line 10): easy group cannot fall below the WAE
+    assert ef_easy >= int(tbl.wae)
+
+
+def test_lookup_fallback_largest():
+    """Score groups that never reach target return the row's largest ef."""
+    ladder = np.asarray([10, 20, 40], np.int64)
+    recall = np.zeros((101, 3), np.float32)  # never meets target
+    tbl = EfTable(
+        ef_ladder=jnp.asarray(ladder, jnp.int32),
+        recall=jnp.asarray(recall),
+        counts=jnp.ones((101,), jnp.int32),
+        wae=jnp.asarray(10.0),
+    )
+    assert int(lookup_ef(tbl, jnp.asarray([55.0]), jnp.asarray(0.95))[0]) == 40

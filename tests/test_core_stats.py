@@ -1,0 +1,133 @@
+"""Core Ada-ef math: dataset stats, FDL Gaussianity, incremental updates.
+
+Includes hypothesis property tests of the system invariants:
+- merge is exact (merge(split(V)) == stats(V))
+- unmerge inverts merge
+- FDL moments match the empirical full distance list
+- quantiles are monotone in p
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    METRIC_COSINE_DIST,
+    METRIC_IP,
+    compute_stats,
+    estimate_fdl,
+    fdl_quantile,
+    merge_stats,
+    quadratic_form,
+    unmerge_stats,
+)
+
+
+def _db(seed, n=2000, d=32, skew=True):
+    rng = np.random.default_rng(seed)
+    v = rng.normal(0.05, 1.0, (n, d)).astype(np.float32)
+    if skew:
+        v *= 1.0 + rng.gamma(2.0, 0.4, (1, d)).astype(np.float32)
+    return v
+
+
+def test_stats_match_numpy():
+    v = _db(0)
+    st_ = compute_stats(jnp.asarray(v), mode="full")
+    np.testing.assert_allclose(np.asarray(st_.mean), v.mean(0), rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(st_.cov), np.cov(v.T), rtol=1e-3, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(st_.var), v.var(0, ddof=1), rtol=1e-3, atol=1e-5)
+
+
+def test_normalized_stats():
+    v = _db(1)
+    st_ = compute_stats(jnp.asarray(v), mode="full", normalize=True)
+    vn = v / np.linalg.norm(v, axis=1, keepdims=True)
+    np.testing.assert_allclose(np.asarray(st_.mean), vn.mean(0), rtol=1e-4, atol=1e-6)
+
+
+def test_quadratic_form_modes():
+    v = _db(2, d=24)
+    q = np.random.default_rng(3).normal(0, 1, (5, 24)).astype(np.float32)
+    full = compute_stats(jnp.asarray(v), mode="full")
+    diag = compute_stats(jnp.asarray(v), mode="diag")
+    lr = compute_stats(jnp.asarray(v), mode="lowrank", rank=24)
+    qf_full = np.asarray(quadratic_form(full, jnp.asarray(q)))
+    qf_lr = np.asarray(quadratic_form(lr, jnp.asarray(q)))
+    qf_diag = np.asarray(quadratic_form(diag, jnp.asarray(q)))
+    # full-rank "lowrank" should match the exact quadratic form
+    np.testing.assert_allclose(qf_lr, qf_full, rtol=5e-2)
+    assert qf_diag.shape == qf_full.shape
+    assert (qf_full > 0).all()
+
+
+@settings(max_examples=20, deadline=None)
+@given(split=st.integers(min_value=100, max_value=1900), seed=st.integers(0, 50))
+def test_merge_exact(split, seed):
+    v = _db(seed, n=2000, d=16)
+    a = compute_stats(jnp.asarray(v[:split]), mode="full")
+    b = compute_stats(jnp.asarray(v[split:]), mode="full")
+    ab = merge_stats(a, b)
+    ref = compute_stats(jnp.asarray(v), mode="full")
+    np.testing.assert_allclose(np.asarray(ab.mean), np.asarray(ref.mean), rtol=1e-3, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(ab.cov), np.asarray(ref.cov), rtol=1e-2, atol=1e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(split=st.integers(min_value=200, max_value=1800), seed=st.integers(0, 50))
+def test_unmerge_inverts_merge(split, seed):
+    v = _db(seed, n=2000, d=16)
+    a = compute_stats(jnp.asarray(v[:split]), mode="full")
+    b = compute_stats(jnp.asarray(v[split:]), mode="full")
+    ab = merge_stats(a, b)
+    back = unmerge_stats(ab, b)
+    np.testing.assert_allclose(np.asarray(back.mean), np.asarray(a.mean), rtol=1e-3, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(back.cov), np.asarray(a.cov), rtol=5e-2, atol=1e-3)
+
+
+@pytest.mark.parametrize("metric", [METRIC_IP, METRIC_COSINE_DIST])
+def test_fdl_moments_match_empirical(metric):
+    """Theorem 5.2 / Eq. (1)-(3): estimated mu/sigma vs the actual FDL."""
+    v = _db(4, n=4000, d=64)
+    normalize = metric == METRIC_COSINE_DIST
+    stats = compute_stats(jnp.asarray(v), mode="full", normalize=normalize)
+    rng = np.random.default_rng(5)
+    q = rng.normal(0, 1, (8, 64)).astype(np.float32)
+    params = estimate_fdl(stats, jnp.asarray(q), metric=metric)
+    if metric == METRIC_COSINE_DIST:
+        vn = v / np.linalg.norm(v, axis=1, keepdims=True)
+        qn = q / np.linalg.norm(q, axis=1, keepdims=True)
+        fdl = 1.0 - qn @ vn.T
+    else:
+        fdl = q @ v.T
+    np.testing.assert_allclose(np.asarray(params.mu), fdl.mean(1), rtol=2e-2, atol=2e-3)
+    np.testing.assert_allclose(np.asarray(params.sigma), fdl.std(1), rtol=8e-2, atol=2e-3)
+
+
+def test_fdl_gaussianity_ks():
+    """The FDL of high-d embeddings is approximately Gaussian (paper §5)."""
+    from scipy import stats as sps
+
+    v = _db(6, n=5000, d=256)
+    vn = v / np.linalg.norm(v, axis=1, keepdims=True)
+    q = np.random.default_rng(7).normal(0, 1, 256)
+    qn = q / np.linalg.norm(q)
+    fdl = 1.0 - vn @ qn
+    z = (fdl - fdl.mean()) / fdl.std()
+    ks = sps.kstest(z, "norm").statistic
+    assert ks < 0.05, f"FDL far from Gaussian: KS={ks:.3f}"
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    p1=st.floats(min_value=1e-4, max_value=0.49),
+    p2=st.floats(min_value=0.5, max_value=0.999),
+)
+def test_quantiles_monotone(p1, p2):
+    v = _db(8)
+    stats = compute_stats(jnp.asarray(v), mode="full", normalize=True)
+    q = jnp.asarray(np.random.default_rng(9).normal(0, 1, (32,)).astype(np.float32))
+    params = estimate_fdl(stats, q)
+    assert float(fdl_quantile(params, jnp.asarray(p1))) < float(
+        fdl_quantile(params, jnp.asarray(p2))
+    )

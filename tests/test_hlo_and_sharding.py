@@ -1,0 +1,108 @@
+"""HLO analysis + sharding rules (pure host logic; no 512-device init)."""
+import jax
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.launch.sharding import param_spec
+from repro.utils.hlo import analyze_hlo
+
+
+class _FakeMesh:
+    axis_names = ("data", "model")
+    shape = {"data": 16, "model": 16}
+
+
+def test_param_rules():
+    m = _FakeMesh()
+    assert param_spec("embed", 2, m, fsdp=True) == P("model", "data")
+    # head-major 3D attention layouts: (L, D, H, hd) / (L, H, hd, D)
+    assert param_spec("layers.attn.wq", 4, m, fsdp=False) == P(None, None, "model", None)
+    assert param_spec("layers.attn.wo", 4, m, fsdp=True) == P(None, "model", None, "data")
+    assert param_spec("layers.moe.w_gate", 4, m, fsdp=False) == P(None, "model", None, None)
+    assert param_spec("layers.mlp.w_gate", 3, m, fsdp=True) == P(None, "data", "model")
+    assert param_spec("layers.ln1.scale", 2, m, fsdp=True) == P()
+
+
+HLO = """
+HloModule test
+
+%cond (arg: (s32[], f32[8,8])) -> pred[] {
+  %arg = (s32[], f32[8,8]) parameter(0)
+  %i = s32[] get-tuple-element(%arg), index=0
+  %c = s32[] constant(12)
+  ROOT %lt = pred[] compare(%i, %c), direction=LT
+}
+
+%body (arg: (s32[], f32[8,8])) -> (s32[], f32[8,8]) {
+  %arg = (s32[], f32[8,8]) parameter(0)
+  %x = f32[8,8]{1,0} get-tuple-element(%arg), index=1
+  %d = f32[8,8]{1,0} dot(%x, %x), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %ar = f32[8,8]{1,0} all-reduce(%d), replica_groups={}, to_apply=%cond
+  %i = s32[] get-tuple-element(%arg), index=0
+  %one = s32[] constant(1)
+  %ip = s32[] add(%i, %one)
+  ROOT %t = (s32[], f32[8,8]) tuple(%ip, %ar)
+}
+
+ENTRY %main (p: f32[8,8]) -> f32[8,8] {
+  %p = f32[8,8]{1,0} parameter(0)
+  %zero = s32[] constant(0)
+  %t0 = (s32[], f32[8,8]) tuple(%zero, %p)
+  %w = (s32[], f32[8,8]) while(%t0), condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"12"}}
+  ROOT %out = f32[8,8]{1,0} get-tuple-element(%w), index=1
+}
+"""
+
+
+def test_trip_count_weighting():
+    cost = analyze_hlo(HLO)
+    # dot: 2 * 64 * 8 flops, executed 12 times
+    assert cost.flops == 12 * 2 * 64 * 8
+    # all-reduce: 256 bytes x 12
+    assert cost["all-reduce"] == 12 * 256
+
+
+def test_trip_count_from_condition_constant():
+    hlo = HLO.replace(', backend_config={"known_trip_count":{"n":"12"}}', "")
+    cost = analyze_hlo(hlo)
+    assert cost.flops == 12 * 2 * 64 * 8  # bound constant(12) in %cond
+
+
+def test_collective_kinds_and_tuples():
+    hlo = """
+HloModule m
+
+ENTRY %e (p: bf16[4,4]) -> bf16[4,4] {
+  %p = bf16[4,4]{1,0} parameter(0)
+  %ag = bf16[16,4]{1,0} all-gather(%p), dimensions={0}
+  %rs = bf16[1,4]{1,0} reduce-scatter(%p), dimensions={0}, to_apply=%e
+  %a2a = bf16[4,4]{1,0} all-to-all(%p), dimensions={0}
+  %cp = bf16[4,4]{1,0} collective-permute(%p), source_target_pairs={{0,1}}
+  ROOT %o = bf16[4,4]{1,0} add(%p, %cp)
+}
+"""
+    cost = analyze_hlo(hlo)
+    assert cost["all-gather"] == 128
+    assert cost["reduce-scatter"] == 8
+    assert cost["all-to-all"] == 32
+    assert cost["collective-permute"] == 32
+
+
+def test_cache_and_batch_shardings_single_device():
+    """Rules must degrade gracefully on a 1-device mesh (tests/CI)."""
+    from repro.configs import ARCHS
+    from repro.launch.sharding import batch_shardings, cache_shardings
+
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    cfg = ARCHS["qwen3-14b"]
+    import jax.numpy as jnp
+
+    batch = {"tokens": jax.ShapeDtypeStruct((8, 16), jnp.int32)}
+    bs = batch_shardings(batch, mesh)
+    assert bs["tokens"].spec == P("data", None)
+    cache = {
+        "k": jax.ShapeDtypeStruct((4, 8, 64, 8, 128), jnp.bfloat16),
+        "v": jax.ShapeDtypeStruct((4, 8, 64, 8, 128), jnp.bfloat16),
+    }
+    cs = cache_shardings(cache, cfg, mesh)
+    assert cs["k"].spec[1] is not None  # batch axis sharded (trivially, 1 way)

@@ -1,0 +1,46 @@
+"""§6.3 incremental updates: insert/delete keep stats exact, GT fresh, recall up."""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import compute_stats
+from repro.index import brute_force_topk, build_ada_index, prepare_database, prepare_queries, recall_at_k
+
+
+def test_insert_updates_stats_and_gt(small_db):
+    data, centers, w = small_db
+    base, extra = data[:2000], data[2000:2500]
+    idx = build_ada_index(
+        base, k=10, target_recall=0.9, m=8, ef_construction=60, ef_cap=200, num_samples=50
+    )
+    t = idx.insert(extra)
+    assert t["stats_s"] >= 0
+    # stats must equal recompute on the union
+    ref = compute_stats(jnp.asarray(np.concatenate([base, extra])), mode="full", normalize=True)
+    np.testing.assert_allclose(np.asarray(idx.stats.mean), np.asarray(ref.mean), rtol=1e-3, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(idx.stats.cov), np.asarray(ref.cov), rtol=5e-2, atol=1e-4)
+    assert int(idx.stats.n) == 2500
+    # GT of proxies must include new rows when they are nearer
+    qp = prepare_queries(jnp.asarray(idx.raw_data[idx.sample_ids]), "cos_dist")
+    vp = prepare_database(jnp.asarray(idx.raw_data), "cos_dist")
+    _, true_gt = brute_force_topk(qp, vp, k=10)
+    overlap = recall_at_k(jnp.asarray(idx.sample_gt), true_gt)
+    assert float(overlap.mean()) > 0.98
+    # searching still works after the insert
+    res = idx.query(idx.raw_data[:32])
+    assert np.asarray(res.ids).max() >= 2000  # new rows retrievable
+
+
+def test_delete_updates_stats_and_search(small_db):
+    data, _, _ = small_db
+    base = data[:2000]
+    idx = build_ada_index(
+        base, k=10, target_recall=0.9, m=8, ef_construction=60, ef_cap=200, num_samples=50
+    )
+    dead = np.arange(0, 300)
+    idx.delete(dead)
+    assert int(idx.stats.n) == 1700
+    ref = compute_stats(jnp.asarray(base[300:]), mode="full", normalize=True)
+    np.testing.assert_allclose(np.asarray(idx.stats.mean), np.asarray(ref.mean), rtol=1e-2, atol=1e-4)
+    res = idx.query(base[1000:1032])
+    ids = np.asarray(res.ids)
+    assert not np.isin(ids[ids >= 0], dead).any()

@@ -1,0 +1,102 @@
+"""End-to-end behaviour tests for the paper's system (Ada-ef, Figure 2 flow).
+
+These assert the paper's *claims* on a scaled-down workload:
+(i)  Ada-ef approximately meets the declarative target recall,
+(ii) it avoids over-searching (less work than a recall-matched static ef),
+(iii) it improves tail recall vs an average-matched static ef,
+(iv) higher targets cost more work (sensitivity, Fig. 7 direction),
+(v)  the offline stage is cheap and its artifacts tiny (Tables 2-3).
+"""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.index import (
+    brute_force_topk,
+    build_ada_index,
+    prepare_database,
+    prepare_queries,
+    recall_at_k,
+)
+
+
+@pytest.fixture(scope="module")
+def workload():
+    rng = np.random.default_rng(42)
+    n, d, nc, nq = 4000, 64, 40, 192
+    sizes = 1.0 / np.arange(1, nc + 1)
+    sizes /= sizes.sum()
+    centers = rng.normal(0, 1, (nc, d))
+    assign = rng.choice(nc, size=n, p=sizes)
+    data = (centers[assign] + 0.25 * rng.normal(0, 1, (n, d))).astype(np.float32)
+    qa = rng.choice(nc, size=nq, p=sizes)
+    queries = (centers[qa] + 0.25 * rng.normal(0, 1, (nq, d))).astype(np.float32)
+    vp = prepare_database(jnp.asarray(data), "cos_dist")
+    qp = prepare_queries(jnp.asarray(queries), "cos_dist")
+    gt = np.asarray(brute_force_topk(qp, vp, k=10)[1])
+    return data, queries, gt
+
+
+@pytest.fixture(scope="module")
+def ada(workload):
+    data, _, _ = workload
+    return build_ada_index(
+        data, k=10, target_recall=0.95, m=8, ef_construction=100, ef_cap=400, num_samples=100
+    )
+
+
+def test_meets_target_recall(workload, ada):
+    _, queries, gt = workload
+    res = ada.query(queries)
+    rec = np.asarray(recall_at_k(res.ids, jnp.asarray(gt)))
+    assert rec.mean() >= 0.92, f"avg recall {rec.mean():.3f} below target band"
+
+
+def test_avoids_over_searching(workload, ada):
+    """Work (distance comps) must be below the max-ef baseline at ~same recall."""
+    _, queries, gt = workload
+    res_ada = ada.query(queries)
+    res_max = ada.query_static(queries, ada.search_cfg.ef_cap)
+    rec_ada = float(recall_at_k(res_ada.ids, jnp.asarray(gt)).mean())
+    rec_max = float(recall_at_k(res_max.ids, jnp.asarray(gt)).mean())
+    nd_ada = float(np.mean(np.asarray(res_ada.ndist)))
+    nd_max = float(np.mean(np.asarray(res_max.ndist)))
+    assert nd_ada < 0.8 * nd_max
+    assert rec_ada >= rec_max - 0.05
+
+
+def test_improves_tail_recall_vs_matched_static(workload, ada):
+    """Paper claim: at comparable average work, Ada-ef lifts P5 recall."""
+    _, queries, gt = workload
+    res_ada = ada.query(queries)
+    nd_ada = float(np.mean(np.asarray(res_ada.ndist)))
+    best = None
+    for ef in (10, 15, 20, 30, 45, 65, 100):
+        r = ada.query_static(queries, ef)
+        nd = float(np.mean(np.asarray(r.ndist)))
+        if best is None or abs(nd - nd_ada) < abs(best[1] - nd_ada):
+            best = (ef, nd, r)
+    _, _, res_static = best
+    gt_j = jnp.asarray(gt)
+    p5_ada = np.percentile(np.asarray(recall_at_k(res_ada.ids, gt_j)), 5)
+    p5_static = np.percentile(np.asarray(recall_at_k(res_static.ids, gt_j)), 5)
+    assert p5_ada >= p5_static - 1e-9
+
+
+def test_sensitivity_higher_target_costs_more(workload, ada):
+    _, queries, _ = workload
+    nd = []
+    for target in (0.85, 0.99):
+        res = ada.query(queries, target_recall=target)
+        nd.append(float(np.mean(np.asarray(res.ndist))))
+    assert nd[1] >= nd[0]
+
+
+def test_offline_artifacts_tiny_vs_index(ada):
+    """Tables 2-3 claim: offline stage cheap; artifacts << index size."""
+    from repro.core import stats_nbytes
+
+    assert ada.timings.stats_s < 5.0
+    footprint = stats_nbytes(ada.stats) + ada.table.nbytes()
+    index_bytes = ada.host_index.freeze().nbytes()
+    assert footprint < 0.1 * index_bytes
