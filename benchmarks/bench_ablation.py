@@ -14,19 +14,23 @@ from repro.index import (
 from .common import DATASETS, emit, recall_stats
 
 
-def run(dataset="zipf_cluster", k=10, quick=True):
+def run(dataset="zipf_cluster", k=10, quick=True, smoke=False):
     data, queries = DATASETS[dataset]()
-    if quick:
+    if smoke:
+        data, queries = data[:1000], queries[:24]
+    elif quick:
         data, queries = data[:5000], queries[:128]
+    cap = 120 if smoke else 400
+    ns = 16 if smoke else 96
     qp = prepare_queries(jnp.asarray(queries), "cos_dist")
     _, gt = brute_force_topk_chunked(qp, data, k=k)
     gt = jnp.asarray(gt)
-    host = build_index(data, m=8, ef_construction=100)
+    host = build_index(data, m=8, ef_construction=60 if smoke else 100)
 
     # Table 8: |D| hops
-    for hops in (1, 2, 3):
-        idx = build_ada_index(data, k=k, target_recall=0.95, m=8, ef_cap=400,
-                              num_samples=96, host_index=host,
+    for hops in (2,) if smoke else (1, 2, 3):
+        idx = build_ada_index(data, k=k, target_recall=0.95, m=8, ef_cap=cap,
+                              num_samples=ns, host_index=host,
                               ada_cfg=AdaEfConfig(hops=hops))
         res = idx.query(queries)
         rec = np.asarray(recall_at_k(res.ids, gt))
@@ -34,8 +38,8 @@ def run(dataset="zipf_cluster", k=10, quick=True):
              f"{recall_stats(rec)} ndist={np.asarray(res.ndist).mean():.0f}")
 
     # Table 9: sample count
-    for num in (50, 200, 500):
-        idx = build_ada_index(data, k=k, target_recall=0.95, m=8, ef_cap=400,
+    for num in (24,) if smoke else (50, 200, 500):
+        idx = build_ada_index(data, k=k, target_recall=0.95, m=8, ef_cap=cap,
                               num_samples=num, host_index=host)
         res = idx.query(queries)
         rec = np.asarray(recall_at_k(res.ids, gt))
@@ -44,9 +48,9 @@ def run(dataset="zipf_cluster", k=10, quick=True):
              f"{recall_stats(rec)} ndist={np.asarray(res.ndist).mean():.0f}")
 
     # Table 10: decay function
-    for decay in ("none", "linear", "exp"):
-        idx = build_ada_index(data, k=k, target_recall=0.95, m=8, ef_cap=400,
-                              num_samples=96, host_index=host,
+    for decay in ("exp",) if smoke else ("none", "linear", "exp"):
+        idx = build_ada_index(data, k=k, target_recall=0.95, m=8, ef_cap=cap,
+                              num_samples=ns, host_index=host,
                               ada_cfg=AdaEfConfig(estimator=EstimatorConfig(decay=decay)))
         res = idx.query(queries)
         rec = np.asarray(recall_at_k(res.ids, gt))

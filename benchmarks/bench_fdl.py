@@ -7,10 +7,12 @@ from repro.core import compute_stats, estimate_fdl
 from .common import DATASETS, emit
 
 
-def run(quick=True):
+def run(quick=True, smoke=False):
     for name, gen in DATASETS.items():
         data, queries = gen()
-        if quick:
+        if smoke:
+            data, queries = data[:1000], queries[:24]
+        elif quick:
             data, queries = data[:5000], queries[:32]
         vn = data / np.linalg.norm(data, axis=1, keepdims=True)
         stats = compute_stats(jnp.asarray(data), mode="full", normalize=True)

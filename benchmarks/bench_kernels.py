@@ -11,7 +11,7 @@ from .common import emit, timed
 RNG = np.random.default_rng(0)
 
 
-def run(quick=True):
+def run(quick=True, smoke=False):
     # distance: ef-search frontier shape
     q = jnp.asarray(RNG.normal(0, 1, (256, 512)).astype(np.float32))
     v = jnp.asarray(RNG.normal(0, 1, (4096, 512)).astype(np.float32))
@@ -20,6 +20,23 @@ def run(quick=True):
     got = ops.pairwise_distance(q, v, use_kernel=True, interpret=True)
     err = float(jnp.max(jnp.abs(got - ref_fn(q, v))))
     emit("kernels.distance.256x4096x512", dt * 1e6, f"interpret_maxerr={err:.2e}")
+
+    # frontier: beam-batched expansion shape (beam=8 x M0=32 slots per query)
+    b, f, d, n = (16, 64, 100, 2000) if smoke else (64, 256, 512, 20000)
+    vec = jnp.asarray(RNG.normal(0, 1, (n, d)).astype(np.float32))
+    fq = jnp.asarray(RNG.normal(0, 1, (b, d)).astype(np.float32))
+    fids = RNG.integers(0, n, (b, f)).astype(np.int32)
+    fids[:, ::4] = -1  # typical visited/padded masking density
+    fids = jnp.asarray(fids)
+    ref_fn = jax.jit(lambda i, qq, vv: ref.frontier_ref(i, qq, vv))
+    _, dt = timed(lambda: jax.block_until_ready(ref_fn(fids, fq, vec)), repeats=5)
+    got = ops.frontier_keys(fids, fq, vec, use_kernel=True, interpret=True)
+    want = ref_fn(fids, fq, vec)
+    fin = jnp.isfinite(want)
+    err = float(jnp.max(jnp.abs(jnp.where(fin, got - want, 0.0))))
+    emit(f"kernels.frontier.{b}x{f}x{d}", dt * 1e6, f"interpret_maxerr={err:.2e}")
+    if smoke:
+        return
 
     sigma = RNG.normal(0, 1, (1536, 1536)).astype(np.float32)
     sigma = sigma @ sigma.T / 1536

@@ -6,10 +6,14 @@ from repro.index import build_ada_index, build_index, fit_darth, fit_laet
 from .common import DATASETS, emit, timed
 
 
-def run(datasets=("glove_like", "zipf_cluster"), k=10, quick=True):
+def run(datasets=("glove_like", "zipf_cluster"), k=10, quick=True, smoke=False):
+    if smoke:
+        datasets = datasets[:1]
     for name in datasets:
         data, _ = DATASETS[name]()
-        if quick:
+        if smoke:
+            data = data[:1000]
+        elif quick:
             data = data[:5000]
         # HNSW construction reference
         import time
@@ -21,7 +25,9 @@ def run(datasets=("glove_like", "zipf_cluster"), k=10, quick=True):
 
         t0 = time.perf_counter()
         idx = build_ada_index(data, k=k, target_recall=0.95, m=8,
-                              ef_construction=100, ef_cap=400, num_samples=128,
+                              ef_construction=100,
+                              ef_cap=160 if smoke else 400,
+                              num_samples=32 if smoke else 128,
                               host_index=host)
         t_ada = idx.timings
         emit(
@@ -34,7 +40,9 @@ def run(datasets=("glove_like", "zipf_cluster"), k=10, quick=True):
         emit(f"offline.{name}.ada_ef_mem", 0.0,
              f"bytes={mem_ada} index_bytes={host.freeze().nbytes()}")
 
-        # learned baselines offline cost
+        # learned baselines offline cost (skipped in smoke: MLP training only)
+        if smoke:
+            continue
         laet = fit_laet(idx.graph, data, cfg=idx.search_cfg, num_learn=256 if quick else 1000)
         t = laet.offline_seconds
         total = sum(t.values())

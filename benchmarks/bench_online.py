@@ -2,12 +2,17 @@
 
 Reports, per dataset: avg/P5/P1 recall, wall time per query batch, and the
 paper's hardware-neutral work metric (distance computations/query).  Also
-emits the adaptive-ef distribution (Fig 5) and per-query latency-proxy CDF
-deciles (Fig 6).
+emits the adaptive-ef distribution (Fig 5), per-query latency-proxy CDF
+deciles (Fig 6), and a **beam-width sweep** of the beamed base-layer loop
+(iterations / ndist / ef_used / recall per beam), persisted to
+``BENCH_online.json`` at the repo root to seed the perf trajectory.
 """
 from __future__ import annotations
 
+import dataclasses
+import json
 import time
+from pathlib import Path
 
 import jax.numpy as jnp
 import numpy as np
@@ -24,20 +29,80 @@ from repro.index import (
 )
 from .common import DATASETS, emit, recall_stats
 
+BENCH_JSON = Path(__file__).resolve().parents[1] / "BENCH_online.json"
 
-def run(datasets=("glove_like", "zipf_cluster"), k=10, target=0.95, quick=True):
+
+def _beam_sweep(idx, queries, gt, *, name: str, ef: int, beams) -> list:
+    """Static-ef search at each beam width; equal ef => matched recall."""
+    records = []
+    for beam in beams:
+        cfg = dataclasses.replace(idx.search_cfg, beam=beam)
+        r = search(idx.graph, jnp.asarray(queries), ef, cfg)  # compile
+        jnp.asarray(r.ids).block_until_ready()
+        t0 = time.perf_counter()
+        r = search(idx.graph, jnp.asarray(queries), ef, cfg)
+        jnp.asarray(r.ids).block_until_ready()
+        dt = time.perf_counter() - t0
+        rec = np.asarray(recall_at_k(r.ids, gt))
+        records.append(
+            {
+                "beam": int(beam),
+                "ef": int(ef),
+                "recall_at_10": float(rec.mean()),
+                "iters_mean": float(np.asarray(r.iters).mean()),
+                "ndist_mean": float(np.asarray(r.ndist).mean()),
+                "ef_used_mean": float(np.asarray(r.ef_used).mean()),
+                "us_per_query": dt / len(queries) * 1e6,
+            }
+        )
+        emit(
+            f"online.{name}.beam{beam}.ef{ef}",
+            dt / len(queries) * 1e6,
+            f"recall={rec.mean():.4f} iters={records[-1]['iters_mean']:.1f} "
+            f"ndist={records[-1]['ndist_mean']:.0f} "
+            f"ef_used={records[-1]['ef_used_mean']:.0f}",
+        )
+    return records
+
+
+def run(datasets=("glove_like", "zipf_cluster"), k=10, target=0.95, quick=True,
+        smoke=False, beams=None):
+    out = {"workload": {}, "beam_sweep": {}}
+    if beams is None:
+        # default sweep; smoke keeps just the endpoints (an explicit ``beams``
+        # argument is always honored as-is)
+        beams = (1, 8) if smoke else (1, 2, 4, 8)
+    if smoke:
+        datasets = datasets[:1]
     for name in datasets:
         data, queries = DATASETS[name]()
-        if quick:
+        if smoke:
+            data, queries = data[:1000], queries[:24]
+        elif quick:
             data, queries = data[:6000], queries[:192]
         qp = prepare_queries(jnp.asarray(queries), "cos_dist")
         _, gt = brute_force_topk_chunked(qp, data, k=k)
         gt = jnp.asarray(gt)
 
         idx = build_ada_index(
-            data, k=k, target_recall=target, m=8, ef_construction=100,
-            ef_cap=400, num_samples=128,
+            data, k=k, target_recall=target, m=8,
+            ef_construction=60 if smoke else 100,
+            ef_cap=160 if smoke else 400,
+            num_samples=32 if smoke else 128,
         )
+
+        # --- beam-width sweep (beamed frontier expansion) --------------------
+        sweep = _beam_sweep(idx, queries, gt, name=name,
+                            ef=min(10 * k, idx.search_cfg.ef_cap), beams=beams)
+        out["beam_sweep"][name] = sweep
+        out["workload"][name] = {"n": int(len(data)), "nq": int(len(queries)), "k": int(k)}
+        # select by beam value, not sweep position (--beam order is honored as-is)
+        b1 = min(sweep, key=lambda r: r["beam"])
+        bmax = max(sweep, key=lambda r: r["beam"])
+        if bmax["beam"] > b1["beam"] and abs(bmax["recall_at_10"] - b1["recall_at_10"]) <= 0.005:
+            speedup = b1["iters_mean"] / max(bmax["iters_mean"], 1e-9)
+            emit(f"online.{name}.beam_iter_speedup", 0.0,
+                 f"beam{bmax['beam']}_vs_beam{b1['beam']}={speedup:.2f}x at matched recall")
 
         # --- Ada-ef ---------------------------------------------------------
         res = idx.query(queries)  # includes compile
@@ -64,7 +129,7 @@ def run(datasets=("glove_like", "zipf_cluster"), k=10, target=0.95, quick=True):
         )
 
         # --- static HNSW sweep (HNSWlib/FAISS reference behavior) ------------
-        for ef in (k, 2 * k, 4 * k, 10 * k):
+        for ef in (k, 10 * k) if smoke else (k, 2 * k, 4 * k, 10 * k):
             r = idx.query_static(queries, ef)
             t0 = time.perf_counter()
             r = idx.query_static(queries, ef)
@@ -77,10 +142,11 @@ def run(datasets=("glove_like", "zipf_cluster"), k=10, target=0.95, quick=True):
             )
 
         # --- PiP -------------------------------------------------------------
-        cfgp = SearchConfig(k=k, ef_cap=400, patience=30)
-        r = search(idx.graph, jnp.asarray(queries), 400, cfgp)
+        cap = idx.search_cfg.ef_cap
+        cfgp = dataclasses.replace(idx.search_cfg, patience=30)
+        r = search(idx.graph, jnp.asarray(queries), cap, cfgp)
         t0 = time.perf_counter()
-        r = search(idx.graph, jnp.asarray(queries), 400, cfgp)
+        r = search(idx.graph, jnp.asarray(queries), cap, cfgp)
         dt = time.perf_counter() - t0
         rr = np.asarray(recall_at_k(r.ids, gt))
         emit(
@@ -89,25 +155,40 @@ def run(datasets=("glove_like", "zipf_cluster"), k=10, target=0.95, quick=True):
             f"{recall_stats(rr)} ndist={np.asarray(r.ndist).mean():.0f}",
         )
 
-        # --- learned baselines (LAET / DARTH style) --------------------------
-        laet = fit_laet(idx.graph, data, cfg=idx.search_cfg, target_recall=target,
-                        num_learn=256 if quick else 1000)
-        r = laet.query(queries, target)
-        rr = np.asarray(recall_at_k(jnp.asarray(np.asarray(r.ids)), gt))
-        emit(
-            f"online.{name}.laet",
-            0.0,
-            f"{recall_stats(rr)} ndist={np.asarray(r.ndist).mean():.0f}",
-        )
-        darth = fit_darth(idx.graph, data, cfg=idx.search_cfg,
-                          num_learn=256 if quick else 1000)
-        r = darth.query(queries, target)
-        rr = np.asarray(recall_at_k(jnp.asarray(np.asarray(r.ids)), gt))
-        emit(
-            f"online.{name}.darth",
-            0.0,
-            f"{recall_stats(rr)} ndist={np.asarray(r.ndist).mean():.0f}",
-        )
+        # --- learned baselines (LAET / DARTH style; skipped in smoke) --------
+        if not smoke:
+            laet = fit_laet(idx.graph, data, cfg=idx.search_cfg, target_recall=target,
+                            num_learn=256 if quick else 1000)
+            r = laet.query(queries, target)
+            rr = np.asarray(recall_at_k(jnp.asarray(np.asarray(r.ids)), gt))
+            emit(
+                f"online.{name}.laet",
+                0.0,
+                f"{recall_stats(rr)} ndist={np.asarray(r.ndist).mean():.0f}",
+            )
+            darth = fit_darth(idx.graph, data, cfg=idx.search_cfg,
+                              num_learn=256 if quick else 1000)
+            r = darth.query(queries, target)
+            rr = np.asarray(recall_at_k(jnp.asarray(np.asarray(r.ids)), gt))
+            emit(
+                f"online.{name}.darth",
+                0.0,
+                f"{recall_stats(rr)} ndist={np.asarray(r.ndist).mean():.0f}",
+            )
+
+    out["meta"] = {"quick": bool(quick), "smoke": bool(smoke), "target_recall": float(target)}
+    # smoke runs exercise the plumbing but must not clobber the tracked numbers,
+    # and a quick run must not overwrite paper-scale (--full) numbers either
+    path = BENCH_JSON.with_suffix(".smoke.json") if smoke else BENCH_JSON
+    if not smoke and quick and path.exists():
+        try:
+            prev_full = json.loads(path.read_text()).get("meta", {}).get("quick") is False
+        except (ValueError, OSError):
+            prev_full = False
+        if prev_full:
+            path = BENCH_JSON.with_suffix(".quick.json")
+    path.write_text(json.dumps(out, indent=2, sort_keys=True) + "\n")
+    emit("online.bench_json", 0.0, f"wrote {path.name}")
 
 
 if __name__ == "__main__":

@@ -10,16 +10,22 @@ from repro.index import brute_force_topk_chunked, build_ada_index, prepare_queri
 from .common import DATASETS, emit
 
 
-def run(datasets=("glove_like", "openai_like"), k=10, quick=True):
+def run(datasets=("glove_like", "openai_like"), k=10, quick=True, smoke=False):
+    if smoke:
+        datasets = datasets[:1]
     for name in datasets:
         data, queries = DATASETS[name]()
-        if quick:
+        if smoke:
+            data, queries = data[:1000], queries[:24]
+        elif quick:
             data, queries = data[:5000], queries[:192]
         qp = prepare_queries(jnp.asarray(queries), "cos_dist")
         _, gt = brute_force_topk_chunked(qp, data, k=k)
         gt = jnp.asarray(gt)
         idx = build_ada_index(data, k=k, target_recall=0.95, m=8,
-                              ef_construction=100, ef_cap=400, num_samples=64)
+                              ef_construction=60 if smoke else 100,
+                              ef_cap=120 if smoke else 400,
+                              num_samples=16 if smoke else 64)
         for ef in (k, 2 * k):
             res = idx.query_static(queries, ef)
             rec = np.asarray(recall_at_k(res.ids, gt))

@@ -6,17 +6,21 @@ from repro.index import brute_force_topk_chunked, build_ada_index, prepare_queri
 from .common import DATASETS, emit, recall_stats
 
 
-def run(dataset="zipf_cluster", quick=True):
+def run(dataset="zipf_cluster", quick=True, smoke=False):
     data, queries = DATASETS[dataset]()
-    if quick:
+    if smoke:
+        data, queries = data[:1000], queries[:24]
+    elif quick:
         data, queries = data[:5000], queries[:128]
-    for k in (10, 50):
+    for k in (10,) if smoke else (10, 50):
         qp = prepare_queries(jnp.asarray(queries), "cos_dist")
         _, gt = brute_force_topk_chunked(qp, data, k=k)
         gt = jnp.asarray(gt)
         idx = build_ada_index(data, k=k, target_recall=0.95, m=8,
-                              ef_construction=100, ef_cap=500, num_samples=96)
-        for target in (0.9, 0.95, 0.99):
+                              ef_construction=60 if smoke else 100,
+                              ef_cap=120 if smoke else 500,
+                              num_samples=16 if smoke else 96)
+        for target in (0.95,) if smoke else (0.9, 0.95, 0.99):
             res = idx.query(queries, target_recall=target)
             rec = np.asarray(recall_at_k(res.ids, gt))
             emit(

@@ -2,9 +2,16 @@
 
 Prints ``name,us_per_call,derived`` CSV rows (see benchmarks/common.py).
 
-    PYTHONPATH=src python -m benchmarks.run [--full] [--only MODULE]
+    PYTHONPATH=src python -m benchmarks.run [--full] [--smoke] [--only MODULE]
+                                            [--beam B ...]
+
+``--smoke`` runs every registered benchmark at toy sizes (each module's
+``smoke=True`` branch slices its workload down and skips learned baselines)
+so kernel-plumbing regressions surface in well under a minute; any exception
+exits non-zero, making it usable as a CI gate.
 """
 import argparse
+import inspect
 import sys
 import time
 import traceback
@@ -13,7 +20,11 @@ import traceback
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--full", action="store_true", help="paper-scale (slow)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="toy sizes, <60 s total, non-zero exit on exception")
     ap.add_argument("--only", default="", help="run a single module")
+    ap.add_argument("--beam", type=int, nargs="+", default=None,
+                    help="beam widths for the online beam sweep (e.g. --beam 1 4 8)")
     args = ap.parse_args()
     quick = not args.full
 
@@ -46,9 +57,15 @@ def main() -> None:
     print("name,us_per_call,derived")
     failures = 0
     for name, mod in modules.items():
+        params = inspect.signature(mod.run).parameters
+        kwargs = {"quick": quick}
+        if args.smoke and "smoke" in params:
+            kwargs["smoke"] = True
+        if args.beam is not None and "beams" in params:
+            kwargs["beams"] = tuple(args.beam)
         t0 = time.perf_counter()
         try:
-            mod.run(quick=quick)
+            mod.run(**kwargs)
         except Exception:
             failures += 1
             print(f"{name},0,ERROR", file=sys.stderr)

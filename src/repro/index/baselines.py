@@ -159,13 +159,18 @@ def fit_laet(
     cfg: SearchConfig,
     target_recall: float = 0.95,
     num_learn: int = 1000,
+    beam: Optional[int] = None,
     seed: int = 0,
 ) -> LaetBaseline:
     """Offline pipeline: learn-vector GT -> training data -> model training.
 
     Mirrors the paper's three offline steps (LVec GT / TData / Train) so the
-    Table-2 comparison is like-for-like.
+    Table-2 comparison is like-for-like.  ``beam`` (when given) overrides
+    ``cfg.beam`` so the baseline's searches run the same beamed expansion as
+    the Ada-ef index it is compared against.
     """
+    if beam is not None:
+        cfg = dataclasses.replace(cfg, beam=beam)
     rng = np.random.default_rng(seed)
     ada = AdaEfConfig()
     t = {}
@@ -278,8 +283,11 @@ def fit_darth(
     *,
     cfg: SearchConfig,
     num_learn: int = 1000,
+    beam: Optional[int] = None,
     seed: int = 0,
 ) -> DarthBaseline:
+    if beam is not None:
+        cfg = dataclasses.replace(cfg, beam=beam)
     rng = np.random.default_rng(seed)
     t = {}
     t0 = time.perf_counter()

@@ -76,7 +76,7 @@ def collect_distances(
             return _not_done(s) & (s.dcount < s.lgoal) & (s.iters < cfg.iters())
 
         def body(s):
-            return _expand(g, q, s, sign, collect=True, lmax=lmax)
+            return _expand(g, q, s, cfg, sign, collect=True, lmax=lmax)
 
         s = jax.lax.while_loop(cond, body, s)
         return s.dbuf, s.dcount
@@ -247,8 +247,17 @@ class AdaEfIndex:
         gt = jnp.asarray(self.sample_gt)
 
         def recall_at_ef(ef: int, subset: np.ndarray) -> np.ndarray:
-            res = search(self.graph, qs[subset], ef, self.search_cfg)
-            return np.asarray(recall_at_k(res.ids, gt[subset]))
+            # pad the probe to the full sample batch: the adaptive ladder
+            # shrinks the active subset every rung, and each distinct batch
+            # size would otherwise recompile the vmapped search (XLA compile
+            # dominates table builds at small G); padded rows cost one wasted
+            # search each, sliced off the result
+            m = len(subset)
+            full = np.concatenate(
+                [subset, np.zeros(len(self.sample_ids) - m, subset.dtype)]
+            )
+            res = search(self.graph, qs[full], ef, self.search_cfg)
+            return np.asarray(recall_at_k(res.ids, gt[full]))[:m]
 
         self.table = build_ef_table(
             scores,
@@ -269,18 +278,29 @@ def build_ada_index(
     ef_cap: int = 600,
     num_samples: int = 200,
     cov_mode: str = "full",
+    beam: int = 1,
+    use_distance_kernel: bool = False,
     ada_cfg: Optional[AdaEfConfig] = None,
     host_index: Optional[HNSWIndex] = None,
     seed: int = 0,
 ) -> AdaEfIndex:
-    """Offline stage of Figure 2; returns the deployable AdaEfIndex."""
+    """Offline stage of Figure 2; returns the deployable AdaEfIndex.
+
+    ``beam`` widens the online base-layer expansion (candidates popped per
+    loop iteration); ``use_distance_kernel`` routes frontier scoring through
+    the fused Pallas kernel.  Both thread into every search this index runs
+    (online queries, ef-table probing, proxy distance collection).
+    """
     data = np.asarray(data, np.float32)
     if host_index is None:
         host_index = build_index(
             data, m=m, ef_construction=ef_construction, metric=metric, seed=seed
         )
     graph = device_graph(host_index.freeze())
-    cfg = SearchConfig(k=k, ef_cap=ef_cap, metric=metric)
+    cfg = SearchConfig(
+        k=k, ef_cap=ef_cap, metric=metric, beam=beam,
+        use_distance_kernel=use_distance_kernel,
+    )
     ada = ada_cfg or AdaEfConfig(estimator=EstimatorConfig(metric=metric))
 
     # (i) dataset statistics

@@ -5,11 +5,33 @@ TPU adaptation of HNSWlib's pointer-chasing best-first search:
 - candidate heap ``C`` and result heap ``W`` are fixed-capacity *sorted arrays*
   of (key, id) pairs (key = ``key_sign(metric) * value`` so smaller = better),
 - the visited set is a per-query bitmask with a spare slot for padded writes,
-- one loop iteration pops the best unexpanded candidate, gathers its adjacency
-  row, computes the whole frontier's distances as one contraction, and merges
-  into ``C``/``W`` with a key-value ``lax.sort``,
+- one loop iteration pops the top-``beam`` unexpanded candidates, gathers
+  their ``beam x M0`` adjacency rows, and scores the whole deduplicated
+  frontier as **one** ``(beam * M0, d)`` contraction (optionally routed through
+  the fused Pallas frontier kernel via ``SearchConfig.use_distance_kernel``),
+- new entries merge into ``C``/``W`` with a *partial bitonic merge* (sort the
+  frontier, one bitonic split against the sorted run, log2(cap) merge stages)
+  instead of re-sorting the full ``2 x ef_cap`` concatenation,
 - queries batch via ``vmap`` (JAX's while-loop batching rule applies per-element
   masking, so early-finishing queries stop updating their state).
+
+Beam-batched expansion (``SearchConfig.beam``): sequential best-first pops one
+candidate, merges, and only then chooses the next pop, so each pop sees the
+tightest possible bound.  Multi-pop expands the current top-``beam`` in one
+iteration — candidates ranked 2..beam may be ones sequential search would have
+skipped after the bound tightened, so the beam *slightly over-expands* (a few
+extra distance computations, ``ndist`` grows modestly with beam).  Recall is
+preserved because over-expansion only ever *adds* scored nodes: every node the
+sequential search admits into ``W`` is also scored and admitted by the beamed
+search (admission uses the same ``W[ef_dyn - 1]`` bound, which is only looser
+at pop time), and extra nodes can only displace worse ones.  In exchange, the
+loop runs ~beam x fewer iterations, each one a wider MXU-friendly contraction
+— the hardware-utilization trade CAGRA-style GPU/TPU graph ANN makes.
+``beam=1`` reproduces the single-pop search bit-for-bit on tie-free keys
+(exactly-equal float32 keys — e.g. duplicate vectors — may order differently
+across the cutoff: the partial bitonic merge is not tie-stable the way the
+old full stable sort was; the surviving key multiset, and hence recall, is
+identical either way).
 
 Termination policies:
 - static ef (standard HNSW; also with PiP patience early-termination),
@@ -32,6 +54,7 @@ import numpy as np
 
 from repro.core import DatasetStats, EfTable, EstimatorConfig, estimate_ef
 from repro.core.fdl import METRIC_COSINE_DIST
+from repro.kernels import ops
 from .distances import key_sign
 from .hnsw import HNSWGraph
 
@@ -64,7 +87,8 @@ class SearchConfig:
     metric: str = METRIC_COSINE_DIST
     max_iters: int = 0            # 0 -> auto (4 * ef_cap + 64)
     patience: int = 0             # >0 enables PiP early termination
-    use_distance_kernel: bool = False
+    beam: int = 1                 # candidates popped + expanded per iteration
+    use_distance_kernel: bool = False  # route frontier scoring through Pallas
 
     def iters(self) -> int:
         return self.max_iters if self.max_iters > 0 else 4 * self.ef_cap + 64
@@ -72,6 +96,8 @@ class SearchConfig:
     def __post_init__(self):
         if self.k > self.ef_cap:
             raise ValueError(f"k={self.k} > ef_cap={self.ef_cap}")
+        if not 1 <= self.beam <= self.ef_cap:
+            raise ValueError(f"beam={self.beam} not in [1, ef_cap={self.ef_cap}]")
 
 
 class SearchState(NamedTuple):
@@ -149,39 +175,126 @@ def _descend(g: DeviceGraph, q: Array, sign: float):
 # --------------------------------------------------------------------------
 
 
+def _next_pow2(x: int) -> int:
+    return 1 << max(x - 1, 0).bit_length()
+
+
+def _bitonic_merge_network(keys: Array, ids: Array):
+    """Sort a *bitonic* (keys, ids) run ascending; length must be a power of 2.
+
+    log2(P) compare-exchange stages at strides P/2 .. 1; each stage operates on
+    contiguous 2s-blocks (reshape, no gathers), so it lowers to pure VPU
+    selects on TPU.
+    """
+    p = keys.shape[0]
+    s = p // 2
+    while s >= 1:
+        kk = keys.reshape(-1, 2, s)
+        ii = ids.reshape(-1, 2, s)
+        swap = kk[:, 0] > kk[:, 1]
+        keys = jnp.stack(
+            [jnp.where(swap, kk[:, 1], kk[:, 0]), jnp.where(swap, kk[:, 0], kk[:, 1])],
+            axis=1,
+        ).reshape(p)
+        ids = jnp.stack(
+            [jnp.where(swap, ii[:, 1], ii[:, 0]), jnp.where(swap, ii[:, 0], ii[:, 1])],
+            axis=1,
+        ).reshape(p)
+        s //= 2
+    return keys, ids
+
+
 def _merge_sorted(keys: Array, ids: Array, new_keys: Array, new_ids: Array, cap: int):
-    """Merge new entries into a sorted (keys, ids) array, keep best ``cap``."""
-    all_k = jnp.concatenate([keys, new_keys])
-    all_i = jnp.concatenate([ids, new_ids])
-    sk, si = jax.lax.sort((all_k, all_i), num_keys=1)
-    return sk[:cap], si[:cap]
+    """Merge unsorted new entries into a sorted run, keeping the best ``cap``.
+
+    Partial bitonic merge instead of the previous concatenate + full
+    ``(cap + F)`` lax.sort: sort the F new entries, pad both runs to
+    P = next_pow2(cap), take the position-wise min against the *reversed* new
+    run (one bitonic split — yields the best P of the union, itself a bitonic
+    sequence), then run the log2(P)-stage merge network.  O(P log P)
+    compare-exchanges vs the full sort's O(P log^2 P), and the discarded worst
+    half is never sorted at all.
+
+    Unlike the stable full sort, ties between *distinct entries with equal
+    keys* may come out in a different relative order; the kept key multiset
+    is identical, so search results differ only in which of two exactly
+    equidistant ids survives a capacity cutoff.
+    """
+    nk, ni = jax.lax.sort((new_keys, new_ids), num_keys=1)
+    nk, ni = nk[:cap], ni[:cap]
+    m = nk.shape[0]
+    p = _next_pow2(cap)
+    ak = jnp.concatenate([keys, jnp.full((p - cap,), INF, keys.dtype)])
+    ai = jnp.concatenate([ids, jnp.full((p - cap,), -1, ids.dtype)])
+    bk = jnp.full((p,), INF, nk.dtype).at[:m].set(nk)[::-1]
+    bi = jnp.full((p,), -1, ni.dtype).at[:m].set(ni)[::-1]
+    take_a = ak <= bk  # ties keep the incumbent entry (stable-sort behavior)
+    mk = jnp.where(take_a, ak, bk)
+    mi = jnp.where(take_a, ai, bi)
+    mk, mi = _bitonic_merge_network(mk, mi)
+    return mk[:cap], mi[:cap]
 
 
-def _expand(g: DeviceGraph, q: Array, s: SearchState, sign: float, collect: bool, lmax: int):
-    """Pop best candidate, expand its adjacency row, merge into C and W."""
+def _expand(
+    g: DeviceGraph,
+    q: Array,
+    s: SearchState,
+    cfg: SearchConfig,
+    sign: float,
+    collect: bool,
+    lmax: int,
+):
+    """Pop the top-``beam`` candidates, score their joint frontier, merge.
+
+    The ``beam`` adjacency rows are flattened into one ``(beam * M0,)``
+    frontier; visited / padded / repeated ids are masked so every distance is
+    computed (and counted in ``ndist``) exactly once, then the whole frontier
+    is evaluated as a single contraction — through the fused Pallas kernel
+    when ``cfg.use_distance_kernel`` is set.
+    """
     n = g.vectors.shape[0]
-    c_id = s.ci[0]
-    # pop front (arrays are sorted; shift left)
-    ck = jnp.concatenate([s.ck[1:], jnp.full((1,), INF, s.ck.dtype)])
-    ci = jnp.concatenate([s.ci[1:], jnp.full((1,), -1, s.ci.dtype)])
+    beam = cfg.beam
+    bound = jnp.take(s.rk, s.ef_dyn - 1)
+    pk = s.ck[:beam]
+    pi = s.ci[:beam]
+    # Sequential best-first would have stopped before expanding any candidate
+    # whose key exceeds the current bound; the bound only ever tightens, so
+    # such candidates can be dropped outright when the beam pops them.
+    pvalid = jnp.isfinite(pk) & (pk <= bound) & (pi >= 0)
+    # pop front (arrays are sorted; shift left by beam)
+    ck = jnp.concatenate([s.ck[beam:], jnp.full((beam,), INF, s.ck.dtype)])
+    ci = jnp.concatenate([s.ci[beam:], jnp.full((beam,), -1, s.ci.dtype)])
 
-    nbrs = g.base_adj[jnp.maximum(c_id, 0)]
+    nbrs = g.base_adj[jnp.maximum(pi, 0)]                     # (beam, M0)
+    nbrs = jnp.where(pvalid[:, None], nbrs, -1).reshape(-1)   # flat frontier
     valid = (nbrs >= 0) & ~s.visited[jnp.minimum(jnp.maximum(nbrs, 0), n - 1)]
+    if beam > 1:
+        # First-occurrence dedup: one node may appear in several popped
+        # adjacency rows; sequential expansion skips repeats via the visited
+        # set, so score and count each frontier node exactly once.
+        eq = (nbrs[:, None] == nbrs[None, :]) & valid[None, :]
+        dup = jnp.tril(eq, k=-1).any(axis=1)
+        valid = valid & ~dup
     # mark visited (padded/invalid writes go to spare slot n)
     write_idx = jnp.where(valid, nbrs, n)
     visited = s.visited.at[write_idx].set(True)
 
-    keys, vals = _gather_keys(g, q, jnp.where(valid, nbrs, -1), sign)
+    ids_new = jnp.where(valid, nbrs, -1)
+    if cfg.use_distance_kernel:
+        keys = ops.frontier_keys(
+            ids_new, q, g.vectors, metric=cfg.metric, use_kernel=True
+        )
+    else:
+        keys, _ = _gather_keys(g, q, ids_new, sign)
+    vals = keys * sign  # metric orientation (exact: sign is +-1)
     ndist = s.ndist + jnp.sum(valid).astype(jnp.int32)
 
     # admission: key < W[ef_dyn - 1]  (inf while W not full  => always admit)
-    bound = jnp.take(s.rk, s.ef_dyn - 1)
     admit_c = valid & (keys < bound)
     admit_w = admit_c & g.alive[jnp.maximum(nbrs, 0)]
 
     keys_w = jnp.where(admit_w, keys, INF)
     keys_c = jnp.where(admit_c, keys, INF)
-    ids_new = jnp.where(valid, nbrs, -1)
 
     rk, ri = _merge_sorted(s.rk, s.ri, keys_w, ids_new, s.rk.shape[0])
     ck, ci = _merge_sorted(ck, ci, keys_c, ids_new, ck.shape[0])
@@ -317,7 +430,7 @@ def search(g: DeviceGraph, queries: Array, ef: Array, cfg: SearchConfig) -> Sear
             return go
 
         def body(s):
-            s2 = _expand(g, q, s, sign, collect=False, lmax=1)
+            s2 = _expand(g, q, s, cfg, sign, collect=False, lmax=1)
             if cfg.patience > 0:
                 bound_k = jnp.take(s2.rk, jnp.minimum(cfg.k, s2.ef_dyn) - 1)
                 improved = bound_k < s.bound_prev
@@ -382,7 +495,7 @@ def adaptive_search(
             return _not_done(s) & (s.dcount < s.lgoal) & (s.iters < cfg.iters())
 
         def body(s):
-            return _expand(g, q, s, sign, collect=True, lmax=lmax)
+            return _expand(g, q, s, cfg, sign, collect=True, lmax=lmax)
 
         return jax.lax.while_loop(cond, body, s)
 
@@ -409,7 +522,7 @@ def adaptive_search(
             return _not_done(s) & (s.iters < cfg.iters())
 
         def body(s):
-            return _expand(g, q, s, sign, collect=False, lmax=lmax)
+            return _expand(g, q, s, cfg, sign, collect=False, lmax=lmax)
 
         return jax.lax.while_loop(cond, body, s)
 

@@ -6,6 +6,7 @@ decode attention.  Validated in interpret mode against ``ref.py`` oracles.
 """
 from . import ops, ref  # noqa: F401
 from .distance import pairwise_distance  # noqa: F401
+from .frontier import frontier_distance  # noqa: F401
 from .qform import quadratic_form  # noqa: F401
 from .binscore import binscore  # noqa: F401
 from .flash_attention import decode_attention, flash_attention  # noqa: F401

@@ -1,0 +1,101 @@
+"""Fused frontier-distance Pallas kernel (beam-batched HNSW expansion).
+
+The beamed base-layer search pops ``beam`` candidates per iteration and must
+score their gathered adjacency rows — a ``(B, F)`` panel of candidate ids per
+query batch (``F = beam * M0``, ``-1`` = padded / visited-masked).  This kernel
+fuses the per-query frontier contraction with the metric epilogue and the
+id mask:
+
+    keys[b, f] = +inf                      if ids[b, f] < 0
+               = 1 - <q_b, v_ids[b,f]>     cosine distance
+               = -<q_b, v_ids[b,f]>        similarity metrics (key orientation)
+
+so the search loop consumes *keys* (smaller = better) directly and never
+materializes unmasked distances.  The candidate rows are gathered outside the
+kernel (XLA gather, amortized over the whole frontier); each grid program then
+contracts a ``(bb, bf, d)`` row panel against its ``(bb, d)`` query panel as a
+batched MXU matvec with the epilogue fused.
+
+Tiling: grid over (B / bb, F / bf); d is kept whole per panel (padded to a
+lane multiple).  A 8 x 128 x 512 fp32 row panel is 2 MiB — row panel + query
+panel + output tile fit comfortably in VMEM.  Cross-query batching of the
+frontier contraction (one (F, d) x (d, B) matmul) is a ROADMAP follow-up.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+Array = jax.Array
+
+DEFAULT_BB = 8    # query rows per tile (fp32 sublane multiple)
+DEFAULT_BF = 128  # frontier slots per tile (lane multiple)
+
+
+def _frontier_kernel(ids_ref, q_ref, panel_ref, out_ref, *, subtract_from_one: bool):
+    ids = ids_ref[...]                            # (bb, bf) int32
+    q = q_ref[...].astype(jnp.float32)            # (bb, d)
+    panel = panel_ref[...].astype(jnp.float32)    # (bb, bf, d)
+    sims = jax.lax.dot_general(
+        panel,
+        q,
+        dimension_numbers=(((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32,
+    )                                             # (bb, bf)
+    keys = (1.0 - sims) if subtract_from_one else -sims
+    out_ref[...] = jnp.where(ids >= 0, keys, jnp.inf)
+
+
+@functools.partial(jax.jit, static_argnames=("metric", "bb", "bf", "interpret"))
+def frontier_distance(
+    ids: Array,
+    q: Array,
+    vectors: Array,
+    *,
+    metric: str = "cos_dist",
+    bb: int = DEFAULT_BB,
+    bf: int = DEFAULT_BF,
+    interpret: bool = False,
+) -> Array:
+    """(B, F) ids + (B, d) queries + (n, d) table -> (B, F) masked keys.
+
+    Inputs are prepared (normalized for cosine metrics).  Padded / masked ids
+    (``< 0``) emit ``+inf`` keys so downstream merges drop them naturally.
+    """
+    b, f = ids.shape
+    d = q.shape[-1]
+
+    def rup(x, m):
+        return (x + m - 1) // m * m
+
+    # let the query tile shrink to the actual batch: under the search loop's
+    # per-query vmap this traces with b=1, and padding 1 -> 8 would gather and
+    # contract 8x the rows per iteration for nothing
+    bb = min(bb, b)
+    # frontier tile: at most the (lane-padded) frontier, kept a 128-multiple
+    bf = rup(min(bf, rup(f, 128)), 128)
+
+    bp, fp, dp = rup(b, bb), rup(f, bf), rup(d, 128)
+    ids_p = jnp.pad(ids.astype(jnp.int32), ((0, bp - b), (0, fp - f)), constant_values=-1)
+    q_p = jnp.pad(q.astype(jnp.float32), ((0, bp - b), (0, dp - d)))
+    panel = vectors[jnp.maximum(ids_p, 0)].astype(jnp.float32)      # (bp, fp, d)
+    panel = jnp.pad(panel, ((0, 0), (0, 0), (0, dp - d)))
+
+    out = pl.pallas_call(
+        functools.partial(
+            _frontier_kernel, subtract_from_one=(metric == "cos_dist")
+        ),
+        grid=(bp // bb, fp // bf),
+        in_specs=[
+            pl.BlockSpec((bb, bf), lambda i, j: (i, j)),
+            pl.BlockSpec((bb, dp), lambda i, j: (i, 0)),
+            pl.BlockSpec((bb, bf, dp), lambda i, j: (i, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bb, bf), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((bp, fp), jnp.float32),
+        interpret=interpret,
+    )(ids_p, q_p, panel)
+    return out[:b, :f]

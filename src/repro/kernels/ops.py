@@ -17,6 +17,7 @@ from .binscore import binscore as _binscore_kernel
 from .distance import pairwise_distance as _distance_kernel
 from .flash_attention import decode_attention as _decode_kernel
 from .flash_attention import flash_attention as _flash_kernel
+from .frontier import frontier_distance as _frontier_kernel
 from .qform import quadratic_form as _qform_kernel
 
 Array = jax.Array
@@ -31,6 +32,28 @@ def pairwise_distance(q, v, *, metric: str = "cos_dist", use_kernel: bool = Fals
             q, v, metric=metric, interpret=(not _ON_TPU) if interpret is None else interpret
         )
     return ref.distance_ref(q, v, metric=metric)
+
+
+def frontier_keys(ids, q, vectors, *, metric: str = "cos_dist",
+                  use_kernel: bool = False,
+                  interpret: Optional[bool] = None) -> Array:
+    """Masked frontier keys for beamed HNSW expansion.
+
+    ``ids`` (B, F) or (F,) gathered candidate ids (-1 = padded/masked),
+    ``q`` (B, d) or (d,) prepared queries, ``vectors`` (n, d) prepared table.
+    Returns keys shaped like ``ids`` (smaller = better, masked -> +inf).
+    """
+    squeeze = ids.ndim == 1
+    ids2 = ids[None] if squeeze else ids
+    q2 = q[None] if squeeze else q
+    if use_kernel:
+        out = _frontier_kernel(
+            ids2, q2, vectors, metric=metric,
+            interpret=(not _ON_TPU) if interpret is None else interpret,
+        )
+    else:
+        out = ref.frontier_ref(ids2, q2, vectors, metric=metric)
+    return out[0] if squeeze else out
 
 
 def quadratic_form(q, sigma, *, use_kernel: bool = False,

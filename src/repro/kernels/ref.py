@@ -22,6 +22,20 @@ def distance_ref(q: Array, v: Array, *, metric: str = "cos_dist") -> Array:
     return sims
 
 
+def frontier_ref(ids: Array, q: Array, vectors: Array, *, metric: str = "cos_dist") -> Array:
+    """Masked frontier keys: ids (B, F) int32 (-1 = masked), q (B, d),
+    vectors (n, d) -> (B, F) float32 *keys* (smaller = better).
+
+    cos_dist: key = 1 - <q, v>; similarity metrics: key = -<q, v>;
+    masked slots emit +inf.  Inputs are prepared (normalized for cosine).
+    """
+    safe = jnp.maximum(ids, 0)
+    rows = vectors[safe].astype(jnp.float32)               # (B, F, d)
+    sims = jnp.einsum("bfd,bd->bf", rows, q.astype(jnp.float32))
+    keys = (1.0 - sims) if metric == "cos_dist" else -sims
+    return jnp.where(ids >= 0, keys, jnp.inf)
+
+
 def qform_ref(q: Array, sigma: Array) -> Array:
     """Quadratic form q Sigma q^T, batched: q (B, d), sigma (d, d) -> (B,)."""
     q = q.astype(jnp.float32)

@@ -106,9 +106,9 @@ def compressed_psum(grads, axes, mode: str, residual=None):
     if residual is None:
         residual = jax.tree_util.tree_map(lambda g: jnp.zeros_like(g, jnp.float32), grads)
 
-    n_dev = 1
-    for ax in axes:
-        n_dev = n_dev * jax.lax.axis_size(ax)
+    # product of mesh axis sizes, computed portably inside the mapped context
+    # (jax.lax.axis_size does not exist; psum of 1 over the axes is the size)
+    n_dev = jax.lax.psum(jnp.ones((), jnp.int32), axes)
 
     def one(g, r):
         g32 = g.astype(jnp.float32) + r

@@ -1,6 +1,9 @@
 """Query scoring model (Eqs. 4-6) + ef table + estimator."""
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (

@@ -9,6 +9,8 @@ Includes hypothesis property tests of the system invariants:
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (

@@ -124,6 +124,173 @@ def test_deleted_nodes_not_returned(small_db):
     assert not np.isin(ids[ids >= 0], dead).any()
 
 
+# --------------------------------------------------------------------------
+# beam-batched expansion
+# --------------------------------------------------------------------------
+
+
+def _search_single_pop_golden(g, queries, ef, cfg):
+    """Verbatim copy of the pre-refactor single-pop search loop (one candidate
+    popped per iteration, concatenate + full lax.sort merges).  The beamed
+    implementation at ``beam=1`` must reproduce it bit-for-bit on these
+    fixtures (tie-free float32 keys; exact key ties may legitimately order
+    differently under the bitonic merge — see search._merge_sorted)."""
+    import jax
+    from functools import partial
+
+    from repro.index.distances import key_sign
+    from repro.index.search import INF, _extract, _init_state, _not_done
+
+    def gather_keys(g, q, ids, sign):
+        safe = jnp.maximum(ids, 0)
+        sims = g.vectors[safe] @ q
+        vals = 1.0 - sims if sign > 0 else sims
+        keys = vals * 1.0 if sign > 0 else -vals
+        return jnp.where(ids >= 0, keys, INF), jnp.where(ids >= 0, vals, INF * sign)
+
+    def merge_sorted(keys, ids, new_keys, new_ids, cap):
+        all_k = jnp.concatenate([keys, new_keys])
+        all_i = jnp.concatenate([ids, new_ids])
+        sk, si = jax.lax.sort((all_k, all_i), num_keys=1)
+        return sk[:cap], si[:cap]
+
+    def expand(g, q, s, sign):
+        n = g.vectors.shape[0]
+        c_id = s.ci[0]
+        ck = jnp.concatenate([s.ck[1:], jnp.full((1,), INF, s.ck.dtype)])
+        ci = jnp.concatenate([s.ci[1:], jnp.full((1,), -1, s.ci.dtype)])
+        nbrs = g.base_adj[jnp.maximum(c_id, 0)]
+        valid = (nbrs >= 0) & ~s.visited[jnp.minimum(jnp.maximum(nbrs, 0), n - 1)]
+        write_idx = jnp.where(valid, nbrs, n)
+        visited = s.visited.at[write_idx].set(True)
+        keys, _ = gather_keys(g, q, jnp.where(valid, nbrs, -1), sign)
+        ndist = s.ndist + jnp.sum(valid).astype(jnp.int32)
+        bound = jnp.take(s.rk, s.ef_dyn - 1)
+        admit_c = valid & (keys < bound)
+        admit_w = admit_c & g.alive[jnp.maximum(nbrs, 0)]
+        keys_w = jnp.where(admit_w, keys, INF)
+        keys_c = jnp.where(admit_c, keys, INF)
+        ids_new = jnp.where(valid, nbrs, -1)
+        rk, ri = merge_sorted(s.rk, s.ri, keys_w, ids_new, s.rk.shape[0])
+        ck, ci = merge_sorted(ck, ci, keys_c, ids_new, ck.shape[0])
+        return s._replace(
+            ck=ck, ci=ci, rk=rk, ri=ri, visited=visited, ndist=ndist,
+            iters=s.iters + 1,
+        )
+
+    @partial(jax.jit, static_argnames=("cfg",))
+    def run(g, queries, ef, cfg):
+        sign = key_sign(cfg.metric)
+        queries = queries.astype(jnp.float32)
+        queries = queries / jnp.maximum(
+            jnp.linalg.norm(queries, axis=-1, keepdims=True), 1e-12
+        )
+        ef_b = jnp.broadcast_to(jnp.asarray(ef, jnp.int32), queries.shape[:1])
+        ef_b = jnp.clip(ef_b, cfg.k, cfg.ef_cap)
+
+        def one(q, ef1):
+            s = _init_state(g, q, cfg, ef1, lmax=1, hops=1)
+
+            def cond(s):
+                go = _not_done(s) & (s.iters < cfg.iters())
+                if cfg.patience > 0:
+                    go = go & (s.stale < cfg.patience)
+                return go
+
+            def body(s):
+                s2 = expand(g, q, s, sign)
+                if cfg.patience > 0:
+                    bound_k = jnp.take(s2.rk, jnp.minimum(cfg.k, s2.ef_dyn) - 1)
+                    improved = bound_k < s.bound_prev
+                    s2 = s2._replace(
+                        stale=jnp.where(improved, 0, s.stale + 1),
+                        bound_prev=jnp.minimum(bound_k, s.bound_prev),
+                    )
+                return s2
+
+            s = jax.lax.while_loop(cond, body, s)
+            return _extract(s, cfg, sign)
+
+        return jax.vmap(one)(queries, ef_b)
+
+    return run(g, queries, ef, cfg)
+
+
+@pytest.mark.parametrize("ef", [10, 40, 160])
+@pytest.mark.parametrize("patience", [0, 20])
+def test_beam1_bit_identical_to_single_pop(small_db, small_index, ef, patience):
+    q = _queries(small_db, nq=48)
+    cfg = SearchConfig(k=10, ef_cap=240, patience=patience, beam=1)
+    golden = _search_single_pop_golden(small_index.graph, jnp.asarray(q), ef, cfg)
+    got = search(small_index.graph, jnp.asarray(q), ef, cfg)
+    for field in ("ids", "dists", "ndist", "iters", "ef_used"):
+        a = np.asarray(getattr(golden, field))
+        b = np.asarray(getattr(got, field))
+        assert (a == b).all(), f"{field}: {np.sum(a != b)} mismatches"
+
+
+@pytest.mark.parametrize("beam", [2, 4, 8])
+def test_beam_matches_recall_with_fewer_iterations(small_db, small_index, beam):
+    data, _, _ = small_db
+    q = _queries(small_db, nq=64)
+    gt = _gt(data, q)
+    ef = 80
+    res1 = search(small_index.graph, jnp.asarray(q), ef, SearchConfig(k=10, ef_cap=240, beam=1))
+    resb = search(small_index.graph, jnp.asarray(q), ef, SearchConfig(k=10, ef_cap=240, beam=beam))
+    rec1 = float(recall_at_k(res1.ids, gt).mean())
+    recb = float(recall_at_k(resb.ids, gt).mean())
+    assert recb >= rec1 - 0.005, (recb, rec1)
+    it1 = float(np.asarray(res1.iters).mean())
+    itb = float(np.asarray(resb.iters).mean())
+    assert itb < it1, (itb, it1)
+    # beam over-expands only modestly: bounded extra distance computations
+    nd1 = float(np.asarray(res1.ndist).mean())
+    ndb = float(np.asarray(resb.ndist).mean())
+    assert ndb <= 1.5 * nd1, (ndb, nd1)
+
+
+def test_beam_adaptive_search_single_estimate(small_db, small_index):
+    """Ada-ef on the beamed loop: same target behavior, one estimate/query."""
+    import dataclasses as _dc
+
+    data, _, _ = small_db
+    q = _queries(small_db, nq=64)
+    gt = _gt(data, q)
+    cfg = _dc.replace(small_index.search_cfg, beam=4)
+    from repro.index import adaptive_search
+
+    res = adaptive_search(
+        small_index.graph, jnp.asarray(q), small_index.stats, small_index.table,
+        jnp.asarray(small_index.target_recall, jnp.float32), cfg,
+        small_index.ada_cfg,
+    )
+    rec = float(recall_at_k(res.ids, gt).mean())
+    assert rec >= small_index.target_recall - 0.03, rec
+    efs = np.asarray(res.ef_used)
+    assert (efs >= small_index.k).all() and (efs <= cfg.ef_cap).all()
+
+
+def test_beam_kernel_path_matches_reference(small_db, small_index):
+    """use_distance_kernel routes through the Pallas frontier kernel
+    (interpret mode on CPU) and must agree with the jnp path numerically."""
+    q = _queries(small_db, nq=8)
+    cfg_ref = SearchConfig(k=10, ef_cap=240, beam=4)
+    cfg_ker = SearchConfig(k=10, ef_cap=240, beam=4, use_distance_kernel=True)
+    r_ref = search(small_index.graph, jnp.asarray(q), 40, cfg_ref)
+    r_ker = search(small_index.graph, jnp.asarray(q), 40, cfg_ker)
+    np.testing.assert_allclose(
+        np.asarray(r_ker.dists), np.asarray(r_ref.dists), rtol=1e-4, atol=1e-4
+    )
+    assert (np.asarray(r_ker.ndist) == np.asarray(r_ref.ndist)).all()
+
+
+def test_beam_validation():
+    with pytest.raises(ValueError):
+        SearchConfig(k=10, ef_cap=240, beam=0)
+    with pytest.raises(ValueError):
+        SearchConfig(k=10, ef_cap=240, beam=241)
+
+
 def test_sharded_merge_equals_global_topk(small_db):
     """Distributed top-k merge must return the union-best ids."""
     data, _, _ = small_db

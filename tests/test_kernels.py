@@ -21,6 +21,59 @@ def test_distance_kernel(b, n, d, dtype, metric):
     np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=tol, atol=tol)
 
 
+@pytest.mark.parametrize("b,f,d", [(1, 32, 48), (8, 128, 100), (13, 200, 256)])
+@pytest.mark.parametrize("metric", ["cos_dist", "ip"])
+def test_frontier_kernel(b, f, d, metric):
+    """Fused frontier keys vs jnp oracle, incl. -1-padded / visited-masked ids."""
+    n = 777
+    vec = jnp.asarray(RNG.normal(0, 1, (n, d)).astype(np.float32))
+    q = jnp.asarray(RNG.normal(0, 1, (b, d)).astype(np.float32))
+    ids = RNG.integers(0, n, (b, f)).astype(np.int32)
+    # -1 padding (short adjacency rows) + visited-masked slots, interleaved
+    ids[:, ::5] = -1
+    ids[:, 3::7] = -1
+    ids = jnp.asarray(ids)
+    got = ops.frontier_keys(ids, q, vec, metric=metric, use_kernel=True, interpret=True)
+    want = ref.frontier_ref(ids, q, vec, metric=metric)
+    masked = np.asarray(ids) < 0
+    assert np.isposinf(np.asarray(got)[masked]).all()
+    np.testing.assert_allclose(
+        np.asarray(got)[~masked], np.asarray(want)[~masked], rtol=3e-4, atol=3e-4
+    )
+
+
+def test_frontier_kernel_all_masked_row():
+    """A fully masked frontier (all ids -1) must emit +inf everywhere."""
+    vec = jnp.asarray(RNG.normal(0, 1, (50, 32)).astype(np.float32))
+    q = jnp.asarray(RNG.normal(0, 1, (2, 32)).astype(np.float32))
+    ids = jnp.full((2, 64), -1, jnp.int32)
+    got = ops.frontier_keys(ids, q, vec, use_kernel=True, interpret=True)
+    assert np.isposinf(np.asarray(got)).all()
+
+
+def test_frontier_ref_matches_search_gather_keys():
+    """The frontier oracle and the search loop's inline scorer agree (up to
+    contraction-order rounding) including the +inf mask placement."""
+    from repro.index.search import DeviceGraph, _gather_keys
+
+    n, d, f = 300, 64, 40
+    vec = jnp.asarray(RNG.normal(0, 1, (n, d)).astype(np.float32))
+    q = jnp.asarray(RNG.normal(0, 1, (d,)).astype(np.float32))
+    ids = jnp.asarray(RNG.integers(-1, n, (f,)).astype(np.int32))
+    g = DeviceGraph(
+        base_adj=jnp.zeros((n, 4), jnp.int32), upper_adj=jnp.zeros((1, n, 4), jnp.int32),
+        entry=jnp.asarray(0, jnp.int32), vectors=vec, alive=jnp.ones((n,), bool),
+    )
+    keys, _ = _gather_keys(g, q, ids, 1.0)
+    want = ref.frontier_ref(ids[None], q[None], vec, metric="cos_dist")[0]
+    masked = np.asarray(ids) < 0
+    assert np.isposinf(np.asarray(keys)[masked]).all()
+    assert np.isposinf(np.asarray(want)[masked]).all()
+    np.testing.assert_allclose(
+        np.asarray(keys)[~masked], np.asarray(want)[~masked], rtol=1e-5, atol=1e-5
+    )
+
+
 @pytest.mark.parametrize("b,d", [(4, 64), (17, 300), (64, 512)])
 def test_qform_kernel(b, d):
     a = RNG.normal(0, 1, (d, d)).astype(np.float32)
