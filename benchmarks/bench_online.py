@@ -19,6 +19,7 @@ import numpy as np
 
 from repro.index import (
     SearchConfig,
+    auto_beam,
     brute_force_topk_chunked,
     build_ada_index,
     fit_darth,
@@ -33,9 +34,13 @@ BENCH_JSON = Path(__file__).resolve().parents[1] / "BENCH_online.json"
 
 
 def _beam_sweep(idx, queries, gt, *, name: str, ef: int, beams) -> list:
-    """Static-ef search at each beam width; equal ef => matched recall."""
+    """Static-ef search at each beam width; equal ef => matched recall.
+
+    A beam of ``"auto"`` resolves through :func:`repro.index.search.auto_beam`
+    from the sweep's ef (the same policy the router's tier ladder uses)."""
     records = []
-    for beam in beams:
+    for requested in beams:
+        beam = auto_beam(ef) if str(requested) == "auto" else int(requested)
         cfg = dataclasses.replace(idx.search_cfg, beam=beam)
         r = search(idx.graph, jnp.asarray(queries), ef, cfg)  # compile
         jnp.asarray(r.ids).block_until_ready()
@@ -47,6 +52,7 @@ def _beam_sweep(idx, queries, gt, *, name: str, ef: int, beams) -> list:
         records.append(
             {
                 "beam": int(beam),
+                "requested": str(requested),
                 "ef": int(ef),
                 "recall_at_10": float(rec.mean()),
                 "iters_mean": float(np.asarray(r.iters).mean()),
@@ -56,7 +62,7 @@ def _beam_sweep(idx, queries, gt, *, name: str, ef: int, beams) -> list:
             }
         )
         emit(
-            f"online.{name}.beam{beam}.ef{ef}",
+            f"online.{name}.beam{requested}.ef{ef}",
             dt / len(queries) * 1e6,
             f"recall={rec.mean():.4f} iters={records[-1]['iters_mean']:.1f} "
             f"ndist={records[-1]['ndist_mean']:.0f} "

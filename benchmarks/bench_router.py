@@ -1,0 +1,187 @@
+"""Routed vs monolithic serving dispatch on a skewed query mix.
+
+The serving claim behind the router (ISSUE 2): per-query ef varies wildly, so
+executing a batch as one fused ``adaptive_search`` makes every query pay for
+the slowest one and drags full-capacity merges through easy queries.  This
+benchmark builds a skewed mix (75% easy near-duplicate queries, 25% hard
+far-field queries), then compares:
+
+- ``mono``          — the fused Algorithm 2 batch (the PR-1 serving path),
+- ``routed_exact``  — router with lossless estimation + fixed beam: results
+                      are per-query identical to mono (sanity: id match frac),
+- ``routed``        — router with a capped estimation budget (est_lmax):
+                      equal measured recall at fewer distance computations
+                      and a fraction of the wall-clock,
+- ``routed_margin`` — same + ef_margin headroom: recall *above* mono for a
+                      modest ndist premium,
+- ``routed_beam1``  — the routed config with beam forced to 1 on every tier,
+                      to show auto-tuned beams never lose recall.
+
+Latency is reported as p50/p99 over per-query ndist (the hardware-neutral
+latency proxy) plus measured batch wall-clock.  Results persist to
+``BENCH_serve.json`` at the repo root (``.smoke.json`` in smoke runs).
+"""
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.index import (
+    brute_force_topk_chunked,
+    build_ada_index,
+    prepare_queries,
+    recall_at_k,
+)
+from repro.serve.router import QueryRouter, RouterConfig
+from .common import DATASETS, emit
+
+BENCH_JSON = Path(__file__).resolve().parents[1] / "BENCH_serve.json"
+
+
+def _skewed_queries(data: np.ndarray, nq: int, easy_frac: float, seed: int):
+    """Serving-shaped mix: mostly near-duplicate (easy) queries + a far-field
+    hard tail.  Returns shuffled queries and the easy-query mask."""
+    rng = np.random.default_rng(seed)
+    d = data.shape[1]
+    n_easy = int(easy_frac * nq)
+    easy = data[rng.choice(len(data), n_easy)] + 0.02 * rng.normal(
+        0, 1, (n_easy, d)
+    ).astype(np.float32)
+    hard = rng.normal(0, 1.1, (nq - n_easy, d)).astype(np.float32)
+    q = np.concatenate([easy, hard]).astype(np.float32)
+    mask = np.zeros(nq, bool)
+    mask[:n_easy] = True
+    perm = rng.permutation(nq)
+    return q[perm], mask[perm]
+
+
+def _timed_mono(idx, queries):
+    res = idx.query(queries)
+    jax.block_until_ready(res.ids)
+    t0 = time.perf_counter()
+    res = idx.query(queries)
+    jax.block_until_ready(res.ids)
+    return jax.tree_util.tree_map(np.asarray, res), time.perf_counter() - t0
+
+
+def _timed_routed(router, queries, target):
+    router.route(queries, target)  # compile every tier it will hit
+    t0 = time.perf_counter()
+    res, stats = router.route(queries, target)
+    return res, stats, time.perf_counter() - t0
+
+
+def _record(name, res, gt, wall_s, nq, extra=None):
+    nd = np.asarray(res.ndist)
+    rec = {
+        "recall_at_10": float(np.asarray(recall_at_k(jnp.asarray(res.ids), gt)).mean()),
+        "ndist_total": int(nd.sum()),
+        "ndist_p50": float(np.percentile(nd, 50)),
+        "ndist_p99": float(np.percentile(nd, 99)),
+        "wall_ms": wall_s * 1e3,
+        "us_per_query": wall_s / nq * 1e6,
+    }
+    rec.update(extra or {})
+    emit(
+        f"router.{name}",
+        rec["us_per_query"],
+        f"recall={rec['recall_at_10']:.4f} ndist={rec['ndist_total']} "
+        f"ndist_p50/p99={rec['ndist_p50']:.0f}/{rec['ndist_p99']:.0f}",
+    )
+    return rec
+
+
+def run(k=10, target=0.95, quick=True, smoke=False):
+    n, nq = (1000, 48) if smoke else (6000, 256)
+    data, _ = DATASETS["zipf_cluster"]()
+    data = data[:n]
+    queries, easy_mask = _skewed_queries(data, nq, easy_frac=0.75, seed=7)
+    qp = prepare_queries(jnp.asarray(queries), "cos_dist")
+    _, gt = brute_force_topk_chunked(qp, data, k=k)
+    gt = jnp.asarray(gt)
+
+    idx = build_ada_index(
+        data, k=k, target_recall=target, m=8,
+        ef_construction=60 if smoke else 100,
+        ef_cap=160 if smoke else 400,
+        num_samples=32 if smoke else 128,
+    )
+    out = {
+        "workload": {
+            "n": n, "nq": nq, "k": k, "easy_frac": float(easy_mask.mean()),
+            "ef_cap": idx.search_cfg.ef_cap,
+        }
+    }
+
+    # ---- monolithic fused adaptive_search --------------------------------
+    mono, mono_wall = _timed_mono(idx, queries)
+    out["mono"] = _record("mono", mono, gt, mono_wall, nq)
+
+    # ---- routed, lossless estimation + fixed beam: per-query identical ----
+    router_ex = idx.router(RouterConfig(beam_mode="fixed"))
+    res_ex, st_ex, wall_ex = _timed_routed(router_ex, queries, target)
+    match = float((res_ex.ids == mono.ids).all(axis=1).mean())
+    out["routed_exact"] = _record(
+        "routed_exact", res_ex, gt, wall_ex, nq,
+        {"id_match_frac": match, "stats": st_ex.as_dict()},
+    )
+    emit("router.routed_exact.id_match", 0.0, f"frac={match:.3f}")
+
+    # ---- routed, capped estimation budget (the serving configuration) -----
+    est_lmax = 32 if smoke else 64
+    configs = {
+        "routed": RouterConfig(est_lmax=est_lmax),
+        "routed_margin": RouterConfig(est_lmax=est_lmax, ef_margin=1.25),
+        "routed_beam1": RouterConfig(est_lmax=est_lmax, beam_mode="fixed"),
+    }
+    for name, rcfg in configs.items():
+        router = idx.router(rcfg)
+        res, st, wall = _timed_routed(router, queries, target)
+        tiers = [(t.ef, t.beam, t.count) for t in st.tiers]
+        out[name] = _record(
+            name, res, gt, wall, nq,
+            {"stats": st.as_dict(), "tiers": tiers},
+        )
+        emit(f"router.{name}.tiers", 0.0,
+             " ".join(f"ef{e}b{b}:{c}" for e, b, c in tiers)
+             + f" padding_waste={st.padding_waste:.2f}")
+
+    # ---- the acceptance comparisons --------------------------------------
+    d_nd = 1.0 - out["routed"]["ndist_total"] / max(out["mono"]["ndist_total"], 1)
+    d_wall = out["mono"]["wall_ms"] / max(out["routed"]["wall_ms"], 1e-9)
+    d_rec = out["routed"]["recall_at_10"] - out["mono"]["recall_at_10"]
+    emit(
+        "router.routed_vs_mono", 0.0,
+        f"ndist_saved={d_nd:.3f} wall_speedup={d_wall:.2f}x d_recall={d_rec:+.4f}",
+    )
+    auto_vs_b1 = out["routed"]["recall_at_10"] - out["routed_beam1"]["recall_at_10"]
+    emit("router.auto_beam_vs_beam1", 0.0, f"d_recall={auto_vs_b1:+.4f}")
+    out["comparison"] = {
+        "ndist_saved_frac": d_nd,
+        "wall_speedup": d_wall,
+        "d_recall_routed_vs_mono": d_rec,
+        "d_recall_auto_vs_beam1": auto_vs_b1,
+    }
+
+    out["meta"] = {"quick": bool(quick), "smoke": bool(smoke), "target_recall": float(target)}
+    # smoke exercises the plumbing but must not clobber tracked numbers, and a
+    # quick run must not overwrite paper-scale (--full) numbers either
+    path = BENCH_JSON.with_suffix(".smoke.json") if smoke else BENCH_JSON
+    if not smoke and quick and path.exists():
+        try:
+            prev_full = json.loads(path.read_text()).get("meta", {}).get("quick") is False
+        except (ValueError, OSError):
+            prev_full = False
+        if prev_full:
+            path = BENCH_JSON.with_suffix(".quick.json")
+    path.write_text(json.dumps(out, indent=2, sort_keys=True) + "\n")
+    emit("router.bench_json", 0.0, f"wrote {path.name}")
+
+
+if __name__ == "__main__":
+    run()

@@ -23,8 +23,9 @@ def main() -> None:
     ap.add_argument("--smoke", action="store_true",
                     help="toy sizes, <60 s total, non-zero exit on exception")
     ap.add_argument("--only", default="", help="run a single module")
-    ap.add_argument("--beam", type=int, nargs="+", default=None,
-                    help="beam widths for the online beam sweep (e.g. --beam 1 4 8)")
+    ap.add_argument("--beam", type=str, nargs="+", default=None,
+                    help="beam widths for the online beam sweep "
+                         "(ints and/or 'auto', e.g. --beam 1 auto 8)")
     args = ap.parse_args()
     quick = not args.full
 
@@ -33,6 +34,7 @@ def main() -> None:
         bench_recall_dist,
         bench_online,
         bench_offline,
+        bench_router,
         bench_sensitivity,
         bench_updates,
         bench_ablation,
@@ -44,6 +46,7 @@ def main() -> None:
         "fdl": bench_fdl,
         "recall_dist": bench_recall_dist,
         "online": bench_online,
+        "router": bench_router,
         "offline": bench_offline,
         "sensitivity": bench_sensitivity,
         "updates": bench_updates,

@@ -23,6 +23,8 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--new-tokens", type=int, default=12)
     ap.add_argument("--corpus", type=int, default=3000)
+    ap.add_argument("--routed", action="store_true",
+                    help="ef-bucketed router dispatch for the retrieval stage")
     args = ap.parse_args()
 
     cfg = ARCHS["qwen2-0.5b"].reduced()
@@ -38,7 +40,8 @@ def main():
                             ef_construction=60, ef_cap=200, num_samples=64)
 
     engine = Engine(model, params,
-                    ServeConfig(max_new_tokens=args.new_tokens, target_recall=0.95),
+                    ServeConfig(max_new_tokens=args.new_tokens, target_recall=0.95,
+                                routed=args.routed),
                     index=index)
     batch = {"tokens": jnp.asarray(
         rng.integers(0, cfg.vocab_size, (args.requests, args.prompt_len)), jnp.int32)}
@@ -49,6 +52,10 @@ def main():
     print("generated:", res.tokens[:, :8], "...")
     print("retrieved neighbor ids (req 0):", res.retrieved_ids[0])
     print("per-request adaptive ef:", res.ef_used)
+    if res.router_stats is not None:
+        print("router tiers:", [
+            (t["ef"], t["count"]) for t in res.router_stats["tiers"]
+        ])
 
 
 if __name__ == "__main__":

@@ -15,9 +15,14 @@ from .search import (  # noqa: F401
     SearchConfig,
     SearchResult,
     adaptive_search,
+    auto_beam,
     device_graph,
+    estimate_pass,
+    estimation_config,
     recall_at_k,
+    resume_at_ef,
     search,
+    resize_state,
 )
 from .pipeline import AdaEfIndex, build_ada_index, collect_distances  # noqa: F401
 from .baselines import DarthBaseline, LaetBaseline, fit_darth, fit_laet  # noqa: F401

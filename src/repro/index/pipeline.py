@@ -15,7 +15,6 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from functools import partial
 from typing import Optional
 
 import jax
@@ -43,45 +42,13 @@ from .search import (
     SearchConfig,
     SearchResult,
     adaptive_search,
+    collect_distances,  # noqa: F401  (re-export; impl lives with the phases)
     device_graph,
     recall_at_k,
     search,
 )
 
 Array = jax.Array
-
-
-@partial(jax.jit, static_argnames=("cfg", "ada"))
-def collect_distances(
-    g: DeviceGraph, queries: Array, cfg: SearchConfig, ada: AdaEfConfig
-):
-    """Phase A only (distance collection) — used for offline proxy scoring."""
-    from .search import _expand, _init_state, _not_done  # shared internals
-    from .distances import key_sign
-
-    sign = key_sign(cfg.metric)
-    queries = queries.astype(jnp.float32)
-    if cfg.metric in (METRIC_COSINE_DIST, METRIC_COSINE_SIM):
-        queries = queries / jnp.maximum(
-            jnp.linalg.norm(queries, axis=-1, keepdims=True), 1e-12
-        )
-    m0 = g.base_adj.shape[1]
-    lmax = ada.buf(m0)
-    ef_inf = jnp.asarray(cfg.ef_cap, jnp.int32)
-
-    def one(q):
-        s = _init_state(g, q, cfg, ef_inf, lmax=lmax, hops=ada.hops)
-
-        def cond(s):
-            return _not_done(s) & (s.dcount < s.lgoal) & (s.iters < cfg.iters())
-
-        def body(s):
-            return _expand(g, q, s, cfg, sign, collect=True, lmax=lmax)
-
-        s = jax.lax.while_loop(cond, body, s)
-        return s.dbuf, s.dcount
-
-    return jax.vmap(one)(queries)
 
 
 @dataclasses.dataclass
@@ -111,9 +78,22 @@ class AdaEfIndex:
     sample_gt: np.ndarray           # (G, k) ground-truth ids of proxies
     timings: OfflineTimings
     raw_data: Optional[np.ndarray] = None  # kept for incremental GT refresh
+    _router: Optional[object] = dataclasses.field(
+        default=None, repr=False, compare=False
+    )  # lazily built QueryRouter; invalidated on graph updates
+    _router_cfg: Optional[object] = dataclasses.field(
+        default=None, repr=False, compare=False
+    )  # installed RouterConfig; survives invalidation-triggered rebuilds
 
     # ------------------------------------------------------------- online API
-    def query(self, queries, target_recall: Optional[float] = None) -> SearchResult:
+    def query(
+        self, queries, target_recall: Optional[float] = None, *, routed: bool = False
+    ) -> SearchResult:
+        """Ada-ef search.  ``routed=True`` dispatches through the ef-bucketed
+        serving router (estimate at small capacity, per-tier batched search)
+        instead of the monolithic fused ``adaptive_search``."""
+        if routed:
+            return self.query_routed(queries, target_recall)[0]
         r = self.target_recall if target_recall is None else target_recall
         return adaptive_search(
             self.graph,
@@ -125,6 +105,32 @@ class AdaEfIndex:
             self.ada_cfg,
         )
 
+    def query_routed(self, queries, target_recall: Optional[float] = None):
+        """Routed dispatch; returns ``(SearchResult, RouterStats)``."""
+        r = self.target_recall if target_recall is None else target_recall
+        return self.router().route(np.asarray(queries), r)
+
+    def router(self, router_cfg=None):
+        """The (cached) ef-bucketed query router for this index.  Passing a
+        ``RouterConfig`` installs it: rebuilds now *and* after any
+        ``insert``/``delete``-triggered invalidation, so a tuned serving
+        policy survives index updates."""
+        from repro.serve.router import QueryRouter  # deferred: serve -> index
+
+        if router_cfg is not None:
+            self._router_cfg = router_cfg
+            self._router = None
+        if self._router is None:
+            self._router = QueryRouter(
+                self.graph,
+                self.stats,
+                self.table,
+                self.search_cfg,
+                self.ada_cfg,
+                self._router_cfg,
+            )
+        return self._router
+
     def query_static(self, queries, ef: int) -> SearchResult:
         return search(self.graph, jnp.asarray(queries), ef, self.search_cfg)
 
@@ -132,6 +138,7 @@ class AdaEfIndex:
     def insert(self, new_data: np.ndarray, *, refresh_table: bool = True):
         """§6.3 insertion: index add + stats merge + incremental GT + table."""
         new_data = np.atleast_2d(np.asarray(new_data, np.float32))
+        self._router = None  # router caches graph/stats/table references
         t0 = time.perf_counter()
         self.host_index.add(new_data)
         self.graph = device_graph(self.host_index.freeze())
@@ -167,6 +174,7 @@ class AdaEfIndex:
     def delete(self, ids: np.ndarray, *, refresh_table: bool = True):
         """§6.3 deletion: tombstone + stats unmerge + GT refresh + table."""
         ids = np.asarray(ids, np.int64)
+        self._router = None  # router caches graph/stats/table references
         t0 = time.perf_counter()
         self.host_index.mark_deleted(ids)
         self.graph = device_graph(self.host_index.freeze())

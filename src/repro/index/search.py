@@ -37,6 +37,12 @@ Termination policies:
 - static ef (standard HNSW; also with PiP patience early-termination),
 - **Ada-ef** (paper Alg. 2): phase A collects the first ``l`` distances with
   ef = inf, calls ESTIMATE-EF once, phase B continues with the estimated ef.
+  The phases are also exposed as separately jittable entry points —
+  :func:`estimate_pass` (phase A + ESTIMATE-EF at a reduced
+  :func:`estimation_config` capacity) and :func:`resume_at_ef` (phase B over
+  a carried, :func:`resize_state`-fitted ``SearchState``) — which is what the
+  serving router (``repro.serve.router``) dispatches per ef tier;
+  :func:`adaptive_search` is their fused full-capacity composition.
 
 The dynamic ef trick: capacities are static (``ef_cap``) while the *effective*
 ef is a runtime int32 — every bound reads ``W[ef_dyn - 1]`` with a dynamic
@@ -55,7 +61,7 @@ import numpy as np
 from repro.core import DatasetStats, EfTable, EstimatorConfig, estimate_ef
 from repro.core.fdl import METRIC_COSINE_DIST
 from repro.kernels import ops
-from .distances import key_sign
+from .distances import key_sign, prepare_queries
 from .hnsw import HNSWGraph
 
 Array = jax.Array
@@ -98,6 +104,27 @@ class SearchConfig:
             raise ValueError(f"k={self.k} > ef_cap={self.ef_cap}")
         if not 1 <= self.beam <= self.ef_cap:
             raise ValueError(f"beam={self.beam} not in [1, ef_cap={self.ef_cap}]")
+
+
+def auto_beam(ef: int, max_beam: int = 8) -> int:
+    """Beam width from an ef (estimate): small ef -> 1, large ef -> wide beam.
+
+    Power-of-two thresholds tuned from the BENCH_online beam sweep: a wider
+    beam trades a few percent extra distance computations for ~beam x fewer
+    loop iterations, which only pays off once the search runs long enough
+    (large ef) to amortize the over-expansion.  Beam over-expansion never
+    loses recall (see the module docstring), so this is latency tuning only.
+    """
+    ef = int(ef)
+    if ef < 64:
+        beam = 1
+    elif ef < 128:
+        beam = 2
+    elif ef < 256:
+        beam = 4
+    else:
+        beam = 8
+    return max(1, min(beam, int(max_beam)))
 
 
 class SearchState(NamedTuple):
@@ -412,11 +439,7 @@ def search(g: DeviceGraph, queries: Array, ef: Array, cfg: SearchConfig) -> Sear
     execution path for *pre-estimated* adaptive efs).
     """
     sign = key_sign(cfg.metric)
-    queries = queries.astype(jnp.float32)
-    if cfg.metric == METRIC_COSINE_DIST or cfg.metric == "cos_sim":
-        queries = queries / jnp.maximum(
-            jnp.linalg.norm(queries, axis=-1, keepdims=True), 1e-12
-        )
+    queries = prepare_queries(queries, cfg.metric)
     ef_b = jnp.broadcast_to(jnp.asarray(ef, jnp.int32), queries.shape[:1])
     ef_b = jnp.clip(ef_b, cfg.k, cfg.ef_cap)
 
@@ -447,7 +470,7 @@ def search(g: DeviceGraph, queries: Array, ef: Array, cfg: SearchConfig) -> Sear
 
 
 # --------------------------------------------------------------------------
-# policy: Ada-ef (paper Algorithm 2)
+# policy: Ada-ef (paper Algorithm 2), split into composable phases
 # --------------------------------------------------------------------------
 
 
@@ -465,6 +488,203 @@ class AdaEfConfig:
         return 1 + m0 + m0 * m0  # capped 2-hop budget (also used for hops=3)
 
 
+def estimation_config(
+    cfg: SearchConfig, m0: int, ada: AdaEfConfig, est_cap: int = 0
+) -> SearchConfig:
+    """Phase-A-only SearchConfig at reduced state capacity.
+
+    Phase A admits every scored node while W is below capacity (its bound is
+    +inf until W fills), and it terminates after ~``lmax`` collected
+    distances, so a capacity of ``lmax + beam*M0`` (one iteration of
+    overshoot) is *lossless*: W/C never fill, the bound stays +inf, and the
+    collected distance list is bit-identical to a full ``ef_cap``-capacity
+    run of :func:`adaptive_search` phase A.  ``est_cap > 0`` forces a smaller
+    (lossy) capacity: the W bound turns finite once ``est_cap`` nodes are
+    scored, pruning collection early — cheaper estimation that biases scores
+    toward "easy" (router callers compensate via ``ef_margin``).
+
+    ``max_iters`` is pinned to the base config's budget so phase A sees the
+    same iteration limit it would inside the fused search.
+    """
+    lossless = ada.buf(m0) + cfg.beam * m0
+    cap = min(cfg.ef_cap, est_cap if est_cap > 0 else lossless)
+    cap = max(cap, cfg.k, cfg.beam)
+    return dataclasses.replace(cfg, ef_cap=cap, max_iters=cfg.iters(), patience=0)
+
+
+def _phase_a_batch(g: DeviceGraph, queries: Array, cfg: SearchConfig, ada: AdaEfConfig):
+    """Phase A (Alg. 2 lines 1-20): expand at ef=inf until ``lgoal`` distances
+    are collected.  ``queries`` must already be prepared; returns the batched
+    :class:`SearchState` (C/W sized ``cfg.ef_cap``, dbuf sized ``ada.buf``)."""
+    sign = key_sign(cfg.metric)
+    m0 = g.base_adj.shape[1]
+    lmax = ada.buf(m0)
+    ef_inf = jnp.asarray(cfg.ef_cap, jnp.int32)
+
+    def one(q):
+        s = _init_state(g, q, cfg, ef_inf, lmax=lmax, hops=ada.hops)
+
+        def cond(s):
+            return _not_done(s) & (s.dcount < s.lgoal) & (s.iters < cfg.iters())
+
+        def body(s):
+            return _expand(g, q, s, cfg, sign, collect=True, lmax=lmax)
+
+        return jax.lax.while_loop(cond, body, s)
+
+    return jax.vmap(one)(queries)
+
+
+def _estimate_from_states(
+    states: SearchState,
+    queries: Array,
+    stats: DatasetStats,
+    table: EfTable,
+    target_recall: Array,
+    cfg: SearchConfig,
+    ada: AdaEfConfig,
+) -> Array:
+    """ESTIMATE-EF (Algorithm 1) over collected phase-A states, batched once.
+
+    The returned ef is clipped to ``[k, cfg.ef_cap]`` — pass the *base*
+    (full-capacity) config here even when phase A ran at a reduced
+    estimation capacity, so large estimates are not truncated to the
+    estimation budget."""
+    lmax = states.dbuf.shape[-1]
+    valid = jnp.arange(lmax)[None, :] < states.dcount[:, None]
+    ef_est = estimate_ef(
+        stats,
+        table,
+        queries,
+        states.dbuf,
+        jnp.asarray(target_recall, jnp.float32),
+        valid=valid,
+        config=ada.estimator,
+    )
+    return jnp.clip(ef_est, cfg.k, cfg.ef_cap)
+
+
+def _phase_b_batch(
+    g: DeviceGraph, queries: Array, states: SearchState, ef: Array, cfg: SearchConfig
+) -> SearchResult:
+    """Phase B (Alg. 2 lines 21-24): continue batched states at per-query ef.
+
+    ``states`` array capacities must match ``cfg.ef_cap`` (see
+    :func:`resize_state`); the W truncation to the runtime ef happens
+    dynamically through ``ef_dyn``."""
+    sign = key_sign(cfg.metric)
+    lmax = states.dbuf.shape[-1]
+
+    def one(s: SearchState, q, ef1):
+        s = s._replace(ef_dyn=ef1)
+
+        def cond(s):
+            return _not_done(s) & (s.iters < cfg.iters())
+
+        def body(s):
+            return _expand(g, q, s, cfg, sign, collect=False, lmax=lmax)
+
+        s = jax.lax.while_loop(cond, body, s)
+        return _extract(s, cfg, sign)
+
+    res = jax.vmap(one)(states, queries, ef)
+    return res._replace(ef_used=ef)
+
+
+def resize_state(states: SearchState, cap: int) -> SearchState:
+    """Re-capacity a (batched) phase-A state to C/W size ``cap``.
+
+    Shrinking keeps the best ``cap`` entries, which is exact as long as the
+    state is only ever resumed at ``ef <= cap``: the admission bound reads
+    ``W[ef-1]``, merges only let new entries displace *worse* ones, and any
+    candidate beyond position ``cap`` of C is already outside the W bound
+    (it can never be popped by a search whose W holds ``cap`` better nodes).
+    Caveat: that last argument leans on C ⊆ W-admitted, which tombstones
+    break — deleted nodes enter C (they must stay traversable) but not W, so
+    on a graph with many tombstones near a query the truncation may drop a
+    live candidate still inside the bound (recall-benign in practice: the
+    routed path then merely explores slightly less than the monolithic one,
+    and deletions are followed by a table rebuild anyway).  Growing pads the
+    sorted tails with empty (+inf / -1) slots — bit-exact when the source
+    state never filled its own capacity (the lossless estimation case).  The
+    collection buffer is dropped to one slot either way — resumed searches
+    never collect.
+    """
+
+    def _fit(a: Array, fill) -> Array:
+        cur = a.shape[-1]
+        if cap <= cur:
+            return a[..., :cap]
+        pad = jnp.full(a.shape[:-1] + (cap - cur,), fill, a.dtype)
+        return jnp.concatenate([a, pad], axis=-1)
+
+    return states._replace(
+        ck=_fit(states.ck, INF),
+        ci=_fit(states.ci, -1),
+        rk=_fit(states.rk, INF),
+        ri=_fit(states.ri, -1),
+        dbuf=states.dbuf[..., :1],
+    )
+
+
+@partial(jax.jit, static_argnames=("cfg", "ada"))
+def collect_distances(
+    g: DeviceGraph, queries: Array, cfg: SearchConfig, ada: AdaEfConfig
+):
+    """Phase A only, returning the collected (dbuf, dcount) — the offline
+    proxy-scoring entry point (pipeline table builds, LAET/DARTH features)."""
+    states = _phase_a_batch(g, prepare_queries(queries, cfg.metric), cfg, ada)
+    return states.dbuf, states.dcount
+
+
+@partial(jax.jit, static_argnames=("cfg", "ada", "ef_cap_out"))
+def estimate_pass(
+    g: DeviceGraph,
+    queries: Array,
+    stats: DatasetStats,
+    table: EfTable,
+    target_recall: Array,
+    cfg: SearchConfig,
+    ada: AdaEfConfig = AdaEfConfig(),
+    ef_cap_out: Optional[int] = None,
+):
+    """Estimation pass: phase A + ESTIMATE-EF for a whole batch, no phase B.
+
+    Run it at a *small* capacity (see :func:`estimation_config`) to price the
+    per-query ef estimate at a fraction of a full search; the returned states
+    can be resumed tier-by-tier via :func:`resume_at_ef`.  Returns
+    ``(ef_est, states)`` with ``ef_est`` clipped to ``[k, ef_cap_out or
+    cfg.ef_cap]``.
+    """
+    queries = prepare_queries(queries, cfg.metric)
+    states = _phase_a_batch(g, queries, cfg, ada)
+    clip_cfg = cfg if ef_cap_out is None else dataclasses.replace(cfg, ef_cap=ef_cap_out)
+    ef_est = _estimate_from_states(
+        states, queries, stats, table, target_recall, clip_cfg, ada
+    )
+    return ef_est, states
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def resume_at_ef(
+    g: DeviceGraph,
+    queries: Array,
+    states: SearchState,
+    ef: Array,
+    cfg: SearchConfig,
+) -> SearchResult:
+    """Phase B as a first-class entry point: continue phase-A states at the
+    given per-query ef (scalar or (B,)).  State capacities must equal
+    ``cfg.ef_cap`` — use :func:`resize_state` to fit an estimation-pass
+    state onto a tier.  ``ndist``/``iters`` keep accumulating, so the
+    result's cost counters cover both phases, directly comparable to
+    :func:`adaptive_search`."""
+    queries = prepare_queries(queries, cfg.metric)
+    ef_b = jnp.broadcast_to(jnp.asarray(ef, jnp.int32), queries.shape[:1])
+    ef_b = jnp.clip(ef_b, cfg.k, cfg.ef_cap)
+    return _phase_b_batch(g, queries, states, ef_b, cfg)
+
+
 @partial(jax.jit, static_argnames=("cfg", "ada"))
 def adaptive_search(
     g: DeviceGraph,
@@ -476,59 +696,18 @@ def adaptive_search(
     ada: AdaEfConfig = AdaEfConfig(),
 ) -> SearchResult:
     """Paper Algorithm 2: ef = inf until ``l`` distances collected, then
-    ESTIMATE-EF once, then continue with the estimated ef."""
-    sign = key_sign(cfg.metric)
-    queries = queries.astype(jnp.float32)
-    if cfg.metric == METRIC_COSINE_DIST or cfg.metric == "cos_sim":
-        queries = queries / jnp.maximum(
-            jnp.linalg.norm(queries, axis=-1, keepdims=True), 1e-12
-        )
-    m0 = g.base_adj.shape[1]
-    lmax = ada.buf(m0)
-    ef_inf = jnp.asarray(cfg.ef_cap, jnp.int32)
+    ESTIMATE-EF once, then continue with the estimated ef.
 
-    # ---- phase A: collect (ef = inf) --------------------------------------
-    def phase_a(q):
-        s = _init_state(g, q, cfg, ef_inf, lmax=lmax, hops=ada.hops)
-
-        def cond(s):
-            return _not_done(s) & (s.dcount < s.lgoal) & (s.iters < cfg.iters())
-
-        def body(s):
-            return _expand(g, q, s, cfg, sign, collect=True, lmax=lmax)
-
-        return jax.lax.while_loop(cond, body, s)
-
-    states = jax.vmap(phase_a)(queries)
-
-    # ---- ESTIMATE-EF (Algorithm 1), batched once --------------------------
-    valid = jnp.arange(lmax)[None, :] < states.dcount[:, None]
-    ef_est = estimate_ef(
-        stats,
-        table,
-        queries,
-        states.dbuf,
-        jnp.asarray(target_recall, jnp.float32),
-        valid=valid,
-        config=ada.estimator,
+    Monolithic composition of the split phases: every query runs both phases
+    at full ``ef_cap`` capacity in one fused computation.  The routed serving
+    path (:mod:`repro.serve.router`) runs the same phases as separate
+    dispatches with per-tier capacities."""
+    queries = prepare_queries(queries, cfg.metric)
+    states = _phase_a_batch(g, queries, cfg, ada)
+    ef_est = _estimate_from_states(
+        states, queries, stats, table, target_recall, cfg, ada
     )
-    ef_est = jnp.clip(ef_est, cfg.k, cfg.ef_cap)
-
-    # ---- phase B: continue with estimated ef (W truncated via ef_dyn) -----
-    def phase_b(s: SearchState, q, ef1):
-        s = s._replace(ef_dyn=ef1)
-
-        def cond(s):
-            return _not_done(s) & (s.iters < cfg.iters())
-
-        def body(s):
-            return _expand(g, q, s, cfg, sign, collect=False, lmax=lmax)
-
-        return jax.lax.while_loop(cond, body, s)
-
-    states = jax.vmap(phase_b)(states, queries, ef_est)
-    res = jax.vmap(lambda s: _extract(s, cfg, sign))(states)
-    return res._replace(ef_used=ef_est)
+    return _phase_b_batch(g, queries, states, ef_est, cfg)
 
 
 # --------------------------------------------------------------------------

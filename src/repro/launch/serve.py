@@ -25,6 +25,8 @@ def main():
     ap.add_argument("--new-tokens", type=int, default=16)
     ap.add_argument("--corpus", type=int, default=0, help="vector corpus size (0 = no RAG)")
     ap.add_argument("--target-recall", type=float, default=0.95)
+    ap.add_argument("--routed", action="store_true",
+                    help="dispatch retrieval through the ef-bucketed router")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -55,7 +57,11 @@ def main():
     engine = Engine(
         model,
         params,
-        ServeConfig(max_new_tokens=args.new_tokens, target_recall=args.target_recall),
+        ServeConfig(
+            max_new_tokens=args.new_tokens,
+            target_recall=args.target_recall,
+            routed=args.routed,
+        ),
         index=index,
         embed_proj=proj,
     )
@@ -83,6 +89,17 @@ def main():
     if res.retrieved_ids is not None:
         print("retrieved ids (first request):", res.retrieved_ids[0])
         print("adaptive ef used:", res.ef_used)
+    if res.router_stats is not None:
+        rs = res.router_stats
+        tiers = " ".join(
+            f"ef{t['ef']}(beam={t['beam']}):{t['count']}/{t['padded_to']}"
+            for t in rs["tiers"]
+        )
+        print(
+            f"router: est_cap={rs['est_cap']} est_ndist={rs['est_ndist_total']} "
+            f"ndist={rs['ndist_total']} padding_waste={rs['padding_waste']:.2f} "
+            f"tiers[{tiers}]"
+        )
 
 
 if __name__ == "__main__":

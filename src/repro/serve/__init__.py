@@ -1,3 +1,27 @@
-"""Serving substrate: KV-cache management + batched RAG engine."""
+"""Serving substrate: KV-cache management, batched RAG engine, and the
+Ada-ef query router.
+
+Request flow for a serving batch:
+
+1. ``Engine.serve`` prefills the prompt batch through the LM,
+2. each request is embedded into the retrieval space (jitted mean-pool +
+   projection),
+3. retrieval dispatches through one of two paths:
+   - **monolithic** — one fused ``adaptive_search`` over the whole batch, or
+   - **routed** (``ServeConfig.routed``) — the :class:`QueryRouter` runs a
+     cheap small-capacity estimation pass (phase A + ESTIMATE-EF), buckets
+     queries into an ef-tier ladder (per-tier state capacity + auto-tuned
+     beam), resumes each padded bucket on its tier's pre-compiled search,
+     and scatters results back into request order, emitting
+     :class:`RouterStats` telemetry,
+4. greedy ``decode`` continues generation with the retrieved ids surfaced to
+   the caller.
+
+The engine stays synchronous/batched; the router is the seam where async
+continuous batching will hang off (tier queues drained independently).
+"""
 from .engine import Engine, ServeConfig, ServeResult  # noqa: F401
 from .kvcache import grow_cache  # noqa: F401
+from .router import QueryRouter, RouterConfig  # noqa: F401
+from .stats import RouterStats, TierStats  # noqa: F401
+from .tiers import TierSpec, tier_ladder  # noqa: F401

@@ -1,0 +1,85 @@
+"""Bucketing primitives for the ef-routed dispatcher.
+
+Host-side (numpy) helpers: assign queries to ef tiers, pad each bucket to one
+of a small set of fixed batch shapes (powers of two, floored at
+``min_shape``) so the per-tier jitted searches hit a bounded compile cache,
+and scatter per-bucket results back into request order.
+
+Everything here is pure index arithmetic — property-testable without a graph
+or a device.
+"""
+from __future__ import annotations
+
+from typing import List, Sequence, Tuple
+
+import jax
+import numpy as np
+
+
+def pad_shape(n: int, min_shape: int = 8) -> int:
+    """Smallest power-of-two batch shape >= max(n, min_shape)."""
+    if n <= 0:
+        raise ValueError(f"pad_shape needs n >= 1, got {n}")
+    return 1 << (max(int(n), int(min_shape)) - 1).bit_length()
+
+
+def assign_tiers(ef: np.ndarray, tier_efs: Sequence[int]) -> np.ndarray:
+    """Per-query tier index: the first (smallest) tier with capacity >= ef.
+
+    ``tier_efs`` must be ascending and its last entry must cover every ef
+    (the ladder always ends at the base ``ef_cap``, and estimates are clipped
+    there).
+    """
+    ladder = np.asarray(tier_efs, np.int64)
+    ef = np.asarray(ef, np.int64)
+    if ef.size and ef.max() > ladder[-1]:
+        raise ValueError(
+            f"ef {int(ef.max())} exceeds the top tier {int(ladder[-1])}"
+        )
+    return np.searchsorted(ladder, ef, side="left")
+
+
+def bucket_indices(assign: np.ndarray, num_tiers: int) -> List[np.ndarray]:
+    """Request positions per tier, in original order within each bucket."""
+    return [np.nonzero(assign == t)[0] for t in range(num_tiers)]
+
+
+def pad_indices(idx: np.ndarray, shape: int) -> np.ndarray:
+    """Pad a bucket's index list to ``shape`` by repeating its first entry.
+
+    Pad rows rerun an already-routed query (results are sliced off before the
+    scatter), so no out-of-distribution inputs reach the compiled search.
+    """
+    if len(idx) == 0 or shape < len(idx):
+        raise ValueError(f"cannot pad {len(idx)} indices to shape {shape}")
+    return np.concatenate([idx, np.full(shape - len(idx), idx[0], idx.dtype)])
+
+
+def scatter_results(
+    buckets: Sequence[Tuple[np.ndarray, object]], batch: int
+):
+    """Restore request order: place each bucket's rows at its positions.
+
+    ``buckets`` is ``[(idx, result_pytree), ...]`` where each result pytree
+    (e.g. a :class:`SearchResult`) has leading dim >= len(idx) (padding rows
+    beyond ``len(idx)`` are dropped).  Buckets must jointly cover every
+    position ``0..batch-1`` exactly once.  Returns one pytree of numpy arrays
+    with leading dim ``batch``.
+    """
+    buckets = [(np.asarray(idx), res) for idx, res in buckets if len(idx) > 0]
+    if not buckets:
+        raise ValueError("scatter_results needs at least one non-empty bucket")
+    cover = np.concatenate([idx for idx, _ in buckets])
+    if len(cover) != batch or len(np.unique(cover)) != batch:
+        raise ValueError(
+            f"buckets cover {len(np.unique(cover))}/{batch} positions"
+        )
+
+    def _scatter(*parts):
+        parts = [np.asarray(p) for p in parts]
+        out = np.zeros((batch,) + parts[0].shape[1:], parts[0].dtype)
+        for (idx, _), part in zip(buckets, parts):
+            out[idx] = part[: len(idx)]
+        return out
+
+    return jax.tree_util.tree_map(_scatter, *[res for _, res in buckets])

@@ -35,6 +35,7 @@ class ServeConfig:
     cache_slack: int = 128
     retrieve_k: int = 10
     target_recall: float = 0.95
+    routed: bool = False          # dispatch retrieval through the ef router
 
 
 @dataclasses.dataclass
@@ -44,6 +45,19 @@ class ServeResult:
     retrieved_dists: Optional[np.ndarray]
     ef_used: Optional[np.ndarray]
     prefill_logits: np.ndarray
+    router_stats: Optional[dict] = None  # RouterStats.as_dict() when routed
+
+
+@jax.jit
+def _pooled_embedding(embed_table: Array, tokens: Array) -> Array:
+    return jnp.mean(embed_table[tokens].astype(jnp.float32), axis=1)
+
+
+@jax.jit
+def _pooled_projected_embedding(
+    embed_table: Array, tokens: Array, proj: Array
+) -> Array:
+    return jnp.mean(embed_table[tokens].astype(jnp.float32), axis=1) @ proj
 
 
 class Engine:
@@ -51,25 +65,28 @@ class Engine:
         self,
         model: Model,
         params,
-        scfg: ServeConfig = ServeConfig(),
+        scfg: Optional[ServeConfig] = None,
         index: Optional[AdaEfIndex] = None,
         embed_proj: Optional[Array] = None,  # (d_model, d_index) retrieval head
     ):
         self.model = model
         self.params = params
-        self.scfg = scfg
+        # default-construct per engine: a shared dataclass default instance
+        # would leak config mutations across engines
+        self.scfg = ServeConfig() if scfg is None else scfg
         self.index = index
         self.embed_proj = embed_proj
         self._decode = jax.jit(self.model.decode)
 
     # ------------------------------------------------------------- helpers
     def _request_embedding(self, batch: Dict[str, Array]) -> Array:
-        """Mean-pooled token embeddings -> retrieval space (B, d_index)."""
-        emb = self.params["embed"][batch["tokens"]]
-        pooled = jnp.mean(emb.astype(jnp.float32), axis=1)
+        """Mean-pooled token embeddings -> retrieval space (B, d_index),
+        jitted (module-level fns so the cache is shared across engines)."""
         if self.embed_proj is not None:
-            pooled = pooled @ self.embed_proj
-        return pooled
+            return _pooled_projected_embedding(
+                self.params["embed"], batch["tokens"], self.embed_proj
+            )
+        return _pooled_embedding(self.params["embed"], batch["tokens"])
 
     # ------------------------------------------------------------- serve
     def serve(self, batch: Dict[str, Array]) -> ServeResult:
@@ -84,9 +101,16 @@ class Engine:
         )
 
         retrieved = None
+        router_stats = None
         if self.index is not None:
             q = self._request_embedding(batch)
-            retrieved = self.index.query(np.asarray(q), scfg.target_recall)
+            if scfg.routed:
+                retrieved, rstats = self.index.query_routed(
+                    np.asarray(q), scfg.target_recall
+                )
+                router_stats = rstats.as_dict()
+            else:
+                retrieved = self.index.query(np.asarray(q), scfg.target_recall)
 
         tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
         pos = jnp.full((b,), prompt_len, jnp.int32)
@@ -103,4 +127,5 @@ class Engine:
             retrieved_dists=None if retrieved is None else np.asarray(retrieved.dists),
             ef_used=None if retrieved is None else np.asarray(retrieved.ef_used),
             prefill_logits=np.asarray(logits),
+            router_stats=router_stats,
         )

@@ -1,0 +1,237 @@
+"""Ada-ef query router: estimate-then-route batch scheduling (serving path).
+
+The monolithic :func:`repro.index.search.adaptive_search` runs every query of
+a batch in one vmapped ``lax.while_loop`` with full ``ef_cap``-sized state —
+the batch finishes at the pace of its slowest query, and a query needing
+ef=32 drags full-capacity sorted-array merges through every iteration.  The
+router exploits the paper's core signal (per-query ef varies wildly across a
+workload) at dispatch time instead of throwing it away:
+
+1. **Estimation pass** — phase A only (distance collection + ESTIMATE-EF)
+   for the whole incoming batch at a *small* fixed state capacity
+   (:func:`repro.index.search.estimation_config`).  With the default
+   (lossless) capacity this reproduces Algorithm 2's estimates bit-for-bit;
+   a caller-capped budget (``RouterConfig.est_cap``) prices estimation below
+   that at a small, measurable estimate bias.
+2. **Ef-tier ladder** — one pre-compiled search variant per rung
+   (:mod:`repro.serve.tiers`), each sized to its tier's ``ef_cap`` with a
+   per-tier auto-tuned beam.
+3. **Bucketed dispatch** — queries partition by estimated ef, each bucket
+   pads to a power-of-two batch shape (compile-cache friendly,
+   :mod:`repro.serve.bucketing`), resumes its phase-A state on the tier's
+   small arrays, and results scatter back into request order.
+4. **Telemetry** — a :class:`repro.serve.stats.RouterStats` per batch.
+
+Because tier searches *resume* the estimation-pass state (rather than
+restarting from the entry point), a routed batch performs the same cumulative
+work as Algorithm 2 — with lossless estimation and ``beam_mode="fixed"`` the
+routed results match the monolithic ``adaptive_search`` per query on a
+tombstone-free graph (see the deletion caveat on
+:func:`repro.index.search.resize_state`), while every merge runs at tier
+capacity and easy buckets stop iterating as soon as their own slowest member
+finishes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import DatasetStats, EfTable
+from repro.index.search import (
+    AdaEfConfig,
+    DeviceGraph,
+    SearchConfig,
+    SearchResult,
+    SearchState,
+    estimate_pass,
+    estimation_config,
+    resume_at_ef,
+    resize_state,
+)
+from .bucketing import (
+    assign_tiers,
+    bucket_indices,
+    pad_indices,
+    pad_shape,
+    scatter_results,
+)
+from .stats import RouterStats, TierStats
+from .tiers import BEAM_AUTO, TierSpec, tier_ladder
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class RouterConfig:
+    """Routing policy knobs (all static: part of the compile-cache key)."""
+
+    tier_efs: Tuple[int, ...] = ()   # intermediate rungs; () -> DEFAULT_TIER_EFS
+    beam_mode: str = BEAM_AUTO       # "auto" (per-tier auto_beam) | "fixed"
+    est_cap: int = 0                 # estimation state capacity; 0 -> lossless
+    est_lmax: int = 0                # collection budget |D|; 0 -> full (lossless)
+    ef_margin: float = 1.0           # scale estimates up (guard for lossy est)
+    min_shape: int = 8               # smallest padded bucket shape
+
+
+class QueryRouter:
+    """Estimate-then-route executor over one :class:`DeviceGraph`.
+
+    Stateless across batches apart from jit caches — safe to share across
+    threads that serve disjoint batches.  Rebuild (or let
+    ``AdaEfIndex.router()`` rebuild) after index updates: the router holds
+    graph/stats/table references.
+    """
+
+    def __init__(
+        self,
+        graph: DeviceGraph,
+        stats: DatasetStats,
+        table: EfTable,
+        search_cfg: SearchConfig,
+        ada_cfg: AdaEfConfig = AdaEfConfig(),
+        router_cfg: Optional[RouterConfig] = None,
+    ):
+        self.graph = graph
+        self.stats = stats
+        self.table = table
+        self.base_cfg = search_cfg
+        self.ada_cfg = ada_cfg
+        self.router_cfg = router_cfg or RouterConfig()
+        m0 = graph.base_adj.shape[1]
+        # est_lmax caps the phase-A collection goal |D| (the dominant cost of
+        # estimation): the collected prefix skews toward closer distances, so
+        # scores bias "easy" — callers pair it with ef_margin > 1.
+        self.est_ada = ada_cfg
+        if self.router_cfg.est_lmax > 0:
+            self.est_ada = dataclasses.replace(
+                ada_cfg, lmax=min(self.router_cfg.est_lmax, ada_cfg.buf(m0))
+            )
+        self.est_cfg = estimation_config(
+            search_cfg, m0, self.est_ada, self.router_cfg.est_cap
+        )
+        self.tiers: Tuple[TierSpec, ...] = tier_ladder(
+            search_cfg, self.router_cfg.tier_efs, self.router_cfg.beam_mode
+        )
+        self._tier_efs = tuple(t.ef for t in self.tiers)
+
+    # ------------------------------------------------------------- phases
+    def estimate(self, queries: np.ndarray, target_recall: float):
+        """Estimation pass for a padded batch.  Returns ``(ef_est, states)``
+        with ``ef_est`` a host int array over the *padded* batch."""
+        ef_est, states = estimate_pass(
+            self.graph,
+            jnp.asarray(queries),
+            self.stats,
+            self.table,
+            jnp.asarray(target_recall, jnp.float32),
+            self.est_cfg,
+            self.est_ada,
+            ef_cap_out=self.base_cfg.ef_cap,
+        )
+        ef_np = np.asarray(ef_est)
+        if self.router_cfg.ef_margin != 1.0:
+            ef_np = np.clip(
+                np.ceil(ef_np * self.router_cfg.ef_margin).astype(ef_np.dtype),
+                self.base_cfg.k,
+                self.base_cfg.ef_cap,
+            )
+        return ef_np, states
+
+    def _resume_bucket(
+        self,
+        tier: TierSpec,
+        queries: Array,
+        states: SearchState,
+        idx_pad: np.ndarray,
+        ef_np: np.ndarray,
+        num_real: int,
+    ) -> SearchResult:
+        """Gather one padded bucket out of the estimation state and resume it
+        on the tier's arrays.  Padding rows rerun the bucket's first query at
+        ef=k (the cheapest legal resume) and are sliced off by the caller."""
+        take = jnp.asarray(idx_pad)
+        q_b = queries[take]
+        s_b = resize_state(
+            jax.tree_util.tree_map(lambda a: a[take], states), tier.ef
+        )
+        ef_b = ef_np[idx_pad].astype(np.int32)
+        ef_b[num_real:] = self.base_cfg.k
+        return resume_at_ef(self.graph, q_b, s_b, jnp.asarray(ef_b), tier.cfg)
+
+    # ------------------------------------------------------------- dispatch
+    def route(
+        self, queries: np.ndarray, target_recall: float
+    ) -> Tuple[SearchResult, RouterStats]:
+        """Route one request batch; returns results in request order plus the
+        batch's telemetry.  ``SearchResult`` fields are host numpy arrays."""
+        queries = np.asarray(queries, np.float32)
+        if queries.ndim != 2 or len(queries) == 0:
+            raise ValueError(f"expected (B, d) queries, got {queries.shape}")
+        batch = len(queries)
+        t_start = time.perf_counter()
+
+        # ---- estimation pass over the (padded) full batch -----------------
+        est_shape = pad_shape(batch, self.router_cfg.min_shape)
+        q_pad = np.concatenate(
+            [queries, np.repeat(queries[:1], est_shape - batch, axis=0)]
+        )
+        t0 = time.perf_counter()
+        ef_np, states = self.estimate(q_pad, target_recall)
+        est_ndist = np.asarray(states.ndist)
+        jax.block_until_ready(est_ndist)
+        est_wall = time.perf_counter() - t0
+
+        # ---- bucket by tier, resume each bucket at its own capacity -------
+        # Dispatch every bucket before pulling any result: JAX async dispatch
+        # lets the device pipeline independent tier computations while the
+        # host does the next bucket's gather/pad bookkeeping.
+        assign = assign_tiers(ef_np[:batch], self._tier_efs)
+        buckets = bucket_indices(assign, len(self.tiers))
+        q_dev = jnp.asarray(q_pad)
+        dispatched = []
+        for tier, idx in zip(self.tiers, buckets):
+            if len(idx) == 0:
+                continue
+            shape = pad_shape(len(idx), self.router_cfg.min_shape)
+            idx_pad = pad_indices(idx, shape)
+            t0 = time.perf_counter()
+            res_dev = self._resume_bucket(
+                tier, q_dev, states, idx_pad, ef_np, len(idx)
+            )
+            dispatched.append((tier, idx, shape, res_dev, t0))
+
+        parts = []
+        tier_stats = []
+        for tier, idx, shape, res_dev, t0 in dispatched:
+            res = jax.tree_util.tree_map(np.asarray, res_dev)
+            # dispatch -> materialized; tiers overlap on device, so these
+            # walls do not sum to the batch wall-clock
+            wall = time.perf_counter() - t0
+            parts.append((idx, res))
+            tier_stats.append(
+                TierStats(
+                    ef=tier.ef,
+                    beam=tier.beam,
+                    count=len(idx),
+                    padded_to=shape,
+                    ndist_total=int(res.ndist[: len(idx)].sum()),
+                    wall_s=wall,
+                )
+            )
+
+        out = scatter_results(parts, batch)
+        stats = RouterStats(
+            batch=batch,
+            est_shape=est_shape,
+            est_cap=self.est_cfg.ef_cap,
+            est_ndist_total=int(est_ndist[:batch].sum()),
+            est_wall_s=est_wall,
+            tiers=tier_stats,
+            total_wall_s=time.perf_counter() - t_start,
+        )
+        return out, stats

@@ -1,0 +1,59 @@
+"""Router telemetry: per-tier and per-batch serving counters.
+
+A :class:`RouterStats` is produced per routed batch — cheap host-side
+counters (no device sync beyond the results the router already pulls), meant
+to be aggregated by whatever metrics layer sits above the engine.  ``ndist``
+totals are cumulative across both phases (estimation + tier search), so they
+are directly comparable against the monolithic ``adaptive_search`` cost.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List
+
+
+@dataclasses.dataclass
+class TierStats:
+    ef: int                # tier capacity
+    beam: int              # tier beam width
+    count: int             # real queries routed to this tier
+    padded_to: int         # fixed batch shape the bucket was padded to
+    ndist_total: int       # sum of per-query ndist (est + search), real rows
+    wall_s: float          # dispatch -> results materialized; tiers overlap
+                           # on device, so tier walls do not sum to total
+
+    def as_dict(self) -> Dict:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass
+class RouterStats:
+    batch: int                    # real queries in the request batch
+    est_shape: int                # padded shape of the estimation pass
+    est_cap: int                  # estimation-pass state capacity
+    est_ndist_total: int          # estimation-pass ndist over real queries
+    est_wall_s: float             # estimation pass wall-clock
+    tiers: List[TierStats] = dataclasses.field(default_factory=list)
+    total_wall_s: float = 0.0     # end-to-end route() wall-clock
+
+    @property
+    def ndist_total(self) -> int:
+        """Cumulative distance computations for the batch (est + tiers)."""
+        return sum(t.ndist_total for t in self.tiers)
+
+    @property
+    def padded_total(self) -> int:
+        return self.est_shape + sum(t.padded_to for t in self.tiers)
+
+    @property
+    def padding_waste(self) -> float:
+        """Fraction of dispatched rows that were padding, in [0, 1)."""
+        real = self.batch + sum(t.count for t in self.tiers)
+        return 1.0 - real / max(self.padded_total, 1)
+
+    def as_dict(self) -> Dict:
+        d = dataclasses.asdict(self)
+        d["tiers"] = [t.as_dict() for t in self.tiers]
+        d["ndist_total"] = self.ndist_total
+        d["padding_waste"] = self.padding_waste
+        return d

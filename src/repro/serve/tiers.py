@@ -1,0 +1,66 @@
+"""Ef-tier ladder for the routed serving path.
+
+A tier is one pre-compilable search variant: C/W state sized to the tier's
+``ef_cap`` and a beam width auto-tuned to it (small ef -> narrow beam, large
+ef -> wide beam; see :func:`repro.index.search.auto_beam`, applied to the
+rung's ef, i.e. the bucket's *worst-case* estimate — the default ef=64 rung
+runs beam 2).  A query whose estimated ef is 32 then runs through 64-slot
+merges instead of dragging the full-capacity arrays of the monolithic
+search, while a query estimated at 400 gets wide MXU-friendly frontier
+contractions.
+
+The ladder is static per router — tier configs are hashable
+:class:`SearchConfig` instances, so XLA compiles each (tier, bucket-shape)
+pair exactly once and reuses it across requests.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence, Tuple
+
+from repro.index.search import SearchConfig, auto_beam
+
+DEFAULT_TIER_EFS = (64, 128, 256)
+
+BEAM_AUTO = "auto"    # per-tier auto_beam(ef)
+BEAM_FIXED = "fixed"  # inherit the base config's beam on every tier
+
+
+@dataclasses.dataclass(frozen=True)
+class TierSpec:
+    """One rung of the ladder: queries with ``ef <= ef`` run under ``cfg``."""
+
+    ef: int             # tier capacity == upper bound on routed per-query ef
+    beam: int           # auto-tuned expansion width for this rung
+    cfg: SearchConfig   # compiled-search variant (ef_cap == ef)
+
+
+def tier_ladder(
+    base: SearchConfig,
+    tier_efs: Sequence[int] = (),
+    beam_mode: str = BEAM_AUTO,
+    max_beam: int = 8,
+) -> Tuple[TierSpec, ...]:
+    """Build the ladder from a base (full-capacity) search config.
+
+    ``tier_efs`` are the intermediate rungs (defaults to
+    ``DEFAULT_TIER_EFS``); values outside ``[k, ef_cap)`` are dropped and the
+    base ``ef_cap`` is always appended as the final catch-all rung, so every
+    estimated ef has a tier.  Each tier pins ``max_iters`` to the *base*
+    budget: a tier search must never terminate earlier than the monolithic
+    search would purely because its capacity-derived iteration default is
+    smaller.
+    """
+    if beam_mode not in (BEAM_AUTO, BEAM_FIXED):
+        raise ValueError(f"beam_mode={beam_mode!r} not in ('auto', 'fixed')")
+    efs = sorted({int(e) for e in (tier_efs or DEFAULT_TIER_EFS)
+                  if base.k <= int(e) < base.ef_cap} | {base.ef_cap})
+    tiers = []
+    for ef in efs:
+        beam = auto_beam(ef, max_beam) if beam_mode == BEAM_AUTO else base.beam
+        beam = max(1, min(beam, ef))
+        cfg = dataclasses.replace(
+            base, ef_cap=ef, beam=beam, max_iters=base.iters(), patience=0
+        )
+        tiers.append(TierSpec(ef=ef, beam=beam, cfg=cfg))
+    return tuple(tiers)
