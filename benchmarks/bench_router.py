@@ -20,6 +20,15 @@ far-field queries), then compares:
 Latency is reported as p50/p99 over per-query ndist (the hardware-neutral
 latency proxy) plus measured batch wall-clock.  Results persist to
 ``BENCH_serve.json`` at the repo root (``.smoke.json`` in smoke runs).
+
+Since PR 3 the lossy ``routed*`` configs look estimates up in the
+estimation-matched ef table (``RouterConfig.est_matched_table``, on by
+default through ``AdaEfIndex.router``).  That removes the truncation bias
+that used to shrink estimates, so routed ndist rises back to the monolithic
+level (``ndist_saved`` can go slightly negative and the hard-query ndist
+tail widens) in exchange for recall matching mono without any ``ef_margin``:
+the pre-PR-3 numbers traded recall (d_recall ~ -0.002) for that ndist
+saving.  Set ``est_matched_table=False`` to benchmark the old trade.
 """
 from __future__ import annotations
 

@@ -39,6 +39,7 @@ def main() -> None:
         bench_updates,
         bench_ablation,
         bench_kernels,
+        bench_frontier,
         roofline,
     )
 
@@ -52,6 +53,7 @@ def main() -> None:
         "updates": bench_updates,
         "ablation": bench_ablation,
         "kernels": bench_kernels,
+        "frontier": bench_frontier,
         "roofline": roofline,
     }
     if args.only:

@@ -84,6 +84,10 @@ class AdaEfIndex:
     _router_cfg: Optional[object] = dataclasses.field(
         default=None, repr=False, compare=False
     )  # installed RouterConfig; survives invalidation-triggered rebuilds
+    _probe_cache: dict = dataclasses.field(
+        default_factory=dict, repr=False, compare=False
+    )  # {ef: per-proxy recalls} shared by main + estimation-matched table
+    #   builds (the probe searches are score-independent); cleared on updates
 
     # ------------------------------------------------------------- online API
     def query(
@@ -114,7 +118,10 @@ class AdaEfIndex:
         """The (cached) ef-bucketed query router for this index.  Passing a
         ``RouterConfig`` installs it: rebuilds now *and* after any
         ``insert``/``delete``-triggered invalidation, so a tuned serving
-        policy survives index updates."""
+        policy survives index updates.  Routers with a lossy estimation
+        budget get an estimation-matched ef table (built here, from the same
+        proxies) so their score lookups see the truncation bias they will
+        produce online."""
         from repro.serve.router import QueryRouter  # deferred: serve -> index
 
         if router_cfg is not None:
@@ -128,6 +135,7 @@ class AdaEfIndex:
                 self.search_cfg,
                 self.ada_cfg,
                 self._router_cfg,
+                est_table_builder=self.estimation_table,
             )
         return self._router
 
@@ -139,6 +147,7 @@ class AdaEfIndex:
         """§6.3 insertion: index add + stats merge + incremental GT + table."""
         new_data = np.atleast_2d(np.asarray(new_data, np.float32))
         self._router = None  # router caches graph/stats/table references
+        self._probe_cache.clear()  # probe recalls depend on graph + samples
         t0 = time.perf_counter()
         self.host_index.add(new_data)
         self.graph = device_graph(self.host_index.freeze())
@@ -175,6 +184,7 @@ class AdaEfIndex:
         """§6.3 deletion: tombstone + stats unmerge + GT refresh + table."""
         ids = np.asarray(ids, np.int64)
         self._router = None  # router caches graph/stats/table references
+        self._probe_cache.clear()  # probe recalls depend on graph + samples
         t0 = time.perf_counter()
         self.host_index.mark_deleted(ids)
         self.graph = device_graph(self.host_index.freeze())
@@ -232,44 +242,81 @@ class AdaEfIndex:
         order = np.argsort(cat_d * key_sign(self.search_cfg.metric), axis=1)[:, : self.k]
         self.sample_gt = np.take_along_axis(cat_i, order, axis=1)
 
-    def _proxy_scores(self) -> np.ndarray:
+    def _proxy_scores(
+        self,
+        cfg: Optional[SearchConfig] = None,
+        ada: Optional[AdaEfConfig] = None,
+    ) -> np.ndarray:
+        """Quantile-bin scores of the sample proxies, collecting distances
+        under ``cfg``/``ada`` (defaults: the index's own full-budget search)."""
+        cfg = cfg if cfg is not None else self.search_cfg
+        ada = ada if ada is not None else self.ada_cfg
         qs = jnp.asarray(self.raw_data[self.sample_ids])
-        dbuf, dcount = collect_distances(self.graph, qs, self.search_cfg, self.ada_cfg)
-        qs_p = prepare_queries(qs, self.search_cfg.metric)
-        params = estimate_fdl(self.stats, qs_p, metric=self.ada_cfg.estimator.metric)
+        dbuf, dcount = collect_distances(self.graph, qs, cfg, ada)
+        qs_p = prepare_queries(qs, cfg.metric)
+        params = estimate_fdl(self.stats, qs_p, metric=ada.estimator.metric)
         valid = jnp.arange(dbuf.shape[1])[None, :] < dcount[:, None]
         scores = score_query(
             params,
             dbuf,
             valid=valid,
-            m=self.ada_cfg.estimator.m,
-            delta=self.ada_cfg.estimator.delta,
-            metric=self.ada_cfg.estimator.metric,
-            decay=self.ada_cfg.estimator.decay,
+            m=ada.estimator.m,
+            delta=ada.estimator.delta,
+            metric=ada.estimator.metric,
+            decay=ada.estimator.decay,
         )
         return np.asarray(scores)
 
-    def _rebuild_table(self):
-        scores = self._proxy_scores()
+    def _recall_probe(self):
+        """``(ef, subset) -> recalls`` closure for :func:`build_ef_table` —
+        always probes the *full-budget* search: the score axis is what an
+        estimation-matched table changes, not the ef/recall relationship.
+
+        Probes the whole sample batch per ef and memoizes it in
+        ``_probe_cache``: the adaptive ladder would otherwise recompile the
+        vmapped search per shrinking subset shape (so the original already
+        padded every probe to the full batch — same device work), and
+        per-proxy recall at a given ef is subset-independent, so the main
+        table build and any estimation-matched builds for lossy routers
+        share one set of searches instead of each paying the full ladder."""
         qs = jnp.asarray(self.raw_data[self.sample_ids])
         gt = jnp.asarray(self.sample_gt)
 
         def recall_at_ef(ef: int, subset: np.ndarray) -> np.ndarray:
-            # pad the probe to the full sample batch: the adaptive ladder
-            # shrinks the active subset every rung, and each distinct batch
-            # size would otherwise recompile the vmapped search (XLA compile
-            # dominates table builds at small G); padded rows cost one wasted
-            # search each, sliced off the result
-            m = len(subset)
-            full = np.concatenate(
-                [subset, np.zeros(len(self.sample_ids) - m, subset.dtype)]
-            )
-            res = search(self.graph, qs[full], ef, self.search_cfg)
-            return np.asarray(recall_at_k(res.ids, gt[full]))[:m]
+            if int(ef) not in self._probe_cache:
+                res = search(self.graph, qs, int(ef), self.search_cfg)
+                self._probe_cache[int(ef)] = np.asarray(
+                    recall_at_k(res.ids, gt)
+                )
+            return self._probe_cache[int(ef)][subset]
 
-        self.table = build_ef_table(
+        return recall_at_ef
+
+    def estimation_table(
+        self, est_cfg: SearchConfig, est_ada: AdaEfConfig
+    ) -> EfTable:
+        """EfTable whose proxy *scores* are collected at a router's (possibly
+        truncated) estimation budget (ROADMAP: estimation-matched ef table).
+
+        ``RouterConfig.est_lmax``/``est_cap`` truncate the online distance
+        collection, which skews scores toward "easy" relative to the main
+        table's full 2-hop collections; scoring the proxies through the same
+        truncated ``est_cfg``/``est_ada`` puts the table's score axis in the
+        router's units, so ``ef_margin`` no longer has to compensate for the
+        bias.  Recall probing is unchanged (the search itself is not lossy).
+        """
+        scores = self._proxy_scores(cfg=est_cfg, ada=est_ada)
+        return build_ef_table(
             scores,
-            recall_at_ef,
+            self._recall_probe(),
+            target_recall=self.target_recall,
+            ef_ladder=default_ef_ladder(self.k, ef_max=self.search_cfg.ef_cap),
+        )
+
+    def _rebuild_table(self):
+        self.table = build_ef_table(
+            self._proxy_scores(),
+            self._recall_probe(),
             target_recall=self.target_recall,
             ef_ladder=default_ef_ladder(self.k, ef_max=self.search_cfg.ef_cap),
         )
@@ -288,6 +335,7 @@ def build_ada_index(
     cov_mode: str = "full",
     beam: int = 1,
     use_distance_kernel: bool = False,
+    batch_hoisted: bool = False,
     ada_cfg: Optional[AdaEfConfig] = None,
     host_index: Optional[HNSWIndex] = None,
     seed: int = 0,
@@ -296,7 +344,9 @@ def build_ada_index(
 
     ``beam`` widens the online base-layer expansion (candidates popped per
     loop iteration); ``use_distance_kernel`` routes frontier scoring through
-    the fused Pallas kernel.  Both thread into every search this index runs
+    the fused Pallas kernel; ``batch_hoisted`` replaces the per-query
+    ``vmap(while_loop)`` with the single batched loop (cross-query frontier
+    contraction).  All three thread into every search this index runs
     (online queries, ef-table probing, proxy distance collection).
     """
     data = np.asarray(data, np.float32)
@@ -307,7 +357,7 @@ def build_ada_index(
     graph = device_graph(host_index.freeze())
     cfg = SearchConfig(
         k=k, ef_cap=ef_cap, metric=metric, beam=beam,
-        use_distance_kernel=use_distance_kernel,
+        use_distance_kernel=use_distance_kernel, batch_hoisted=batch_hoisted,
     )
     ada = ada_cfg or AdaEfConfig(estimator=EstimatorConfig(metric=metric))
 

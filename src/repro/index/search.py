@@ -13,7 +13,27 @@ TPU adaptation of HNSWlib's pointer-chasing best-first search:
   frontier, one bitonic split against the sorted run, log2(cap) merge stages)
   instead of re-sorting the full ``2 x ef_cap`` concatenation,
 - queries batch via ``vmap`` (JAX's while-loop batching rule applies per-element
-  masking, so early-finishing queries stop updating their state).
+  masking, so early-finishing queries stop updating their state) — or, with
+  ``SearchConfig.batch_hoisted``, via a hand-hoisted batched loop (below).
+
+Batch-hoisted loop (``SearchConfig.batch_hoisted``): the per-query
+``vmap(while_loop)`` lowers to a single loop whose body runs every op batched
+and then ``select``s the *entire* carried state per element — every iteration
+copies each query's ``(n+1,)`` visited bitmap through a select, and the MXU
+sees B tiny per-query frontier matvecs.  The hoisted loop runs the same
+algorithm as one explicit ``lax.while_loop`` over the batched state with a
+per-query ``done`` mask, but commits updates through *masked writes* instead
+of whole-state selects: finished queries' frontier slots emit ``-1`` ids (so
+their rows are compacted away and never admitted anywhere), their visited
+writes land on the spare slot, their W merge is a value-level no-op (all-+inf
+incoming keys leave a sorted run bit-identical), and only the C pop-shift and
+the scalar counters need an explicit ``where``.  Frontier scoring can then
+contract the whole batch's compacted ``(B*F, d)`` row panel against the query
+block as one cross-query MXU matmul (``ops.frontier_keys_batch``, fused
+Pallas kernel with owner-select epilogue and done-tile skipping) instead of B
+matvecs, and the partial bitonic merge runs once over the ``(B, cap)`` panel.
+Per-query state trajectories are identical to the vmap path, so results match
+bit-for-bit on tie-free keys; the vmap path stays as the golden oracle.
 
 Beam-batched expansion (``SearchConfig.beam``): sequential best-first pops one
 candidate, merges, and only then chooses the next pop, so each pop sees the
@@ -95,6 +115,7 @@ class SearchConfig:
     patience: int = 0             # >0 enables PiP early termination
     beam: int = 1                 # candidates popped + expanded per iteration
     use_distance_kernel: bool = False  # route frontier scoring through Pallas
+    batch_hoisted: bool = False   # single batched loop instead of vmap(while)
 
     def iters(self) -> int:
         return self.max_iters if self.max_iters > 0 else 4 * self.ef_cap + 64
@@ -207,32 +228,47 @@ def _next_pow2(x: int) -> int:
 
 
 def _bitonic_merge_network(keys: Array, ids: Array):
-    """Sort a *bitonic* (keys, ids) run ascending; length must be a power of 2.
+    """Sort *bitonic* (keys, ids) runs ascending along the last axis; the run
+    length must be a power of 2.  Arbitrary leading batch dims: the batched
+    search merges a whole ``(B, P)`` panel in one pass, and the per-query path
+    calls it on ``(P,)`` runs — the compare-exchanges are position-wise, so
+    both produce bit-identical rows.
 
     log2(P) compare-exchange stages at strides P/2 .. 1; each stage operates on
     contiguous 2s-blocks (reshape, no gathers), so it lowers to pure VPU
     selects on TPU.
     """
-    p = keys.shape[0]
+    lead = keys.shape[:-1]
+    p = keys.shape[-1]
     s = p // 2
     while s >= 1:
-        kk = keys.reshape(-1, 2, s)
-        ii = ids.reshape(-1, 2, s)
-        swap = kk[:, 0] > kk[:, 1]
+        kk = keys.reshape(lead + (-1, 2, s))
+        ii = ids.reshape(lead + (-1, 2, s))
+        swap = kk[..., 0, :] > kk[..., 1, :]
         keys = jnp.stack(
-            [jnp.where(swap, kk[:, 1], kk[:, 0]), jnp.where(swap, kk[:, 0], kk[:, 1])],
-            axis=1,
-        ).reshape(p)
+            [
+                jnp.where(swap, kk[..., 1, :], kk[..., 0, :]),
+                jnp.where(swap, kk[..., 0, :], kk[..., 1, :]),
+            ],
+            axis=-2,
+        ).reshape(lead + (p,))
         ids = jnp.stack(
-            [jnp.where(swap, ii[:, 1], ii[:, 0]), jnp.where(swap, ii[:, 0], ii[:, 1])],
-            axis=1,
-        ).reshape(p)
+            [
+                jnp.where(swap, ii[..., 1, :], ii[..., 0, :]),
+                jnp.where(swap, ii[..., 0, :], ii[..., 1, :]),
+            ],
+            axis=-2,
+        ).reshape(lead + (p,))
         s //= 2
     return keys, ids
 
 
 def _merge_sorted(keys: Array, ids: Array, new_keys: Array, new_ids: Array, cap: int):
     """Merge unsorted new entries into a sorted run, keeping the best ``cap``.
+
+    Operates along the last axis with arbitrary leading batch dims (the
+    batch-hoisted loop merges the whole ``(B, cap + F)`` panel at once; the
+    per-query vmap path passes 1-D runs and gets the same rows bit-for-bit).
 
     Partial bitonic merge instead of the previous concatenate + full
     ``(cap + F)`` lax.sort: sort the F new entries, pad both runs to
@@ -247,19 +283,20 @@ def _merge_sorted(keys: Array, ids: Array, new_keys: Array, new_ids: Array, cap:
     is identical, so search results differ only in which of two exactly
     equidistant ids survives a capacity cutoff.
     """
+    lead = keys.shape[:-1]
     nk, ni = jax.lax.sort((new_keys, new_ids), num_keys=1)
-    nk, ni = nk[:cap], ni[:cap]
-    m = nk.shape[0]
+    nk, ni = nk[..., :cap], ni[..., :cap]
+    m = nk.shape[-1]
     p = _next_pow2(cap)
-    ak = jnp.concatenate([keys, jnp.full((p - cap,), INF, keys.dtype)])
-    ai = jnp.concatenate([ids, jnp.full((p - cap,), -1, ids.dtype)])
-    bk = jnp.full((p,), INF, nk.dtype).at[:m].set(nk)[::-1]
-    bi = jnp.full((p,), -1, ni.dtype).at[:m].set(ni)[::-1]
+    ak = jnp.concatenate([keys, jnp.full(lead + (p - cap,), INF, keys.dtype)], axis=-1)
+    ai = jnp.concatenate([ids, jnp.full(lead + (p - cap,), -1, ids.dtype)], axis=-1)
+    bk = jnp.full(lead + (p,), INF, nk.dtype).at[..., :m].set(nk)[..., ::-1]
+    bi = jnp.full(lead + (p,), -1, ni.dtype).at[..., :m].set(ni)[..., ::-1]
     take_a = ak <= bk  # ties keep the incumbent entry (stable-sort behavior)
     mk = jnp.where(take_a, ak, bk)
     mi = jnp.where(take_a, ai, bi)
     mk, mi = _bitonic_merge_network(mk, mi)
-    return mk[:cap], mi[:cap]
+    return mk[..., :cap], mi[..., :cap]
 
 
 def _expand(
@@ -357,6 +394,177 @@ def _not_done(s: SearchState) -> Array:
 
 
 # --------------------------------------------------------------------------
+# batch-hoisted loop (SearchConfig.batch_hoisted)
+# --------------------------------------------------------------------------
+
+
+def _expand_batch(
+    g: DeviceGraph,
+    qs: Array,
+    s: SearchState,
+    cfg: SearchConfig,
+    sign: float,
+    collect: bool,
+    lmax: int,
+    active: Array,
+):
+    """One iteration of the batch-hoisted loop: :func:`_expand` over a whole
+    batched state, with per-query ``active`` masking through writes.
+
+    Mirrors ``_expand`` op for op so per-query trajectories are bit-identical
+    to the vmap path: inactive queries pop nothing (their frontier emits
+    ``-1`` ids, so every downstream admission/merge/collect is a value-level
+    no-op and their counters add zero), and only the C pop-shift needs an
+    explicit ``where`` — W is left bit-identical by merging all-+inf keys
+    into a sorted run, and visited writes land on the spare slot.  The
+    frontier is scored either by the cross-query fused kernel over the
+    compacted ``(B*F,)`` row panel, or by the vmapped jnp scorer (the exact
+    function the per-query path uses, for the bit-exact golden comparison).
+    """
+    n = g.vectors.shape[0]
+    beam = cfg.beam
+    bsz = qs.shape[0]
+    rows = jnp.arange(bsz)
+    bound = s.rk[rows, s.ef_dyn - 1]
+    pk = s.ck[:, :beam]
+    pi = s.ci[:, :beam]
+    pvalid = (
+        jnp.isfinite(pk) & (pk <= bound[:, None]) & (pi >= 0) & active[:, None]
+    )
+    ck = jnp.concatenate(
+        [s.ck[:, beam:], jnp.full((bsz, beam), INF, s.ck.dtype)], axis=-1
+    )
+    ci = jnp.concatenate(
+        [s.ci[:, beam:], jnp.full((bsz, beam), -1, s.ci.dtype)], axis=-1
+    )
+
+    nbrs = g.base_adj[jnp.maximum(pi, 0)]                        # (B, beam, M0)
+    nbrs = jnp.where(pvalid[:, :, None], nbrs, -1).reshape(bsz, -1)
+    vis = jnp.take_along_axis(
+        s.visited, jnp.minimum(jnp.maximum(nbrs, 0), n - 1), axis=-1
+    )
+    valid = (nbrs >= 0) & ~vis
+    if beam > 1:
+        eq = (nbrs[:, :, None] == nbrs[:, None, :]) & valid[:, None, :]
+        dup = jnp.tril(eq, k=-1).any(axis=-1)
+        valid = valid & ~dup
+    write_idx = jnp.where(valid, nbrs, n)
+    visited = s.visited.at[rows[:, None], write_idx].set(True)
+
+    ids_new = jnp.where(valid, nbrs, -1)
+    if cfg.use_distance_kernel:
+        keys = ops.frontier_keys_batch(
+            ids_new, qs, g.vectors, metric=cfg.metric, use_kernel=True
+        )
+    else:
+        keys = jax.vmap(
+            lambda ids1, q1: _gather_keys(g, q1, ids1, sign)[0]
+        )(ids_new, qs)
+    vals = keys * sign
+    ndist = s.ndist + jnp.sum(valid, axis=-1).astype(jnp.int32)
+
+    admit_c = valid & (keys < bound[:, None])
+    admit_w = admit_c & g.alive[jnp.maximum(nbrs, 0)]
+
+    keys_w = jnp.where(admit_w, keys, INF)
+    keys_c = jnp.where(admit_c, keys, INF)
+
+    rk, ri = _merge_sorted(s.rk, s.ri, keys_w, ids_new, s.rk.shape[-1])
+    ck, ci = _merge_sorted(ck, ci, keys_c, ids_new, ck.shape[-1])
+    # undo the pop-shift for inactive queries (the only state leaf whose
+    # batched update is not already a value-level no-op for them)
+    ck = jnp.where(active[:, None], ck, s.ck)
+    ci = jnp.where(active[:, None], ci, s.ci)
+
+    dbuf, dcount = s.dbuf, s.dcount
+    if collect:
+        offs = jnp.cumsum(valid.astype(jnp.int32), axis=-1) - 1
+        pos = s.dcount[:, None] + offs
+        ok = valid & (pos < lmax)
+        dbuf = s.dbuf.at[rows[:, None], jnp.where(ok, pos, lmax)].set(
+            jnp.where(ok, vals, 0.0), mode="drop"
+        )
+        dcount = jnp.minimum(
+            s.dcount + jnp.sum(valid, axis=-1).astype(jnp.int32), lmax
+        )
+
+    return s._replace(
+        ck=ck,
+        ci=ci,
+        rk=rk,
+        ri=ri,
+        visited=visited,
+        ndist=ndist,
+        iters=s.iters + active.astype(jnp.int32),
+        dbuf=dbuf,
+        dcount=dcount,
+    )
+
+
+def _active_mask(
+    s: SearchState, cfg: SearchConfig, phase_a: bool, patience: bool
+) -> Array:
+    """Per-query continue predicate of the batched loop — the exact conjunction
+    each per-query policy evaluates in its vmapped ``cond``."""
+    rows = jnp.arange(s.rk.shape[0])
+    bound = s.rk[rows, s.ef_dyn - 1]
+    go = (s.ck[:, 0] <= bound) & jnp.isfinite(s.ck[:, 0])
+    go = go & (s.iters < cfg.iters())
+    if phase_a:
+        go = go & (s.dcount < s.lgoal)
+    if patience and cfg.patience > 0:
+        go = go & (s.stale < cfg.patience)
+    return go
+
+
+def _run_hoisted(
+    g: DeviceGraph,
+    qs: Array,
+    s: SearchState,
+    cfg: SearchConfig,
+    sign: float,
+    *,
+    collect: bool,
+    lmax: int,
+    phase_a: bool = False,
+    patience: bool = False,
+) -> SearchState:
+    """Drive a batched :class:`SearchState` to joint termination in one
+    ``lax.while_loop`` (the batch-hoisted core shared by every policy).
+
+    The per-query active mask is carried alongside the state so each
+    iteration evaluates the termination predicate once (the vmapped loop's
+    batching rule evaluates its cond per iteration too, but our body would
+    otherwise re-derive the same mask a second time)."""
+
+    def cond(carry):
+        _, act = carry
+        return jnp.any(act)
+
+    def body(carry):
+        s, act = carry
+        s2 = _expand_batch(g, qs, s, cfg, sign, collect, lmax, act)
+        if patience and cfg.patience > 0:
+            rows = jnp.arange(s2.rk.shape[0])
+            bound_k = s2.rk[rows, jnp.minimum(cfg.k, s2.ef_dyn) - 1]
+            improved = bound_k < s.bound_prev
+            s2 = s2._replace(
+                stale=jnp.where(
+                    act, jnp.where(improved, 0, s.stale + 1), s.stale
+                ),
+                bound_prev=jnp.where(
+                    act, jnp.minimum(bound_k, s.bound_prev), s.bound_prev
+                ),
+            )
+        return s2, _active_mask(s2, cfg, phase_a, patience)
+
+    s, _ = jax.lax.while_loop(
+        cond, body, (s, _active_mask(s, cfg, phase_a, patience))
+    )
+    return s
+
+
+# --------------------------------------------------------------------------
 # initialization
 # --------------------------------------------------------------------------
 
@@ -415,8 +623,10 @@ def _init_state(
 
 
 def _extract(s: SearchState, cfg: SearchConfig, sign: float) -> SearchResult:
-    rk = s.rk[: cfg.k]
-    ri = s.ri[: cfg.k]
+    # last-axis slicing: works on a single state (vmap path) and on a whole
+    # batched state (batch-hoisted path) alike
+    rk = s.rk[..., : cfg.k]
+    ri = s.ri[..., : cfg.k]
     return SearchResult(
         ids=jnp.where(jnp.isfinite(rk), ri, -1),
         dists=rk * sign,
@@ -442,6 +652,15 @@ def search(g: DeviceGraph, queries: Array, ef: Array, cfg: SearchConfig) -> Sear
     queries = prepare_queries(queries, cfg.metric)
     ef_b = jnp.broadcast_to(jnp.asarray(ef, jnp.int32), queries.shape[:1])
     ef_b = jnp.clip(ef_b, cfg.k, cfg.ef_cap)
+
+    if cfg.batch_hoisted:
+        s = jax.vmap(lambda q, e: _init_state(g, q, cfg, e, lmax=1, hops=1))(
+            queries, ef_b
+        )
+        s = _run_hoisted(
+            g, queries, s, cfg, sign, collect=False, lmax=1, patience=True
+        )
+        return _extract(s, cfg, sign)
 
     def one(q, ef1):
         s = _init_state(g, q, cfg, ef1, lmax=1, hops=1)
@@ -521,6 +740,14 @@ def _phase_a_batch(g: DeviceGraph, queries: Array, cfg: SearchConfig, ada: AdaEf
     lmax = ada.buf(m0)
     ef_inf = jnp.asarray(cfg.ef_cap, jnp.int32)
 
+    if cfg.batch_hoisted:
+        s = jax.vmap(
+            lambda q: _init_state(g, q, cfg, ef_inf, lmax=lmax, hops=ada.hops)
+        )(queries)
+        return _run_hoisted(
+            g, queries, s, cfg, sign, collect=True, lmax=lmax, phase_a=True
+        )
+
     def one(q):
         s = _init_state(g, q, cfg, ef_inf, lmax=lmax, hops=ada.hops)
 
@@ -574,6 +801,11 @@ def _phase_b_batch(
     dynamically through ``ef_dyn``."""
     sign = key_sign(cfg.metric)
     lmax = states.dbuf.shape[-1]
+
+    if cfg.batch_hoisted:
+        s = states._replace(ef_dyn=ef.astype(jnp.int32))
+        s = _run_hoisted(g, queries, s, cfg, sign, collect=False, lmax=lmax)
+        return _extract(s, cfg, sign)._replace(ef_used=ef)
 
     def one(s: SearchState, q, ef1):
         s = s._replace(ef_dyn=ef1)

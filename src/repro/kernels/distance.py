@@ -18,6 +18,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from .tiling import round_up
+
 Array = jax.Array
 
 DEFAULT_BB = 128  # query-tile rows (MXU-aligned)
@@ -54,10 +56,7 @@ def pairwise_distance(
     bb = min(bb, max(8, b))
     bn = min(bn, max(128, n))
 
-    def rup(x, m):
-        return (x + m - 1) // m * m
-
-    bp, np_, dp = rup(b, bb), rup(n, bn), rup(d, 128)
+    bp, np_, dp = round_up(b, bb), round_up(n, bn), round_up(d, 128)
     qp = jnp.pad(q, ((0, bp - b), (0, dp - d)))
     vp = jnp.pad(v, ((0, np_ - n), (0, dp - d)))
 

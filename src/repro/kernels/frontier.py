@@ -1,25 +1,44 @@
-"""Fused frontier-distance Pallas kernel (beam-batched HNSW expansion).
+"""Fused frontier-distance Pallas kernels (beam-batched HNSW expansion).
 
-The beamed base-layer search pops ``beam`` candidates per iteration and must
-score their gathered adjacency rows — a ``(B, F)`` panel of candidate ids per
-query batch (``F = beam * M0``, ``-1`` = padded / visited-masked).  This kernel
-fuses the per-query frontier contraction with the metric epilogue and the
-id mask:
+The base-layer search must score gathered adjacency rows — candidate ids with
+``-1`` marking padded / visited-masked slots — fusing the contraction with the
+metric epilogue and the id mask:
 
-    keys[b, f] = +inf                      if ids[b, f] < 0
-               = 1 - <q_b, v_ids[b,f]>     cosine distance
-               = -<q_b, v_ids[b,f]>        similarity metrics (key orientation)
+    keys[slot] = +inf                      if ids[slot] < 0
+               = 1 - <q_owner, v_id>       cosine distance
+               = -<q_owner, v_id>          similarity metrics (key orientation)
 
 so the search loop consumes *keys* (smaller = better) directly and never
-materializes unmasked distances.  The candidate rows are gathered outside the
-kernel (XLA gather, amortized over the whole frontier); each grid program then
-contracts a ``(bb, bf, d)`` row panel against its ``(bb, d)`` query panel as a
-batched MXU matvec with the epilogue fused.
+materializes unmasked distances.  Candidate rows are gathered outside the
+kernel (XLA gather, amortized over the whole frontier); in-kernel HBM->VMEM
+DMA by id is the ROADMAP follow-up.  Two kernels share the epilogue:
 
-Tiling: grid over (B / bb, F / bf); d is kept whole per panel (padded to a
-lane multiple).  A 8 x 128 x 512 fp32 row panel is 2 MiB — row panel + query
-panel + output tile fit comfortably in VMEM.  Cross-query batching of the
-frontier contraction (one (F, d) x (d, B) matmul) is a ROADMAP follow-up.
+**Per-query** (:func:`frontier_distance`): a ``(B, F)`` id panel, one grid
+program per ``(bb, bf)`` tile contracting a ``(bb, bf, d)`` row panel against
+its ``(bb, d)`` query panel as a batched MXU matvec.  This is the shape the
+per-query ``vmap`` search loop traces (``bb == 1`` there), so at serving
+batch sizes the MXU sees B tiny matvecs.
+
+**Cross-query** (:func:`frontier_batch_distance`): the batch-hoisted loop
+flattens the whole batch's frontier to ``(R,)`` compacted rows (valid rows
+first — see ``ops.compact_frontier``) with an ``owners`` array naming each
+row's query, and contracts the row panel against the *entire* query block as
+one ``(R, d) x (d, B)`` MXU matmul — queries are the contraction minor.  The
+epilogue selects each row's owner column with an in-register one-hot reduce,
+applies the metric, and masks ``ids < 0`` to ``+inf``.  A scalar ``nvalid``
+(SMEM) lets grid programs wholly past the compacted valid prefix skip the
+matmul and emit ``+inf`` directly, so converged queries stop costing MXU
+cycles even though the panel shape is static.
+
+Cross-query tiling and VMEM budget: the grid is 1-D over ``R / rt`` row
+tiles (``rt`` a lane multiple, default 256); ``d`` is kept whole per panel
+(padded to 128 lanes) and the query block is resident across tiles.  Ids,
+owners, and the output keys travel in ``(rt / 128, 128)`` lane-packed
+layout; the score tile reshapes ``(rt, Bp) -> (rt/128, 128, Bp)`` (a free
+sublane split) for the owner one-hot reduce.  Per program at the default
+``rt = 256``, ``d = 512``, ``B = 128``: row panel 512 KiB + query block
+256 KiB + score tile 128 KiB + ids/owners/out ~6 KiB ≈ 0.9 MiB of the
+~16 MiB VMEM; even ``d = 4096`` with ``B = 512`` stays under 13 MiB.
 """
 from __future__ import annotations
 
@@ -28,11 +47,16 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .tiling import round_up
 
 Array = jax.Array
 
 DEFAULT_BB = 8    # query rows per tile (fp32 sublane multiple)
 DEFAULT_BF = 128  # frontier slots per tile (lane multiple)
+DEFAULT_RT = 256  # cross-query rows per tile (lane multiple)
+_LANE = 128
 
 
 def _frontier_kernel(ids_ref, q_ref, panel_ref, out_ref, *, subtract_from_one: bool):
@@ -68,17 +92,14 @@ def frontier_distance(
     b, f = ids.shape
     d = q.shape[-1]
 
-    def rup(x, m):
-        return (x + m - 1) // m * m
-
     # let the query tile shrink to the actual batch: under the search loop's
     # per-query vmap this traces with b=1, and padding 1 -> 8 would gather and
     # contract 8x the rows per iteration for nothing
     bb = min(bb, b)
     # frontier tile: at most the (lane-padded) frontier, kept a 128-multiple
-    bf = rup(min(bf, rup(f, 128)), 128)
+    bf = round_up(min(bf, round_up(f, _LANE)), _LANE)
 
-    bp, fp, dp = rup(b, bb), rup(f, bf), rup(d, 128)
+    bp, fp, dp = round_up(b, bb), round_up(f, bf), round_up(d, _LANE)
     ids_p = jnp.pad(ids.astype(jnp.int32), ((0, bp - b), (0, fp - f)), constant_values=-1)
     q_p = jnp.pad(q.astype(jnp.float32), ((0, bp - b), (0, dp - d)))
     panel = vectors[jnp.maximum(ids_p, 0)].astype(jnp.float32)      # (bp, fp, d)
@@ -99,3 +120,96 @@ def frontier_distance(
         interpret=interpret,
     )(ids_p, q_p, panel)
     return out[:b, :f]
+
+
+def _frontier_batch_kernel(
+    nvalid_ref, ids_ref, own_ref, q_ref, panel_ref, out_ref,
+    *, subtract_from_one: bool, rt: int
+):
+    i = pl.program_id(0)
+    nvalid = nvalid_ref[0]
+
+    @pl.when(i * rt < nvalid)
+    def _score():
+        ids = ids_ref[...]                              # (rt/128, 128) int32
+        own = own_ref[...]                              # (rt/128, 128) int32
+        q = q_ref[...].astype(jnp.float32)              # (bp, dp)
+        panel = panel_ref[...].astype(jnp.float32)      # (rt, dp)
+        sims = jax.lax.dot_general(
+            panel,
+            q,
+            dimension_numbers=(((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )                                               # (rt, bp)
+        bp = q.shape[0]
+        s3 = sims.reshape(ids.shape[0], ids.shape[1], bp)   # free sublane split
+        sel = own[:, :, None] == jax.lax.broadcasted_iota(
+            jnp.int32, (1, 1, bp), 2
+        )
+        vals = jnp.sum(jnp.where(sel, s3, 0.0), axis=-1)    # owner column pick
+        keys = (1.0 - vals) if subtract_from_one else -vals
+        out_ref[...] = jnp.where(ids >= 0, keys, jnp.inf)
+
+    @pl.when(i * rt >= nvalid)
+    def _skip():
+        # whole tile past the compacted valid prefix: no gather rows to score
+        out_ref[...] = jnp.full(out_ref.shape, jnp.inf, out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("metric", "rt", "interpret"))
+def frontier_batch_distance(
+    ids: Array,
+    owners: Array,
+    nvalid: Array,
+    q: Array,
+    vectors: Array,
+    *,
+    metric: str = "cos_dist",
+    rt: int = DEFAULT_RT,
+    interpret: bool = False,
+) -> Array:
+    """Cross-query fused frontier scoring over a compacted flat row panel.
+
+    ``ids`` (R,) int32 compacted candidate ids (valid prefix, ``-1`` tail),
+    ``owners`` (R,) int32 owning-query index per row (in ``[0, B)``),
+    ``nvalid`` () int32 length of the valid prefix (tiles beyond it are
+    skipped), ``q`` (B, d) prepared queries, ``vectors`` (n, d) prepared
+    table.  Returns (R,) keys (smaller = better, masked -> +inf).
+    """
+    r = ids.shape[0]
+    b, d = q.shape
+    rt = max(_LANE, min(round_up(rt, _LANE), round_up(r, _LANE)))
+    rp, bp, dp = round_up(r, rt), round_up(b, 8), round_up(d, _LANE)
+
+    ids_p = jnp.pad(ids.astype(jnp.int32), (0, rp - r), constant_values=-1)
+    own_p = jnp.pad(owners.astype(jnp.int32), (0, rp - r))
+    q_p = jnp.pad(q.astype(jnp.float32), ((0, bp - b), (0, dp - d)))
+    panel = vectors[jnp.maximum(ids_p, 0)].astype(jnp.float32)       # (rp, d)
+    panel = jnp.pad(panel, ((0, 0), (0, dp - d)))
+    rtt = rt // _LANE
+
+    out = pl.pallas_call(
+        functools.partial(
+            _frontier_batch_kernel,
+            subtract_from_one=(metric == "cos_dist"),
+            rt=rt,
+        ),
+        grid=(rp // rt,),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),         # nvalid (1,)
+            pl.BlockSpec((rtt, _LANE), lambda i: (i, 0)),  # ids
+            pl.BlockSpec((rtt, _LANE), lambda i: (i, 0)),  # owners
+            pl.BlockSpec((bp, dp), lambda i: (0, 0)),      # resident q block
+            pl.BlockSpec((rt, dp), lambda i: (i, 0)),      # row panel
+        ],
+        out_specs=pl.BlockSpec((rtt, _LANE), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rp // _LANE, _LANE), jnp.float32),
+        interpret=interpret,
+    )(
+        jnp.asarray(nvalid, jnp.int32).reshape(1),
+        ids_p.reshape(rp // _LANE, _LANE),
+        own_p.reshape(rp // _LANE, _LANE),
+        q_p,
+        panel,
+    )
+    return out.reshape(rp)[:r]

@@ -17,8 +17,10 @@ from .binscore import binscore as _binscore_kernel
 from .distance import pairwise_distance as _distance_kernel
 from .flash_attention import decode_attention as _decode_kernel
 from .flash_attention import flash_attention as _flash_kernel
+from .frontier import frontier_batch_distance as _frontier_batch_kernel
 from .frontier import frontier_distance as _frontier_kernel
 from .qform import quadratic_form as _qform_kernel
+from .tiling import round_up  # noqa: F401  (re-export: the shared helper)
 
 Array = jax.Array
 
@@ -54,6 +56,61 @@ def frontier_keys(ids, q, vectors, *, metric: str = "cos_dist",
     else:
         out = ref.frontier_ref(ids2, q2, vectors, metric=metric)
     return out[0] if squeeze else out
+
+
+def compact_frontier(ids: Array):
+    """Stable-partition a flat frontier so valid ids form a contiguous prefix.
+
+    ``ids`` (R,) int32 with ``-1`` = padded / visited / done-query slots.
+    Returns ``(compact_ids, owners, dest, nvalid)`` where ``dest`` (R,) maps
+    each original slot to its compacted position (``compact[dest[i]] ==
+    ids[i]``; un-compact any per-row output with ``out_compact[dest]``),
+    ``owners`` carries the original slot index of each compacted row, and
+    ``nvalid`` () int32 counts the valid prefix.  Pure cumsum + scatter —
+    O(R), no sort — so finished queries' all ``-1`` rows cost one pass and
+    land at the tail where the cross-query kernel skips whole tiles.
+    """
+    valid = ids >= 0
+    nvalid = jnp.sum(valid.astype(jnp.int32))
+    up = jnp.cumsum(valid.astype(jnp.int32)) - 1
+    down = nvalid + jnp.cumsum((~valid).astype(jnp.int32)) - 1
+    dest = jnp.where(valid, up, down)
+    slot = jnp.arange(ids.shape[0], dtype=jnp.int32)
+    compact_ids = jnp.zeros_like(ids).at[dest].set(ids)
+    owners = jnp.zeros_like(slot).at[dest].set(slot)
+    return compact_ids, owners, dest, nvalid
+
+
+def frontier_keys_batch(ids, q, vectors, *, metric: str = "cos_dist",
+                        use_kernel: bool = False,
+                        interpret: Optional[bool] = None) -> Array:
+    """Cross-query masked frontier keys for the batch-hoisted search loop.
+
+    ``ids`` (B, F) gathered candidate ids (-1 = padded / visited / done
+    query), ``q`` (B, d) prepared queries, ``vectors`` (n, d) prepared table.
+    Returns (B, F) keys (smaller = better, masked -> +inf).
+
+    Unlike :func:`frontier_keys` (one ``(F, d)`` contraction per query), the
+    whole batch is flattened to ``(B*F,)`` rows, compacted so valid rows form
+    a prefix (see :func:`compact_frontier` — finished queries' ``-1`` rows
+    sink to the tail and contribute no fresh gather rows, their panel slots
+    re-read row 0), and scored as **one** ``(B*F, d) x (d, B)`` MXU matmul
+    with the per-row owner select fused into the kernel epilogue.
+    """
+    b, f = ids.shape
+    flat = ids.reshape(-1).astype(jnp.int32)
+    compact_ids, owner_slots, dest, nvalid = compact_frontier(flat)
+    owners = owner_slots // f  # owning query of each compacted row
+    if use_kernel:
+        keys_c = _frontier_batch_kernel(
+            compact_ids, owners, nvalid, q, vectors, metric=metric,
+            interpret=(not _ON_TPU) if interpret is None else interpret,
+        )
+    else:
+        keys_c = ref.frontier_batch_ref(
+            compact_ids, owners, q, vectors, metric=metric
+        )
+    return keys_c[dest].reshape(b, f)
 
 
 def quadratic_form(q, sigma, *, use_kernel: bool = False,

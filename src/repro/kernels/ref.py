@@ -36,6 +36,26 @@ def frontier_ref(ids: Array, q: Array, vectors: Array, *, metric: str = "cos_dis
     return jnp.where(ids >= 0, keys, jnp.inf)
 
 
+def frontier_batch_ref(
+    ids: Array, owners: Array, q: Array, vectors: Array, *, metric: str = "cos_dist"
+) -> Array:
+    """Cross-query masked frontier keys over a flat row panel.
+
+    ids (R,) int32 candidate ids (-1 = masked), owners (R,) int32 owning-query
+    index in ``[0, B)``, q (B, d), vectors (n, d) -> (R,) float32 keys
+    (smaller = better, masked -> +inf).  Semantics of the cross-query Pallas
+    kernel: each row is scored against its owner's query only; row order is
+    arbitrary (the compaction in ``ops.frontier_keys_batch`` is a pure
+    permutation).  Inputs are prepared (normalized for cosine).
+    """
+    safe = jnp.maximum(ids, 0)
+    rows = vectors[safe].astype(jnp.float32)                        # (R, d)
+    qo = q[jnp.clip(owners, 0, q.shape[0] - 1)].astype(jnp.float32)  # (R, d)
+    sims = jnp.einsum("rd,rd->r", rows, qo)
+    keys = (1.0 - sims) if metric == "cos_dist" else -sims
+    return jnp.where(ids >= 0, keys, jnp.inf)
+
+
 def qform_ref(q: Array, sigma: Array) -> Array:
     """Quadratic form q Sigma q^T, batched: q (B, d), sigma (d, d) -> (B,)."""
     q = q.astype(jnp.float32)

@@ -1,0 +1,12 @@
+"""Leaf helpers shared by the Pallas kernel modules and their dispatchers.
+
+Kept import-free of the rest of the package: ``ops`` imports every kernel
+module and re-exports these, so anything both sides need must live below
+them in the import graph.
+"""
+from __future__ import annotations
+
+
+def round_up(x: int, m: int) -> int:
+    """Round ``x`` up to the next multiple of ``m`` (kernel tile padding)."""
+    return (x + m - 1) // m * m

@@ -76,6 +76,16 @@ class RouterConfig:
     est_lmax: int = 0                # collection budget |D|; 0 -> full (lossless)
     ef_margin: float = 1.0           # scale estimates up (guard for lossy est)
     min_shape: int = 8               # smallest padded bucket shape
+    batch_hoisted: Optional[bool] = None  # force the batch-hoisted loop on
+    #   every dispatched search (estimation pass + all tier resumes);
+    #   None inherits the base SearchConfig's flag
+    est_matched_table: bool = True   # lossy estimation looks efs up in a
+    #   table built from proxies scored at the same truncated budget
+    #   (requires the owner to supply a builder — AdaEfIndex.router does).
+    #   Removes the truncation bias, which *raises* routed work toward the
+    #   monolithic level in exchange for recall at the unbiased estimates:
+    #   set False to keep the old biased-low estimates (fewer ndist, lower
+    #   tail latency, recall slightly under the monolithic path).
 
 
 class QueryRouter:
@@ -95,17 +105,23 @@ class QueryRouter:
         search_cfg: SearchConfig,
         ada_cfg: AdaEfConfig = AdaEfConfig(),
         router_cfg: Optional[RouterConfig] = None,
+        est_table_builder=None,
     ):
         self.graph = graph
         self.stats = stats
         self.table = table
-        self.base_cfg = search_cfg
         self.ada_cfg = ada_cfg
         self.router_cfg = router_cfg or RouterConfig()
+        if self.router_cfg.batch_hoisted is not None:
+            search_cfg = dataclasses.replace(
+                search_cfg, batch_hoisted=self.router_cfg.batch_hoisted
+            )
+        self.base_cfg = search_cfg
         m0 = graph.base_adj.shape[1]
         # est_lmax caps the phase-A collection goal |D| (the dominant cost of
         # estimation): the collected prefix skews toward closer distances, so
-        # scores bias "easy" — callers pair it with ef_margin > 1.
+        # scores bias "easy" — compensated by an estimation-matched table
+        # (below) and/or ef_margin > 1.
         self.est_ada = ada_cfg
         if self.router_cfg.est_lmax > 0:
             self.est_ada = dataclasses.replace(
@@ -114,8 +130,32 @@ class QueryRouter:
         self.est_cfg = estimation_config(
             search_cfg, m0, self.est_ada, self.router_cfg.est_cap
         )
+        # Effective lossiness, not nominal: an est_lmax at or above the full
+        # collection budget, or an est_cap at or above the lossless capacity,
+        # leaves phase A bit-exact and needs no compensation.
+        est_lossy = self.est_ada.buf(m0) < ada_cfg.buf(m0) or (
+            self.est_cfg.ef_cap
+            < estimation_config(search_cfg, m0, self.est_ada, 0).ef_cap
+        )
+        # Estimation-matched ef table (ROADMAP): a lossy estimation budget
+        # truncates the collected distance list, so scores are computed in
+        # different units than the full-budget table was built from.  When the
+        # owner supplies a builder (``AdaEfIndex.router`` passes
+        # ``estimation_table``), re-score the proxies at exactly this router's
+        # estimation budget and look efs up in *that* table; with lossless
+        # estimation the full-budget table is already exact, so fall back.
+        self.est_matched = (
+            est_lossy
+            and est_table_builder is not None
+            and self.router_cfg.est_matched_table
+        )
+        self.est_table = (
+            est_table_builder(self.est_cfg, self.est_ada)
+            if self.est_matched
+            else table
+        )
         self.tiers: Tuple[TierSpec, ...] = tier_ladder(
-            search_cfg, self.router_cfg.tier_efs, self.router_cfg.beam_mode
+            self.base_cfg, self.router_cfg.tier_efs, self.router_cfg.beam_mode
         )
         self._tier_efs = tuple(t.ef for t in self.tiers)
 
@@ -127,7 +167,7 @@ class QueryRouter:
             self.graph,
             jnp.asarray(queries),
             self.stats,
-            self.table,
+            self.est_table,
             jnp.asarray(target_recall, jnp.float32),
             self.est_cfg,
             self.est_ada,
@@ -182,9 +222,11 @@ class QueryRouter:
         )
         t0 = time.perf_counter()
         ef_np, states = self.estimate(q_pad, target_recall)
-        est_ndist = np.asarray(states.ndist)
-        jax.block_until_ready(est_ndist)
+        # stamp only after the whole estimation state materialized, so the
+        # wall covers execution (not just dispatch + the ef pull)
+        jax.block_until_ready(states)
         est_wall = time.perf_counter() - t0
+        est_ndist = np.asarray(states.ndist)
 
         # ---- bucket by tier, resume each bucket at its own capacity -------
         # Dispatch every bucket before pulling any result: JAX async dispatch
@@ -208,10 +250,13 @@ class QueryRouter:
         parts = []
         tier_stats = []
         for tier, idx, shape, res_dev, t0 in dispatched:
-            res = jax.tree_util.tree_map(np.asarray, res_dev)
-            # dispatch -> materialized; tiers overlap on device, so these
-            # walls do not sum to the batch wall-clock
+            # block on the device outputs *before* stamping: the wall then
+            # measures dispatch -> execution complete rather than whenever the
+            # host got around to pulling the arrays.  Tiers still overlap on
+            # device, so these walls do not sum to the batch wall-clock.
+            jax.block_until_ready(res_dev)
             wall = time.perf_counter() - t0
+            res = jax.tree_util.tree_map(np.asarray, res_dev)
             parts.append((idx, res))
             tier_stats.append(
                 TierStats(
@@ -231,6 +276,7 @@ class QueryRouter:
             est_cap=self.est_cfg.ef_cap,
             est_ndist_total=int(est_ndist[:batch].sum()),
             est_wall_s=est_wall,
+            est_matched=self.est_matched,
             tiers=tier_stats,
             total_wall_s=time.perf_counter() - t_start,
         )

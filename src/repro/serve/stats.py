@@ -19,8 +19,9 @@ class TierStats:
     count: int             # real queries routed to this tier
     padded_to: int         # fixed batch shape the bucket was padded to
     ndist_total: int       # sum of per-query ndist (est + search), real rows
-    wall_s: float          # dispatch -> results materialized; tiers overlap
-                           # on device, so tier walls do not sum to total
+    wall_s: float          # dispatch -> block_until_ready on the bucket
+                           # outputs (execution, not just dispatch); tiers
+                           # overlap on device, so walls do not sum to total
 
     def as_dict(self) -> Dict:
         return dataclasses.asdict(self)
@@ -32,7 +33,8 @@ class RouterStats:
     est_shape: int                # padded shape of the estimation pass
     est_cap: int                  # estimation-pass state capacity
     est_ndist_total: int          # estimation-pass ndist over real queries
-    est_wall_s: float             # estimation pass wall-clock
+    est_wall_s: float             # estimation pass wall-clock (blocked)
+    est_matched: bool = False     # efs looked up in an estimation-matched table
     tiers: List[TierStats] = dataclasses.field(default_factory=list)
     total_wall_s: float = 0.0     # end-to-end route() wall-clock
 

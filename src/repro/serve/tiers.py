@@ -49,7 +49,11 @@ def tier_ladder(
     estimated ef has a tier.  Each tier pins ``max_iters`` to the *base*
     budget: a tier search must never terminate earlier than the monolithic
     search would purely because its capacity-derived iteration default is
-    smaller.
+    smaller.  Every rung inherits the base config's ``batch_hoisted`` loop
+    mode (``RouterConfig.batch_hoisted`` bakes its override into the base
+    before the ladder is built) — a resumed tier bucket is exactly the shape
+    the batch-hoisted loop is built for: one padded batch of same-capacity
+    states driven to joint termination.
     """
     if beam_mode not in (BEAM_AUTO, BEAM_FIXED):
         raise ValueError(f"beam_mode={beam_mode!r} not in ('auto', 'fixed')")

@@ -51,6 +51,70 @@ def test_frontier_kernel_all_masked_row():
     assert np.isposinf(np.asarray(got)).all()
 
 
+@pytest.mark.parametrize("b,f,d", [(8, 64, 32), (13, 48, 100), (3, 200, 64)])
+@pytest.mark.parametrize("metric", ["cos_dist", "ip"])
+def test_frontier_batch_kernel(b, f, d, metric):
+    """Cross-query fused kernel (compaction + owner-select epilogue) vs the
+    per-query panel oracle — padded ids, non-tile-multiple B, both metrics."""
+    n = 777
+    vec = jnp.asarray(RNG.normal(0, 1, (n, d)).astype(np.float32))
+    q = jnp.asarray(RNG.normal(0, 1, (b, d)).astype(np.float32))
+    ids = RNG.integers(0, n, (b, f)).astype(np.int32)
+    ids[:, ::5] = -1
+    ids[:, 3::7] = -1
+    ids[0] = -1  # a converged query: whole row masked
+    ids = jnp.asarray(ids)
+    got = ops.frontier_keys_batch(
+        ids, q, vec, metric=metric, use_kernel=True, interpret=True
+    )
+    want = ref.frontier_ref(ids, q, vec, metric=metric)
+    masked = np.asarray(ids) < 0
+    assert np.isposinf(np.asarray(got)[masked]).all()
+    np.testing.assert_allclose(
+        np.asarray(got)[~masked], np.asarray(want)[~masked], rtol=3e-4, atol=3e-4
+    )
+
+
+def test_frontier_batch_kernel_all_masked():
+    """nvalid == 0: every grid tile takes the skip path and emits +inf."""
+    vec = jnp.asarray(RNG.normal(0, 1, (50, 32)).astype(np.float32))
+    q = jnp.asarray(RNG.normal(0, 1, (4, 32)).astype(np.float32))
+    ids = jnp.full((4, 64), -1, jnp.int32)
+    got = ops.frontier_keys_batch(ids, q, vec, use_kernel=True, interpret=True)
+    assert np.isposinf(np.asarray(got)).all()
+
+
+def test_frontier_batch_ref_matches_panel_oracle():
+    """Flat (row, owner) oracle == per-query panel oracle on the same slots."""
+    n, d, b, f = 300, 40, 6, 32
+    vec = jnp.asarray(RNG.normal(0, 1, (n, d)).astype(np.float32))
+    q = jnp.asarray(RNG.normal(0, 1, (b, d)).astype(np.float32))
+    ids = jnp.asarray(RNG.integers(-1, n, (b, f)).astype(np.int32))
+    flat = ids.reshape(-1)
+    owners = jnp.arange(b * f, dtype=jnp.int32) // f
+    got = ref.frontier_batch_ref(flat, owners, q, vec).reshape(b, f)
+    want = ref.frontier_ref(ids, q, vec)
+    fin = np.isfinite(np.asarray(want))
+    assert (fin == np.isfinite(np.asarray(got))).all()
+    np.testing.assert_allclose(
+        np.asarray(got)[fin], np.asarray(want)[fin], rtol=1e-5, atol=1e-5
+    )
+
+
+def test_compact_frontier_is_permutation():
+    """Valid ids form a prefix; dest un-compacts exactly; counts agree."""
+    ids = jnp.asarray(RNG.integers(-1, 50, (257,)).astype(np.int32))
+    cids, owners, dest, nvalid = ops.compact_frontier(ids)
+    cids, owners, dest = map(np.asarray, (cids, owners, dest))
+    nv = int(nvalid)
+    assert nv == int((np.asarray(ids) >= 0).sum())
+    assert (cids[:nv] >= 0).all() and (cids[nv:] < 0).all()
+    assert sorted(dest.tolist()) == list(range(len(cids)))  # true permutation
+    np.testing.assert_array_equal(cids[dest], np.asarray(ids))
+    # owners carry each compacted row's original slot index
+    np.testing.assert_array_equal(owners[dest], np.arange(len(cids)))
+
+
 def test_frontier_ref_matches_search_gather_keys():
     """The frontier oracle and the search loop's inline scorer agree (up to
     contraction-order rounding) including the +inf mask placement."""

@@ -202,6 +202,80 @@ def test_auto_beam_tiers_never_lose_recall(small_db, small_index):
     assert rec_a >= rec_1 - 1e-6, (rec_a, rec_1)
 
 
+def test_tier_ladder_inherits_batch_hoisted(small_index):
+    import dataclasses as _dc
+
+    base = small_index.search_cfg  # batch_hoisted == False
+    assert all(not t.cfg.batch_hoisted for t in tier_ladder(base))
+    hoisted = tier_ladder(_dc.replace(base, batch_hoisted=True))
+    assert all(t.cfg.batch_hoisted for t in hoisted)
+
+
+@pytest.mark.parametrize("nq", [13, 64])
+def test_routed_batch_hoisted_matches_unrouted(small_db, small_index, nq):
+    """The batch-hoisted tier loop through the router reproduces the
+    monolithic (vmap-path) adaptive_search per query — the serving-side
+    golden equivalence for ISSUE 3."""
+    q = _queries(small_db, nq=nq, seed=3)
+    mono = small_index.query(q)
+    res, stats = small_index.router(
+        RouterConfig(beam_mode="fixed", batch_hoisted=True)
+    ).route(q, small_index.target_recall)
+    np.testing.assert_array_equal(res.ids, np.asarray(mono.ids))
+    np.testing.assert_array_equal(res.ef_used, np.asarray(mono.ef_used))
+    np.testing.assert_array_equal(res.ndist, np.asarray(mono.ndist))
+    assert sum(t.count for t in stats.tiers) == nq
+
+
+def test_router_estimation_matched_table(small_db, small_index):
+    """Lossy estimation budgets get a table built from proxies scored at that
+    budget; lossless routers keep the full-budget table object."""
+    lossless = small_index.router(RouterConfig())
+    assert lossless.est_table is small_index.table
+    assert not lossless.est_matched
+
+    # nominally capped but at/above the full budget: effectively lossless,
+    # so no redundant matched-table build and no false telemetry
+    huge = small_index.router(RouterConfig(est_lmax=10_000))
+    assert not huge.est_matched
+    assert huge.est_table is small_index.table
+
+    # explicit opt-out recovers the old biased-low-estimate behavior
+    optout = small_index.router(
+        RouterConfig(est_lmax=16, est_matched_table=False, ef_margin=1.25)
+    )
+    assert not optout.est_matched
+    assert optout.est_table is small_index.table
+
+    capped = small_index.router(RouterConfig(est_lmax=16))
+    assert capped.est_matched
+    assert capped.est_table is not small_index.table
+    # same ladder and group axis — only the score units moved
+    assert capped.est_table.num_groups == small_index.table.num_groups
+
+    q = _queries(small_db, nq=64, seed=21)
+    res, stats = capped.route(q, small_index.target_recall)
+    assert stats.est_matched
+    assert stats.as_dict()["est_matched"] is True
+    # margin-free lossy routing with the matched table still lands near target
+    data, _, _ = small_db
+    gt = _gt(data, q)
+    rec = float(recall_at_k(jnp.asarray(res.ids), gt).mean())
+    assert rec >= small_index.target_recall - 0.05, rec
+
+
+def test_router_matched_table_only_with_builder(small_db, small_index):
+    """Directly constructed routers (no builder) keep the legacy behavior —
+    the full table plus whatever ef_margin the caller configured."""
+    router = QueryRouter(
+        small_index.graph, small_index.stats, small_index.table,
+        small_index.search_cfg, small_index.ada_cfg,
+        RouterConfig(est_lmax=16, ef_margin=1.25),
+    )
+    assert not router.est_matched
+    assert router.est_table is small_index.table
+
+
 def test_router_capped_estimation_budget(small_db, small_index):
     """est_lmax caps the collection goal: cheaper estimation, and the lossy
     estimates still land within the ladder (recall sanity, not exactness)."""
