@@ -35,6 +35,7 @@ def main() -> None:
         bench_online,
         bench_offline,
         bench_router,
+        bench_scheduler,
         bench_sensitivity,
         bench_updates,
         bench_ablation,
@@ -48,6 +49,7 @@ def main() -> None:
         "recall_dist": bench_recall_dist,
         "online": bench_online,
         "router": bench_router,
+        "scheduler": bench_scheduler,
         "offline": bench_offline,
         "sensitivity": bench_sensitivity,
         "updates": bench_updates,

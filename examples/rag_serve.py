@@ -3,6 +3,11 @@ serving loop where every request runs Ada-ef retrieval at a declarative
 target recall before decoding.
 
     PYTHONPATH=src python examples/rag_serve.py --requests 4 --new-tokens 12
+
+``--stream`` demos the request-lifecycle serving API instead: requests
+arrive one by one (Poisson), are submitted to the continuous-batching
+``AdaServeScheduler``, and responses are polled as their ef tier drains —
+no batch barrier, per-request latency telemetry.
 """
 import argparse
 import time
@@ -14,7 +19,29 @@ import numpy as np
 from repro.configs import ARCHS
 from repro.index import build_ada_index
 from repro.models import build_model
-from repro.serve import Engine, ServeConfig
+from repro.serve import Engine, SearchRequest, ServeConfig
+from repro.serve.scheduler import replay_trace
+
+
+def stream_demo(engine, index, batch, *, rate_rps=64.0, deadline_ms=50.0):
+    """The request lifecycle: submit -> step -> poll, one request at a time
+    (``replay_trace`` is the canonical loop; see its source for the shape)."""
+    sched = index.scheduler()
+    emb = np.asarray(engine._request_embedding(batch))
+    rng = np.random.default_rng(7)
+    arrivals = np.cumsum(rng.exponential(1.0 / rate_rps, len(emb)))
+    requests = [
+        SearchRequest(query=e, deadline_s=deadline_ms / 1e3) for e in emb
+    ]
+    responses, lats = replay_trace(sched, requests, arrivals)
+    for resp, wait in list(zip(responses, lats))[:4]:
+        s = resp.stats
+        print(f"  request {resp.ticket.uid}: tier ef={s.tier_ef} "
+              f"(est ef={s.ef_est}, drained by {s.trigger}) "
+              f"latency={wait * 1e3:.1f}ms ids={resp.ids[:4]}...")
+    print(f"streamed {len(responses)} requests: p50={np.percentile(lats, 50) * 1e3:.1f}ms "
+          f"p99={np.percentile(lats, 99) * 1e3:.1f}ms "
+          f"(first run includes jit compiles)")
 
 
 def main():
@@ -24,7 +51,11 @@ def main():
     ap.add_argument("--new-tokens", type=int, default=12)
     ap.add_argument("--corpus", type=int, default=3000)
     ap.add_argument("--routed", action="store_true",
-                    help="ef-bucketed router dispatch for the retrieval stage")
+                    help="continuous-batching scheduler dispatch for the "
+                         "retrieval stage (overlaps the decode loop)")
+    ap.add_argument("--stream", action="store_true",
+                    help="streaming-arrival demo of the request-lifecycle "
+                         "serving API (submit/step/poll)")
     args = ap.parse_args()
 
     cfg = ARCHS["qwen2-0.5b"].reduced()
@@ -45,6 +76,9 @@ def main():
                     index=index)
     batch = {"tokens": jnp.asarray(
         rng.integers(0, cfg.vocab_size, (args.requests, args.prompt_len)), jnp.int32)}
+    if args.stream:
+        stream_demo(engine, index, batch)
+        return
     t0 = time.perf_counter()
     res = engine.serve(batch)
     print(f"\nserved {args.requests} requests x {args.new_tokens} tokens "

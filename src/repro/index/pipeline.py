@@ -84,6 +84,12 @@ class AdaEfIndex:
     _router_cfg: Optional[object] = dataclasses.field(
         default=None, repr=False, compare=False
     )  # installed RouterConfig; survives invalidation-triggered rebuilds
+    _scheduler: Optional[object] = dataclasses.field(
+        default=None, repr=False, compare=False
+    )  # lazily built AdaServeScheduler; invalidated alongside the router
+    _scheduler_cfg: Optional[object] = dataclasses.field(
+        default=None, repr=False, compare=False
+    )  # installed SchedulerConfig; survives invalidation-triggered rebuilds
     _probe_cache: dict = dataclasses.field(
         default_factory=dict, repr=False, compare=False
     )  # {ef: per-proxy recalls} shared by main + estimation-matched table
@@ -110,7 +116,12 @@ class AdaEfIndex:
         )
 
     def query_routed(self, queries, target_recall: Optional[float] = None):
-        """Routed dispatch; returns ``(SearchResult, RouterStats)``."""
+        """Routed dispatch; returns ``(SearchResult, RouterStats)``.
+
+        .. deprecated:: synchronous shim over the continuous-batching
+           scheduler (it emits a ``DeprecationWarning`` via ``route()``) —
+           serving callers should use :meth:`scheduler` and the
+           ``submit()``/``step()``/``poll()`` request lifecycle."""
         r = self.target_recall if target_recall is None else target_recall
         return self.router().route(np.asarray(queries), r)
 
@@ -139,6 +150,31 @@ class AdaEfIndex:
             )
         return self._router
 
+    def scheduler(self, scheduler_cfg=None, router_cfg=None):
+        """The (cached) continuous-batching scheduler over :meth:`router` —
+        the request-lifecycle serving surface (``submit``/``step``/``poll``).
+        Passing a ``SchedulerConfig`` (and/or ``RouterConfig``) installs it
+        for this and every invalidation-triggered rebuild.  Like the router,
+        the scheduler holds graph/table references: ``insert``/``delete``
+        invalidate it, and pending requests do not survive the rebuild —
+        drain before mutating the index."""
+        from repro.serve.scheduler import AdaServeScheduler
+
+        if scheduler_cfg is not None:
+            self._scheduler_cfg = scheduler_cfg
+            self._scheduler = None
+        if router_cfg is not None:
+            self.router(router_cfg)  # also clears _router -> rebuild below
+            self._scheduler = None
+        router = self.router()
+        if self._scheduler is None or self._scheduler.router is not router:
+            self._scheduler = AdaServeScheduler(
+                router,
+                self._scheduler_cfg,
+                default_target_recall=self.target_recall,
+            )
+        return self._scheduler
+
     def query_static(self, queries, ef: int) -> SearchResult:
         return search(self.graph, jnp.asarray(queries), ef, self.search_cfg)
 
@@ -147,6 +183,7 @@ class AdaEfIndex:
         """§6.3 insertion: index add + stats merge + incremental GT + table."""
         new_data = np.atleast_2d(np.asarray(new_data, np.float32))
         self._router = None  # router caches graph/stats/table references
+        self._scheduler = None  # pending requests do not survive a mutation
         self._probe_cache.clear()  # probe recalls depend on graph + samples
         t0 = time.perf_counter()
         self.host_index.add(new_data)
@@ -184,6 +221,7 @@ class AdaEfIndex:
         """§6.3 deletion: tombstone + stats unmerge + GT refresh + table."""
         ids = np.asarray(ids, np.int64)
         self._router = None  # router caches graph/stats/table references
+        self._scheduler = None  # pending requests do not survive a mutation
         self._probe_cache.clear()  # probe recalls depend on graph + samples
         t0 = time.perf_counter()
         self.host_index.mark_deleted(ids)

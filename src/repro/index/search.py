@@ -731,26 +731,46 @@ def estimation_config(
     return dataclasses.replace(cfg, ef_cap=cap, max_iters=cfg.iters(), patience=0)
 
 
-def _phase_a_batch(g: DeviceGraph, queries: Array, cfg: SearchConfig, ada: AdaEfConfig):
+def _phase_a_batch(
+    g: DeviceGraph,
+    queries: Array,
+    cfg: SearchConfig,
+    ada: AdaEfConfig,
+    real: Optional[Array] = None,
+):
     """Phase A (Alg. 2 lines 1-20): expand at ef=inf until ``lgoal`` distances
     are collected.  ``queries`` must already be prepared; returns the batched
-    :class:`SearchState` (C/W sized ``cfg.ef_cap``, dbuf sized ``ada.buf``)."""
+    :class:`SearchState` (C/W sized ``cfg.ef_cap``, dbuf sized ``ada.buf``).
+
+    ``real`` is an optional per-query bool mask marking batch-padding rows
+    (``False``): their collection goal is clamped to the already-collected
+    entry-point distance, so the phase-A predicate is false from iteration 0
+    and a padding row costs exactly one distance computation (the entry
+    point) instead of a full phase-A run.  Real rows are untouched — their
+    trajectories are bit-identical with or without the mask.
+    """
     sign = key_sign(cfg.metric)
     m0 = g.base_adj.shape[1]
     lmax = ada.buf(m0)
     ef_inf = jnp.asarray(cfg.ef_cap, jnp.int32)
+
+    def clamp(s: SearchState) -> SearchState:
+        if real is None:
+            return s
+        return s._replace(lgoal=jnp.where(real, s.lgoal, s.dcount))
 
     if cfg.batch_hoisted:
         s = jax.vmap(
             lambda q: _init_state(g, q, cfg, ef_inf, lmax=lmax, hops=ada.hops)
         )(queries)
         return _run_hoisted(
-            g, queries, s, cfg, sign, collect=True, lmax=lmax, phase_a=True
+            g, queries, clamp(s), cfg, sign, collect=True, lmax=lmax, phase_a=True
         )
 
     def one(q):
-        s = _init_state(g, q, cfg, ef_inf, lmax=lmax, hops=ada.hops)
+        return _init_state(g, q, cfg, ef_inf, lmax=lmax, hops=ada.hops)
 
+    def drive(s, q):
         def cond(s):
             return _not_done(s) & (s.dcount < s.lgoal) & (s.iters < cfg.iters())
 
@@ -759,7 +779,8 @@ def _phase_a_batch(g: DeviceGraph, queries: Array, cfg: SearchConfig, ada: AdaEf
 
         return jax.lax.while_loop(cond, body, s)
 
-    return jax.vmap(one)(queries)
+    s = clamp(jax.vmap(one)(queries))
+    return jax.vmap(drive)(s, queries)
 
 
 def _estimate_from_states(
@@ -879,6 +900,7 @@ def estimate_pass(
     cfg: SearchConfig,
     ada: AdaEfConfig = AdaEfConfig(),
     ef_cap_out: Optional[int] = None,
+    num_real: Optional[Array] = None,
 ):
     """Estimation pass: phase A + ESTIMATE-EF for a whole batch, no phase B.
 
@@ -887,9 +909,21 @@ def estimate_pass(
     can be resumed tier-by-tier via :func:`resume_at_ef`.  Returns
     ``(ef_est, states)`` with ``ef_est`` clipped to ``[k, ef_cap_out or
     cfg.ef_cap]``.
+
+    ``target_recall`` may be a scalar or a per-query ``(B, 1)`` array (the
+    continuous-batching scheduler mixes requests with different declarative
+    targets in one pass).  ``num_real`` (runtime scalar) marks rows at or
+    beyond it as batch padding: they skip phase A entirely (one distance
+    computation each) instead of running a full collection at real cost;
+    rows below ``num_real`` are bit-identical to an unmasked pass.
     """
     queries = prepare_queries(queries, cfg.metric)
-    states = _phase_a_batch(g, queries, cfg, ada)
+    real = (
+        None
+        if num_real is None
+        else jnp.arange(queries.shape[0]) < jnp.asarray(num_real, jnp.int32)
+    )
+    states = _phase_a_batch(g, queries, cfg, ada, real=real)
     clip_cfg = cfg if ef_cap_out is None else dataclasses.replace(cfg, ef_cap=ef_cap_out)
     ef_est = _estimate_from_states(
         states, queries, stats, table, target_recall, clip_cfg, ada

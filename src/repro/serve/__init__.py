@@ -1,27 +1,38 @@
-"""Serving substrate: KV-cache management, batched RAG engine, and the
-Ada-ef query router.
+"""Serving substrate: request-lifecycle retrieval scheduling, KV-cache
+management, and the batched RAG engine.
 
-Request flow for a serving batch:
+The serving surface is a **request lifecycle**, not a batch call:
 
-1. ``Engine.serve`` prefills the prompt batch through the LM,
-2. each request is embedded into the retrieval space (jitted mean-pool +
-   projection),
-3. retrieval dispatches through one of two paths:
-   - **monolithic** — one fused ``adaptive_search`` over the whole batch, or
-   - **routed** (``ServeConfig.routed``) — the :class:`QueryRouter` runs a
-     cheap small-capacity estimation pass (phase A + ESTIMATE-EF), buckets
-     queries into an ef-tier ladder (per-tier state capacity + auto-tuned
-     beam), resumes each padded bucket on its tier's pre-compiled search,
-     and scatters results back into request order, emitting
-     :class:`RouterStats` telemetry,
-4. greedy ``decode`` continues generation with the retrieved ids surfaced to
-   the caller.
+1. ``submit()`` — a :class:`SearchRequest` (query, per-request declarative
+   ``target_recall``, optional ``k`` and ``deadline_s``) enters the
+   :class:`AdaServeScheduler`'s admission queue; a :class:`SearchTicket`
+   comes back.
+2. ``step()`` — arriving requests share one small-capacity estimation pass
+   (phase A + ESTIMATE-EF; padding rows converge immediately) and drop into
+   per-ef-tier queues carrying their resumable phase-A ``SearchState``; any
+   tier bucket that reaches its pow2 fill — or whose oldest request's
+   deadline is due — drains as one batch-hoisted ``resume_at_ef`` dispatch.
+   No all-tier barrier: easy tiers drain while hard tiers accumulate.
+3. ``poll()`` / ``drain()`` — completed :class:`SearchResponse` objects with
+   per-request :class:`RequestStats` telemetry.
 
-The engine stays synchronous/batched; the router is the seam where async
-continuous batching will hang off (tier queues drained independently).
+:class:`QueryRouter` owns the routing *policy* (estimation budget, tier
+ladder, margins); its ``route()`` remains as a synchronous
+submit-all/drain-all shim (bit-identical to the old barrier, emits a
+``DeprecationWarning``).  :class:`Engine` submits its batch's retrieval
+before the decode loop and polls between decode steps, overlapping
+retrieval with generation; streaming drivers (``launch/serve.py --stream``,
+``examples/rag_serve.py --stream``) hold the scheduler directly.
 """
+from .api import (  # noqa: F401
+    RequestStats,
+    SearchRequest,
+    SearchResponse,
+    SearchTicket,
+)
 from .engine import Engine, ServeConfig, ServeResult  # noqa: F401
 from .kvcache import grow_cache  # noqa: F401
 from .router import QueryRouter, RouterConfig  # noqa: F401
-from .stats import RouterStats, TierStats  # noqa: F401
+from .scheduler import AdaServeScheduler, SchedulerConfig  # noqa: F401
+from .stats import RouterStats, SchedulerStats, TierStats  # noqa: F401
 from .tiers import TierSpec, tier_ladder  # noqa: F401

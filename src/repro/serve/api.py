@@ -1,0 +1,112 @@
+"""Request-lifecycle serving API: the types a request moves through.
+
+The serving surface is no longer a one-shot batch call: a caller **submits**
+a :class:`SearchRequest` (query + declarative per-request target recall, an
+optional result size override, an optional deadline), gets back an opaque
+:class:`SearchTicket`, and later **polls** for the matching
+:class:`SearchResponse` (top-k result + per-request :class:`RequestStats`
+telemetry).  The lifecycle itself — admission, shared estimation pass,
+ef-tier queueing, batched drain — lives in
+:class:`repro.serve.scheduler.AdaServeScheduler`; this module is the pure
+data contract and imports nothing from the rest of ``serve``.
+
+Lifecycle of one request::
+
+    ticket = scheduler.submit(SearchRequest(query=q, target_recall=0.95))
+    scheduler.step()            # estimation + any due tier drains
+    for resp in scheduler.poll():
+        resp.ids, resp.stats    # SearchResponse once its tier drained
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class SearchRequest:
+    """One retrieval request.
+
+    ``target_recall``/``k`` default to the owning scheduler's (index's)
+    settings; ``k`` may only *shrink* the result (the tier searches run at
+    the index's configured k, the response is sliced).  ``deadline_s`` is a
+    latency budget in seconds **relative to submit time**: the request's tier
+    bucket is drained no later than the deadline even if the bucket has not
+    reached its fill, trading batch efficiency for tail latency.
+    """
+
+    query: np.ndarray                     # (d,) float32 retrieval embedding
+    target_recall: Optional[float] = None # None -> scheduler default
+    k: Optional[int] = None               # None -> index k (must be <= it)
+    deadline_s: Optional[float] = None    # None -> drain on fill/flush only
+
+
+@dataclasses.dataclass(frozen=True)
+class SearchTicket:
+    """Opaque handle returned by ``submit()``; matches a later response.
+
+    ``uid`` is unique and monotone per scheduler.  ``deadline_t`` is the
+    absolute deadline on the scheduler's clock (``submit_t + deadline_s``),
+    ``None`` when the request carries no deadline.
+    """
+
+    uid: int
+    submit_t: float
+    deadline_t: Optional[float] = None
+
+
+@dataclasses.dataclass
+class RequestStats:
+    """Per-request telemetry stamped along the lifecycle.
+
+    Timestamps are on the scheduler's clock (``time.monotonic`` unless a
+    test injects its own).  ``ndist`` is cumulative across both phases
+    (estimation + tier search) — directly comparable to the monolithic
+    ``adaptive_search`` cost, like ``RouterStats``.
+    """
+
+    submit_t: float                # ticket issue time
+    est_t: float = 0.0             # estimation pass that admitted this request
+    dispatch_t: float = 0.0        # tier drain that included this request
+    done_t: float = 0.0            # response materialization time
+    est_batch: int = 0             # real rows sharing the estimation pass
+    est_ndist: int = 0             # phase-A distance computations
+    ef_est: int = 0                # estimated (margin-adjusted) ef
+    tier_ef: int = 0               # capacity of the tier that served it
+    tier_beam: int = 0             # beam width of that tier
+    dispatch_batch: int = 0        # real rows sharing the drain dispatch
+    padded_to: int = 0             # pow2 shape the drain was padded to
+    ndist: int = 0                 # cumulative est + search cost
+    trigger: str = ""              # what drained the bucket:
+    #   fill | deadline | flush | idle (work-conserving drain)
+
+    @property
+    def latency_s(self) -> float:
+        """submit -> response materialization."""
+        return self.done_t - self.submit_t
+
+    @property
+    def queue_wait_s(self) -> float:
+        """Time spent parked in the tier queue (estimated -> dispatched)."""
+        return self.dispatch_t - self.est_t
+
+    def as_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["latency_s"] = self.latency_s
+        d["queue_wait_s"] = self.queue_wait_s
+        return d
+
+
+@dataclasses.dataclass
+class SearchResponse:
+    """Completed request: result rows + the request's lifecycle telemetry."""
+
+    ticket: SearchTicket
+    ids: np.ndarray                # (k,) int32, -1 padded
+    dists: np.ndarray              # (k,) float32 metric-oriented values
+    ndist: int                     # cumulative est + search cost
+    iters: int
+    ef_used: int                   # effective ef the tier search ran at
+    stats: RequestStats

@@ -1,9 +1,14 @@
-"""Bucketing primitives for the ef-routed dispatcher.
+"""Bucketing primitives for the ef-tier dispatch layer.
 
 Host-side (numpy) helpers: assign queries to ef tiers, pad each bucket to one
 of a small set of fixed batch shapes (powers of two, floored at
 ``min_shape``) so the per-tier jitted searches hit a bounded compile cache,
-and scatter per-bucket results back into request order.
+and scatter per-bucket results back into request order.  The
+continuous-batching scheduler (:mod:`repro.serve.scheduler`) keys every
+estimation pass and tier drain on :func:`pad_shape` and files estimated
+requests with :func:`assign_tiers`; :func:`pad_indices` /
+:func:`scatter_results` are batch-shaped utilities kept for callers that
+assemble their own buckets (and for the order-restoration property tests).
 
 Everything here is pure index arithmetic — property-testable without a graph
 or a device.

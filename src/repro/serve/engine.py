@@ -10,8 +10,19 @@ Request flow (the paper's deployment context — §1 RAG pipelines):
 4. greedy ``decode`` continuation (retrieved ids are surfaced to the caller
    and, in token-splicing mode, appended to the context).
 
-The engine is deliberately synchronous/batched (continuous batching is a
-scheduler concern above this layer); every device-side step is jitted.
+Retrieval dispatches through one of two paths:
+
+- **monolithic** — one fused ``adaptive_search`` over the whole batch
+  (dispatched asynchronously; JAX overlaps it with the decode steps),
+- **routed** (``ServeConfig.routed``) — the requests are *submitted* to the
+  index's continuous-batching :class:`repro.serve.scheduler.AdaServeScheduler`
+  before the decode loop starts, flushed as independent per-ef-tier
+  dispatches, and *polled* (non-blocking) between decode steps, so retrieval
+  overlaps generation and the per-request lifecycle telemetry rides along in
+  ``ServeResult.router_stats``.
+
+The decode loop itself stays synchronous/batched; the retrieval stage is the
+request-lifecycle seam (streaming drivers hold the scheduler directly).
 """
 from __future__ import annotations
 
@@ -24,6 +35,7 @@ import numpy as np
 
 from repro.index.pipeline import AdaEfIndex
 from repro.models.model_zoo import Model
+from .api import SearchRequest
 from .kvcache import grow_cache
 
 Array = jax.Array
@@ -35,7 +47,18 @@ class ServeConfig:
     cache_slack: int = 128
     retrieve_k: int = 10
     target_recall: float = 0.95
-    routed: bool = False          # dispatch retrieval through the ef router
+    routed: bool = False          # submit retrieval through the ef-tier
+    #   continuous-batching scheduler (overlapping the decode loop) instead
+    #   of one fused monolithic adaptive_search
+
+
+@dataclasses.dataclass
+class ServeRetrieval:
+    """Batch-shaped retrieval rows reassembled from scheduler responses."""
+
+    ids: np.ndarray               # (B, k)
+    dists: np.ndarray             # (B, k)
+    ef_used: np.ndarray           # (B,)
 
 
 @dataclasses.dataclass
@@ -45,7 +68,8 @@ class ServeResult:
     retrieved_dists: Optional[np.ndarray]
     ef_used: Optional[np.ndarray]
     prefill_logits: np.ndarray
-    router_stats: Optional[dict] = None  # RouterStats.as_dict() when routed
+    router_stats: Optional[dict] = None  # RouterStats.as_dict() (+ per-request
+    #   lifecycle stats under "requests") when routed
 
 
 @jax.jit
@@ -102,24 +126,57 @@ class Engine:
 
         retrieved = None
         router_stats = None
+        sched = tickets = None
+        responses: List[object] = []
         if self.index is not None:
             q = self._request_embedding(batch)
             if scfg.routed:
-                retrieved, rstats = self.index.query_routed(
-                    np.asarray(q), scfg.target_recall
+                # submit the whole batch to a *private* continuous-batching
+                # scheduler (over the index's cached router, so every compile
+                # cache is shared) and flush: the per-tier searches are in
+                # flight on device while the decode loop below runs — poll()
+                # harvests whatever finished between decode steps without
+                # blocking either side.  A private instance keeps this batch
+                # out of the index-cached scheduler that streaming callers
+                # hold (an unfiltered poll() there would steal our responses,
+                # and our flush would force-drain their parked queues).
+                sched = self.index.router().scheduler(
+                    default_target_recall=scfg.target_recall
                 )
-                router_stats = rstats.as_dict()
+                qn = np.asarray(q)
+                k = min(scfg.retrieve_k, self.index.k)
+                tickets = [
+                    sched.submit(SearchRequest(query=qn[i], k=k))
+                    for i in range(b)
+                ]
+                sched.flush()
             else:
                 retrieved = self.index.query(np.asarray(q), scfg.target_recall)
 
         tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
         pos = jnp.full((b,), prompt_len, jnp.int32)
         out_tokens: List[np.ndarray] = []
+        want = None if tickets is None else [t.uid for t in tickets]
         for _ in range(scfg.max_new_tokens):
             out_tokens.append(np.asarray(tok))
             logits_t, cache = self._decode(self.params, tok[:, None], cache, pos)
             tok = jnp.argmax(logits_t[:, -1], axis=-1).astype(jnp.int32)
             pos = pos + 1
+            if sched is not None and len(responses) < b:
+                responses.extend(sched.poll(uids=want))
+
+        if sched is not None:
+            if len(responses) < b:
+                responses.extend(sched.poll(block=True, uids=want))
+            by_uid = {r.ticket.uid: r for r in responses}
+            ordered = [by_uid[t.uid] for t in tickets]
+            retrieved = ServeRetrieval(
+                ids=np.stack([r.ids for r in ordered]),
+                dists=np.stack([r.dists for r in ordered]),
+                ef_used=np.asarray([r.ef_used for r in ordered], np.int32),
+            )
+            router_stats = sched.router_stats().as_dict()
+            router_stats["requests"] = [r.stats.as_dict() for r in ordered]
 
         return ServeResult(
             tokens=np.stack(out_tokens, axis=1),

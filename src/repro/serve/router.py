@@ -30,14 +30,22 @@ tombstone-free graph (see the deletion caveat on
 :func:`repro.index.search.resize_state`), while every merge runs at tier
 capacity and easy buckets stop iterating as soon as their own slowest member
 finishes.
+
+Since the request-lifecycle redesign the router owns only the *policy*
+(estimation budget, tier ladder, margins); execution lives in
+:class:`repro.serve.scheduler.AdaServeScheduler`, which admits requests
+continuously and drains tier buckets independently.  :meth:`QueryRouter.route`
+survives as a synchronous submit-all/drain-all wrapper over a one-shot
+scheduler — bit-identical to the pre-scheduler barrier for every existing
+caller — and warns toward ``submit()``/``poll()``.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
+import warnings
 from typing import Optional, Tuple
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -47,23 +55,12 @@ from repro.index.search import (
     DeviceGraph,
     SearchConfig,
     SearchResult,
-    SearchState,
     estimate_pass,
     estimation_config,
-    resume_at_ef,
-    resize_state,
 )
-from .bucketing import (
-    assign_tiers,
-    bucket_indices,
-    pad_indices,
-    pad_shape,
-    scatter_results,
-)
-from .stats import RouterStats, TierStats
+from .api import SearchRequest
+from .stats import RouterStats
 from .tiers import BEAM_AUTO, TierSpec, tier_ladder
-
-Array = jax.Array
 
 
 @dataclasses.dataclass(frozen=True)
@@ -160,9 +157,19 @@ class QueryRouter:
         self._tier_efs = tuple(t.ef for t in self.tiers)
 
     # ------------------------------------------------------------- phases
-    def estimate(self, queries: np.ndarray, target_recall: float):
+    def estimate(
+        self,
+        queries: np.ndarray,
+        target_recall,
+        num_real: Optional[int] = None,
+    ):
         """Estimation pass for a padded batch.  Returns ``(ef_est, states)``
-        with ``ef_est`` a host int array over the *padded* batch."""
+        with ``ef_est`` a host int array over the *padded* batch.
+
+        ``target_recall`` is a scalar or a per-query ``(B, 1)`` array (the
+        scheduler mixes declarative targets in one pass).  ``num_real`` marks
+        rows at or beyond it as batch padding: they skip phase A at ~one
+        distance computation each instead of running a full collection."""
         ef_est, states = estimate_pass(
             self.graph,
             jnp.asarray(queries),
@@ -172,6 +179,7 @@ class QueryRouter:
             self.est_cfg,
             self.est_ada,
             ef_cap_out=self.base_cfg.ef_cap,
+            num_real=None if num_real is None else jnp.asarray(num_real, jnp.int32),
         )
         ef_np = np.asarray(ef_est)
         if self.router_cfg.ef_margin != 1.0:
@@ -182,102 +190,52 @@ class QueryRouter:
             )
         return ef_np, states
 
-    def _resume_bucket(
-        self,
-        tier: TierSpec,
-        queries: Array,
-        states: SearchState,
-        idx_pad: np.ndarray,
-        ef_np: np.ndarray,
-        num_real: int,
-    ) -> SearchResult:
-        """Gather one padded bucket out of the estimation state and resume it
-        on the tier's arrays.  Padding rows rerun the bucket's first query at
-        ef=k (the cheapest legal resume) and are sliced off by the caller."""
-        take = jnp.asarray(idx_pad)
-        q_b = queries[take]
-        s_b = resize_state(
-            jax.tree_util.tree_map(lambda a: a[take], states), tier.ef
-        )
-        ef_b = ef_np[idx_pad].astype(np.int32)
-        ef_b[num_real:] = self.base_cfg.k
-        return resume_at_ef(self.graph, q_b, s_b, jnp.asarray(ef_b), tier.cfg)
-
     # ------------------------------------------------------------- dispatch
+    def scheduler(self, scheduler_cfg=None, **kwargs):
+        """A fresh :class:`AdaServeScheduler` over this router (the
+        continuous-batching serving surface; prefer the cached
+        ``AdaEfIndex.scheduler()`` which survives router rebuilds)."""
+        from .scheduler import AdaServeScheduler
+
+        return AdaServeScheduler(self, scheduler_cfg, **kwargs)
+
     def route(
         self, queries: np.ndarray, target_recall: float
     ) -> Tuple[SearchResult, RouterStats]:
-        """Route one request batch; returns results in request order plus the
-        batch's telemetry.  ``SearchResult`` fields are host numpy arrays."""
+        """Synchronous batch dispatch; returns results in request order plus
+        the batch's telemetry.  ``SearchResult`` fields are host numpy arrays.
+
+        .. deprecated:: since the request-lifecycle redesign this is a thin
+           submit-all/drain-all wrapper over a one-shot
+           :class:`AdaServeScheduler` — bit-identical to the old barrier, but
+           new serving callers should hold a scheduler and use
+           ``submit()``/``step()``/``poll()`` so arriving requests never wait
+           on a finished batch.
+        """
+        warnings.warn(
+            "QueryRouter.route() is a synchronous wrapper over "
+            "AdaServeScheduler; prefer scheduler submit()/step()/poll() "
+            "(see repro.serve.scheduler) for serving paths",
+            DeprecationWarning,
+            stacklevel=2,
+        )
         queries = np.asarray(queries, np.float32)
         if queries.ndim != 2 or len(queries) == 0:
             raise ValueError(f"expected (B, d) queries, got {queries.shape}")
-        batch = len(queries)
         t_start = time.perf_counter()
-
-        # ---- estimation pass over the (padded) full batch -----------------
-        est_shape = pad_shape(batch, self.router_cfg.min_shape)
-        q_pad = np.concatenate(
-            [queries, np.repeat(queries[:1], est_shape - batch, axis=0)]
+        sched = self.scheduler(
+            default_target_recall=float(target_recall)
         )
-        t0 = time.perf_counter()
-        ef_np, states = self.estimate(q_pad, target_recall)
-        # stamp only after the whole estimation state materialized, so the
-        # wall covers execution (not just dispatch + the ef pull)
-        jax.block_until_ready(states)
-        est_wall = time.perf_counter() - t0
-        est_ndist = np.asarray(states.ndist)
-
-        # ---- bucket by tier, resume each bucket at its own capacity -------
-        # Dispatch every bucket before pulling any result: JAX async dispatch
-        # lets the device pipeline independent tier computations while the
-        # host does the next bucket's gather/pad bookkeeping.
-        assign = assign_tiers(ef_np[:batch], self._tier_efs)
-        buckets = bucket_indices(assign, len(self.tiers))
-        q_dev = jnp.asarray(q_pad)
-        dispatched = []
-        for tier, idx in zip(self.tiers, buckets):
-            if len(idx) == 0:
-                continue
-            shape = pad_shape(len(idx), self.router_cfg.min_shape)
-            idx_pad = pad_indices(idx, shape)
-            t0 = time.perf_counter()
-            res_dev = self._resume_bucket(
-                tier, q_dev, states, idx_pad, ef_np, len(idx)
-            )
-            dispatched.append((tier, idx, shape, res_dev, t0))
-
-        parts = []
-        tier_stats = []
-        for tier, idx, shape, res_dev, t0 in dispatched:
-            # block on the device outputs *before* stamping: the wall then
-            # measures dispatch -> execution complete rather than whenever the
-            # host got around to pulling the arrays.  Tiers still overlap on
-            # device, so these walls do not sum to the batch wall-clock.
-            jax.block_until_ready(res_dev)
-            wall = time.perf_counter() - t0
-            res = jax.tree_util.tree_map(np.asarray, res_dev)
-            parts.append((idx, res))
-            tier_stats.append(
-                TierStats(
-                    ef=tier.ef,
-                    beam=tier.beam,
-                    count=len(idx),
-                    padded_to=shape,
-                    ndist_total=int(res.ndist[: len(idx)].sum()),
-                    wall_s=wall,
-                )
-            )
-
-        out = scatter_results(parts, batch)
-        stats = RouterStats(
-            batch=batch,
-            est_shape=est_shape,
-            est_cap=self.est_cfg.ef_cap,
-            est_ndist_total=int(est_ndist[:batch].sum()),
-            est_wall_s=est_wall,
-            est_matched=self.est_matched,
-            tiers=tier_stats,
-            total_wall_s=time.perf_counter() - t_start,
+        tickets = [sched.submit(SearchRequest(query=q)) for q in queries]
+        by_uid = {r.ticket.uid: r for r in sched.drain()}
+        ordered = [by_uid[t.uid] for t in tickets]
+        out = SearchResult(
+            ids=np.stack([r.ids for r in ordered]),
+            dists=np.stack([r.dists for r in ordered]),
+            ndist=np.asarray([r.ndist for r in ordered], np.int32),
+            iters=np.asarray([r.iters for r in ordered], np.int32),
+            ef_used=np.asarray([r.ef_used for r in ordered], np.int32),
         )
+        stats = sched.router_stats()
+        stats.total_wall_s = time.perf_counter() - t_start
         return out, stats

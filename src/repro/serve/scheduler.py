@@ -1,0 +1,555 @@
+"""Continuous-batching scheduler over the ef-tier router (request lifecycle).
+
+:class:`AdaServeScheduler` turns the one-shot synchronous
+``QueryRouter.route`` barrier into a request lifecycle:
+
+1. **submit()** — a :class:`repro.serve.api.SearchRequest` enters the
+   admission queue and gets a :class:`SearchTicket` back; nothing runs yet.
+2. **step()** — one scheduler tick.  Whatever has arrived since the last
+   tick runs **one shared estimation pass** (phase A + ESTIMATE-EF, padded
+   to a pow2 shape; padding rows converge immediately, see
+   ``estimate_pass(num_real=...)``), and each estimated request drops into
+   its ef-tier queue *carrying its phase-A* :class:`SearchState` — the
+   resumable unit the phase-split search provides.  Then every tier bucket
+   that has reached its pow2 **fill**, or whose **oldest request's deadline**
+   is due, drains as one batch-hoisted ``resume_at_ef`` dispatch.  There is
+   *no all-tier barrier*: an easy (small-ef) tier drains the moment it
+   fills while a hard tier keeps accumulating, and dispatches are
+   asynchronous (JAX async dispatch) so tiers overlap on device.
+3. **poll()** — completed :class:`SearchResponse` objects (non-blocking by
+   default: only dispatches whose device buffers are ready materialize).
+4. **drain()** — force-flush everything and block for all responses.
+
+Equivalence: tier searches resume the carried phase-A state, and both
+phases are per-query independent, so for any interleaving of
+``submit``/``step``/``poll`` and any drain trigger the scheduler returns
+results bit-identical to the synchronous ``route()`` barrier under a
+lossless config (the arrival-order invariance property test in
+``tests/test_scheduler.py``).  ``QueryRouter.route`` itself is now a thin
+submit-all/drain-all wrapper over this class.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import time
+from typing import Callable, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.index.search import resize_state, resume_at_ef
+from .api import RequestStats, SearchRequest, SearchResponse, SearchTicket
+from .bucketing import assign_tiers, pad_shape
+from .stats import SchedulerStats, TierStats
+from .tiers import TierSpec
+
+TRIGGER_FILL = "fill"
+TRIGGER_DEADLINE = "deadline"
+TRIGGER_FLUSH = "flush"
+TRIGGER_IDLE = "idle"
+
+
+@dataclasses.dataclass(frozen=True)
+class SchedulerConfig:
+    """Drain policy knobs (host-side; no effect on compiled shapes beyond
+    the pow2 padding every dispatch already uses)."""
+
+    fill: int = 8           # tier bucket drains once it holds >= fill requests
+    #   (power of two: a full bucket then dispatches pad-free)
+    min_shape: int = 0      # smallest padded dispatch shape; 0 -> inherit the
+    #   router's RouterConfig.min_shape
+    flush_margin_s: float = 0.0  # drain a tier this early before its oldest
+    #   deadline (headroom for the dispatch itself)
+    est_wait_s: float = 0.0  # admission batching window: hold arrivals up to
+    #   this long (unless ``fill`` arrivals or a deadline force it) so one
+    #   estimation pass amortizes over more requests; 0 = estimate every tick
+    work_conserving: bool = True  # never hold work while the device is idle:
+    #   when no dispatch is in flight, arrivals estimate immediately and the
+    #   first nonempty tier drains immediately (batching windows only apply
+    #   under load, where they amortize; under light load the scheduler then
+    #   matches a greedy synchronous server instead of idling toward fill).
+    #   Tiers are scanned smallest-ef first, so idle drains favor easy work.
+
+    def __post_init__(self):
+        if self.fill < 1 or (self.fill & (self.fill - 1)) != 0:
+            raise ValueError(f"fill={self.fill} must be a power of two >= 1")
+        if self.flush_margin_s < 0:
+            raise ValueError("flush_margin_s must be >= 0")
+        if self.est_wait_s < 0:
+            raise ValueError("est_wait_s must be >= 0")
+
+
+class _EstPass:
+    """One estimation dispatch: the carried batched phase-A state plus the
+    padded raw query panel it was computed from.  Tier drains gather rows out
+    of (possibly several) of these; the object stays alive until every
+    request it admitted has been dispatched."""
+
+    __slots__ = ("states", "queries")
+
+    def __init__(self, states, queries: np.ndarray):
+        self.states = states
+        self.queries = queries
+
+
+class _Pending:
+    """A request in flight: admission -> (estimated) tier queue -> dispatch."""
+
+    __slots__ = (
+        "ticket", "query", "target", "k", "stats",
+        "est_pass", "row", "ef",
+    )
+
+    def __init__(self, ticket: SearchTicket, query: np.ndarray,
+                 target: float, k: int):
+        self.ticket = ticket
+        self.query = query
+        self.target = target
+        self.k = k
+        self.stats = RequestStats(submit_t=ticket.submit_t)
+        self.est_pass: Optional[_EstPass] = None
+        self.row = -1
+        self.ef = -1
+
+
+class _Dispatch:
+    """One tier drain: device results shared by its requests, materialized
+    (blocked + pulled to host) lazily at poll time so dispatches overlap."""
+
+    __slots__ = ("tier", "entries", "shape", "res_dev", "res_np", "t0", "wall_s")
+
+    def __init__(self, tier: TierSpec, entries: List[_Pending], shape: int,
+                 res_dev, t0: float):
+        self.tier = tier
+        self.entries = entries
+        self.shape = shape
+        self.res_dev = res_dev
+        self.res_np = None
+        self.t0 = t0
+        self.wall_s = 0.0
+
+    def ready(self) -> bool:
+        if self.res_np is not None:
+            return True
+        try:
+            return all(
+                leaf.is_ready()
+                for leaf in jax.tree_util.tree_leaves(self.res_dev)
+            )
+        except AttributeError:
+            # jax without Array.is_ready: report not-ready so non-blocking
+            # polls stay non-blocking; results are harvested by the blocking
+            # polls every consumer ends with (drain / replay tail / engine)
+            return False
+
+    def materialize(self, stats: SchedulerStats) -> None:
+        if self.res_np is not None:
+            return
+        jax.block_until_ready(self.res_dev)
+        self.wall_s = time.perf_counter() - self.t0
+        self.res_np = jax.tree_util.tree_map(np.asarray, self.res_dev)
+        self.res_dev = None
+        n = len(self.entries)
+        stats.tiers.append(
+            TierStats(
+                ef=self.tier.ef,
+                beam=self.tier.beam,
+                count=n,
+                padded_to=self.shape,
+                ndist_total=int(self.res_np.ndist[:n].sum()),
+                wall_s=self.wall_s,
+            )
+        )
+
+
+class AdaServeScheduler:
+    """Continuous-batching executor over one :class:`QueryRouter`.
+
+    Owns the admission queue, the per-tier request queues, and the set of
+    in-flight dispatches.  Rebuild (or let ``AdaEfIndex.scheduler()``
+    rebuild) after index updates — it holds the router's graph/table
+    references, and pending requests do not survive an index mutation.
+
+    ``clock`` is injectable (tests drive deadlines with a fake clock); it
+    only gates *deadline draining* and telemetry timestamps, never results.
+    """
+
+    def __init__(
+        self,
+        router,
+        cfg: Optional[SchedulerConfig] = None,
+        *,
+        default_target_recall: Optional[float] = None,
+        clock: Callable[[], float] = time.monotonic,
+    ):
+        self.router = router
+        self.cfg = cfg or SchedulerConfig()
+        self.min_shape = self.cfg.min_shape or router.router_cfg.min_shape
+        self.default_target_recall = default_target_recall
+        self.clock = clock
+        self.stats = SchedulerStats()
+        self._uids = itertools.count()
+        self._admission: List[_Pending] = []
+        self._queues: List[List[_Pending]] = [[] for _ in router.tiers]
+        self._inflight: List[Tuple[_Dispatch, int, _Pending]] = []
+
+    # --------------------------------------------------------------- submit
+    def submit(self, request: SearchRequest) -> SearchTicket:
+        """Admit one request; returns its ticket.  Nothing is dispatched
+        until the next :meth:`step` (call it as often as you like — an empty
+        tick is cheap)."""
+        q = np.asarray(request.query, np.float32)
+        if q.ndim == 2 and q.shape[0] == 1:
+            q = q[0]
+        if q.ndim != 1:
+            raise ValueError(f"expected a single (d,) query, got {q.shape}")
+        k = self.router.base_cfg.k if request.k is None else int(request.k)
+        if not 1 <= k <= self.router.base_cfg.k:
+            raise ValueError(
+                f"k={k} not in [1, index k={self.router.base_cfg.k}]"
+            )
+        target = (
+            self.default_target_recall
+            if request.target_recall is None
+            else request.target_recall
+        )
+        if target is None:
+            raise ValueError(
+                "request has no target_recall and the scheduler has no default"
+            )
+        now = self.clock()
+        ticket = SearchTicket(
+            uid=next(self._uids),
+            submit_t=now,
+            deadline_t=(
+                None if request.deadline_s is None else now + request.deadline_s
+            ),
+        )
+        self._admission.append(_Pending(ticket, q, float(target), k))
+        self.stats.submitted += 1
+        return ticket
+
+    # ----------------------------------------------------------------- tick
+    def step(self, now: Optional[float] = None, *, force: bool = False) -> int:
+        """One scheduler tick: estimate whatever arrived, then drain every
+        tier bucket that is due (fill reached / oldest deadline due /
+        ``force``).  Returns the number of requests dispatched this tick.
+        Dispatches are asynchronous — harvest results with :meth:`poll`."""
+        now = self.clock() if now is None else now
+        if self._admission and (force or self._est_due(now)):
+            self._estimate_admitted(now)
+        dispatched = 0
+        for t, queue in enumerate(self._queues):
+            if not queue:
+                continue
+            trigger = self._due(queue, now, force)
+            if trigger is not None:
+                dispatched += self._dispatch_tier(t, now, trigger)
+        return dispatched
+
+    def flush(self) -> int:
+        """Force-drain every queue (estimation included); non-blocking."""
+        return self.step(force=True)
+
+    def _busy(self) -> bool:
+        """Any dispatch still executing (not yet materializable)?"""
+        return any(not item[0].ready() for item in self._inflight)
+
+    def _est_due(self, now: float) -> bool:
+        """Should the admission queue run its estimation pass this tick?
+        Immediately unless an ``est_wait_s`` batching window is configured;
+        an idle device (work-conserving mode), ``fill`` arrivals or a
+        deadline inside the window override the wait."""
+        if self.cfg.est_wait_s <= 0:
+            return True
+        if self.cfg.work_conserving and not self._busy():
+            return True
+        if len(self._admission) >= self.cfg.fill:
+            return True
+        oldest = min(p.ticket.submit_t for p in self._admission)
+        if now - oldest >= self.cfg.est_wait_s:
+            return True
+        deadlines = [
+            p.ticket.deadline_t
+            for p in self._admission
+            if p.ticket.deadline_t is not None
+        ]
+        return bool(deadlines) and (
+            min(deadlines) - self.cfg.flush_margin_s <= now + self.cfg.est_wait_s
+        )
+
+    def _due(self, queue: List[_Pending], now: float,
+             force: bool) -> Optional[str]:
+        if force:
+            return TRIGGER_FLUSH
+        if len(queue) >= self.cfg.fill:
+            return TRIGGER_FILL
+        deadlines = [
+            p.ticket.deadline_t for p in queue if p.ticket.deadline_t is not None
+        ]
+        if deadlines and min(deadlines) - self.cfg.flush_margin_s <= now:
+            return TRIGGER_DEADLINE
+        if self.cfg.work_conserving and not self._busy():
+            # nothing is running: holding this bucket buys no amortization.
+            # Tiers are scanned smallest-ef first, so the cheap bucket goes
+            # now and the device is busy again by the next tier's check.
+            return TRIGGER_IDLE
+        return None
+
+    # ----------------------------------------------------------- estimation
+    def _estimate_admitted(self, now: float) -> None:
+        entries, self._admission = self._admission, []
+        b = len(entries)
+        shape = pad_shape(b, self.min_shape)
+        q = np.stack([p.query for p in entries])
+        q_pad = np.concatenate([q, np.repeat(q[:1], shape - b, axis=0)])
+        targets = np.asarray([p.target for p in entries], np.float32)
+        t_pad = np.concatenate([targets, np.repeat(targets[:1], shape - b)])
+        t0 = time.perf_counter()
+        ef_np, states = self.router.estimate(
+            q_pad, t_pad[:, None], num_real=b
+        )
+        jax.block_until_ready(states)
+        wall = time.perf_counter() - t0
+        est_ndist = np.asarray(states.ndist)
+        est_pass = _EstPass(states=states, queries=q_pad)
+        tiers = assign_tiers(ef_np[:b], self.router._tier_efs)
+        for i, p in enumerate(entries):
+            p.est_pass = est_pass
+            p.row = i
+            p.ef = int(ef_np[i])
+            p.stats.est_t = now
+            p.stats.est_batch = b
+            p.stats.est_ndist = int(est_ndist[i])
+            p.stats.ef_est = p.ef
+            self._queues[int(tiers[i])].append(p)
+        st = self.stats
+        st.est_passes += 1
+        st.est_shape_total += shape
+        st.est_ndist_total += int(est_ndist[:b].sum())
+        st.est_pad_ndist += int(est_ndist[b:].sum())
+        st.est_wall_s += wall
+
+    # -------------------------------------------------------------- dispatch
+    def _dispatch_tier(self, t: int, now: float, trigger: str) -> int:
+        entries, self._queues[t] = self._queues[t], []
+        tier = self.router.tiers[t]
+        b = len(entries)
+        shape = pad_shape(b, self.min_shape)
+        # Gather each request's carried phase-A state row.  A bucket may span
+        # several estimation passes; every device op here runs at the
+        # *padded dispatch shape* (one full-shape take per pass, then a
+        # masked where-merge across passes), so the eager-op compile cache is
+        # keyed only by the small pow2 shape set — never by how many requests
+        # happened to share a pass.  Padding slots replicate the first entry
+        # (the cheapest legal resume: ef = k), exactly like the synchronous
+        # route() barrier did.
+        passes: List[_EstPass] = []
+        owner = np.zeros(shape, np.int64)
+        rows = np.zeros(shape, np.int64)
+        for slot, p in enumerate(entries):
+            for pi, est_pass in enumerate(passes):
+                if est_pass is p.est_pass:
+                    break
+            else:
+                passes.append(p.est_pass)
+                pi = len(passes) - 1
+            owner[slot] = pi
+            rows[slot] = p.row
+        owner[b:] = owner[0]
+        rows[b:] = rows[0]
+
+        states = q_b = None
+        for pi, est_pass in enumerate(passes):
+            mine = owner == pi
+            take = jnp.asarray(np.where(mine, rows, 0))
+            part = jax.tree_util.tree_map(
+                lambda a, t_=take: a[t_], est_pass.states
+            )
+            q_part = est_pass.queries[np.where(mine, rows, 0)]
+            if states is None:
+                states, q_b = part, q_part
+            else:
+                m_dev = jnp.asarray(mine)
+                states = jax.tree_util.tree_map(
+                    lambda pa, aa: jnp.where(
+                        m_dev.reshape((shape,) + (1,) * (pa.ndim - 1)), pa, aa
+                    ),
+                    part,
+                    states,
+                )
+                q_b = np.where(mine[:, None], q_part, q_b)
+        ef_b = np.asarray(
+            [p.ef for p in entries]
+            + [self.router.base_cfg.k] * (shape - b),
+            np.int32,
+        )
+        for p in entries:
+            # the carried phase-A rows are gathered; dropping the reference
+            # lets each estimation pass free its device buffers as soon as
+            # the last request it admitted has dispatched
+            p.est_pass = None
+        t0 = time.perf_counter()
+        res_dev = resume_at_ef(
+            self.router.graph,
+            jnp.asarray(q_b),
+            resize_state(states, tier.ef),
+            jnp.asarray(ef_b),
+            tier.cfg,
+        )
+        dispatch = _Dispatch(tier, entries, shape, res_dev, t0)
+        for slot, p in enumerate(entries):
+            p.stats.dispatch_t = now
+            p.stats.tier_ef = tier.ef
+            p.stats.tier_beam = tier.beam
+            p.stats.dispatch_batch = b
+            p.stats.padded_to = shape
+            p.stats.trigger = trigger
+            self._inflight.append((dispatch, slot, p))
+        counter = {
+            TRIGGER_FILL: "fill_drains",
+            TRIGGER_DEADLINE: "deadline_drains",
+            TRIGGER_FLUSH: "flush_drains",
+            TRIGGER_IDLE: "idle_drains",
+        }[trigger]
+        setattr(self.stats, counter, getattr(self.stats, counter) + 1)
+        return b
+
+    # ------------------------------------------------------------------ poll
+    def poll(
+        self,
+        *,
+        block: bool = False,
+        uids: Optional[Sequence[int]] = None,
+    ) -> List[SearchResponse]:
+        """Harvest completed responses.  Non-blocking by default: only
+        dispatches whose device buffers are ready materialize.  ``uids``
+        restricts harvesting to those tickets (others stay queued — e.g. an
+        engine polling its own requests on a shared scheduler)."""
+        want = None if uids is None else set(uids)
+        out: List[SearchResponse] = []
+        keep: List[Tuple[_Dispatch, int, _Pending]] = []
+        for item in self._inflight:
+            dispatch, slot, p = item
+            if want is not None and p.ticket.uid not in want:
+                keep.append(item)
+                continue
+            if not (block or dispatch.ready()):
+                keep.append(item)
+                continue
+            dispatch.materialize(self.stats)
+            out.append(self._response(dispatch, slot, p))
+        self._inflight = keep
+        self.stats.completed += len(out)
+        return out
+
+    def drain(self) -> List[SearchResponse]:
+        """Flush everything and block for every outstanding response."""
+        self.flush()
+        return self.poll(block=True)
+
+    def _response(self, dispatch: _Dispatch, slot: int,
+                  p: _Pending) -> SearchResponse:
+        res = dispatch.res_np
+        p.stats.done_t = self.clock()
+        p.stats.ndist = int(res.ndist[slot])
+        return SearchResponse(
+            ticket=p.ticket,
+            ids=res.ids[slot, : p.k].copy(),
+            dists=res.dists[slot, : p.k].copy(),
+            ndist=int(res.ndist[slot]),
+            iters=int(res.iters[slot]),
+            ef_used=int(res.ef_used[slot]),
+            stats=p.stats,
+        )
+
+    # ------------------------------------------------------------ inspection
+    @property
+    def pending(self) -> int:
+        """Requests submitted but not yet returned through :meth:`poll`."""
+        return (
+            len(self._admission)
+            + sum(len(q) for q in self._queues)
+            + len(self._inflight)
+        )
+
+    def queue_depths(self) -> List[int]:
+        """Current per-tier queue lengths (admission not included)."""
+        return [len(q) for q in self._queues]
+
+    def router_stats(self, since: Optional[SchedulerStats] = None):
+        """Render (a slice of) the scheduler counters as a batch-compatible
+        :class:`RouterStats` — ``since`` is a prior ``stats.snapshot()``."""
+        from .stats import RouterStats
+
+        st = self.stats.delta(since)
+        return RouterStats(
+            batch=st.submitted,
+            est_shape=st.est_shape_total,
+            est_cap=self.router.est_cfg.ef_cap,
+            est_ndist_total=st.est_ndist_total,
+            est_wall_s=st.est_wall_s,
+            est_matched=self.router.est_matched,
+            est_pad_ndist=st.est_pad_ndist,
+            tiers=list(st.tiers),
+        )
+
+
+def replay_trace(
+    sched: AdaServeScheduler,
+    requests: Sequence[SearchRequest],
+    arrivals: Sequence[float],
+    *,
+    sleep_s: float = 1e-3,
+) -> Tuple[List[SearchResponse], np.ndarray]:
+    """Real-time replay of an arrival trace through a scheduler.
+
+    Submits ``requests[i]`` once ``arrivals[i]`` seconds (ascending, relative
+    to the replay start) have elapsed, ticking and polling the scheduler in
+    between; sleeps briefly whenever a tick produced nothing so the host does
+    not busy-spin, and finishes with a flush + blocking poll.  Only this
+    trace's tickets are harvested (uid-filtered), so a shared scheduler's
+    other traffic is left alone.  Returns ``(responses, latencies)`` aligned
+    with the submit order, latency = arrival -> response materialization.
+    This is the one canonical submit/step/poll loop — the streaming drivers
+    and the scheduler benchmark all replay through it.
+    """
+    n = len(requests)
+    arrive = {}
+    order: List[int] = []
+    got = {}
+    lat = {}
+    t0 = time.perf_counter()
+
+    def harvest(block: bool = False) -> int:
+        pend = [u for u in order if u not in got]
+        if not pend:
+            return 0
+        res = sched.poll(block=block, uids=pend)
+        for r in res:
+            got[r.ticket.uid] = r
+            lat[r.ticket.uid] = (
+                time.perf_counter() - t0 - arrive[r.ticket.uid]
+            )
+        return len(res)
+
+    i = 0
+    while i < n:
+        now = time.perf_counter() - t0
+        while i < n and arrivals[i] <= now:
+            tk = sched.submit(requests[i])
+            arrive[tk.uid] = arrivals[i]
+            order.append(tk.uid)
+            i += 1
+        progressed = harvest()
+        sched.step()
+        progressed += harvest()
+        if i < n and not progressed:
+            gap = arrivals[i] - (time.perf_counter() - t0)
+            if gap > 0:
+                time.sleep(min(gap, sleep_s))
+    sched.flush()
+    harvest(block=True)
+    return [got[u] for u in order], np.asarray([lat[u] for u in order])

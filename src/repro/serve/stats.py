@@ -1,15 +1,22 @@
-"""Router telemetry: per-tier and per-batch serving counters.
+"""Serving telemetry: per-tier, per-batch and per-scheduler counters.
 
 A :class:`RouterStats` is produced per routed batch — cheap host-side
 counters (no device sync beyond the results the router already pulls), meant
 to be aggregated by whatever metrics layer sits above the engine.  ``ndist``
 totals are cumulative across both phases (estimation + tier search), so they
 are directly comparable against the monolithic ``adaptive_search`` cost.
+
+A :class:`SchedulerStats` accumulates the same counters over the lifetime of
+an :class:`repro.serve.scheduler.AdaServeScheduler` (many estimation passes,
+many independent tier drains); ``snapshot()``/``delta()`` carve out the slice
+belonging to one serving call, and the scheduler can render any slice as a
+batch-compatible :class:`RouterStats` for existing consumers.
 """
 from __future__ import annotations
 
+import copy
 import dataclasses
-from typing import Dict, List
+from typing import Dict, List, Optional
 
 
 @dataclasses.dataclass
@@ -19,9 +26,13 @@ class TierStats:
     count: int             # real queries routed to this tier
     padded_to: int         # fixed batch shape the bucket was padded to
     ndist_total: int       # sum of per-query ndist (est + search), real rows
-    wall_s: float          # dispatch -> block_until_ready on the bucket
-                           # outputs (execution, not just dispatch); tiers
-                           # overlap on device, so walls do not sum to total
+    wall_s: float          # dispatch -> first *observed* completion of the
+                           # bucket outputs: a blocked pull for synchronous
+                           # drains (route()), so execution wall there; under
+                           # lazy polling (engine decode overlap, streaming)
+                           # an upper bound that includes host idle time
+                           # until the poll.  Tiers overlap on device, so
+                           # walls do not sum to the batch wall-clock.
 
     def as_dict(self) -> Dict:
         return dataclasses.asdict(self)
@@ -35,6 +46,9 @@ class RouterStats:
     est_ndist_total: int          # estimation-pass ndist over real queries
     est_wall_s: float             # estimation pass wall-clock (blocked)
     est_matched: bool = False     # efs looked up in an estimation-matched table
+    est_pad_ndist: int = 0        # estimation-pass ndist spent on padding rows
+    #   (pad rows skip phase A, so this is ~1 per pad row — the counter exists
+    #   to make the padding cost visible, not to hide it)
     tiers: List[TierStats] = dataclasses.field(default_factory=list)
     total_wall_s: float = 0.0     # end-to-end route() wall-clock
 
@@ -58,4 +72,68 @@ class RouterStats:
         d["tiers"] = [t.as_dict() for t in self.tiers]
         d["ndist_total"] = self.ndist_total
         d["padding_waste"] = self.padding_waste
+        return d
+
+
+@dataclasses.dataclass
+class SchedulerStats:
+    """Lifetime counters of one :class:`AdaServeScheduler`.
+
+    ``tiers`` holds one :class:`TierStats` per *drain dispatch* (a tier may
+    appear many times — each independent drain is one record), in dispatch
+    order.  Drain-trigger counters split out why buckets drained: ``fill``
+    (reached the pow2 fill), ``deadline`` (oldest request's deadline due),
+    ``flush`` (explicit/forced drain), ``idle`` (work-conserving: the device
+    had nothing in flight).  The per-dispatch records accumulate for the
+    scheduler's lifetime; long-lived owners should slice their own traffic
+    with ``snapshot()``/``delta()`` (cheap — no record copying) and may
+    ``stats.tiers.clear()`` after exporting if the history grows large.
+    """
+
+    submitted: int = 0            # tickets issued
+    completed: int = 0            # responses returned through poll()
+    est_passes: int = 0           # estimation dispatches run
+    est_shape_total: int = 0      # sum of padded estimation shapes
+    est_ndist_total: int = 0      # phase-A ndist over real rows
+    est_pad_ndist: int = 0        # phase-A ndist spent on padding rows
+    est_wall_s: float = 0.0       # summed estimation walls (blocked)
+    fill_drains: int = 0
+    deadline_drains: int = 0
+    flush_drains: int = 0
+    idle_drains: int = 0          # work-conserving drains (device was idle)
+    tiers: List[TierStats] = dataclasses.field(default_factory=list)
+    tier_mark: int = 0            # len(tiers) at snapshot time (delta cursor)
+
+    def snapshot(self) -> "SchedulerStats":
+        """A cheap counter copy marking 'now' — pass it to :meth:`delta`
+        later.  The per-dispatch records are not copied (only their current
+        count), so snapshotting is O(1) however long the scheduler lived."""
+        mark = copy.copy(self)
+        mark.tiers = []
+        mark.tier_mark = len(self.tiers)
+        return mark
+
+    def delta(self, since: Optional["SchedulerStats"]) -> "SchedulerStats":
+        """Counters accumulated after ``since`` (a prior :meth:`snapshot`)."""
+        if since is None:
+            return self
+        return SchedulerStats(
+            submitted=self.submitted - since.submitted,
+            completed=self.completed - since.completed,
+            est_passes=self.est_passes - since.est_passes,
+            est_shape_total=self.est_shape_total - since.est_shape_total,
+            est_ndist_total=self.est_ndist_total - since.est_ndist_total,
+            est_pad_ndist=self.est_pad_ndist - since.est_pad_ndist,
+            est_wall_s=self.est_wall_s - since.est_wall_s,
+            fill_drains=self.fill_drains - since.fill_drains,
+            deadline_drains=self.deadline_drains - since.deadline_drains,
+            flush_drains=self.flush_drains - since.flush_drains,
+            idle_drains=self.idle_drains - since.idle_drains,
+            tiers=self.tiers[since.tier_mark:],
+        )
+
+    def as_dict(self) -> Dict:
+        d = dataclasses.asdict(self)
+        d.pop("tier_mark", None)  # internal delta cursor, not telemetry
+        d["tiers"] = [t.as_dict() for t in self.tiers]
         return d

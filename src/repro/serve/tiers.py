@@ -11,7 +11,10 @@ contractions.
 
 The ladder is static per router — tier configs are hashable
 :class:`SearchConfig` instances, so XLA compiles each (tier, bucket-shape)
-pair exactly once and reuses it across requests.
+pair exactly once and reuses it across requests.  The continuous-batching
+scheduler keeps one request queue per rung and drains each independently
+(fill/deadline/idle), so a rung is also the unit of batching: its ef bound
+caps the per-dispatch cost a queued request can be made to wait behind.
 """
 from __future__ import annotations
 

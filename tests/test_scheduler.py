@@ -1,0 +1,367 @@
+"""Continuous-batching scheduler: arrival-order invariance vs the synchronous
+route() barrier, ticket bookkeeping, drain triggers (fill vs deadline vs
+flush), estimation-pass padding cost, and cache invalidation."""
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.serve import (
+    AdaServeScheduler,
+    SchedulerConfig,
+    SearchRequest,
+)
+from repro.serve.router import RouterConfig
+
+
+class FakeClock:
+    """Deterministic scheduler clock for deadline tests."""
+
+    def __init__(self, t: float = 0.0):
+        self.t = t
+
+    def __call__(self) -> float:
+        return self.t
+
+    def advance(self, dt: float) -> None:
+        self.t += dt
+
+
+def _queries(small_db, nq=64, seed=1):
+    data, centers, w = small_db
+    rng = np.random.default_rng(seed)
+    qc = rng.choice(len(centers), size=nq, p=w)
+    return (centers[qc] + 0.3 * rng.normal(0, 1, (nq, centers.shape[1]))).astype(
+        np.float32
+    )
+
+
+def _route_ref(router, q, target):
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        return router.route(q, target)
+
+
+# --------------------------------------------------------------------------
+# config validation
+# --------------------------------------------------------------------------
+
+
+def test_scheduler_config_validation():
+    SchedulerConfig(fill=1)
+    SchedulerConfig(fill=16)
+    with pytest.raises(ValueError):
+        SchedulerConfig(fill=0)
+    with pytest.raises(ValueError):
+        SchedulerConfig(fill=6)  # not a power of two
+    with pytest.raises(ValueError):
+        SchedulerConfig(flush_margin_s=-1.0)
+
+
+# --------------------------------------------------------------------------
+# ticket bookkeeping
+# --------------------------------------------------------------------------
+
+
+def test_ticket_bookkeeping(small_db, small_index):
+    q = _queries(small_db, nq=5, seed=2)
+    clock = FakeClock(10.0)
+    sched = AdaServeScheduler(
+        small_index.router(RouterConfig()),
+        SchedulerConfig(fill=64),
+        default_target_recall=small_index.target_recall,
+        clock=clock,
+    )
+    assert sched.pending == 0
+    assert sched.poll() == []
+
+    t0 = sched.submit(SearchRequest(query=q[0]))
+    clock.advance(0.5)
+    t1 = sched.submit(SearchRequest(query=q[1], deadline_s=2.0))
+    assert t1.uid > t0.uid  # unique, monotone
+    assert t0.submit_t == 10.0 and t1.submit_t == 10.5
+    assert t0.deadline_t is None
+    assert t1.deadline_t == pytest.approx(12.5)
+    assert sched.pending == 2
+    assert sched.stats.submitted == 2
+
+    # nothing runs before a tick; drain returns exactly the submitted set
+    assert sched.poll() == []
+    responses = sched.drain()
+    assert sched.pending == 0
+    assert {r.ticket.uid for r in responses} == {t0.uid, t1.uid}
+    assert sched.stats.completed == 2
+    for r in responses:
+        assert r.ids.shape == (small_index.k,)
+        assert r.stats.trigger == "flush"
+        assert r.stats.latency_s >= 0.0
+        assert r.stats.ndist == r.ndist > 0
+
+
+def test_submit_validation(small_db, small_index):
+    q = _queries(small_db, nq=2, seed=3)
+    sched = AdaServeScheduler(
+        small_index.router(RouterConfig()),
+        default_target_recall=small_index.target_recall,
+    )
+    with pytest.raises(ValueError):
+        sched.submit(SearchRequest(query=q))  # a batch, not one query
+    with pytest.raises(ValueError):
+        sched.submit(SearchRequest(query=q[0], k=small_index.k + 1))
+    no_default = AdaServeScheduler(small_index.router(RouterConfig()))
+    with pytest.raises(ValueError):
+        no_default.submit(SearchRequest(query=q[0]))
+    # (1, d) single-row batches are accepted as one query
+    t = sched.submit(SearchRequest(query=q[:1], target_recall=0.9))
+    assert t.uid >= 0
+    sched.drain()
+
+
+def test_per_request_k_override(small_db, small_index):
+    q = _queries(small_db, nq=2, seed=4)
+    sched = AdaServeScheduler(
+        small_index.router(RouterConfig()),
+        default_target_recall=small_index.target_recall,
+    )
+    sched.submit(SearchRequest(query=q[0], k=3))
+    sched.submit(SearchRequest(query=q[1]))
+    r3, rk = sorted(sched.drain(), key=lambda r: r.ticket.uid)
+    assert r3.ids.shape == (3,) and r3.dists.shape == (3,)
+    assert rk.ids.shape == (small_index.k,)
+
+
+def test_poll_uid_filter(small_db, small_index):
+    q = _queries(small_db, nq=4, seed=5)
+    sched = AdaServeScheduler(
+        small_index.router(RouterConfig()),
+        default_target_recall=small_index.target_recall,
+    )
+    tickets = [sched.submit(SearchRequest(query=row)) for row in q]
+    sched.flush()
+    mine = sched.poll(block=True, uids=[tickets[0].uid, tickets[2].uid])
+    assert {r.ticket.uid for r in mine} == {tickets[0].uid, tickets[2].uid}
+    assert sched.pending == 2  # the other two stay queued
+    rest = sched.poll(block=True)
+    assert {r.ticket.uid for r in rest} == {tickets[1].uid, tickets[3].uid}
+    assert sched.pending == 0
+
+
+# --------------------------------------------------------------------------
+# drain triggers
+# --------------------------------------------------------------------------
+
+
+def test_deadline_draining(small_db, small_index):
+    q = _queries(small_db, nq=3, seed=6)
+    clock = FakeClock()
+    sched = AdaServeScheduler(
+        small_index.router(RouterConfig()),
+        # fill never reached; strict policy (no work-conserving idle drains)
+        SchedulerConfig(fill=64, work_conserving=False),
+        default_target_recall=small_index.target_recall,
+        clock=clock,
+    )
+    for row in q:
+        sched.submit(SearchRequest(query=row, deadline_s=1.0))
+    # before the deadline: estimated + tier-queued, but not dispatched
+    assert sched.step() == 0
+    assert sum(sched.queue_depths()) == 3
+    assert sched.poll() == []
+    clock.advance(0.5)
+    assert sched.step() == 0  # still inside the budget
+    clock.advance(0.75)
+    assert sched.step() == 3  # deadline due -> bucket drains
+    responses = sched.poll(block=True)
+    assert len(responses) == 3
+    assert sched.stats.deadline_drains >= 1
+    assert all(r.stats.trigger == "deadline" for r in responses)
+
+
+def test_fill_draining_across_estimation_passes(small_db, small_index):
+    """A bucket accumulates across step()s (separate estimation passes) and
+    drains exactly when it reaches the pow2 fill — no deadline involved."""
+    q0 = _queries(small_db, nq=1, seed=7)[0]
+    sched = AdaServeScheduler(
+        small_index.router(RouterConfig()),
+        SchedulerConfig(fill=4, work_conserving=False),
+        default_target_recall=small_index.target_recall,
+    )
+    for _ in range(3):  # identical queries -> identical ef -> one tier
+        sched.submit(SearchRequest(query=q0))
+    assert sched.step() == 0
+    assert sum(sched.queue_depths()) == 3
+    assert sched.stats.est_passes == 1
+    sched.submit(SearchRequest(query=q0))
+    assert sched.step() == 4  # second pass tops the bucket up to fill
+    assert sched.stats.est_passes == 2
+    responses = sched.poll(block=True)
+    assert len(responses) == 4
+    assert sched.stats.fill_drains == 1
+    assert all(r.stats.trigger == "fill" for r in responses)
+    # the 4 requests resumed bit-identically despite 2 estimation passes
+    ids = np.stack([r.ids for r in responses])
+    assert (ids == ids[0]).all()
+
+
+# --------------------------------------------------------------------------
+# arrival-order invariance (the tentpole acceptance property)
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("seed", range(5))
+def test_arrival_order_invariance_vs_route(small_db, small_index, seed):
+    """Property: for a random interleaving of submit()/step()/poll() with
+    random per-request deadlines (mixing fill, deadline and flush drains),
+    the scheduler returns ids/dists/ndist/ef bit-identical to the synchronous
+    route() barrier under a lossless config."""
+    rng = np.random.default_rng(1000 + seed)
+    nq = int(rng.integers(8, 48))
+    q = _queries(small_db, nq=nq, seed=seed)
+    router = small_index.router(RouterConfig(beam_mode="fixed"))
+    ref, _ = _route_ref(router, q, small_index.target_recall)
+
+    clock = FakeClock()
+    fill = int(rng.choice([2, 8, 16]))
+    sched = AdaServeScheduler(
+        router,
+        SchedulerConfig(fill=fill),
+        default_target_recall=small_index.target_recall,
+        clock=clock,
+    )
+    tickets = []
+    responses = []
+    i = 0
+    while i < nq:
+        for _ in range(int(rng.integers(1, 6))):
+            if i >= nq:
+                break
+            deadline = None if rng.random() < 0.5 else float(rng.uniform(0.01, 0.3))
+            tickets.append(
+                sched.submit(SearchRequest(query=q[i], deadline_s=deadline))
+            )
+            i += 1
+        clock.advance(float(rng.uniform(0.0, 0.2)))
+        sched.step()
+        if rng.random() < 0.5:
+            responses.extend(sched.poll())
+    responses.extend(sched.drain())
+
+    assert len(responses) == nq and sched.pending == 0
+    by_uid = {r.ticket.uid: r for r in responses}
+    ids = np.stack([by_uid[t.uid].ids for t in tickets])
+    dists = np.stack([by_uid[t.uid].dists for t in tickets])
+    ndist = np.asarray([by_uid[t.uid].ndist for t in tickets])
+    ef = np.asarray([by_uid[t.uid].ef_used for t in tickets])
+    np.testing.assert_array_equal(ids, ref.ids)
+    np.testing.assert_array_equal(dists, ref.dists)
+    np.testing.assert_array_equal(ndist, ref.ndist)
+    np.testing.assert_array_equal(ef, ref.ef_used)
+    st = sched.stats
+    drains = (
+        st.fill_drains + st.deadline_drains + st.flush_drains + st.idle_drains
+    )
+    assert drains == len(st.tiers)
+    assert sum(t.count for t in st.tiers) == nq
+
+
+def test_mixed_target_recalls_in_one_pass(small_db, small_index):
+    """Requests with different declarative targets share one estimation pass
+    and still match their per-target synchronous reference."""
+    q = _queries(small_db, nq=8, seed=11)
+    router = small_index.router(RouterConfig(beam_mode="fixed"))
+    lo, hi = 0.8, small_index.target_recall
+    ref_lo, _ = _route_ref(router, q[:4], lo)
+    ref_hi, _ = _route_ref(router, q[4:], hi)
+    sched = AdaServeScheduler(router, default_target_recall=hi)
+    tickets = [
+        sched.submit(SearchRequest(query=q[i], target_recall=lo if i < 4 else hi))
+        for i in range(8)
+    ]
+    by_uid = {r.ticket.uid: r for r in sched.drain()}
+    ids = np.stack([by_uid[t.uid].ids for t in tickets])
+    np.testing.assert_array_equal(ids[:4], ref_lo.ids)
+    np.testing.assert_array_equal(ids[4:], ref_hi.ids)
+
+
+# --------------------------------------------------------------------------
+# estimation-pass padding + telemetry
+# --------------------------------------------------------------------------
+
+
+def test_estimation_padding_converges_immediately(small_db, small_index):
+    """Satellite fix: estimation-pass padding rows skip phase A — each pad
+    row costs exactly the entry-point distance, reported in est_pad_ndist."""
+    q = _queries(small_db, nq=13, seed=12)  # pads 13 -> 16
+    _, stats = _route_ref(
+        small_index.router(RouterConfig()), q, small_index.target_recall
+    )
+    assert stats.est_shape == 16
+    assert stats.est_pad_ndist == stats.est_shape - stats.batch == 3
+    assert stats.as_dict()["est_pad_ndist"] == 3
+    # real rows pay full phase A, so the pad total is far below the real total
+    assert stats.est_ndist_total > 13 * stats.est_pad_ndist
+
+
+def test_router_stats_compat_from_scheduler(small_db, small_index):
+    q = _queries(small_db, nq=9, seed=13)
+    sched = AdaServeScheduler(
+        small_index.router(RouterConfig()),
+        default_target_recall=small_index.target_recall,
+    )
+    mark = sched.stats.snapshot()
+    for row in q:
+        sched.submit(SearchRequest(query=row))
+    sched.drain()
+    rs = sched.router_stats(mark)
+    assert rs.batch == 9
+    assert sum(t.count for t in rs.tiers) == 9
+    assert rs.ndist_total > 0 and 0.0 <= rs.padding_waste < 1.0
+    d = rs.as_dict()
+    assert d["batch"] == 9 and len(d["tiers"]) == len(rs.tiers)
+    # a second serving slice measures only its own traffic
+    mark2 = sched.stats.snapshot()
+    sched.submit(SearchRequest(query=q[0]))
+    sched.drain()
+    rs2 = sched.router_stats(mark2)
+    assert rs2.batch == 1 and sum(t.count for t in rs2.tiers) == 1
+
+
+# --------------------------------------------------------------------------
+# deprecation shim + cache invalidation
+# --------------------------------------------------------------------------
+
+
+def test_route_emits_deprecation_warning(small_db, small_index):
+    q = _queries(small_db, nq=8, seed=14)
+    with pytest.warns(DeprecationWarning, match="submit"):
+        small_index.router(RouterConfig()).route(q, small_index.target_recall)
+
+
+def test_scheduler_invalidated_on_update(small_db):
+    from repro.index import build_ada_index
+
+    data, _, _ = small_db
+    idx = build_ada_index(
+        data[:1200], k=5, target_recall=0.9, m=8, ef_construction=60,
+        ef_cap=160, num_samples=32,
+    )
+    s0 = idx.scheduler()
+    assert idx.scheduler() is s0  # cached
+    assert s0.router is idx.router()
+    idx.insert(data[1200:1210])
+    s1 = idx.scheduler()
+    assert s1 is not s0  # graph changed -> scheduler rebuilt
+    assert s1.router is idx.router()
+    idx.delete(np.asarray([0, 1]))
+    s2 = idx.scheduler()
+    assert s2 is not s1
+    # the rebuilt scheduler serves against the updated graph
+    q = _queries(small_db, nq=4, seed=15)
+    tickets = [s2.submit(SearchRequest(query=row)) for row in q]
+    responses = s2.drain()
+    assert len(responses) == len(tickets)
+    assert all(r.ids.shape == (5,) for r in responses)
+    # installed configs survive invalidation-triggered rebuilds
+    idx.scheduler(SchedulerConfig(fill=16))
+    idx.insert(data[1210:1215])
+    assert idx.scheduler().cfg.fill == 16
