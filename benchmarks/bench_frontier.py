@@ -29,8 +29,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api import SearchConfig
 from repro.index import (
-    SearchConfig,
     brute_force_topk_chunked,
     prepare_database,
     prepare_queries,
@@ -39,6 +39,7 @@ from repro.index import (
 )
 from repro.index.search import DeviceGraph
 from repro.kernels import ops, ref
+from repro.plan import resolve_backend
 from .common import emit, zipf_cluster
 
 BENCH_JSON = Path(__file__).resolve().parents[1] / "BENCH_kernels.json"
@@ -182,6 +183,14 @@ def run(k=10, ef=64, quick=True, smoke=False, batch_sizes=(8, 32, 128)):
     err = _kernel_parity()
     out["xq_kernel_interpret_maxerr"] = err
     emit("frontier.xq_kernel", 0.0, f"interpret_maxerr={err:.2e}")
+
+    # what the planner's capability probe would dispatch on this host — the
+    # loop/kernel numbers above are attributable to a concrete plan decision
+    backend, use_kernel, note = resolve_backend("auto", False)
+    out["planner_backend"] = {
+        "resolved": backend, "use_kernel": use_kernel, "note": note,
+    }
+    emit("frontier.planner_backend", 0.0, f"{backend} ({note})")
 
     out["meta"] = {"quick": bool(quick), "smoke": bool(smoke)}
     # the workload is identical across quick/smoke, so the tracked file is

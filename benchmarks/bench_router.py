@@ -40,13 +40,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api import RouterConfig, SearchSpec, SpecOverrides
 from repro.index import (
     brute_force_topk_chunked,
     build_ada_index,
     prepare_queries,
     recall_at_k,
 )
-from repro.serve.router import QueryRouter, RouterConfig
 from .common import DATASETS, emit
 
 BENCH_JSON = Path(__file__).resolve().parents[1] / "BENCH_serve.json"
@@ -69,20 +69,29 @@ def _skewed_queries(data: np.ndarray, nq: int, easy_frac: float, seed: int):
     return q[perm], mask[perm]
 
 
-def _timed_mono(idx, queries):
-    res = idx.query(queries)
+def _timed_mono(plan, queries):
+    res = plan.search(queries)
     jax.block_until_ready(res.ids)
     t0 = time.perf_counter()
-    res = idx.query(queries)
+    res = plan.search(queries)
     jax.block_until_ready(res.ids)
     return jax.tree_util.tree_map(np.asarray, res), time.perf_counter() - t0
 
 
-def _timed_routed(router, queries, target):
-    router.route(queries, target)  # compile every tier it will hit
+def _timed_routed(plan, queries):
+    plan.search(queries)  # compile every tier it will hit
     t0 = time.perf_counter()
-    res, stats = router.route(queries, target)
+    res, stats = plan.search(queries, with_stats=True)
     return res, stats, time.perf_counter() - t0
+
+
+def _routed_plan(idx, target, rcfg=None):
+    """Lower one routed spec; ``rcfg`` pins the router policy through the
+    overrides escape hatch (the benchmark sweeps estimation budgets)."""
+    overrides = SpecOverrides() if rcfg is None else SpecOverrides(router=rcfg)
+    return idx.plan(
+        SearchSpec(target_recall=target, mode="routed", overrides=overrides)
+    )
 
 
 def _record(name, res, gt, wall_s, nq, extra=None):
@@ -128,12 +137,13 @@ def run(k=10, target=0.95, quick=True, smoke=False):
     }
 
     # ---- monolithic fused adaptive_search --------------------------------
-    mono, mono_wall = _timed_mono(idx, queries)
+    mono_plan = idx.plan(SearchSpec(target_recall=target))
+    mono, mono_wall = _timed_mono(mono_plan, queries)
     out["mono"] = _record("mono", mono, gt, mono_wall, nq)
 
     # ---- routed, lossless estimation + fixed beam: per-query identical ----
-    router_ex = idx.router(RouterConfig(beam_mode="fixed"))
-    res_ex, st_ex, wall_ex = _timed_routed(router_ex, queries, target)
+    plan_ex = _routed_plan(idx, target, RouterConfig(beam_mode="fixed"))
+    res_ex, st_ex, wall_ex = _timed_routed(plan_ex, queries)
     match = float((res_ex.ids == mono.ids).all(axis=1).mean())
     out["routed_exact"] = _record(
         "routed_exact", res_ex, gt, wall_ex, nq,
@@ -149,12 +159,13 @@ def run(k=10, target=0.95, quick=True, smoke=False):
         "routed_beam1": RouterConfig(est_lmax=est_lmax, beam_mode="fixed"),
     }
     for name, rcfg in configs.items():
-        router = idx.router(rcfg)
-        res, st, wall = _timed_routed(router, queries, target)
+        plan = _routed_plan(idx, target, rcfg)
+        res, st, wall = _timed_routed(plan, queries)
         tiers = [(t.ef, t.beam, t.count) for t in st.tiers]
         out[name] = _record(
             name, res, gt, wall, nq,
-            {"stats": st.as_dict(), "tiers": tiers},
+            {"stats": st.as_dict(), "tiers": tiers,
+             "explain": plan.explain()["estimation"]},
         )
         emit(f"router.{name}.tiers", 0.0,
              " ".join(f"ef{e}b{b}:{c}" for e, b, c in tiers)

@@ -35,13 +35,13 @@ from __future__ import annotations
 
 import json
 import time
-import warnings
 from pathlib import Path
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api import RouterConfig, SchedulerConfig, SearchSpec, SpecOverrides
 from repro.index import (
     brute_force_topk_chunked,
     build_ada_index,
@@ -49,9 +49,8 @@ from repro.index import (
     recall_at_k,
 )
 from repro.index.search import resize_state, resume_at_ef
-from repro.serve import AdaServeScheduler, SchedulerConfig, SearchRequest
+from repro.serve import SearchRequest
 from repro.serve.bucketing import pad_shape
-from repro.serve.router import RouterConfig
 from repro.serve.scheduler import replay_trace
 from .bench_router import _skewed_queries
 from .common import DATASETS, emit
@@ -113,14 +112,12 @@ def _warm_shapes(idx, router, queries, target, nq):
             jax.block_until_ready(merged)
 
 
-def _replay_scheduler(router, queries, arrivals, target, fill, deadline_s):
+def _replay_scheduler(plan, queries, arrivals, deadline_s):
     """Real-time replay through the continuous-batching lifecycle (the
-    canonical ``replay_trace`` loop the streaming drivers also use)."""
-    sched = AdaServeScheduler(
-        router,
-        SchedulerConfig(fill=fill, est_wait_s=deadline_s / 2.0),
-        default_target_recall=target,
-    )
+    canonical ``replay_trace`` loop the streaming drivers also use) — a
+    private scheduler session over the streaming plan, so pooled seeds do
+    not share queues."""
+    sched = plan.new_scheduler()
     requests = [
         SearchRequest(query=q, deadline_s=deadline_s) for q in queries
     ]
@@ -198,26 +195,35 @@ def run(k=10, target=0.95, quick=True, smoke=False):
     )
     # lossless fixed-beam config: all three disciplines are bit-identical per
     # query, so latencies compare at exactly equal recall
-    router = idx.router(RouterConfig(beam_mode="fixed"))
+    fixed = SpecOverrides(router=RouterConfig(beam_mode="fixed"))
+    routed_plan = idx.plan(SearchSpec(
+        target_recall=target, mode="routed", overrides=fixed
+    ))
+    router = routed_plan.router
 
     _warm_shapes(idx, router, queries, target, nq)
     # load-adaptive horizon: arrivals span ~0.9x the warm full-batch routed
     # wall, so the trace runs near saturation (barriers convoy, the scheduler
     # has standing tier queues) on any machine
-    with warnings.catch_warnings():
-        warnings.simplefilter("ignore", DeprecationWarning)
-        t0 = time.perf_counter()
-        router.route(queries, target)
-        w_full = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    routed_plan.search(queries)
+    w_full = time.perf_counter() - t0
     horizon = max(0.9 * w_full, 0.25)
     # per-request latency budget: a small multiple of the per-dispatch service
     # time, so partial buckets drain quickly instead of idling toward fill
     deadline_s = max(w_full / 12.0, 0.004)
+    # the streaming discipline under test: same routing policy, lifecycle
+    # execution with a deadline-derived drain policy
+    stream_plan = idx.plan(SearchSpec(
+        target_recall=target, mode="streaming",
+        overrides=SpecOverrides(
+            router=RouterConfig(beam_mode="fixed"),
+            scheduler=SchedulerConfig(fill=fill, est_wait_s=deadline_s / 2.0),
+        ),
+    ))
 
     def routed_batch(qs):
-        with warnings.catch_warnings():
-            warnings.simplefilter("ignore", DeprecationWarning)
-            res, st = router.route(qs, target)
+        res, st = routed_plan.search(qs, with_stats=True)
         return res.ids, st.ndist_total
 
     def mono_batch(qs):
@@ -250,7 +256,7 @@ def run(k=10, target=0.95, quick=True, smoke=False):
     for seed in seeds:
         arrivals = _poisson_arrivals(nq, horizon, seed=seed)
         ids_s, lat_s, nd_s_i, w_s, sstats = _replay_scheduler(
-            router, queries, arrivals, target, fill, deadline_s
+            stream_plan, queries, arrivals, deadline_s
         )
         ids_r, lat_r, nd_r_i, w_r = _replay_barrier(routed_batch, queries, arrivals)
         ids_m, lat_m, nd_m_i, w_m = _replay_barrier(mono_batch, queries, arrivals)

@@ -17,6 +17,54 @@ import time
 import traceback
 
 
+def planner_gate() -> None:
+    """Smoke gate for the declarative facade: lower one spec per mode on a
+    toy index, print each ``plan.explain()``, and assert the planner made
+    the expected CPU decisions (loop strategy and kernel dispatch resolve to
+    interpret/oracle off-TPU).  A planner regression fails the smoke run."""
+    import numpy as np
+
+    from repro.api import SearchSpec
+    from repro.index import build_ada_index
+
+    rng = np.random.default_rng(0)
+    centers = rng.normal(0, 1, (8, 24))
+    data = (centers[rng.integers(0, 8, 600)]
+            + 0.3 * rng.normal(0, 1, (600, 24))).astype(np.float32)
+    idx = build_ada_index(data, k=5, target_recall=0.9, m=6,
+                          ef_construction=40, ef_cap=64, num_samples=16)
+    on_tpu = __import__("jax").default_backend() == "tpu"
+
+    specs = {
+        "oneshot": SearchSpec(k=5, target_recall=0.9),
+        "routed": SearchSpec(k=5, target_recall=0.9, mode="routed"),
+        "streaming": SearchSpec(k=5, target_recall=0.9, mode="streaming",
+                                deadline_ms=50),
+        "interpret": SearchSpec(k=5, target_recall=0.9, backend="interpret"),
+    }
+    for name, spec in specs.items():
+        plan = idx.plan(spec)
+        print(f"--- planner_gate[{name}] " + "-" * 40, file=sys.stderr)
+        print(plan.explain(fmt="text"), file=sys.stderr)
+        d = plan.explain()
+        assert SearchSpec.from_dict(d["spec"]) == spec, "explain round-trip"
+        if not on_tpu:
+            expect = "interpret" if name == "interpret" else "oracle"
+            assert d["backend"]["resolved"] == expect, (
+                f"{name}: backend {d['backend']['resolved']} != {expect}"
+            )
+        expect_loop = "vmap" if name in ("oneshot", "interpret") else "batch_hoisted"
+        assert plan.loop == expect_loop, (
+            f"{name}: loop {plan.loop} != {expect_loop}"
+        )
+        assert d["tiers"][-1]["ef"] == d["search"]["ef_cap"], "ladder catch-all"
+    # equal specs must share one plan-cache entry (and its compiled executors)
+    assert idx.plan(SearchSpec(k=5, target_recall=0.9)) is idx.plan(
+        SearchSpec(k=5, target_recall=0.9)
+    ), "plan cache missed on equal specs"
+    print("planner_gate,0,ok")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--full", action="store_true", help="paper-scale (slow)")
@@ -63,6 +111,19 @@ def main() -> None:
 
     print("name,us_per_call,derived")
     failures = 0
+    if args.smoke and not args.only:
+        t0 = time.perf_counter()
+        try:
+            planner_gate()
+        except Exception:
+            failures += 1
+            print("planner_gate,0,ERROR", file=sys.stderr)
+            traceback.print_exc()
+        print(
+            f"_module.planner_gate.wall,"
+            f"{(time.perf_counter() - t0) * 1e6:.0f},",
+            flush=True,
+        )
     for name, mod in modules.items():
         params = inspect.signature(mod.run).parameters
         kwargs = {"quick": quick}

@@ -1,10 +1,17 @@
-"""Quickstart: build an Ada-ef index, search with a declarative target recall.
+"""Quickstart: build an Ada-ef index, then search it declaratively.
+
+The whole public knob surface is one immutable ``SearchSpec`` — say *what*
+you need (k results at a target recall) and the planner lowers it into a
+cached ``ExecutionPlan`` that picks the loop strategy, kernel dispatch,
+estimation budget, tier ladder and batching policy for you.
+``plan.explain()`` prints every derived decision, DB-EXPLAIN style.
 
     PYTHONPATH=src python examples/quickstart.py
 """
 import numpy as np
 import jax.numpy as jnp
 
+from repro.api import SearchSpec
 from repro.index import (
     brute_force_topk,
     build_ada_index,
@@ -37,13 +44,23 @@ def main():
     gt = brute_force_topk(prepare_queries(jnp.asarray(queries), "cos_dist"),
                           prepare_database(jnp.asarray(data), "cos_dist"), k=k)[1]
 
-    # --- online: adaptive-ef search at the declarative target ---------------
-    res = index.query(queries)                       # <- no ef parameter!
+    # --- declarative search: state the target, the planner picks the how ----
+    spec = SearchSpec(k=k, target_recall=0.95)
+    plan = index.plan(spec)                          # cached on the index
+    print("\n" + plan.explain(fmt="text") + "\n")
+    res = plan.search(queries)                       # <- no ef parameter!
     rec = np.asarray(recall_at_k(res.ids, gt))
     efs = np.asarray(res.ef_used)
-    print(f"\nAda-ef @ target 0.95: avg recall={rec.mean():.3f} "
+    print(f"Ada-ef @ target 0.95: avg recall={rec.mean():.3f} "
           f"P5={np.percentile(rec, 5):.2f} work={np.asarray(res.ndist).mean():.0f} dists/query")
     print(f"adaptive ef range: min={efs.min()} median={int(np.median(efs))} max={efs.max()}")
+
+    # --- same spec, serving execution: the ef-tier routed dispatch ----------
+    routed = index.plan(SearchSpec(k=k, target_recall=0.95, mode="routed"))
+    res_r, stats = routed.search(queries, with_stats=True)
+    rr = np.asarray(recall_at_k(jnp.asarray(res_r.ids), gt))
+    tiers = " ".join(f"ef{t.ef}:{t.count}" for t in stats.tiers)
+    print(f"routed (same spec):   avg recall={rr.mean():.3f} tiers[{tiers}]")
 
     # --- versus static ef (what HNSWlib/FAISS users do today) ----------------
     for ef in (k, 4 * k):

@@ -5,9 +5,10 @@ target recall before decoding.
     PYTHONPATH=src python examples/rag_serve.py --requests 4 --new-tokens 12
 
 ``--stream`` demos the request-lifecycle serving API instead: requests
-arrive one by one (Poisson), are submitted to the continuous-batching
-``AdaServeScheduler``, and responses are polled as their ef tier drains —
-no batch barrier, per-request latency telemetry.
+arrive one by one (Poisson), are submitted to a streaming-mode
+``ExecutionPlan`` (the declarative facade over the continuous-batching
+scheduler), and responses are polled as their ef tier drains — no batch
+barrier, per-request latency telemetry.
 """
 import argparse
 import time
@@ -16,24 +17,26 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api import SearchSpec
 from repro.configs import ARCHS
 from repro.index import build_ada_index
 from repro.models import build_model
-from repro.serve import Engine, SearchRequest, ServeConfig
+from repro.serve import Engine, SearchRequest
 from repro.serve.scheduler import replay_trace
 
 
 def stream_demo(engine, index, batch, *, rate_rps=64.0, deadline_ms=50.0):
     """The request lifecycle: submit -> step -> poll, one request at a time
     (``replay_trace`` is the canonical loop; see its source for the shape)."""
-    sched = index.scheduler()
+    plan = index.plan(
+        SearchSpec(target_recall=0.95, deadline_ms=deadline_ms, mode="streaming")
+    )
+    print(plan.explain(fmt="text"))
     emb = np.asarray(engine._request_embedding(batch))
     rng = np.random.default_rng(7)
     arrivals = np.cumsum(rng.exponential(1.0 / rate_rps, len(emb)))
-    requests = [
-        SearchRequest(query=e, deadline_s=deadline_ms / 1e3) for e in emb
-    ]
-    responses, lats = replay_trace(sched, requests, arrivals)
+    requests = [SearchRequest(query=e) for e in emb]  # deadline from the spec
+    responses, lats = replay_trace(plan, requests, arrivals)
     for resp, wait in list(zip(responses, lats))[:4]:
         s = resp.stats
         print(f"  request {resp.ticket.uid}: tier ef={s.tier_ef} "
@@ -70,10 +73,9 @@ def main():
     index = build_ada_index(corpus, k=10, target_recall=0.95, m=8,
                             ef_construction=60, ef_cap=200, num_samples=64)
 
-    engine = Engine(model, params,
-                    ServeConfig(max_new_tokens=args.new_tokens, target_recall=0.95,
-                                routed=args.routed),
-                    index=index)
+    engine = Engine(model, params, index=index,
+                    max_new_tokens=args.new_tokens, target_recall=0.95,
+                    routed=args.routed)
     batch = {"tokens": jnp.asarray(
         rng.integers(0, cfg.vocab_size, (args.requests, args.prompt_len)), jnp.int32)}
     if args.stream:

@@ -1,2 +1,19 @@
-"""repro: Ada-ef (Distribution-Aware Adaptive HNSW Search) + multi-pod JAX framework."""
+"""repro: Ada-ef (Distribution-Aware Adaptive HNSW Search) + multi-pod JAX framework.
+
+Public search surface: build a declarative :class:`repro.api.SearchSpec`
+and lower it with ``index.plan(spec)`` into an executable
+:class:`repro.plan.ExecutionPlan` (see :mod:`repro.api`).
+"""
 __version__ = "1.0.0"
+
+_FACADE = ("SearchSpec", "SpecOverrides")
+
+
+def __getattr__(name):
+    # lazy: `import repro` stays side-effect free; `repro.SearchSpec` pulls
+    # the facade (and its jax imports) only when actually used
+    if name in _FACADE:
+        from repro import api
+
+        return getattr(api, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -1,0 +1,180 @@
+"""Declarative search facade: one public API over router/scheduler/kernels.
+
+The paper's core promise is *declarative* — the caller states **what** they
+need (k results at a target recall, maybe under a latency budget) and the
+system derives **how** to run it (exploration budget, loop strategy, kernel
+dispatch, batching policy).  After four PRs of subsystems the public surface
+had drifted the opposite way: callers juggled ``SearchConfig`` /
+``RouterConfig`` / ``SchedulerConfig`` / ``ServeConfig`` plus a live
+``use_distance_kernel`` flag.  This module restores the declarative contract:
+
+- :class:`SearchSpec` — an immutable, hashable description of a search
+  workload.  It is the *only* thing a caller has to construct.
+- ``index.plan(spec)`` — the planner (:mod:`repro.plan`) lowers a spec
+  against an :class:`repro.index.pipeline.AdaEfIndex` into a cached
+  :class:`repro.plan.ExecutionPlan` whose ``search()`` /
+  ``submit()``/``poll()`` / ``explain()`` methods execute it.
+
+The legacy config dataclasses survive as **internal lowering targets**: the
+planner derives them, and an expert can pin any of them through
+:class:`SpecOverrides` (the escape hatch) — but no module outside
+``serve/``/``index/`` should import them from their home modules; this
+facade re-exports them for override construction.
+
+Specs (and the plans lowered from them) are registered as *static* pytrees:
+zero array leaves, the whole object rides in the treedef.  They can cross a
+``jit`` boundary as ordinary arguments, and two equal specs hash equal, so
+they key compile caches and the index's plan cache exactly like static
+config dataclasses do.
+
+Example::
+
+    from repro.api import SearchSpec
+
+    spec = SearchSpec(k=10, target_recall=0.95)
+    plan = index.plan(spec)
+    print(plan.explain())            # every derived decision, EXPLAIN-style
+    result = plan.search(queries)    # same ids as paper Alg. 2
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+# Re-exports: the four legacy config dataclasses are reachable from here (and
+# only from here, outside serve/+index/) so `SpecOverrides` can be built
+# without importing serving internals.
+from repro.index.search import AdaEfConfig, SearchConfig  # noqa: F401
+from repro.pytrees import register_static_config  # noqa: F401  (re-export)
+from repro.serve.router import RouterConfig  # noqa: F401
+from repro.serve.scheduler import SchedulerConfig  # noqa: F401
+
+MODE_ONESHOT = "oneshot"      # one fused adaptive_search batch call
+MODE_ROUTED = "routed"        # estimate -> ef-tier bucketed batch dispatch
+MODE_STREAMING = "streaming"  # request lifecycle: submit()/step()/poll()
+MODES = (MODE_ONESHOT, MODE_ROUTED, MODE_STREAMING)
+
+BACKEND_AUTO = "auto"            # capability probe picks one of the below
+BACKEND_PALLAS = "pallas"        # fused Pallas kernels (TPU)
+BACKEND_INTERPRET = "interpret"  # Pallas kernels in interpret mode (CPU)
+BACKEND_ORACLE = "oracle"        # pure-jnp reference scorers
+BACKENDS = (BACKEND_AUTO, BACKEND_PALLAS, BACKEND_INTERPRET, BACKEND_ORACLE)
+
+
+def _rebuild(cls, value):
+    """Reconstruct a config dataclass from ``as_dict`` output (or pass an
+    instance through).  Handles the one nested config (``AdaEfConfig.
+    estimator``) and tuple-valued fields that serialize as lists."""
+    if value is None or isinstance(value, cls):
+        return value
+    kw = dict(value)
+    if cls is AdaEfConfig and isinstance(kw.get("estimator"), dict):
+        from repro.core import EstimatorConfig
+
+        kw["estimator"] = EstimatorConfig(**kw["estimator"])
+    if cls is RouterConfig and "tier_efs" in kw:
+        kw["tier_efs"] = tuple(kw["tier_efs"])
+    return cls(**kw)
+
+
+@register_static_config
+@dataclasses.dataclass(frozen=True)
+class SpecOverrides:
+    """Expert escape hatch: pin any internal lowering target outright.
+
+    Every field defaults to ``None`` = "let the planner derive it".  A
+    pinned ``search`` config is taken verbatim (the planner still resolves
+    the kernel flag from ``SearchSpec.backend``, which owns dispatch);
+    ``router``/``scheduler``/``ada`` replace the derived policy wholesale.
+    """
+
+    search: Optional[SearchConfig] = None
+    router: Optional[RouterConfig] = None
+    scheduler: Optional[SchedulerConfig] = None
+    ada: Optional[AdaEfConfig] = None
+
+    def as_dict(self) -> dict:
+        return {
+            f.name: dataclasses.asdict(v)
+            for f in dataclasses.fields(self)
+            if (v := getattr(self, f.name)) is not None
+        }
+
+    @staticmethod
+    def from_dict(d: dict) -> "SpecOverrides":
+        return SpecOverrides(
+            search=_rebuild(SearchConfig, d.get("search")),
+            router=_rebuild(RouterConfig, d.get("router")),
+            scheduler=_rebuild(SchedulerConfig, d.get("scheduler")),
+            ada=_rebuild(AdaEfConfig, d.get("ada")),
+        )
+
+    def __bool__(self) -> bool:
+        return any(
+            getattr(self, f.name) is not None for f in dataclasses.fields(self)
+        )
+
+
+@register_static_config
+@dataclasses.dataclass(frozen=True)
+class SearchSpec:
+    """What to search for — the whole public knob surface.
+
+    ``None``/``0`` fields inherit the index's build-time defaults, so
+    ``SearchSpec()`` reproduces ``index.query(queries)`` exactly.
+
+    - ``k``: results per query (``None`` -> the index's k; may only shrink).
+    - ``target_recall``: declarative recall target (``None`` -> index's).
+    - ``deadline_ms``: per-request latency budget; in streaming mode it
+      bounds tier-queue waiting (requests drain no later than the deadline)
+      and sizes the admission batching window.  ``0`` = no deadline.
+    - ``max_ef``: hard cap on the exploration budget (``0`` = the index's
+      ``ef_cap``); estimates above it are clamped, trading recall for a
+      bounded worst case.
+    - ``mode``: ``oneshot`` (one fused batch call), ``routed`` (ef-tier
+      bucketed dispatch), ``streaming`` (submit/step/poll lifecycle).
+    - ``backend``: kernel dispatch; ``auto`` probes capabilities (TPU ->
+      ``pallas``; otherwise the index's build-time choice, i.e. ``oracle``
+      unless it was built on kernels).
+    - ``overrides``: :class:`SpecOverrides` expert escape hatch.
+    """
+
+    k: Optional[int] = None
+    target_recall: Optional[float] = None
+    deadline_ms: float = 0.0
+    max_ef: int = 0
+    mode: str = MODE_ONESHOT
+    backend: str = BACKEND_AUTO
+    overrides: SpecOverrides = SpecOverrides()
+
+    def __post_init__(self):
+        if self.mode not in MODES:
+            raise ValueError(f"mode={self.mode!r} not in {MODES}")
+        if self.backend not in BACKENDS:
+            raise ValueError(f"backend={self.backend!r} not in {BACKENDS}")
+        if self.k is not None and self.k < 1:
+            raise ValueError(f"k={self.k} must be >= 1")
+        if self.target_recall is not None and not 0.0 < self.target_recall <= 1.0:
+            raise ValueError(
+                f"target_recall={self.target_recall} not in (0, 1]"
+            )
+        if self.deadline_ms < 0:
+            raise ValueError(f"deadline_ms={self.deadline_ms} must be >= 0")
+        if self.max_ef < 0:
+            raise ValueError(f"max_ef={self.max_ef} must be >= 0")
+
+    def as_dict(self) -> dict:
+        """JSON-friendly form; ``from_dict`` round-trips it exactly."""
+        d = {
+            f.name: getattr(self, f.name)
+            for f in dataclasses.fields(self)
+            if f.name != "overrides"
+        }
+        d["overrides"] = self.overrides.as_dict()
+        return d
+
+    @staticmethod
+    def from_dict(d: dict) -> "SearchSpec":
+        d = dict(d)
+        overrides = SpecOverrides.from_dict(d.pop("overrides", None) or {})
+        return SearchSpec(overrides=overrides, **d)

@@ -41,7 +41,6 @@ from .search import (
     DeviceGraph,
     SearchConfig,
     SearchResult,
-    adaptive_search,
     collect_distances,  # noqa: F401  (re-export; impl lives with the phases)
     device_graph,
     recall_at_k,
@@ -94,36 +93,47 @@ class AdaEfIndex:
         default_factory=dict, repr=False, compare=False
     )  # {ef: per-proxy recalls} shared by main + estimation-matched table
     #   builds (the probe searches are score-independent); cleared on updates
+    _plans: dict = dataclasses.field(
+        default_factory=dict, repr=False, compare=False
+    )  # {(SearchSpec, shape-signature): ExecutionPlan}; dropped on updates
+    _graph_version: int = dataclasses.field(
+        default=0, repr=False, compare=False
+    )  # bumped on insert/delete so held plans can detect staleness
 
     # ------------------------------------------------------------- online API
+    def plan(self, spec=None, **spec_kwargs):
+        """Lower a declarative :class:`repro.api.SearchSpec` into a cached
+        :class:`repro.plan.ExecutionPlan` — the one public search surface.
+
+        Pass a spec, or its fields as keywords (``index.plan(k=10,
+        target_recall=0.95, mode="streaming")``).  Plans are cached keyed by
+        ``(spec, shape-signature)``: two equal specs share one plan (and its
+        compiled executors), and ``insert``/``delete`` drop the cache exactly
+        like the legacy router/scheduler caches."""
+        from repro.api import SearchSpec
+        from repro.plan import plan_spec, shape_signature
+
+        if spec is None:
+            spec = SearchSpec(**spec_kwargs)
+        elif spec_kwargs:
+            raise ValueError("pass a SearchSpec or its fields, not both")
+        key = (spec, shape_signature(self))
+        cached = self._plans.get(key)
+        if cached is None:
+            cached = self._plans[key] = plan_spec(self, spec)
+        return cached
+
     def query(
         self, queries, target_recall: Optional[float] = None, *, routed: bool = False
     ) -> SearchResult:
-        """Ada-ef search.  ``routed=True`` dispatches through the ef-bucketed
-        serving router (estimate at small capacity, per-tier batched search)
-        instead of the monolithic fused ``adaptive_search``."""
-        if routed:
-            return self.query_routed(queries, target_recall)[0]
-        r = self.target_recall if target_recall is None else target_recall
-        return adaptive_search(
-            self.graph,
-            jnp.asarray(queries),
-            self.stats,
-            self.table,
-            jnp.asarray(r, jnp.float32),
-            self.search_cfg,
-            self.ada_cfg,
-        )
+        """Ada-ef search through the declarative facade.  ``routed=True``
+        lowers to the ef-bucketed serving dispatch (estimate at small
+        capacity, per-tier batched search) instead of the monolithic fused
+        ``adaptive_search`` — both are one-line specs over :meth:`plan`."""
+        from repro.api import MODE_ONESHOT, MODE_ROUTED
 
-    def query_routed(self, queries, target_recall: Optional[float] = None):
-        """Routed dispatch; returns ``(SearchResult, RouterStats)``.
-
-        .. deprecated:: synchronous shim over the continuous-batching
-           scheduler (it emits a ``DeprecationWarning`` via ``route()``) —
-           serving callers should use :meth:`scheduler` and the
-           ``submit()``/``step()``/``poll()`` request lifecycle."""
-        r = self.target_recall if target_recall is None else target_recall
-        return self.router().route(np.asarray(queries), r)
+        plan = self.plan(mode=MODE_ROUTED if routed else MODE_ONESHOT)
+        return plan.search(queries, target_recall=target_recall)
 
     def router(self, router_cfg=None):
         """The (cached) ef-bucketed query router for this index.  Passing a
@@ -185,6 +195,8 @@ class AdaEfIndex:
         self._router = None  # router caches graph/stats/table references
         self._scheduler = None  # pending requests do not survive a mutation
         self._probe_cache.clear()  # probe recalls depend on graph + samples
+        self._plans.clear()  # plans hold graph/table references too
+        self._graph_version += 1  # held plans detect staleness and refuse
         t0 = time.perf_counter()
         self.host_index.add(new_data)
         self.graph = device_graph(self.host_index.freeze())
@@ -223,6 +235,8 @@ class AdaEfIndex:
         self._router = None  # router caches graph/stats/table references
         self._scheduler = None  # pending requests do not survive a mutation
         self._probe_cache.clear()  # probe recalls depend on graph + samples
+        self._plans.clear()  # plans hold graph/table references too
+        self._graph_version += 1  # held plans detect staleness and refuse
         t0 = time.perf_counter()
         self.host_index.mark_deleted(ids)
         self.graph = device_graph(self.host_index.freeze())

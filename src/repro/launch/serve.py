@@ -4,9 +4,10 @@
         --prompt-len 32 --new-tokens 16 --corpus 2000
 
 ``--stream`` switches the retrieval stage to the request-lifecycle serving
-API: requests arrive on a Poisson process, enter the continuous-batching
-``AdaServeScheduler`` (``submit``/``step``/``poll``), and per-request
-latency is reported instead of one batch wall.
+API: requests arrive on a Poisson process, enter a streaming-mode
+``ExecutionPlan`` (``submit``/``step``/``poll``; the planner derives the
+drain policy from the spec's deadline), and per-request latency is reported
+instead of one batch wall.
 """
 from __future__ import annotations
 
@@ -16,24 +17,28 @@ import time
 import jax
 import numpy as np
 
-from repro.configs import ARCHS
+from repro.api import SearchSpec
 from repro.index.pipeline import build_ada_index
+from repro.configs import ARCHS
 from repro.models import build_model
-from repro.serve import Engine, SearchRequest, ServeConfig
+from repro.serve import Engine, SearchRequest
 from repro.serve.scheduler import replay_trace
 
 
-def stream_retrieval(engine, index, batch, *, arrival_rate, deadline_ms, seed):
-    """Poisson-arrival replay of the batch's retrieval stage through the
-    continuous-batching scheduler; returns the responses in arrival order."""
-    sched = index.scheduler()
+def stream_retrieval(engine, index, batch, *, target_recall, arrival_rate,
+                     deadline_ms, seed):
+    """Poisson-arrival replay of the batch's retrieval stage through a
+    streaming-mode plan; returns the responses in arrival order."""
+    plan = index.plan(SearchSpec(
+        target_recall=target_recall, deadline_ms=deadline_ms, mode="streaming"
+    ))
+    print(plan.explain(fmt="text"))
     emb = np.asarray(engine._request_embedding(batch))
     rng = np.random.default_rng(seed)
     arrivals = np.cumsum(rng.exponential(1.0 / arrival_rate, len(emb)))
-    deadline = deadline_ms / 1e3 if deadline_ms > 0 else None
-    requests = [SearchRequest(query=e, deadline_s=deadline) for e in emb]
-    responses, lats = replay_trace(sched, requests, arrivals)
-    st = sched.stats
+    requests = [SearchRequest(query=e) for e in emb]  # deadline from the spec
+    responses, lats = replay_trace(plan, requests, arrivals)
+    st = plan.stats
     print(
         f"streamed {len(responses)} requests: latency p50={np.percentile(lats, 50) * 1e3:.1f}ms "
         f"p99={np.percentile(lats, 99) * 1e3:.1f}ms (first run includes jit compiles)"
@@ -95,13 +100,11 @@ def main():
     engine = Engine(
         model,
         params,
-        ServeConfig(
-            max_new_tokens=args.new_tokens,
-            target_recall=args.target_recall,
-            routed=args.routed,
-        ),
         index=index,
         embed_proj=proj,
+        max_new_tokens=args.new_tokens,
+        target_recall=args.target_recall,
+        routed=args.routed,
     )
     rng = np.random.default_rng(args.seed + 1)
     batch = {
@@ -124,6 +127,7 @@ def main():
             raise SystemExit("--stream needs a retrieval corpus (--corpus N)")
         responses = stream_retrieval(
             engine, index, batch,
+            target_recall=args.target_recall,
             arrival_rate=args.arrival_rate, deadline_ms=args.deadline_ms,
             seed=args.seed + 2,
         )

@@ -1,0 +1,563 @@
+"""Planner: lower a declarative :class:`repro.api.SearchSpec` into a
+compiled :class:`ExecutionPlan` — the DB-style "query plan" of this system.
+
+``AdaEfIndex.plan(spec)`` is the entry point (plans are cached on the index
+keyed by ``(spec, shape-signature)`` and invalidated on ``insert``/
+``delete``); this module is the lowering itself:
+
+1. **Backend resolution** — a capability probe replaces the old live
+   ``use_distance_kernel`` flag: ``auto`` picks fused Pallas kernels on TPU,
+   falls back to the index's build-time dispatch elsewhere, and an explicit
+   ``pallas``/``interpret`` request degrades gracefully (probe-verified) to
+   the next backend that actually runs here.
+2. **Loop strategy** — ``oneshot`` inherits the loop the index (and its
+   ef table) was built with; ``routed``/``streaming`` lower to the
+   batch-hoisted loop, whose one-padded-batch-per-tier shape is exactly what
+   tier drains dispatch (bit-identical to the vmap loop either way).
+3. **Estimation budget + tier ladder + drain policy** — the legacy
+   ``RouterConfig``/``SchedulerConfig`` become derived lowering targets:
+   ``oneshot`` pins fixed beams (so the lifecycle path of a oneshot plan is
+   bit-identical to the fused search), a ``deadline_ms`` sizes the admission
+   batching window, and :class:`repro.api.SpecOverrides` pins any of them
+   outright.
+
+Every derived decision is recorded and reported by
+:meth:`ExecutionPlan.explain` — benchmarks and bug reports read the plan
+instead of reverse-engineering configs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.api import (
+    BACKEND_AUTO,
+    BACKEND_INTERPRET,
+    BACKEND_ORACLE,
+    BACKEND_PALLAS,
+    MODE_ONESHOT,
+    RouterConfig,
+    SchedulerConfig,
+    SearchSpec,
+    register_static_config,
+)
+from repro.index.search import SearchResult, adaptive_search
+from repro.kernels import ops
+from repro.serve.api import SearchRequest, SearchResponse, SearchTicket
+from repro.serve.router import QueryRouter
+from repro.serve.scheduler import AdaServeScheduler
+
+_probe_cache: dict = {}
+
+
+def probe_interpret() -> bool:
+    """Can the Pallas frontier kernel run here in interpret mode?  One tiny
+    probe call, memoized for the process — the planner's capability check."""
+    if "interpret" not in _probe_cache:
+        try:
+            vec = jnp.ones((8, 8), jnp.float32)
+            ids = jnp.asarray([[0, 1, -1, 2]], jnp.int32)
+            q = jnp.ones((1, 8), jnp.float32)
+            out = ops.frontier_keys(
+                ids, q, vec, use_kernel=True, interpret=True
+            )
+            _probe_cache["interpret"] = bool(
+                np.isfinite(np.asarray(out)[0, :2]).all()
+            )
+        except Exception:  # pragma: no cover - no working Pallas lowering
+            _probe_cache["interpret"] = False
+    return _probe_cache["interpret"]
+
+
+def resolve_backend(requested: str, built_on_kernels: bool):
+    """Lower a spec's backend request to what actually runs on this host.
+
+    Returns ``(resolved, use_kernel, note)``.  ``auto`` keeps the index's
+    build-time dispatch off-TPU: its ef table was probed through that scorer,
+    and the interpret-mode kernel is only float-close (not bit-equal) to the
+    jnp oracle, so silently switching would break the bit-exactness bar.
+    """
+    on_tpu = jax.default_backend() == "tpu"
+    if requested == BACKEND_AUTO:
+        if on_tpu:
+            return BACKEND_PALLAS, True, "auto: TPU -> fused Pallas kernels"
+        if built_on_kernels and probe_interpret():
+            return (
+                BACKEND_INTERPRET,
+                True,
+                "auto: index built on kernels; interpret mode off-TPU",
+            )
+        return BACKEND_ORACLE, False, "auto: no TPU -> jnp reference scorers"
+    if requested == BACKEND_PALLAS:
+        if on_tpu:
+            return BACKEND_PALLAS, True, "pallas: TPU backend"
+        if probe_interpret():
+            return (
+                BACKEND_INTERPRET,
+                True,
+                "pallas requested off-TPU -> interpret-mode fallback",
+            )
+        return BACKEND_ORACLE, False, "pallas unavailable -> jnp oracle"
+    if requested == BACKEND_INTERPRET:
+        if probe_interpret():
+            return BACKEND_INTERPRET, True, "interpret: probe ok"
+        return BACKEND_ORACLE, False, "interpret probe failed -> jnp oracle"
+    return BACKEND_ORACLE, False, "oracle: jnp reference scorers (explicit)"
+
+
+def shape_signature(index) -> tuple:
+    """The plan-cache shape key: everything about the graph that compiled
+    shapes depend on.  Changes on insert/delete (n moves), never on a pure
+    config change."""
+    g = index.graph
+    return (
+        int(g.vectors.shape[0]),
+        int(g.vectors.shape[1]),
+        int(g.base_adj.shape[1]),
+        int(g.upper_adj.shape[0]),
+    )
+
+
+def plan_spec(index, spec: SearchSpec) -> "ExecutionPlan":
+    """Lower ``spec`` against ``index`` into an :class:`ExecutionPlan`.
+
+    Pure policy: nothing is compiled or dispatched here (the plan's lazily
+    built router/scheduler own the jit caches), so planning is cheap enough
+    to run per (spec, shape) cache miss.
+    """
+    ov = spec.overrides
+    k = index.k if spec.k is None else int(spec.k)
+    if not 1 <= k <= index.k:
+        raise ValueError(f"spec.k={k} not in [1, index k={index.k}]")
+    target = (
+        index.target_recall
+        if spec.target_recall is None
+        else float(spec.target_recall)
+    )
+
+    cfg = ov.search if ov.search is not None else index.search_cfg
+    notes: List[str] = []
+    if spec.max_ef > 0 and spec.max_ef < cfg.ef_cap:
+        cap = max(int(spec.max_ef), cfg.k)
+        notes.append(f"max_ef clamps ef_cap {cfg.ef_cap} -> {cap}")
+        cfg = dataclasses.replace(
+            cfg, ef_cap=cap, beam=min(cfg.beam, cap)
+        )
+    backend, use_kernel, backend_note = resolve_backend(
+        spec.backend, cfg.use_distance_kernel
+    )
+    if ov.search is None and spec.mode != MODE_ONESHOT and not cfg.batch_hoisted:
+        # tier drains dispatch one padded same-capacity batch per rung — the
+        # exact shape the hoisted loop is built for (bit-identical results)
+        notes.append("serving mode -> batch-hoisted loop")
+        cfg = dataclasses.replace(cfg, batch_hoisted=True)
+    cfg = dataclasses.replace(cfg, use_distance_kernel=use_kernel)
+
+    ada = ov.ada if ov.ada is not None else index.ada_cfg
+    if ov.router is not None:
+        rcfg = ov.router
+    elif spec.mode == MODE_ONESHOT:
+        # the lifecycle path of a oneshot plan must reproduce the fused
+        # search bit-for-bit: lossless estimation + the base beam per tier
+        rcfg = RouterConfig(beam_mode="fixed")
+        notes.append("oneshot -> lossless fixed-beam lifecycle path")
+    else:
+        rcfg = RouterConfig()
+    if ov.scheduler is not None:
+        scfg = ov.scheduler
+    elif spec.deadline_ms > 0:
+        # batch admissions up to half the budget; the other half covers the
+        # tier-queue wait the deadline trigger itself bounds
+        scfg = SchedulerConfig(est_wait_s=spec.deadline_ms / 2e3)
+        notes.append("deadline_ms sizes the admission batching window")
+    else:
+        scfg = SchedulerConfig()
+
+    return ExecutionPlan(
+        index,
+        spec,
+        k=k,
+        target_recall=target,
+        search_cfg=cfg,
+        ada_cfg=ada,
+        router_cfg=rcfg,
+        scheduler_cfg=scfg,
+        backend=backend,
+        backend_note=backend_note,
+        notes=notes,
+    )
+
+
+@register_static_config
+class ExecutionPlan:
+    """A lowered, executable search plan bound to one index snapshot.
+
+    Execution surface:
+
+    - :meth:`search` — batch call in the spec's mode (fused ``oneshot`` or a
+      submit-all/drain-all lifecycle barrier for ``routed``/``streaming``).
+    - :meth:`submit` / :meth:`step` / :meth:`poll` / :meth:`drain` — the
+      request lifecycle over the plan's (lazily built, shared) scheduler.
+    - :meth:`explain` — every derived decision as a dict or EXPLAIN string.
+
+    Plans are immutable policy + lazily built executors; they hold the
+    index's graph/table references, so ``insert``/``delete`` invalidate them
+    (the index drops its plan cache and any held plan raises on use).  Two
+    plans lowered from equal specs against the same index snapshot compare
+    and hash equal — like the specs themselves, a plan is a static pytree
+    and can cross ``jit`` boundaries without retriggering compilation.
+    """
+
+    def __init__(
+        self,
+        index,
+        spec: SearchSpec,
+        *,
+        k: int,
+        target_recall: float,
+        search_cfg,
+        ada_cfg,
+        router_cfg,
+        scheduler_cfg,
+        backend: str,
+        backend_note: str = "",
+        notes: Sequence[str] = (),
+    ):
+        self._index = index
+        self.spec = spec
+        self.mode = spec.mode
+        self.k = k
+        self.target_recall = target_recall
+        self.deadline_s = spec.deadline_ms / 1e3 if spec.deadline_ms else None
+        self.search_cfg = search_cfg
+        self.ada_cfg = ada_cfg
+        self.router_cfg = router_cfg
+        self.scheduler_cfg = scheduler_cfg
+        self.backend = backend
+        self._backend_note = backend_note
+        self._notes = list(notes)
+        self._shape_sig = shape_signature(index)
+        self._version = index._graph_version
+        self._router: Optional[QueryRouter] = None
+        self._scheduler: Optional[AdaServeScheduler] = None
+
+    # ------------------------------------------------------------- identity
+    def __eq__(self, other) -> bool:
+        # index identity is part of plan identity: two same-shape indexes
+        # over different corpora must not share a jit compile-cache entry
+        # (a plan is a static pytree — equal plans alias compiled constants)
+        return (
+            isinstance(other, ExecutionPlan)
+            and self._index is other._index
+            and self.spec == other.spec
+            and self._shape_sig == other._shape_sig
+            and self._version == other._version
+        )
+
+    def __hash__(self) -> int:
+        return hash((id(self._index), self.spec, self._shape_sig, self._version))
+
+    def __repr__(self) -> str:  # pragma: no cover - cosmetic
+        return (
+            f"ExecutionPlan(mode={self.mode}, backend={self.backend}, "
+            f"loop={self.loop}, k={self.k}, "
+            f"target_recall={self.target_recall}, shape={self._shape_sig})"
+        )
+
+    @property
+    def loop(self) -> str:
+        hoisted = (
+            self.router_cfg.batch_hoisted
+            if self.router_cfg.batch_hoisted is not None
+            else self.search_cfg.batch_hoisted
+        )
+        return "batch_hoisted" if hoisted else "vmap"
+
+    @property
+    def stale(self) -> bool:
+        """Has the index been mutated since this plan was lowered?"""
+        return (
+            self._index._graph_version != self._version
+            or shape_signature(self._index) != self._shape_sig
+        )
+
+    def _check_fresh(self):
+        if self.stale:
+            raise RuntimeError(
+                "stale ExecutionPlan: the index was mutated after this plan "
+                "was lowered (plans hold graph/table references); call "
+                "index.plan(spec) again for a fresh one"
+            )
+
+    # ------------------------------------------------------------ executors
+    @property
+    def router(self) -> QueryRouter:
+        """The lowered routing policy + executor (lazily built)."""
+        if self._router is None:
+            self._check_fresh()
+            idx = self._index
+            self._router = QueryRouter(
+                idx.graph,
+                idx.stats,
+                idx.table,
+                self.search_cfg,
+                self.ada_cfg,
+                self.router_cfg,
+                est_table_builder=idx.estimation_table,
+            )
+        return self._router
+
+    def new_scheduler(self, **kwargs) -> AdaServeScheduler:
+        """A private scheduler over this plan's router — for callers that
+        must not share queues/polls with the plan's own lifecycle surface
+        (e.g. one engine batch on an index whose plan a streaming driver
+        also holds).  Compile caches are shared through the router."""
+        self._check_fresh()
+        kwargs.setdefault("default_target_recall", self.target_recall)
+        return AdaServeScheduler(self.router, self.scheduler_cfg, **kwargs)
+
+    @property
+    def scheduler(self) -> AdaServeScheduler:
+        """The plan's shared scheduler (lazily built) — the surface behind
+        :meth:`submit`/:meth:`poll`.  Checks freshness on every access: a
+        stale plan must not keep draining requests against the pre-mutation
+        graph (deleted rows would come back as results)."""
+        self._check_fresh()
+        if self._scheduler is None:
+            self._scheduler = self.new_scheduler()
+        return self._scheduler
+
+    # -------------------------------------------------------------- execute
+    def search(
+        self,
+        queries,
+        target_recall: Optional[float] = None,
+        *,
+        with_stats: bool = False,
+    ):
+        """Execute the plan over a query batch; results in request order.
+
+        ``target_recall`` overrides the spec's target for this call only (a
+        runtime value — no recompilation).  ``with_stats=True`` additionally
+        returns the batch telemetry (a ``RouterStats`` for lifecycle modes,
+        ``None`` for the fused oneshot path, which has no tier structure).
+        """
+        self._check_fresh()
+        target = self.target_recall if target_recall is None else float(target_recall)
+        if self.mode == MODE_ONESHOT:
+            idx = self._index
+            res = adaptive_search(
+                idx.graph,
+                jnp.asarray(queries),
+                idx.stats,
+                idx.table,
+                jnp.asarray(target, jnp.float32),
+                self.search_cfg,
+                self.ada_cfg,
+            )
+            res = self._slice_k(res)
+            return (res, None) if with_stats else res
+
+        queries = np.asarray(queries, np.float32)
+        if queries.ndim != 2 or len(queries) == 0:
+            raise ValueError(f"expected (B, d) queries, got {queries.shape}")
+        t0 = time.perf_counter()
+        # a one-shot private scheduler: the plan's shared lifecycle surface
+        # (submit/poll) keeps its own queues untouched by batch calls
+        sched = self.new_scheduler(default_target_recall=target)
+        tickets = [
+            sched.submit(SearchRequest(query=q, k=self.k)) for q in queries
+        ]
+        by_uid = {r.ticket.uid: r for r in sched.drain()}
+        ordered = [by_uid[t.uid] for t in tickets]
+        out = SearchResult(
+            ids=np.stack([r.ids for r in ordered]),
+            dists=np.stack([r.dists for r in ordered]),
+            ndist=np.asarray([r.ndist for r in ordered], np.int32),
+            iters=np.asarray([r.iters for r in ordered], np.int32),
+            ef_used=np.asarray([r.ef_used for r in ordered], np.int32),
+        )
+        if not with_stats:
+            return out
+        stats = sched.router_stats()
+        stats.total_wall_s = time.perf_counter() - t0
+        return out, stats
+
+    def _slice_k(self, res: SearchResult) -> SearchResult:
+        if self.k == self.search_cfg.k:
+            return res
+        return res._replace(
+            ids=res.ids[..., : self.k], dists=res.dists[..., : self.k]
+        )
+
+    # ------------------------------------------------------------ lifecycle
+    def submit(self, request) -> SearchTicket:
+        """Admit one request into the plan's shared scheduler.  Accepts a
+        :class:`SearchRequest` or a bare ``(d,)`` query; the spec's ``k``,
+        ``target_recall`` and ``deadline_ms`` fill any unset fields."""
+        self._check_fresh()
+        if not isinstance(request, SearchRequest):
+            request = SearchRequest(query=np.asarray(request, np.float32))
+        patch = {}
+        if request.k is None:
+            patch["k"] = self.k
+        if request.deadline_s is None and self.deadline_s is not None:
+            patch["deadline_s"] = self.deadline_s
+        if patch:
+            request = dataclasses.replace(request, **patch)
+        return self.scheduler.submit(request)
+
+    def step(self, now: Optional[float] = None, *, force: bool = False) -> int:
+        return self.scheduler.step(now, force=force)
+
+    def poll(
+        self, *, block: bool = False, uids: Optional[Sequence[int]] = None
+    ) -> List[SearchResponse]:
+        return self.scheduler.poll(block=block, uids=uids)
+
+    def flush(self) -> int:
+        return self.scheduler.flush()
+
+    def drain(self) -> List[SearchResponse]:
+        return self.scheduler.drain()
+
+    @property
+    def pending(self) -> int:
+        return 0 if self._scheduler is None else self._scheduler.pending
+
+    def router_stats(self, since=None):
+        return self.scheduler.router_stats(since)
+
+    @property
+    def stats(self):
+        return self.scheduler.stats
+
+    def queue_depths(self) -> List[int]:
+        return self.scheduler.queue_depths()
+
+    # -------------------------------------------------------------- explain
+    def explain(self, fmt: str = "dict"):
+        """Every derived decision, DB-EXPLAIN style.
+
+        ``fmt="dict"`` returns a JSON-able dict that round-trips the spec
+        (``SearchSpec.from_dict(explain()["spec"]) == plan.spec``) and
+        records each lowered config verbatim; ``fmt="text"`` renders the
+        human-readable plan.  Reading the plan never compiles or dispatches
+        a search (the router it may build is policy-only until first use).
+        """
+        router = self.router
+        cfg = router.base_cfg
+        m0 = self._shape_sig[2]
+        est_lossless = not router.est_lossy
+        if self.search_cfg.use_distance_kernel:
+            frontier = (
+                "pallas" if self.backend == BACKEND_PALLAS else "pallas-interpret"
+            )
+            dispatch = (
+                "ops.frontier_keys_batch"
+                if cfg.batch_hoisted
+                else "ops.frontier_keys"
+            )
+        else:
+            frontier = "jnp-oracle"
+            dispatch = (
+                "ref.frontier_batch_ref" if cfg.batch_hoisted else "_gather_keys"
+            )
+        d = {
+            "spec": self.spec.as_dict(),
+            "mode": self.mode,
+            "loop": self.loop,
+            "backend": {
+                "requested": self.spec.backend,
+                "resolved": self.backend,
+                "note": self._backend_note,
+            },
+            "kernels": {"frontier": frontier, "dispatch": dispatch},
+            "k": {"index": self._index.k, "request": self.k},
+            "target_recall": self.target_recall,
+            "deadline_s": self.deadline_s,
+            "graph": {
+                "n": self._shape_sig[0],
+                "d": self._shape_sig[1],
+                "m0": self._shape_sig[2],
+                "upper_layers": self._shape_sig[3],
+            },
+            "search": {
+                "ef_cap": cfg.ef_cap,
+                "beam": cfg.beam,
+                "metric": cfg.metric,
+                "max_iters": cfg.iters(),
+                "patience": cfg.patience,
+                "batch_hoisted": cfg.batch_hoisted,
+                "use_distance_kernel": cfg.use_distance_kernel,
+            },
+            "estimation": {
+                "cap": router.est_cfg.ef_cap,
+                "lmax": router.est_ada.buf(m0),
+                "lossless": bool(est_lossless),
+                "matched_table": bool(router.est_matched),
+                "ef_margin": router.router_cfg.ef_margin,
+            },
+            "tiers": [
+                {"ef": t.ef, "beam": t.beam, "max_iters": t.cfg.iters()}
+                for t in router.tiers
+            ],
+            "scheduler": {
+                "fill": self.scheduler_cfg.fill,
+                "est_wait_s": self.scheduler_cfg.est_wait_s,
+                "work_conserving": self.scheduler_cfg.work_conserving,
+                "flush_margin_s": self.scheduler_cfg.flush_margin_s,
+            },
+            "pad": {
+                "policy": "pow2",
+                "min_shape": self.scheduler_cfg.min_shape
+                or router.router_cfg.min_shape,
+            },
+            "cache": {
+                "shape_signature": list(self._shape_sig),
+                "graph_version": self._version,
+            },
+            "notes": list(self._notes),
+        }
+        if fmt == "dict":
+            return d
+        if fmt != "text":
+            raise ValueError(f"fmt={fmt!r} not in ('dict', 'text')")
+        s = self.spec
+        ov = [
+            f.name
+            for f in dataclasses.fields(s.overrides)
+            if getattr(s.overrides, f.name) is not None
+        ]
+        tiers = " ".join(f"ef{t['ef']}/beam{t['beam']}" for t in d["tiers"])
+        lines = [
+            f"ExecutionPlan  mode={self.mode}  loop={self.loop}  "
+            f"backend={self.spec.backend}->{self.backend}",
+            f"  spec: k={s.k} target_recall={s.target_recall} "
+            f"deadline_ms={s.deadline_ms} max_ef={s.max_ef} "
+            f"overrides={ov or 'none'}",
+            f"  graph: n={d['graph']['n']} d={d['graph']['d']} "
+            f"m0={d['graph']['m0']} upper_layers={d['graph']['upper_layers']} "
+            f"(version {self._version})",
+            f"  search: k={self.k} ef_cap={cfg.ef_cap} beam={cfg.beam} "
+            f"metric={cfg.metric} max_iters={cfg.iters()} "
+            f"frontier={frontier} via {dispatch}",
+            f"  estimation: cap={d['estimation']['cap']} "
+            f"lmax={d['estimation']['lmax']} "
+            f"lossless={d['estimation']['lossless']} "
+            f"matched_table={d['estimation']['matched_table']} "
+            f"ef_margin={d['estimation']['ef_margin']}",
+            f"  tiers: {tiers}  (pad=pow2 min_shape={d['pad']['min_shape']})",
+            f"  scheduler: fill={self.scheduler_cfg.fill} "
+            f"est_wait_s={self.scheduler_cfg.est_wait_s} "
+            f"work_conserving={self.scheduler_cfg.work_conserving} "
+            f"flush_margin_s={self.scheduler_cfg.flush_margin_s}",
+        ]
+        for note in self._notes:
+            lines.append(f"  note: {note}")
+        return "\n".join(lines)

@@ -1,0 +1,23 @@
+"""Static-pytree registration for config dataclasses (leaf module).
+
+Lives below ``repro.api`` / ``repro.serve`` / ``repro.index`` so every
+config module can share one implementation without an import cycle (the
+same layering trick as ``kernels/tiling.round_up``).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def register_static_config(cls):
+    """Register a frozen, hashable dataclass as a zero-leaf pytree.
+
+    The instance becomes its own treedef aux data: it can be passed through
+    ``jit``/``vmap`` boundaries as a normal argument, participates in
+    compile-cache keys via its dataclass ``__eq__``/``__hash__``, and never
+    shows up as an array leaf.  Returns ``cls`` so it stacks as a decorator.
+    """
+    jax.tree_util.register_pytree_node(
+        cls, lambda c: ((), c), lambda aux, _children: aux
+    )
+    return cls

@@ -17,12 +17,14 @@ The serving surface is a **request lifecycle**, not a batch call:
    per-request :class:`RequestStats` telemetry.
 
 :class:`QueryRouter` owns the routing *policy* (estimation budget, tier
-ladder, margins); its ``route()`` remains as a synchronous
-submit-all/drain-all shim (bit-identical to the old barrier, emits a
-``DeprecationWarning``).  :class:`Engine` submits its batch's retrieval
-before the decode loop and polls between decode steps, overlapping
-retrieval with generation; streaming drivers (``launch/serve.py --stream``,
-``examples/rag_serve.py --stream``) hold the scheduler directly.
+ladder, margins); :class:`AdaServeScheduler` owns execution.  Both are
+internal lowering targets of the declarative facade — callers build a
+:class:`repro.api.SearchSpec` and hold the ``index.plan(spec)``
+:class:`repro.plan.ExecutionPlan`, whose ``submit()``/``poll()`` delegate
+here.  :class:`Engine` submits its batch's retrieval before the decode loop
+and polls between decode steps, overlapping retrieval with generation;
+streaming drivers (``launch/serve.py --stream``, ``examples/rag_serve.py
+--stream``) hold a plan directly.
 """
 from .api import (  # noqa: F401
     RequestStats,

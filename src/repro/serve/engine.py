@@ -10,19 +10,21 @@ Request flow (the paper's deployment context — §1 RAG pipelines):
 4. greedy ``decode`` continuation (retrieved ids are surfaced to the caller
    and, in token-splicing mode, appended to the context).
 
-Retrieval dispatches through one of two paths:
+Retrieval runs through the declarative facade: the engine lowers its
+``ServeConfig`` (or an explicit :class:`repro.api.SearchSpec`) into an
+``index.plan(spec)`` and executes that plan —
 
-- **monolithic** — one fused ``adaptive_search`` over the whole batch
+- **oneshot** — one fused ``adaptive_search`` over the whole batch
   (dispatched asynchronously; JAX overlaps it with the decode steps),
-- **routed** (``ServeConfig.routed``) — the requests are *submitted* to the
-  index's continuous-batching :class:`repro.serve.scheduler.AdaServeScheduler`
-  before the decode loop starts, flushed as independent per-ef-tier
+- **streaming** (``ServeConfig.routed`` or ``spec.mode != "oneshot"``) —
+  the requests are *submitted* to a private scheduler session over the
+  plan before the decode loop starts, flushed as independent per-ef-tier
   dispatches, and *polled* (non-blocking) between decode steps, so retrieval
   overlaps generation and the per-request lifecycle telemetry rides along in
   ``ServeResult.router_stats``.
 
 The decode loop itself stays synchronous/batched; the retrieval stage is the
-request-lifecycle seam (streaming drivers hold the scheduler directly).
+request-lifecycle seam (streaming drivers hold a plan directly).
 """
 from __future__ import annotations
 
@@ -50,6 +52,8 @@ class ServeConfig:
     routed: bool = False          # submit retrieval through the ef-tier
     #   continuous-batching scheduler (overlapping the decode loop) instead
     #   of one fused monolithic adaptive_search
+    spec: Optional[object] = None  # explicit repro.api.SearchSpec for the
+    #   retrieval plan; overrides retrieve_k/target_recall/routed derivation
 
 
 @dataclasses.dataclass
@@ -92,12 +96,21 @@ class Engine:
         scfg: Optional[ServeConfig] = None,
         index: Optional[AdaEfIndex] = None,
         embed_proj: Optional[Array] = None,  # (d_model, d_index) retrieval head
+        *,
+        spec=None,                 # repro.api.SearchSpec for the retrieval plan
+        **serve_kwargs,            # ServeConfig fields (when scfg not given)
     ):
         self.model = model
         self.params = params
+        if scfg is not None and serve_kwargs:
+            raise ValueError("pass a ServeConfig or its fields, not both")
         # default-construct per engine: a shared dataclass default instance
         # would leak config mutations across engines
-        self.scfg = ServeConfig() if scfg is None else scfg
+        self.scfg = ServeConfig(**serve_kwargs) if scfg is None else scfg
+        if spec is not None:
+            # copy-on-write: never mutate a caller-supplied (possibly
+            # shared) ServeConfig instance
+            self.scfg = dataclasses.replace(self.scfg, spec=spec)
         self.index = index
         self.embed_proj = embed_proj
         self._decode = jax.jit(self.model.decode)
@@ -111,6 +124,23 @@ class Engine:
                 self.params["embed"], batch["tokens"], self.embed_proj
             )
         return _pooled_embedding(self.params["embed"], batch["tokens"])
+
+    def _retrieval_plan(self):
+        """The engine's retrieval settings lowered into the index's cached
+        :class:`repro.plan.ExecutionPlan`.  ``ServeConfig`` is an internal
+        lowering target: an explicit ``spec`` wins, otherwise
+        ``retrieve_k``/``target_recall``/``routed`` derive one."""
+        from repro.api import MODE_ONESHOT, MODE_STREAMING, SearchSpec
+
+        scfg = self.scfg
+        spec = scfg.spec
+        if spec is None:
+            spec = SearchSpec(
+                k=min(scfg.retrieve_k, self.index.k),
+                target_recall=scfg.target_recall,
+                mode=MODE_STREAMING if scfg.routed else MODE_ONESHOT,
+            )
+        return self.index.plan(spec)
 
     # ------------------------------------------------------------- serve
     def serve(self, batch: Dict[str, Array]) -> ServeResult:
@@ -126,32 +156,33 @@ class Engine:
 
         retrieved = None
         router_stats = None
-        sched = tickets = None
+        sess = tickets = None
         responses: List[object] = []
         if self.index is not None:
             q = self._request_embedding(batch)
-            if scfg.routed:
-                # submit the whole batch to a *private* continuous-batching
-                # scheduler (over the index's cached router, so every compile
-                # cache is shared) and flush: the per-tier searches are in
-                # flight on device while the decode loop below runs — poll()
-                # harvests whatever finished between decode steps without
-                # blocking either side.  A private instance keeps this batch
-                # out of the index-cached scheduler that streaming callers
-                # hold (an unfiltered poll() there would steal our responses,
-                # and our flush would force-drain their parked queues).
-                sched = self.index.router().scheduler(
-                    default_target_recall=scfg.target_recall
-                )
+            plan = self._retrieval_plan()
+            if plan.mode == "oneshot":
+                # fused adaptive_search; dispatched asynchronously, so the
+                # device overlaps it with the decode steps below
+                retrieved = plan.search(np.asarray(q))
+            else:
+                # submit the whole batch to a *private* scheduler session
+                # over the plan (compile caches shared through the plan's
+                # router) and flush: the per-tier searches are in flight on
+                # device while the decode loop below runs — poll() harvests
+                # whatever finished between decode steps without blocking
+                # either side.  A private session keeps this batch out of
+                # the plan's shared lifecycle scheduler that streaming
+                # callers hold (an unfiltered poll() there would steal our
+                # responses, and our flush would force-drain their parked
+                # queues).
+                sess = plan.new_scheduler()
                 qn = np.asarray(q)
-                k = min(scfg.retrieve_k, self.index.k)
                 tickets = [
-                    sched.submit(SearchRequest(query=qn[i], k=k))
+                    sess.submit(SearchRequest(query=qn[i], k=plan.k))
                     for i in range(b)
                 ]
-                sched.flush()
-            else:
-                retrieved = self.index.query(np.asarray(q), scfg.target_recall)
+                sess.flush()
 
         tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
         pos = jnp.full((b,), prompt_len, jnp.int32)
@@ -162,12 +193,12 @@ class Engine:
             logits_t, cache = self._decode(self.params, tok[:, None], cache, pos)
             tok = jnp.argmax(logits_t[:, -1], axis=-1).astype(jnp.int32)
             pos = pos + 1
-            if sched is not None and len(responses) < b:
-                responses.extend(sched.poll(uids=want))
+            if sess is not None and len(responses) < b:
+                responses.extend(sess.poll(uids=want))
 
-        if sched is not None:
+        if sess is not None:
             if len(responses) < b:
-                responses.extend(sched.poll(block=True, uids=want))
+                responses.extend(sess.poll(block=True, uids=want))
             by_uid = {r.ticket.uid: r for r in responses}
             ordered = [by_uid[t.uid] for t in tickets]
             retrieved = ServeRetrieval(
@@ -175,7 +206,7 @@ class Engine:
                 dists=np.stack([r.dists for r in ordered]),
                 ef_used=np.asarray([r.ef_used for r in ordered], np.int32),
             )
-            router_stats = sched.router_stats().as_dict()
+            router_stats = sess.router_stats().as_dict()
             router_stats["requests"] = [r.stats.as_dict() for r in ordered]
 
         return ServeResult(

@@ -34,32 +34,29 @@ finishes.
 Since the request-lifecycle redesign the router owns only the *policy*
 (estimation budget, tier ladder, margins); execution lives in
 :class:`repro.serve.scheduler.AdaServeScheduler`, which admits requests
-continuously and drains tier buckets independently.  :meth:`QueryRouter.route`
-survives as a synchronous submit-all/drain-all wrapper over a one-shot
-scheduler — bit-identical to the pre-scheduler barrier for every existing
-caller — and warns toward ``submit()``/``poll()``.
+continuously and drains tier buckets independently.  Both are internal
+lowering targets of the declarative facade: callers hold a
+:class:`repro.plan.ExecutionPlan` (``index.plan(spec)``) whose batch
+``search()`` and ``submit()``/``poll()`` lifecycle replace the old
+synchronous ``route()`` barrier.
 """
 from __future__ import annotations
 
 import dataclasses
-import time
-import warnings
 from typing import Optional, Tuple
 
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import DatasetStats, EfTable
+from repro.pytrees import register_static_config
 from repro.index.search import (
     AdaEfConfig,
     DeviceGraph,
     SearchConfig,
-    SearchResult,
     estimate_pass,
     estimation_config,
 )
-from .api import SearchRequest
-from .stats import RouterStats
 from .tiers import BEAM_AUTO, TierSpec, tier_ladder
 
 
@@ -83,6 +80,11 @@ class RouterConfig:
     #   monolithic level in exchange for recall at the unbiased estimates:
     #   set False to keep the old biased-low estimates (fewer ndist, lower
     #   tail latency, recall slightly under the monolithic path).
+
+
+# Static pytree: zero leaves, jit-keyed by dataclass equality (same policy
+# -> same compile-cache entry), never traced.
+register_static_config(RouterConfig)
 
 
 class QueryRouter:
@@ -129,8 +131,10 @@ class QueryRouter:
         )
         # Effective lossiness, not nominal: an est_lmax at or above the full
         # collection budget, or an est_cap at or above the lossless capacity,
-        # leaves phase A bit-exact and needs no compensation.
-        est_lossy = self.est_ada.buf(m0) < ada_cfg.buf(m0) or (
+        # leaves phase A bit-exact and needs no compensation.  Kept on the
+        # instance — plan.explain() reports this decision rather than
+        # re-deriving it.
+        self.est_lossy = est_lossy = self.est_ada.buf(m0) < ada_cfg.buf(m0) or (
             self.est_cfg.ef_cap
             < estimation_config(search_cfg, m0, self.est_ada, 0).ef_cap
         )
@@ -146,15 +150,28 @@ class QueryRouter:
             and est_table_builder is not None
             and self.router_cfg.est_matched_table
         )
-        self.est_table = (
-            est_table_builder(self.est_cfg, self.est_ada)
-            if self.est_matched
-            else table
-        )
+        # built lazily: constructing a router (e.g. for plan.explain()) must
+        # stay cheap — the matched-table proxy re-scoring only runs once an
+        # estimation pass actually needs the table
+        self._est_table_builder = est_table_builder
+        self._est_table: Optional[EfTable] = None
         self.tiers: Tuple[TierSpec, ...] = tier_ladder(
             self.base_cfg, self.router_cfg.tier_efs, self.router_cfg.beam_mode
         )
         self._tier_efs = tuple(t.ef for t in self.tiers)
+
+    @property
+    def est_table(self) -> EfTable:
+        """The table estimates are looked up in: the owner's full-budget
+        table, or (lossy budgets with a builder) the estimation-matched one,
+        built on first use."""
+        if self._est_table is None:
+            self._est_table = (
+                self._est_table_builder(self.est_cfg, self.est_ada)
+                if self.est_matched
+                else self.table
+            )
+        return self._est_table
 
     # ------------------------------------------------------------- phases
     def estimate(
@@ -198,44 +215,3 @@ class QueryRouter:
         from .scheduler import AdaServeScheduler
 
         return AdaServeScheduler(self, scheduler_cfg, **kwargs)
-
-    def route(
-        self, queries: np.ndarray, target_recall: float
-    ) -> Tuple[SearchResult, RouterStats]:
-        """Synchronous batch dispatch; returns results in request order plus
-        the batch's telemetry.  ``SearchResult`` fields are host numpy arrays.
-
-        .. deprecated:: since the request-lifecycle redesign this is a thin
-           submit-all/drain-all wrapper over a one-shot
-           :class:`AdaServeScheduler` — bit-identical to the old barrier, but
-           new serving callers should hold a scheduler and use
-           ``submit()``/``step()``/``poll()`` so arriving requests never wait
-           on a finished batch.
-        """
-        warnings.warn(
-            "QueryRouter.route() is a synchronous wrapper over "
-            "AdaServeScheduler; prefer scheduler submit()/step()/poll() "
-            "(see repro.serve.scheduler) for serving paths",
-            DeprecationWarning,
-            stacklevel=2,
-        )
-        queries = np.asarray(queries, np.float32)
-        if queries.ndim != 2 or len(queries) == 0:
-            raise ValueError(f"expected (B, d) queries, got {queries.shape}")
-        t_start = time.perf_counter()
-        sched = self.scheduler(
-            default_target_recall=float(target_recall)
-        )
-        tickets = [sched.submit(SearchRequest(query=q)) for q in queries]
-        by_uid = {r.ticket.uid: r for r in sched.drain()}
-        ordered = [by_uid[t.uid] for t in tickets]
-        out = SearchResult(
-            ids=np.stack([r.ids for r in ordered]),
-            dists=np.stack([r.dists for r in ordered]),
-            ndist=np.asarray([r.ndist for r in ordered], np.int32),
-            iters=np.asarray([r.iters for r in ordered], np.int32),
-            ef_used=np.asarray([r.ef_used for r in ordered], np.int32),
-        )
-        stats = sched.router_stats()
-        stats.total_wall_s = time.perf_counter() - t_start
-        return out, stats

@@ -23,10 +23,10 @@
 Equivalence: tier searches resume the carried phase-A state, and both
 phases are per-query independent, so for any interleaving of
 ``submit``/``step``/``poll`` and any drain trigger the scheduler returns
-results bit-identical to the synchronous ``route()`` barrier under a
+results bit-identical to a synchronous submit-all/drain-all barrier under a
 lossless config (the arrival-order invariance property test in
-``tests/test_scheduler.py``).  ``QueryRouter.route`` itself is now a thin
-submit-all/drain-all wrapper over this class.
+``tests/test_scheduler.py``).  ``ExecutionPlan.search`` in a lifecycle mode
+is exactly that barrier over a one-shot instance of this class.
 """
 from __future__ import annotations
 
@@ -40,6 +40,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.index.search import resize_state, resume_at_ef
+from repro.pytrees import register_static_config
 from .api import RequestStats, SearchRequest, SearchResponse, SearchTicket
 from .bucketing import assign_tiers, pad_shape
 from .stats import SchedulerStats, TierStats
@@ -79,6 +80,11 @@ class SchedulerConfig:
             raise ValueError("flush_margin_s must be >= 0")
         if self.est_wait_s < 0:
             raise ValueError("est_wait_s must be >= 0")
+
+
+# Static pytree: zero leaves, jit-keyed by dataclass equality (same policy
+# -> same compile-cache entry), never traced.
+register_static_config(SchedulerConfig)
 
 
 class _EstPass:

@@ -1,0 +1,365 @@
+"""Declarative facade: SearchSpec validation + round-trip, planner lowering,
+plan caching/invalidation, jit-static configs, and the bit-exactness of
+``plan.search`` / ``plan.submit()``+``poll()`` against the legacy execution
+paths in all three modes."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import (
+    RouterConfig,
+    SchedulerConfig,
+    SearchSpec,
+    SpecOverrides,
+)
+from repro.serve import SearchRequest
+
+
+def _queries(small_db, nq=32, seed=1):
+    data, centers, w = small_db
+    rng = np.random.default_rng(seed)
+    qc = rng.choice(len(centers), size=nq, p=w)
+    return (centers[qc] + 0.3 * rng.normal(0, 1, (nq, centers.shape[1]))).astype(
+        np.float32
+    )
+
+
+def _toy_index(small_db, n=1200):
+    from repro.index import build_ada_index
+
+    data, _, _ = small_db
+    return build_ada_index(
+        data[:n], k=5, target_recall=0.9, m=8, ef_construction=60,
+        ef_cap=160, num_samples=32,
+    )
+
+
+# --------------------------------------------------------------------------
+# SearchSpec: validation, hashability, serialization round-trip
+# --------------------------------------------------------------------------
+
+
+def test_spec_validation():
+    SearchSpec()  # all defaults legal
+    with pytest.raises(ValueError):
+        SearchSpec(mode="batch")
+    with pytest.raises(ValueError):
+        SearchSpec(backend="cuda")
+    with pytest.raises(ValueError):
+        SearchSpec(k=0)
+    with pytest.raises(ValueError):
+        SearchSpec(target_recall=1.5)
+    with pytest.raises(ValueError):
+        SearchSpec(deadline_ms=-1.0)
+    with pytest.raises(ValueError):
+        SearchSpec(max_ef=-5)
+
+
+def test_spec_hashable_and_eq():
+    a = SearchSpec(k=10, target_recall=0.95, mode="routed",
+                   overrides=SpecOverrides(router=RouterConfig(est_lmax=32)))
+    b = SearchSpec(k=10, target_recall=0.95, mode="routed",
+                   overrides=SpecOverrides(router=RouterConfig(est_lmax=32)))
+    c = dataclasses.replace(a, target_recall=0.9)
+    assert a == b and hash(a) == hash(b)
+    assert a != c
+    assert len({a, b, c}) == 2
+
+
+def test_spec_dict_roundtrip():
+    spec = SearchSpec(
+        k=7, target_recall=0.92, deadline_ms=25.0, max_ef=128,
+        mode="streaming", backend="oracle",
+        overrides=SpecOverrides(
+            router=RouterConfig(est_lmax=32, tier_efs=(32, 64)),
+            scheduler=SchedulerConfig(fill=16, est_wait_s=0.01),
+        ),
+    )
+    d = spec.as_dict()
+    assert SearchSpec.from_dict(d) == spec
+    # default spec round-trips too (empty overrides)
+    assert SearchSpec.from_dict(SearchSpec().as_dict()) == SearchSpec()
+
+
+# --------------------------------------------------------------------------
+# static pytrees: specs/configs cross jit boundaries without retracing
+# --------------------------------------------------------------------------
+
+
+def test_spec_crosses_jit_without_retrace():
+    traces = []
+
+    @jax.jit
+    def f(x, spec):
+        traces.append(1)
+        return x * spec.k
+
+    spec_kw = dict(
+        k=3, mode="routed",
+        overrides=SpecOverrides(router=RouterConfig(est_lmax=32)),
+    )
+    out = f(jnp.ones(4), SearchSpec(**spec_kw))
+    np.testing.assert_array_equal(np.asarray(out), 3.0 * np.ones(4))
+    f(jnp.ones(4), SearchSpec(**spec_kw))  # equal spec, fresh instance
+    assert len(traces) == 1  # no retrace: the spec is a static pytree
+    f(jnp.ones(4), SearchSpec(**dict(spec_kw, k=4)))
+    assert len(traces) == 2  # different spec -> different compile-cache entry
+
+
+def test_router_scheduler_configs_cross_jit_without_retrace():
+    """Satellite: RouterConfig/SchedulerConfig are registered static pytrees
+    with dataclass hash/eq, so plans carrying them jit-key on policy value."""
+    traces = []
+
+    @jax.jit
+    def g(x, rcfg, scfg):
+        traces.append(1)
+        return x + rcfg.est_lmax + scfg.fill
+
+    g(jnp.zeros(2), RouterConfig(est_lmax=16), SchedulerConfig(fill=8))
+    g(jnp.zeros(2), RouterConfig(est_lmax=16), SchedulerConfig(fill=8))
+    assert len(traces) == 1
+    out = g(jnp.zeros(2), RouterConfig(est_lmax=32), SchedulerConfig(fill=8))
+    assert len(traces) == 2
+    np.testing.assert_array_equal(np.asarray(out), np.full(2, 40.0))
+    # zero leaves: tree_flatten carries the config entirely in the treedef
+    leaves, treedef = jax.tree_util.tree_flatten(RouterConfig(est_lmax=16))
+    assert leaves == []
+    assert treedef.unflatten([]) == RouterConfig(est_lmax=16)
+
+
+# --------------------------------------------------------------------------
+# plan cache: equal specs share one entry; updates invalidate
+# --------------------------------------------------------------------------
+
+
+def test_plan_cache_equal_specs_share_entry(small_index):
+    a = small_index.plan(SearchSpec(k=10, target_recall=0.9))
+    b = small_index.plan(SearchSpec(k=10, target_recall=0.9))
+    assert a is b  # equal (distinct) specs -> one cache entry
+    assert a == b and hash(a) == hash(b)
+    c = small_index.plan(SearchSpec(k=10, target_recall=0.9, mode="routed"))
+    assert c is not a
+    # keyword convenience builds the same spec
+    assert small_index.plan(k=10, target_recall=0.9) is a
+    with pytest.raises(ValueError):
+        small_index.plan(SearchSpec(), k=10)  # spec and kwargs are exclusive
+
+
+def test_plan_cache_invalidated_on_update(small_db):
+    idx = _toy_index(small_db)
+    q = _queries(small_db, nq=8, seed=17)
+    p0 = idx.plan(SearchSpec())
+    p0.search(q)
+    assert idx.plan(SearchSpec()) is p0  # cached
+
+    idx.insert(small_db[0][1200:1210])
+    p1 = idx.plan(SearchSpec())
+    assert p1 is not p0  # graph changed -> cache dropped
+    assert p0.stale and not p1.stale
+    with pytest.raises(RuntimeError, match="stale"):
+        p0.search(q)  # held plans refuse to run against a mutated index
+    with pytest.raises(RuntimeError, match="stale"):
+        p0.submit(q[0])
+    with pytest.raises(RuntimeError, match="stale"):
+        p0.step(force=True)  # the whole lifecycle surface refuses, not
+    with pytest.raises(RuntimeError, match="stale"):
+        p0.drain()           # just the entry points
+    assert p1.search(q).ids.shape == (8, 5)
+
+    idx.delete(np.asarray([0, 1]))
+    p2 = idx.plan(SearchSpec())
+    assert p2 is not p1 and p1.stale
+    assert p2.search(q).ids.shape == (8, 5)
+
+
+# --------------------------------------------------------------------------
+# bit-exactness vs the legacy execution paths (the acceptance property)
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("seed", range(3))
+def test_plan_search_matches_legacy_paths(small_db, small_index, seed):
+    """3-seed property: ``plan.search`` reproduces the pre-redesign paths
+    bit-exactly — the fused ``adaptive_search`` for oneshot (== legacy
+    ``query(routed=False)``), and the lossless fixed-beam routed dispatch
+    (== legacy ``query(routed=True)`` under the same policy)."""
+    from repro.index.search import adaptive_search
+
+    rng = np.random.default_rng(2000 + seed)
+    nq = int(rng.integers(9, 40))
+    q = _queries(small_db, nq=nq, seed=seed)
+    target = small_index.target_recall
+
+    # the pre-redesign monolithic path, invoked directly
+    ref = adaptive_search(
+        small_index.graph,
+        jnp.asarray(q),
+        small_index.stats,
+        small_index.table,
+        jnp.asarray(target, jnp.float32),
+        small_index.search_cfg,
+        small_index.ada_cfg,
+    )
+    res = small_index.plan(SearchSpec()).search(q)
+    np.testing.assert_array_equal(np.asarray(res.ids), np.asarray(ref.ids))
+    np.testing.assert_array_equal(np.asarray(res.ndist), np.asarray(ref.ndist))
+    legacy = small_index.query(q)
+    np.testing.assert_array_equal(np.asarray(legacy.ids), np.asarray(ref.ids))
+
+    routed = small_index.plan(SearchSpec(
+        mode="routed",
+        overrides=SpecOverrides(router=RouterConfig(beam_mode="fixed")),
+    )).search(q)
+    np.testing.assert_array_equal(routed.ids, np.asarray(ref.ids))
+    np.testing.assert_array_equal(routed.ef_used, np.asarray(ref.ef_used))
+
+
+@pytest.mark.parametrize("mode", ["oneshot", "routed", "streaming"])
+def test_submit_poll_matches_search_in_every_mode(small_db, small_index, mode):
+    """The lifecycle surface of a plan (submit/flush/poll) returns ids
+    bit-identical to its own batch ``search()`` — in *every* mode (a oneshot
+    plan's lifecycle path lowers to the lossless fixed-beam policy, so it
+    reproduces the fused search)."""
+    q = _queries(small_db, nq=11, seed=23)
+    plan = small_index.plan(SearchSpec(mode=mode))
+    batch = plan.search(q)
+    tickets = [plan.submit(row) for row in q]
+    plan.flush()
+    by_uid = {r.ticket.uid: r for r in plan.poll(block=True)}
+    ids = np.stack([by_uid[t.uid].ids for t in tickets])
+    np.testing.assert_array_equal(ids, np.asarray(batch.ids))
+    assert plan.pending == 0
+    if mode == "oneshot":
+        # ...and the fused path is the same ids again (lossless fixed-beam)
+        np.testing.assert_array_equal(
+            ids, np.asarray(small_index.query(q).ids)
+        )
+
+
+def test_submit_accepts_requests_and_fills_spec_defaults(small_db, small_index):
+    q = _queries(small_db, nq=2, seed=29)
+    plan = small_index.plan(SearchSpec(k=3, deadline_ms=40.0, mode="streaming"))
+    t_bare = plan.submit(q[0])                       # bare (d,) query
+    t_req = plan.submit(SearchRequest(query=q[1], deadline_s=0.5))
+    assert t_bare.deadline_t is not None             # spec deadline applied
+    assert t_req.deadline_t - t_req.submit_t == pytest.approx(0.5)
+    responses = plan.drain()
+    assert all(r.ids.shape == (3,) for r in responses)  # spec.k applied
+
+
+# --------------------------------------------------------------------------
+# planner decisions: k/max_ef/deadline lowering, backend probe
+# --------------------------------------------------------------------------
+
+
+def test_spec_k_slices_results(small_db, small_index):
+    q = _queries(small_db, nq=6, seed=31)
+    res = small_index.plan(SearchSpec(k=3)).search(q)
+    assert np.asarray(res.ids).shape == (6, 3)
+    full = small_index.plan(SearchSpec()).search(q)
+    np.testing.assert_array_equal(
+        np.asarray(res.ids), np.asarray(full.ids)[:, :3]
+    )
+    with pytest.raises(ValueError):
+        small_index.plan(SearchSpec(k=small_index.k + 1))
+
+
+def test_max_ef_bounds_exploration(small_db, small_index):
+    q = _queries(small_db, nq=16, seed=37)
+    plan = small_index.plan(SearchSpec(max_ef=32))
+    assert plan.search_cfg.ef_cap == 32
+    res = plan.search(q)
+    assert int(np.asarray(res.ef_used).max()) <= 32
+    assert any("max_ef" in n for n in plan.explain()["notes"])
+
+
+def test_deadline_lowers_drain_policy(small_index):
+    plan = small_index.plan(SearchSpec(mode="streaming", deadline_ms=100.0))
+    assert plan.scheduler_cfg.est_wait_s == pytest.approx(0.05)
+    assert plan.deadline_s == pytest.approx(0.1)
+    # explicit scheduler override wins over the derivation
+    pinned = small_index.plan(SearchSpec(
+        mode="streaming", deadline_ms=100.0,
+        overrides=SpecOverrides(scheduler=SchedulerConfig(fill=16)),
+    ))
+    assert pinned.scheduler_cfg == SchedulerConfig(fill=16)
+
+
+def test_backend_resolution_off_tpu(small_index):
+    """Capability probe replaces the old live use_distance_kernel flag."""
+    from repro.plan import probe_interpret, resolve_backend
+
+    if jax.default_backend() == "tpu":  # pragma: no cover - CI is CPU
+        pytest.skip("CPU-only planner assertions")
+    plan = small_index.plan(SearchSpec())
+    assert plan.backend == "oracle"  # auto: index built without kernels
+    assert not plan.search_cfg.use_distance_kernel
+    assert probe_interpret()  # Pallas interpret mode works on CPU
+    interp = small_index.plan(SearchSpec(backend="interpret"))
+    assert interp.backend == "interpret"
+    assert interp.search_cfg.use_distance_kernel
+    # an explicit pallas request degrades to interpret off-TPU, never errors
+    assert resolve_backend("pallas", False)[0] == "interpret"
+    oracle = small_index.plan(SearchSpec(backend="oracle"))
+    assert oracle.backend == "oracle"
+
+
+def test_serving_modes_lower_to_batch_hoisted(small_index):
+    assert small_index.plan(SearchSpec()).loop == "vmap"  # inherit the build
+    assert small_index.plan(SearchSpec(mode="routed")).loop == "batch_hoisted"
+    assert small_index.plan(SearchSpec(mode="streaming")).loop == "batch_hoisted"
+    # an explicit search override pins the loop
+    pinned = small_index.plan(SearchSpec(
+        mode="routed",
+        overrides=SpecOverrides(search=small_index.search_cfg),
+    ))
+    assert pinned.loop == "vmap"
+
+
+# --------------------------------------------------------------------------
+# explain: every derived decision, round-tripped
+# --------------------------------------------------------------------------
+
+
+def test_explain_roundtrips_every_decision(small_index):
+    spec = SearchSpec(
+        k=5, target_recall=0.9, deadline_ms=50.0, mode="streaming",
+        overrides=SpecOverrides(router=RouterConfig(est_lmax=32)),
+    )
+    plan = small_index.plan(spec)
+    d = plan.explain()
+    # the spec itself round-trips out of the explain dict
+    assert SearchSpec.from_dict(d["spec"]) == spec
+    # every lowered decision is recorded verbatim
+    assert d["mode"] == plan.mode == "streaming"
+    assert d["loop"] == plan.loop
+    assert d["backend"]["resolved"] == plan.backend
+    assert d["k"] == {"index": small_index.k, "request": 5}
+    assert d["target_recall"] == plan.target_recall == 0.9
+    assert d["deadline_s"] == plan.deadline_s
+    assert d["search"]["ef_cap"] == plan.search_cfg.ef_cap
+    assert d["search"]["batch_hoisted"] == plan.search_cfg.batch_hoisted
+    assert d["search"]["use_distance_kernel"] == plan.search_cfg.use_distance_kernel
+    assert d["estimation"]["lossless"] is False  # est_lmax=32 truncates
+    assert d["estimation"]["matched_table"] is True
+    assert [t["ef"] for t in d["tiers"]] == [t.ef for t in plan.router.tiers]
+    assert d["tiers"][-1]["ef"] == d["search"]["ef_cap"]  # catch-all rung
+    assert d["scheduler"]["fill"] == plan.scheduler_cfg.fill
+    assert d["scheduler"]["est_wait_s"] == plan.scheduler_cfg.est_wait_s
+    assert d["cache"]["shape_signature"] == list(plan._shape_sig)
+    # the text rendering carries the same plan, human-readable
+    text = plan.explain(fmt="text")
+    assert "mode=streaming" in text and "tiers:" in text
+    with pytest.raises(ValueError):
+        plan.explain(fmt="json")
+
+
+def test_explain_is_json_serializable(small_index):
+    import json
+
+    d = small_index.plan(SearchSpec(mode="routed")).explain()
+    assert json.loads(json.dumps(d)) == d

@@ -1,9 +1,14 @@
 """Ada-ef query router: phase-split equivalence, bucketing/scatter order
-restoration, beam auto-tuning, telemetry, and engine integration."""
+restoration, beam auto-tuning, telemetry, and engine integration.
+
+Routed execution goes through the declarative facade (``index.plan`` with a
+``routed``-mode :class:`repro.api.SearchSpec`); the router itself is an
+internal lowering target reached via ``SpecOverrides``."""
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.api import RouterConfig, SearchSpec, SpecOverrides
 from repro.index import auto_beam, recall_at_k
 from repro.serve.bucketing import (
     assign_tiers,
@@ -12,8 +17,14 @@ from repro.serve.bucketing import (
     pad_shape,
     scatter_results,
 )
-from repro.serve.router import QueryRouter, RouterConfig
+from repro.serve.router import QueryRouter
 from repro.serve.tiers import tier_ladder
+
+
+def _routed_plan(index, rcfg=None, **spec_kw):
+    """A routed-mode plan; ``rcfg`` pins the router policy via overrides."""
+    overrides = SpecOverrides() if rcfg is None else SpecOverrides(router=rcfg)
+    return index.plan(SearchSpec(mode="routed", overrides=overrides, **spec_kw))
 
 
 def _queries(small_db, nq=64, seed=1):
@@ -149,16 +160,16 @@ def test_router_estimates_match_adaptive(small_db, small_index):
 
 @pytest.mark.parametrize("nq", [13, 64])  # non-pow2 exercises padding
 def test_routed_matches_unrouted_adaptive(small_db, small_index, nq):
-    """Lossless estimation + fixed beams: the routed dispatch must reproduce
+    """Lossless estimation + fixed beams: the routed plan must reproduce
     the monolithic ``adaptive_search`` per query — same ids, same ef, same
     ndist — for every query (each estimated ef fits its tier by ladder
     construction; tombstone-free fixture, see resize_state's deletion
     caveat)."""
     q = _queries(small_db, nq=nq, seed=3)
     mono = small_index.query(q)
-    res, stats = small_index.router(RouterConfig(beam_mode="fixed")).route(
-        q, small_index.target_recall
-    )
+    res, stats = _routed_plan(
+        small_index, RouterConfig(beam_mode="fixed")
+    ).search(q, with_stats=True)
     np.testing.assert_array_equal(res.ids, np.asarray(mono.ids))
     np.testing.assert_array_equal(res.ef_used, np.asarray(mono.ef_used))
     np.testing.assert_array_equal(res.ndist, np.asarray(mono.ndist))
@@ -173,8 +184,8 @@ def test_routed_recall_at_target_on_clustered_corpus(small_db, small_index):
     q = _queries(small_db, nq=96, seed=5)
     gt = _gt(data, q)
     mono = small_index.query(q)
-    # explicit default config: the cached router may hold another test's cfg
-    res, _ = small_index.router(RouterConfig()).route(q, small_index.target_recall)
+    # explicit default policy: plans are keyed by spec, not installed state
+    res = _routed_plan(small_index, RouterConfig()).search(q)
     rec_mono = float(recall_at_k(jnp.asarray(np.asarray(mono.ids)), gt).mean())
     rec_routed = float(recall_at_k(jnp.asarray(res.ids), gt).mean())
     assert rec_routed >= small_index.target_recall - 0.03, rec_routed
@@ -186,17 +197,10 @@ def test_auto_beam_tiers_never_lose_recall(small_db, small_index):
     data, _, _ = small_db
     q = _queries(small_db, nq=96, seed=9)
     gt = _gt(data, q)
-    auto = QueryRouter(
-        small_index.graph, small_index.stats, small_index.table,
-        small_index.search_cfg, small_index.ada_cfg, RouterConfig(),
-    )
-    b1 = QueryRouter(
-        small_index.graph, small_index.stats, small_index.table,
-        small_index.search_cfg, small_index.ada_cfg,
-        RouterConfig(beam_mode="fixed"),  # base beam == 1
-    )
-    res_a, _ = auto.route(q, small_index.target_recall)
-    res_1, _ = b1.route(q, small_index.target_recall)
+    res_a = _routed_plan(small_index, RouterConfig()).search(q)
+    res_1 = _routed_plan(
+        small_index, RouterConfig(beam_mode="fixed")  # base beam == 1
+    ).search(q)
     rec_a = float(recall_at_k(jnp.asarray(res_a.ids), gt).mean())
     rec_1 = float(recall_at_k(jnp.asarray(res_1.ids), gt).mean())
     assert rec_a >= rec_1 - 1e-6, (rec_a, rec_1)
@@ -215,12 +219,15 @@ def test_tier_ladder_inherits_batch_hoisted(small_index):
 def test_routed_batch_hoisted_matches_unrouted(small_db, small_index, nq):
     """The batch-hoisted tier loop through the router reproduces the
     monolithic (vmap-path) adaptive_search per query — the serving-side
-    golden equivalence for ISSUE 3."""
+    golden equivalence for ISSUE 3 (this is also the loop the planner
+    lowers serving modes to by default)."""
     q = _queries(small_db, nq=nq, seed=3)
     mono = small_index.query(q)
-    res, stats = small_index.router(
-        RouterConfig(beam_mode="fixed", batch_hoisted=True)
-    ).route(q, small_index.target_recall)
+    plan = _routed_plan(
+        small_index, RouterConfig(beam_mode="fixed", batch_hoisted=True)
+    )
+    assert plan.loop == "batch_hoisted"
+    res, stats = plan.search(q, with_stats=True)
     np.testing.assert_array_equal(res.ids, np.asarray(mono.ids))
     np.testing.assert_array_equal(res.ef_used, np.asarray(mono.ef_used))
     np.testing.assert_array_equal(res.ndist, np.asarray(mono.ndist))
@@ -249,12 +256,14 @@ def test_router_estimation_matched_table(small_db, small_index):
 
     capped = small_index.router(RouterConfig(est_lmax=16))
     assert capped.est_matched
-    assert capped.est_table is not small_index.table
+    assert capped.est_table is not small_index.table  # lazy-built on access
     # same ladder and group axis — only the score units moved
     assert capped.est_table.num_groups == small_index.table.num_groups
 
     q = _queries(small_db, nq=64, seed=21)
-    res, stats = capped.route(q, small_index.target_recall)
+    res, stats = _routed_plan(
+        small_index, RouterConfig(est_lmax=16)
+    ).search(q, with_stats=True)
     assert stats.est_matched
     assert stats.as_dict()["est_matched"] is True
     # margin-free lossy routing with the matched table still lands near target
@@ -282,10 +291,12 @@ def test_router_capped_estimation_budget(small_db, small_index):
     data, _, _ = small_db
     q = _queries(small_db, nq=64, seed=11)
     gt = _gt(data, q)
-    lossless = small_index.router(RouterConfig())
-    _, st_full = lossless.route(q, small_index.target_recall)
-    capped = small_index.router(RouterConfig(est_lmax=32, ef_margin=1.25))
-    res, st_cap = capped.route(q, small_index.target_recall)
+    _, st_full = _routed_plan(small_index, RouterConfig()).search(
+        q, with_stats=True
+    )
+    res, st_cap = _routed_plan(
+        small_index, RouterConfig(est_lmax=32, ef_margin=1.25)
+    ).search(q, with_stats=True)
     assert st_cap.est_ndist_total < st_full.est_ndist_total
     rec = float(recall_at_k(jnp.asarray(res.ids), gt).mean())
     assert rec >= small_index.target_recall - 0.05, rec
@@ -293,8 +304,8 @@ def test_router_capped_estimation_budget(small_db, small_index):
 
 def test_router_stats_telemetry(small_db, small_index):
     q = _queries(small_db, nq=37, seed=13)
-    res, stats = small_index.router(RouterConfig()).route(
-        q, small_index.target_recall
+    res, stats = _routed_plan(small_index, RouterConfig()).search(
+        q, with_stats=True
     )
     assert stats.batch == 37
     assert sum(t.count for t in stats.tiers) == 37
@@ -324,7 +335,7 @@ def test_router_invalidated_on_update(small_db):
     r1 = idx.router()
     assert r1 is not r0  # graph changed -> router rebuilt
     q = _queries(small_db, nq=8, seed=17)
-    res, _ = idx.query_routed(q)
+    res = idx.query(q, routed=True)
     assert res.ids.shape == (8, 5)
 
 

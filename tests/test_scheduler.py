@@ -1,17 +1,14 @@
 """Continuous-batching scheduler: arrival-order invariance vs the synchronous
-route() barrier, ticket bookkeeping, drain triggers (fill vs deadline vs
+plan-search barrier, ticket bookkeeping, drain triggers (fill vs deadline vs
 flush), estimation-pass padding cost, and cache invalidation."""
-import warnings
-
 import numpy as np
 import pytest
 
+from repro.api import RouterConfig, SchedulerConfig, SearchSpec, SpecOverrides
 from repro.serve import (
     AdaServeScheduler,
-    SchedulerConfig,
     SearchRequest,
 )
-from repro.serve.router import RouterConfig
 
 
 class FakeClock:
@@ -36,10 +33,15 @@ def _queries(small_db, nq=64, seed=1):
     )
 
 
-def _route_ref(router, q, target):
-    with warnings.catch_warnings():
-        warnings.simplefilter("ignore", DeprecationWarning)
-        return router.route(q, target)
+def _barrier_ref(index, q, target, rcfg=None):
+    """Synchronous routed reference through the declarative facade (the
+    submit-all/drain-all barrier ExecutionPlan.search runs in routed mode)."""
+    plan = index.plan(SearchSpec(
+        target_recall=float(target),
+        mode="routed",
+        overrides=SpecOverrides(router=rcfg or RouterConfig(beam_mode="fixed")),
+    ))
+    return plan.search(q, with_stats=True)
 
 
 # --------------------------------------------------------------------------
@@ -209,21 +211,26 @@ def test_fill_draining_across_estimation_passes(small_db, small_index):
 
 
 @pytest.mark.parametrize("seed", range(5))
-def test_arrival_order_invariance_vs_route(small_db, small_index, seed):
+def test_arrival_order_invariance_vs_plan_barrier(small_db, small_index, seed):
     """Property: for a random interleaving of submit()/step()/poll() with
     random per-request deadlines (mixing fill, deadline and flush drains),
     the scheduler returns ids/dists/ndist/ef bit-identical to the synchronous
-    route() barrier under a lossless config."""
+    plan-search barrier under a lossless config."""
     rng = np.random.default_rng(1000 + seed)
     nq = int(rng.integers(8, 48))
     q = _queries(small_db, nq=nq, seed=seed)
-    router = small_index.router(RouterConfig(beam_mode="fixed"))
-    ref, _ = _route_ref(router, q, small_index.target_recall)
+    ref, _ = _barrier_ref(small_index, q, small_index.target_recall)
 
     clock = FakeClock()
     fill = int(rng.choice([2, 8, 16]))
+    # scheduler over the *same* lowered router the barrier plan used, so the
+    # equivalence is between executions of one plan's policy
+    plan = small_index.plan(SearchSpec(
+        target_recall=float(small_index.target_recall), mode="routed",
+        overrides=SpecOverrides(router=RouterConfig(beam_mode="fixed")),
+    ))
     sched = AdaServeScheduler(
-        router,
+        plan.router,
         SchedulerConfig(fill=fill),
         default_target_recall=small_index.target_recall,
         clock=clock,
@@ -268,11 +275,14 @@ def test_mixed_target_recalls_in_one_pass(small_db, small_index):
     """Requests with different declarative targets share one estimation pass
     and still match their per-target synchronous reference."""
     q = _queries(small_db, nq=8, seed=11)
-    router = small_index.router(RouterConfig(beam_mode="fixed"))
     lo, hi = 0.8, small_index.target_recall
-    ref_lo, _ = _route_ref(router, q[:4], lo)
-    ref_hi, _ = _route_ref(router, q[4:], hi)
-    sched = AdaServeScheduler(router, default_target_recall=hi)
+    ref_lo, _ = _barrier_ref(small_index, q[:4], lo)
+    ref_hi, _ = _barrier_ref(small_index, q[4:], hi)
+    plan = small_index.plan(SearchSpec(
+        target_recall=float(hi), mode="routed",
+        overrides=SpecOverrides(router=RouterConfig(beam_mode="fixed")),
+    ))
+    sched = AdaServeScheduler(plan.router, default_target_recall=hi)
     tickets = [
         sched.submit(SearchRequest(query=q[i], target_recall=lo if i < 4 else hi))
         for i in range(8)
@@ -292,8 +302,8 @@ def test_estimation_padding_converges_immediately(small_db, small_index):
     """Satellite fix: estimation-pass padding rows skip phase A — each pad
     row costs exactly the entry-point distance, reported in est_pad_ndist."""
     q = _queries(small_db, nq=13, seed=12)  # pads 13 -> 16
-    _, stats = _route_ref(
-        small_index.router(RouterConfig()), q, small_index.target_recall
+    _, stats = _barrier_ref(
+        small_index, q, small_index.target_recall, rcfg=RouterConfig()
     )
     assert stats.est_shape == 16
     assert stats.est_pad_ndist == stats.est_shape - stats.batch == 3
@@ -327,14 +337,20 @@ def test_router_stats_compat_from_scheduler(small_db, small_index):
 
 
 # --------------------------------------------------------------------------
-# deprecation shim + cache invalidation
+# deleted shims + cache invalidation
 # --------------------------------------------------------------------------
 
 
-def test_route_emits_deprecation_warning(small_db, small_index):
-    q = _queries(small_db, nq=8, seed=14)
-    with pytest.warns(DeprecationWarning, match="submit"):
-        small_index.router(RouterConfig()).route(q, small_index.target_recall)
+def test_legacy_shims_deleted():
+    """route()/query_routed are gone for good — the facade (ExecutionPlan
+    search/submit/poll) is the only public execution surface, and the
+    suite-wide ``error::DeprecationWarning`` filter keeps dead API from
+    creeping back behind a warning."""
+    from repro.index.pipeline import AdaEfIndex
+    from repro.serve.router import QueryRouter
+
+    assert not hasattr(QueryRouter, "route")
+    assert not hasattr(AdaEfIndex, "query_routed")
 
 
 def test_scheduler_invalidated_on_update(small_db):
