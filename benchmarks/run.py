@@ -65,6 +65,64 @@ def planner_gate() -> None:
     print("planner_gate,0,ok")
 
 
+def chaos_gate() -> None:
+    """Smoke gate for the fault-injection harness: one trace on a toy index
+    with kernel failures, NaN corruption, and injected latency all armed.
+    Asserts the overload/robustness contract — every request resolves to a
+    terminal status, exactly the corrupted rows are REJECTED, and the kernel
+    fault is absorbed by the retry/fallback ladder (recorded in stats)."""
+    import numpy as np
+
+    from repro.index import build_ada_index
+    from repro.plan import probe_interpret
+    from repro.serve import (
+        STATUS_REJECTED,
+        TERMINAL_STATUSES,
+        AdaServeScheduler,
+        FaultInjector,
+        FaultPlan,
+        SearchRequest,
+    )
+
+    rng = np.random.default_rng(1)
+    centers = rng.normal(0, 1, (8, 24))
+    data = (centers[rng.integers(0, 8, 600)]
+            + 0.3 * rng.normal(0, 1, (600, 24))).astype(np.float32)
+    use_kernel = probe_interpret()
+    idx = build_ada_index(data, k=5, target_recall=0.9, m=6,
+                          ef_construction=40, ef_cap=64, num_samples=16,
+                          use_distance_kernel=use_kernel)
+    nan_uids = (2, 5)
+    chaos = FaultInjector(FaultPlan(
+        fail_dispatches=(0,), fail_attempts=1,
+        dispatch_latency_s=0.002, nan_uids=nan_uids,
+    ))
+    sched = AdaServeScheduler(
+        idx.router(), chaos=chaos,
+        default_target_recall=idx.target_recall,
+        version_probe=lambda: idx._graph_version,
+    )
+    queries = data[rng.integers(0, len(data), 8)]
+    tickets = [sched.submit(SearchRequest(query=q)) for q in queries]
+    responses = sched.drain()
+    assert len(responses) == len(tickets), "request dropped under faults"
+    by_uid = {r.ticket.uid: r for r in responses}
+    statuses = [by_uid[t.uid].status for t in tickets]
+    assert all(s in TERMINAL_STATUSES for s in statuses), statuses
+    rejected = {t.uid for t in tickets
+                if by_uid[t.uid].status == STATUS_REJECTED}
+    assert rejected == set(nan_uids), (
+        f"NaN isolation: rejected {rejected} != corrupted {set(nan_uids)}"
+    )
+    assert chaos.faults_raised >= 1, "injected kernel fault never fired"
+    absorbed = sched.stats.kernel_retries + sched.stats.kernel_fallbacks
+    assert absorbed >= 1, "kernel fault not recorded as retry/fallback"
+    healthy = [by_uid[t.uid] for t in tickets if t.uid not in rejected]
+    assert all((r.ids >= 0).any() for r in healthy), "healthy rows unserved"
+    print(f"chaos_gate,0,ok statuses={statuses} retries="
+          f"{sched.stats.kernel_retries} fallbacks={sched.stats.kernel_fallbacks}")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--full", action="store_true", help="paper-scale (slow)")
@@ -112,18 +170,19 @@ def main() -> None:
     print("name,us_per_call,derived")
     failures = 0
     if args.smoke and not args.only:
-        t0 = time.perf_counter()
-        try:
-            planner_gate()
-        except Exception:
-            failures += 1
-            print("planner_gate,0,ERROR", file=sys.stderr)
-            traceback.print_exc()
-        print(
-            f"_module.planner_gate.wall,"
-            f"{(time.perf_counter() - t0) * 1e6:.0f},",
-            flush=True,
-        )
+        for gate in (planner_gate, chaos_gate):
+            t0 = time.perf_counter()
+            try:
+                gate()
+            except Exception:
+                failures += 1
+                print(f"{gate.__name__},0,ERROR", file=sys.stderr)
+                traceback.print_exc()
+            print(
+                f"_module.{gate.__name__}.wall,"
+                f"{(time.perf_counter() - t0) * 1e6:.0f},",
+                flush=True,
+            )
     for name, mod in modules.items():
         params = inspect.signature(mod.run).parameters
         kwargs = {"quick": quick}

@@ -12,6 +12,7 @@ barrier, per-request latency telemetry.
 """
 import argparse
 import time
+from collections import Counter
 
 import jax
 import jax.numpy as jnp
@@ -42,9 +43,12 @@ def stream_demo(engine, index, batch, *, rate_rps=64.0, deadline_ms=50.0):
         print(f"  request {resp.ticket.uid}: tier ef={s.tier_ef} "
               f"(est ef={s.ef_est}, drained by {s.trigger}) "
               f"latency={wait * 1e3:.1f}ms ids={resp.ids[:4]}...")
+    by_status = Counter(r.status for r in responses)
     print(f"streamed {len(responses)} requests: p50={np.percentile(lats, 50) * 1e3:.1f}ms "
           f"p99={np.percentile(lats, 99) * 1e3:.1f}ms "
           f"(first run includes jit compiles)")
+    print("  statuses: " + ", ".join(
+        f"{s}={n}" for s, n in sorted(by_status.items())))
 
 
 def main():

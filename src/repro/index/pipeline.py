@@ -182,6 +182,9 @@ class AdaEfIndex:
                 router,
                 self._scheduler_cfg,
                 default_target_recall=self.target_recall,
+                # a held (orphaned) scheduler detects the mutation and
+                # raises StalePlanError instead of silently losing tickets
+                version_probe=lambda: self._graph_version,
             )
         return self._scheduler
 

@@ -13,6 +13,7 @@ from __future__ import annotations
 
 import argparse
 import time
+from collections import Counter
 
 import jax
 import numpy as np
@@ -48,6 +49,9 @@ def stream_retrieval(engine, index, batch, *, target_recall, arrival_rate,
         f"{st.fill_drains}/{st.deadline_drains}/{st.flush_drains}/{st.idle_drains} "
         f"est_pad_ndist={st.est_pad_ndist}"
     )
+    by_status = Counter(r.status for r in responses)
+    print("statuses: " + ", ".join(
+        f"{s}={n}" for s, n in sorted(by_status.items())))
     return responses
 
 

@@ -48,7 +48,13 @@ from repro.api import (
 )
 from repro.index.search import SearchResult, adaptive_search
 from repro.kernels import ops
-from repro.serve.api import SearchRequest, SearchResponse, SearchTicket
+from repro.serve.api import (
+    InvalidQueryError,
+    SearchRequest,
+    SearchResponse,
+    SearchTicket,
+    StalePlanError,
+)
 from repro.serve.router import QueryRouter
 from repro.serve.scheduler import AdaServeScheduler
 
@@ -172,9 +178,14 @@ def plan_spec(index, spec: SearchSpec) -> "ExecutionPlan":
         scfg = ov.scheduler
     elif spec.deadline_ms > 0:
         # batch admissions up to half the budget; the other half covers the
-        # tier-queue wait the deadline trigger itself bounds
-        scfg = SchedulerConfig(est_wait_s=spec.deadline_ms / 2e3)
+        # tier-queue wait the deadline trigger itself bounds.  A deadline
+        # spec also arms the degradation ladder: the caller declared latency
+        # to matter, so at-risk requests demote (DEGRADED) and blown
+        # deadlines answer from phase A (PARTIAL) instead of silently
+        # missing — the explicit opt-out is a pinned SpecOverrides.scheduler
+        scfg = SchedulerConfig(est_wait_s=spec.deadline_ms / 2e3, degrade=True)
         notes.append("deadline_ms sizes the admission batching window")
+        notes.append("deadline_ms arms the degradation ladder (degrade=True)")
     else:
         scfg = SchedulerConfig()
 
@@ -288,10 +299,12 @@ class ExecutionPlan:
 
     def _check_fresh(self):
         if self.stale:
-            raise RuntimeError(
-                "stale ExecutionPlan: the index was mutated after this plan "
-                "was lowered (plans hold graph/table references); call "
-                "index.plan(spec) again for a fresh one"
+            raise StalePlanError(
+                f"stale ExecutionPlan: the index was mutated after this plan "
+                f"was lowered (graph version "
+                f"{self._version} -> {self._index._graph_version}; plans "
+                "hold graph/table references); call index.plan(spec) again "
+                "for a fresh one"
             )
 
     # ------------------------------------------------------------ executors
@@ -319,6 +332,8 @@ class ExecutionPlan:
         also holds).  Compile caches are shared through the router."""
         self._check_fresh()
         kwargs.setdefault("default_target_recall", self.target_recall)
+        idx = self._index
+        kwargs.setdefault("version_probe", lambda: idx._graph_version)
         return AdaServeScheduler(self.router, self.scheduler_cfg, **kwargs)
 
     @property
@@ -348,6 +363,7 @@ class ExecutionPlan:
         ``None`` for the fused oneshot path, which has no tier structure).
         """
         self._check_fresh()
+        queries = self._validate_queries(queries)
         target = self.target_recall if target_recall is None else float(target_recall)
         if self.mode == MODE_ONESHOT:
             idx = self._index
@@ -363,9 +379,6 @@ class ExecutionPlan:
             res = self._slice_k(res)
             return (res, None) if with_stats else res
 
-        queries = np.asarray(queries, np.float32)
-        if queries.ndim != 2 or len(queries) == 0:
-            raise ValueError(f"expected (B, d) queries, got {queries.shape}")
         t0 = time.perf_counter()
         # a one-shot private scheduler: the plan's shared lifecycle surface
         # (submit/poll) keeps its own queues untouched by batch calls
@@ -387,6 +400,33 @@ class ExecutionPlan:
         stats = sched.router_stats()
         stats.total_wall_s = time.perf_counter() - t0
         return out, stats
+
+    def _validate_queries(self, queries) -> np.ndarray:
+        """Input hardening shared by both execution modes: typed
+        :class:`InvalidQueryError` (a ``ValueError``) before anything is
+        dispatched — a NaN row must never reach a fused batch search or a
+        shared estimation pass."""
+        arr = np.asarray(queries)
+        if arr.dtype.kind not in "fiu":
+            raise InvalidQueryError(
+                f"queries dtype {arr.dtype} is not numeric (expected float32)"
+            )
+        q = arr.astype(np.float32)
+        if q.ndim != 2 or len(q) == 0:
+            raise InvalidQueryError(
+                f"expected (B, d) queries, got {tuple(arr.shape)}"
+            )
+        dim = self._shape_sig[1]
+        if q.shape[1] != dim:
+            raise InvalidQueryError(
+                f"query dimensionality {q.shape[1]} != index dim {dim}"
+            )
+        bad = np.nonzero(~np.isfinite(q).all(axis=1))[0]
+        if bad.size:
+            raise InvalidQueryError(
+                f"queries contain NaN/Inf values (rows {bad.tolist()[:8]})"
+            )
+        return q
 
     def _slice_k(self, res: SearchResult) -> SearchResult:
         if self.k == self.search_cfg.k:
@@ -476,6 +516,14 @@ class ExecutionPlan:
                 "requested": self.spec.backend,
                 "resolved": self.backend,
                 "note": self._backend_note,
+                # what a *runtime* dispatch failure falls to, in order (the
+                # scheduler retries the resolved backend once, then walks
+                # these rungs; see AdaServeScheduler._attempt_ladder)
+                "runtime_fallback": (
+                    ["retry", "oracle"]
+                    if self.search_cfg.use_distance_kernel
+                    else ["retry"]
+                ),
             },
             "kernels": {"frontier": frontier, "dispatch": dispatch},
             "k": {"index": self._index.k, "request": self.k},
@@ -512,6 +560,10 @@ class ExecutionPlan:
                 "est_wait_s": self.scheduler_cfg.est_wait_s,
                 "work_conserving": self.scheduler_cfg.work_conserving,
                 "flush_margin_s": self.scheduler_cfg.flush_margin_s,
+                "max_inflight": self.scheduler_cfg.max_inflight,
+                "max_tier_queue": self.scheduler_cfg.max_tier_queue,
+                "overload": self.scheduler_cfg.overload,
+                "degrade": self.scheduler_cfg.degrade,
             },
             "pad": {
                 "policy": "pow2",
@@ -556,7 +608,10 @@ class ExecutionPlan:
             f"  scheduler: fill={self.scheduler_cfg.fill} "
             f"est_wait_s={self.scheduler_cfg.est_wait_s} "
             f"work_conserving={self.scheduler_cfg.work_conserving} "
-            f"flush_margin_s={self.scheduler_cfg.flush_margin_s}",
+            f"flush_margin_s={self.scheduler_cfg.flush_margin_s} "
+            f"max_inflight={self.scheduler_cfg.max_inflight} "
+            f"overload={self.scheduler_cfg.overload} "
+            f"degrade={self.scheduler_cfg.degrade}",
         ]
         for note in self._notes:
             lines.append(f"  note: {note}")

@@ -27,14 +27,30 @@ streaming drivers (``launch/serve.py --stream``, ``examples/rag_serve.py
 --stream``) hold a plan directly.
 """
 from .api import (  # noqa: F401
+    STATUS_DEGRADED,
+    STATUS_OK,
+    STATUS_PARTIAL,
+    STATUS_REJECTED,
+    STATUS_TIMED_OUT,
+    TERMINAL_STATUSES,
+    DispatchFailedError,
+    InvalidQueryError,
+    OverloadedError,
     RequestStats,
     SearchRequest,
     SearchResponse,
     SearchTicket,
+    ServeError,
+    StalePlanError,
 )
+from .chaos import FaultInjector, FaultPlan, InjectedFault  # noqa: F401
 from .engine import Engine, ServeConfig, ServeResult  # noqa: F401
 from .kvcache import grow_cache  # noqa: F401
 from .router import QueryRouter, RouterConfig  # noqa: F401
-from .scheduler import AdaServeScheduler, SchedulerConfig  # noqa: F401
-from .stats import RouterStats, SchedulerStats, TierStats  # noqa: F401
+from .scheduler import (  # noqa: F401
+    AdaServeScheduler,
+    SchedulerConfig,
+    submit_with_backoff,
+)
+from .stats import RouterStats, SchedulerStats, TierCostModel, TierStats  # noqa: F401
 from .tiers import TierSpec, tier_ladder  # noqa: F401

@@ -16,6 +16,20 @@ Lifecycle of one request::
     scheduler.step()            # estimation + any due tier drains
     for resp in scheduler.poll():
         resp.ids, resp.stats    # SearchResponse once its tier drained
+
+Every response carries a **terminal status** — the serving contract under
+overload is "always answer, and say what kind of answer this is":
+
+- ``ok`` — full search, deadline (if any) met.
+- ``degraded`` — served, but demoted down the ef-tier ladder to protect its
+  deadline (achieved ef < estimated ef; the declarative-recall analogue of
+  load shedding).
+- ``partial`` — deadline already blown before the tier search ran; answered
+  best-effort from the carried phase-A ``SearchState``.
+- ``rejected`` — admission control shed it (queue bounds / invalid query);
+  no search ran.
+- ``timed_out`` — full search completed, but past the deadline (an explicit
+  miss, never a silent one).
 """
 from __future__ import annotations
 
@@ -23,6 +37,49 @@ import dataclasses
 from typing import Optional
 
 import numpy as np
+
+# ---------------------------------------------------------------- statuses
+STATUS_OK = "ok"
+STATUS_DEGRADED = "degraded"
+STATUS_PARTIAL = "partial"
+STATUS_REJECTED = "rejected"
+STATUS_TIMED_OUT = "timed_out"
+TERMINAL_STATUSES = (
+    STATUS_OK, STATUS_DEGRADED, STATUS_PARTIAL, STATUS_REJECTED,
+    STATUS_TIMED_OUT,
+)
+
+
+# ------------------------------------------------------------------ errors
+class ServeError(RuntimeError):
+    """Base of the serving stack's typed failures."""
+
+
+class OverloadedError(ServeError):
+    """Admission control refused the request (``SchedulerConfig.
+    max_inflight`` reached).  Retry with backoff (see
+    :func:`repro.serve.scheduler.submit_with_backoff`), poll to free
+    capacity, or configure ``overload="ticket"`` to receive REJECTED
+    responses instead of exceptions."""
+
+
+class InvalidQueryError(ServeError, ValueError):
+    """The query vector is unusable: NaN/Inf values, a non-numeric dtype,
+    or the wrong dimensionality.  Raised at ``submit()``/``plan.search()``
+    *before* the query can enter (and poison) a shared estimation pass."""
+
+
+class StalePlanError(ServeError):
+    """The index was mutated (``insert``/``delete`` bumped the graph
+    version) under a held plan or scheduler.  Pending tickets cannot be
+    recovered — drain before mutating, then rebuild via ``index.plan()`` /
+    ``index.scheduler()`` and resubmit."""
+
+
+class DispatchFailedError(ServeError):
+    """A tier dispatch failed on every rung of the backend fallback ladder
+    (kernel -> interpret -> oracle); carries the last underlying error as
+    ``__cause__``."""
 
 
 @dataclasses.dataclass(frozen=True)
@@ -80,7 +137,15 @@ class RequestStats:
     padded_to: int = 0             # pow2 shape the drain was padded to
     ndist: int = 0                 # cumulative est + search cost
     trigger: str = ""              # what drained the bucket:
-    #   fill | deadline | flush | idle (work-conserving drain)
+    #   fill | deadline | flush | idle (work-conserving drain) | partial
+    status: str = ""               # terminal status (mirrors SearchResponse)
+    demotions: int = 0             # ladder rungs walked down (deadline at risk)
+    ef_achieved: int = 0           # ef the search actually ran at
+    #   (< ef_est when degraded; 0 for partial/rejected — no tier search ran)
+    dispatch_retries: int = 0      # extra dispatch attempts consumed
+    fallback_backend: str = ""     # non-empty when the backend ladder was
+    #   walked at runtime (e.g. "oracle")
+    reject_reason: str = ""        # why admission/screening shed the request
 
     @property
     def latency_s(self) -> float:
@@ -101,7 +166,11 @@ class RequestStats:
 
 @dataclasses.dataclass
 class SearchResponse:
-    """Completed request: result rows + the request's lifecycle telemetry."""
+    """Completed request: result rows + the request's lifecycle telemetry.
+
+    ``status`` is always one of :data:`TERMINAL_STATUSES` — a response never
+    leaves the scheduler without declaring what kind of answer it is.
+    """
 
     ticket: SearchTicket
     ids: np.ndarray                # (k,) int32, -1 padded
@@ -110,3 +179,4 @@ class SearchResponse:
     iters: int
     ef_used: int                   # effective ef the tier search ran at
     stats: RequestStats
+    status: str = STATUS_OK

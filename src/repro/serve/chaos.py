@@ -1,0 +1,111 @@
+"""Fault injection for the serving stack (the chaos harness).
+
+A :class:`FaultPlan` is a declarative list of failure points; a
+:class:`FaultInjector` is its runtime, threaded through
+:class:`repro.serve.scheduler.AdaServeScheduler` (``chaos=`` keyword).  The
+scheduler calls the injector at the same three seams a real failure would
+enter through, so tests exercise the *production* recovery paths — the
+retry/fallback ladder, NaN screening, and :class:`StalePlanError` — not
+test-only shims:
+
+- ``wrap_clock`` — skews the scheduler's clock (deadline logic under a
+  misbehaving time source).
+- ``corrupt`` — overwrites chosen queries with NaN *after* submit-time
+  validation, modeling corruption that bypasses the front door (the
+  estimation-pass NaN screen must catch it without poisoning cohabitants).
+- ``before_dispatch`` — runs at the top of every tier-drain attempt: can add
+  artificial latency, mutate the index mid-flight, or raise
+  :class:`InjectedFault` to trip the kernel retry/backend-fallback ladder.
+
+Faults are addressed by **dispatch index** (0-based count of tier drains,
+in dispatch order) and **attempt** (0 = first try, 1 = retry, 2+ =
+fallback rungs), so a plan like ``fail_dispatches=(0,), fail_attempts=2``
+means "the first tier drain fails twice, succeeding only after the
+scheduler has fallen down one backend rung".
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Optional, Tuple
+
+import numpy as np
+
+
+class InjectedFault(RuntimeError):
+    """The failure a :class:`FaultPlan` raises inside a dispatch attempt."""
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultPlan:
+    """Declarative failure points, all off by default (an empty plan is a
+    no-op injector — the chaos-threaded scheduler is then bit-identical to
+    an unthreaded one)."""
+
+    fail_dispatches: Tuple[int, ...] = ()  # dispatch indices that raise
+    fail_attempts: int = 1        # how many attempts of each such dispatch
+    #   fail before one succeeds (1 = first try only -> retry recovers;
+    #   2 = retry also fails -> backend fallback must recover)
+    dispatch_latency_s: float = 0.0  # host sleep injected per dispatch
+    clock_skew_s: float = 0.0     # constant added to the scheduler clock
+    nan_uids: Tuple[int, ...] = ()  # ticket uids whose queries are NaN'd
+    #   post-validation (estimation-pass screen must reject exactly these)
+    mutate_at_dispatch: Optional[int] = None  # run the injector's
+    #   ``mutate_fn`` right before this dispatch (mid-flight index mutation
+    #   -> StalePlanError on the next version check)
+
+
+class FaultInjector:
+    """Runtime for one :class:`FaultPlan`.
+
+    ``mutate_fn`` is the side effect for ``mutate_at_dispatch`` (typically
+    ``lambda: index.insert(...)``).  The injector counts dispatches itself —
+    a retried/fallen-back dispatch keeps one index, attempts count within
+    it.
+    """
+
+    def __init__(self, plan: FaultPlan,
+                 mutate_fn: Optional[Callable[[], None]] = None):
+        self.plan = plan
+        self.mutate_fn = mutate_fn
+        self.dispatches = 0          # tier drains seen (public telemetry)
+        self.faults_raised = 0
+
+    def wrap_clock(self, clock: Callable[[], float]) -> Callable[[], float]:
+        if not self.plan.clock_skew_s:
+            return clock
+        skew = self.plan.clock_skew_s
+        return lambda: clock() + skew
+
+    def corrupt(self, uid: int, query: np.ndarray) -> np.ndarray:
+        if uid not in self.plan.nan_uids:
+            return query
+        bad = query.copy()
+        bad[: max(1, bad.shape[0] // 4)] = np.nan
+        return bad
+
+    def next_dispatch(self) -> int:
+        """Claim the next dispatch index (called once per tier drain)."""
+        idx = self.dispatches
+        self.dispatches += 1
+        return idx
+
+    def before_attempt(self, dispatch_idx: int, attempt: int) -> None:
+        """Called at the top of every attempt of a tier drain; raises
+        :class:`InjectedFault` when the plan says this attempt fails."""
+        if self.plan.dispatch_latency_s and attempt == 0:
+            time.sleep(self.plan.dispatch_latency_s)
+        if (
+            self.plan.mutate_at_dispatch == dispatch_idx
+            and attempt == 0
+            and self.mutate_fn is not None
+        ):
+            self.mutate_fn()
+        if (
+            dispatch_idx in self.plan.fail_dispatches
+            and attempt < self.plan.fail_attempts
+        ):
+            self.faults_raised += 1
+            raise InjectedFault(
+                f"injected fault: dispatch {dispatch_idx} attempt {attempt}"
+            )

@@ -39,6 +39,7 @@ from repro.index.pipeline import AdaEfIndex
 from repro.models.model_zoo import Model
 from .api import SearchRequest
 from .kvcache import grow_cache
+from .scheduler import submit_with_backoff
 
 Array = jax.Array
 
@@ -176,10 +177,18 @@ class Engine:
                 # callers hold (an unfiltered poll() there would steal our
                 # responses, and our flush would force-drain their parked
                 # queues).
+                # submit_with_backoff: a plan whose scheduler bounds
+                # admission (max_inflight) would otherwise refuse part of
+                # the batch — the engine's policy is capped exponential
+                # backoff, harvesting early completions to free capacity
                 sess = plan.new_scheduler()
                 qn = np.asarray(q)
                 tickets = [
-                    sess.submit(SearchRequest(query=qn[i], k=plan.k))
+                    submit_with_backoff(
+                        sess,
+                        SearchRequest(query=qn[i], k=plan.k),
+                        harvest=responses.extend,
+                    )
                     for i in range(b)
                 ]
                 sess.flush()

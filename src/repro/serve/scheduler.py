@@ -39,17 +39,27 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.index.distances import key_sign
 from repro.index.search import resize_state, resume_at_ef
 from repro.pytrees import register_static_config
-from .api import RequestStats, SearchRequest, SearchResponse, SearchTicket
+from .api import (
+    STATUS_DEGRADED, STATUS_OK, STATUS_PARTIAL, STATUS_REJECTED,
+    STATUS_TIMED_OUT, DispatchFailedError, InvalidQueryError, OverloadedError,
+    RequestStats, SearchRequest, SearchResponse, SearchTicket, StalePlanError,
+)
 from .bucketing import assign_tiers, pad_shape
-from .stats import SchedulerStats, TierStats
+from .stats import SchedulerStats, TierCostModel, TierStats
 from .tiers import TierSpec
 
 TRIGGER_FILL = "fill"
 TRIGGER_DEADLINE = "deadline"
 TRIGGER_FLUSH = "flush"
 TRIGGER_IDLE = "idle"
+TRIGGER_PARTIAL = "partial"
+
+OVERLOAD_RAISE = "raise"    # submit() raises OverloadedError at capacity
+OVERLOAD_TICKET = "ticket"  # submit() returns a ticket whose response is
+#   already REJECTED (poll it like any other) — never raises
 
 
 @dataclasses.dataclass(frozen=True)
@@ -72,6 +82,21 @@ class SchedulerConfig:
     #   under load, where they amortize; under light load the scheduler then
     #   matches a greedy synchronous server instead of idling toward fill).
     #   Tiers are scanned smallest-ef first, so idle drains favor easy work.
+    max_inflight: int = 0   # admission bound: live requests (admitted +
+    #   queued + dispatched, excluding finished-but-unpolled) a submit may
+    #   not exceed; 0 = unbounded (the pre-admission-control behavior)
+    max_tier_queue: int = 0  # per-tier queue bound applied when estimated
+    #   requests file into their rung; overflow is shed REJECTED. 0 = off
+    overload: str = OVERLOAD_RAISE  # what a shed submit gets: "raise" ->
+    #   OverloadedError; "ticket" -> a normal ticket whose response is
+    #   REJECTED (lock-step replay loops keep their 1:1 submit/poll pairing)
+    degrade: bool = False   # arm the deadline-aware degradation ladder:
+    #   demote at-risk requests down the ef tiers (DEGRADED), answer blown
+    #   deadlines from their phase-A state (PARTIAL).  Off by default —
+    #   degradation trades the bit-exact barrier equivalence for latency,
+    #   so it must be an explicit opt-in (plan_spec arms it for deadline_ms
+    #   specs, where the caller already declared latency to matter)
+    cost_alpha: float = 0.25  # EWMA smoothing of the per-tier cost model
 
     def __post_init__(self):
         if self.fill < 1 or (self.fill & (self.fill - 1)) != 0:
@@ -80,6 +105,14 @@ class SchedulerConfig:
             raise ValueError("flush_margin_s must be >= 0")
         if self.est_wait_s < 0:
             raise ValueError("est_wait_s must be >= 0")
+        if self.max_inflight < 0 or self.max_tier_queue < 0:
+            raise ValueError("max_inflight/max_tier_queue must be >= 0")
+        if self.overload not in (OVERLOAD_RAISE, OVERLOAD_TICKET):
+            raise ValueError(
+                f"overload={self.overload!r} not in ('raise', 'ticket')"
+            )
+        if not 0.0 < self.cost_alpha <= 1.0:
+            raise ValueError("cost_alpha must be in (0, 1]")
 
 
 # Static pytree: zero leaves, jit-keyed by dataclass equality (same policy
@@ -122,19 +155,36 @@ class _Pending:
 
 class _Dispatch:
     """One tier drain: device results shared by its requests, materialized
-    (blocked + pulled to host) lazily at poll time so dispatches overlap."""
+    (blocked + pulled to host) lazily at poll time so dispatches overlap.
 
-    __slots__ = ("tier", "entries", "shape", "res_dev", "res_np", "t0", "wall_s")
+    Carries its device inputs and the *remaining* backend-attempt ladder
+    until materialization succeeds: JAX dispatch is asynchronous, so a
+    runtime kernel failure may only surface at ``block_until_ready`` — the
+    scheduler's :meth:`AdaServeScheduler._materialize` then re-dispatches
+    the same inputs synchronously down the ladder.
+    """
 
-    def __init__(self, tier: TierSpec, entries: List[_Pending], shape: int,
-                 res_dev, t0: float):
+    __slots__ = (
+        "tier", "tier_idx", "entries", "shape", "res_dev", "res_np", "t0",
+        "wall_s", "inputs", "attempts", "used_ai", "backend", "didx",
+    )
+
+    def __init__(self, tier: TierSpec, tier_idx: int, entries: List[_Pending],
+                 shape: int, res_dev, t0: float, inputs, attempts, used_ai: int,
+                 didx: int):
         self.tier = tier
+        self.tier_idx = tier_idx
         self.entries = entries
         self.shape = shape
         self.res_dev = res_dev
         self.res_np = None
         self.t0 = t0
         self.wall_s = 0.0
+        self.inputs = inputs          # (q_dev, states, ef_dev) until done
+        self.attempts = attempts      # full (cfg, backend_label) ladder
+        self.used_ai = used_ai        # index of the attempt in flight
+        self.backend = attempts[used_ai][1]
+        self.didx = didx              # chaos dispatch index (-1 = no chaos)
 
     def ready(self) -> bool:
         if self.res_np is not None:
@@ -150,13 +200,16 @@ class _Dispatch:
             # polls every consumer ends with (drain / replay tail / engine)
             return False
 
-    def materialize(self, stats: SchedulerStats) -> None:
+    def finish(self, stats: SchedulerStats) -> None:
+        """Block, pull to host, record the drain's TierStats, release the
+        carried inputs.  Raises whatever the device execution raised."""
         if self.res_np is not None:
             return
         jax.block_until_ready(self.res_dev)
         self.wall_s = time.perf_counter() - self.t0
         self.res_np = jax.tree_util.tree_map(np.asarray, self.res_dev)
         self.res_dev = None
+        self.inputs = None
         n = len(self.entries)
         stats.tiers.append(
             TierStats(
@@ -179,7 +232,17 @@ class AdaServeScheduler:
     references, and pending requests do not survive an index mutation.
 
     ``clock`` is injectable (tests drive deadlines with a fake clock); it
-    only gates *deadline draining* and telemetry timestamps, never results.
+    only gates *deadline draining*, degradation and telemetry timestamps,
+    never results.
+
+    ``version_probe`` (when given, e.g. by ``AdaEfIndex.scheduler()`` /
+    ``ExecutionPlan.new_scheduler()``) returns the owning index's graph
+    version; the scheduler captures it at construction and every
+    ``submit``/``step`` — and any ``poll`` that would otherwise lose live
+    work — raises :class:`StalePlanError` once the index mutates under it.
+
+    ``chaos`` is an optional :class:`repro.serve.chaos.FaultInjector`; an
+    absent (or empty-plan) injector leaves behavior bit-identical.
     """
 
     def __init__(
@@ -189,28 +252,129 @@ class AdaServeScheduler:
         *,
         default_target_recall: Optional[float] = None,
         clock: Callable[[], float] = time.monotonic,
+        version_probe: Optional[Callable[[], int]] = None,
+        chaos=None,
+        cost_model: Optional[TierCostModel] = None,
     ):
         self.router = router
         self.cfg = cfg or SchedulerConfig()
         self.min_shape = self.cfg.min_shape or router.router_cfg.min_shape
         self.default_target_recall = default_target_recall
-        self.clock = clock
+        self._chaos = chaos
+        self.clock = chaos.wrap_clock(clock) if chaos is not None else clock
+        self._version_probe = version_probe
+        self._version0 = None if version_probe is None else version_probe()
+        self.cost_model = (
+            cost_model
+            if cost_model is not None
+            else TierCostModel(alpha=self.cfg.cost_alpha)
+        )
         self.stats = SchedulerStats()
         self._uids = itertools.count()
         self._admission: List[_Pending] = []
         self._queues: List[List[_Pending]] = [[] for _ in router.tiers]
         self._inflight: List[Tuple[_Dispatch, int, _Pending]] = []
+        self._done: List[SearchResponse] = []  # terminal w/o dispatch
+        #   (REJECTED tickets, PARTIAL answers) awaiting poll
+
+    # ------------------------------------------------------------ freshness
+    def _live(self) -> int:
+        """Requests that still need device work (admission bound + what a
+        stale graph would orphan); excludes finished-but-unpolled."""
+        return (
+            len(self._admission)
+            + sum(len(q) for q in self._queues)
+            + len(self._inflight)
+        )
+
+    def _check_fresh(self) -> None:
+        if self._version_probe is None:
+            return
+        v = self._version_probe()
+        if v != self._version0:
+            raise StalePlanError(
+                f"stale scheduler: index graph version bumped "
+                f"{self._version0} -> {v} (insert/delete under a live "
+                f"scheduler); {self._live()} pending request(s) cannot be "
+                "recovered — drain() before mutating, then rebuild via "
+                "index.scheduler() / index.plan() and resubmit"
+            )
 
     # --------------------------------------------------------------- submit
-    def submit(self, request: SearchRequest) -> SearchTicket:
-        """Admit one request; returns its ticket.  Nothing is dispatched
-        until the next :meth:`step` (call it as often as you like — an empty
-        tick is cheap)."""
-        q = np.asarray(request.query, np.float32)
+    def _validate_query(self, query) -> np.ndarray:
+        arr = np.asarray(query)
+        if arr.dtype.kind not in "fiu":
+            raise InvalidQueryError(
+                f"query dtype {arr.dtype} is not numeric (expected float32)"
+            )
+        q = arr.astype(np.float32)
         if q.ndim == 2 and q.shape[0] == 1:
             q = q[0]
         if q.ndim != 1:
-            raise ValueError(f"expected a single (d,) query, got {q.shape}")
+            raise InvalidQueryError(
+                f"expected a single (d,) query, got {tuple(arr.shape)}"
+            )
+        dim = int(self.router.graph.vectors.shape[1])
+        if q.shape[0] != dim:
+            raise InvalidQueryError(
+                f"query dimensionality {q.shape[0]} != index dim {dim}"
+            )
+        if not np.isfinite(q).all():
+            raise InvalidQueryError("query contains NaN/Inf values")
+        return q
+
+    def _rejected_response(
+        self, ticket: SearchTicket, k: int, reason: str, now: float
+    ) -> SearchResponse:
+        rstats = RequestStats(submit_t=ticket.submit_t)
+        rstats.status = STATUS_REJECTED
+        rstats.reject_reason = reason
+        rstats.done_t = now
+        self.stats.rejected += 1
+        return SearchResponse(
+            ticket=ticket,
+            ids=np.full(k, -1, np.int32),
+            dists=np.full(k, np.inf, np.float32),
+            ndist=0,
+            iters=0,
+            ef_used=0,
+            stats=rstats,
+            status=STATUS_REJECTED,
+        )
+
+    def _shed(self, p: _Pending, now: float, reason: str) -> None:
+        """Reject an already-admitted request (NaN screen / tier-queue
+        bound): terminal REJECTED response into the done queue."""
+        p.est_pass = None
+        p.stats.status = STATUS_REJECTED
+        p.stats.reject_reason = reason
+        p.stats.done_t = now
+        self.stats.rejected += 1
+        self._done.append(
+            SearchResponse(
+                ticket=p.ticket,
+                ids=np.full(p.k, -1, np.int32),
+                dists=np.full(p.k, np.inf, np.float32),
+                ndist=p.stats.est_ndist,
+                iters=0,
+                ef_used=0,
+                stats=p.stats,
+                status=STATUS_REJECTED,
+            )
+        )
+
+    def submit(self, request: SearchRequest) -> SearchTicket:
+        """Admit one request; returns its ticket.  Nothing is dispatched
+        until the next :meth:`step` (call it as often as you like — an empty
+        tick is cheap).
+
+        Raises :class:`InvalidQueryError` for unusable query vectors and —
+        at the ``max_inflight`` admission bound under ``overload="raise"`` —
+        :class:`OverloadedError`; under ``overload="ticket"`` an over-bound
+        submit instead returns a ticket whose response is already REJECTED.
+        """
+        self._check_fresh()
+        q = self._validate_query(request.query)
         k = self.router.base_cfg.k if request.k is None else int(request.k)
         if not 1 <= k <= self.router.base_cfg.k:
             raise ValueError(
@@ -225,6 +389,21 @@ class AdaServeScheduler:
             raise ValueError(
                 "request has no target_recall and the scheduler has no default"
             )
+        if self.cfg.max_inflight and self._live() >= self.cfg.max_inflight:
+            if self.cfg.overload == OVERLOAD_RAISE:
+                self.stats.rejected += 1
+                raise OverloadedError(
+                    f"admission refused: {self._live()} live requests >= "
+                    f"max_inflight={self.cfg.max_inflight} — poll to free "
+                    "capacity or retry with backoff (submit_with_backoff)"
+                )
+            now = self.clock()
+            ticket = SearchTicket(uid=next(self._uids), submit_t=now)
+            self.stats.submitted += 1
+            self._done.append(
+                self._rejected_response(ticket, k, "overloaded", now)
+            )
+            return ticket
         now = self.clock()
         ticket = SearchTicket(
             uid=next(self._uids),
@@ -233,24 +412,30 @@ class AdaServeScheduler:
                 None if request.deadline_s is None else now + request.deadline_s
             ),
         )
+        if self._chaos is not None:
+            q = self._chaos.corrupt(ticket.uid, q)
         self._admission.append(_Pending(ticket, q, float(target), k))
         self.stats.submitted += 1
         return ticket
 
     # ----------------------------------------------------------------- tick
     def step(self, now: Optional[float] = None, *, force: bool = False) -> int:
-        """One scheduler tick: estimate whatever arrived, then drain every
-        tier bucket that is due (fill reached / oldest deadline due /
-        ``force``).  Returns the number of requests dispatched this tick.
-        Dispatches are asynchronous — harvest results with :meth:`poll`."""
+        """One scheduler tick: estimate whatever arrived, degrade/shed
+        deadline-risky work (when armed), then drain every tier bucket that
+        is due (fill reached / oldest deadline due / ``force``).  Returns
+        the number of requests dispatched this tick.  Dispatches are
+        asynchronous — harvest results with :meth:`poll`."""
+        self._check_fresh()
         now = self.clock() if now is None else now
         if self._admission and (force or self._est_due(now)):
             self._estimate_admitted(now)
+        if self.cfg.degrade:
+            self._degrade_at_risk(now)
         dispatched = 0
         for t, queue in enumerate(self._queues):
             if not queue:
                 continue
-            trigger = self._due(queue, now, force)
+            trigger = self._due(t, queue, now, force)
             if trigger is not None:
                 dispatched += self._dispatch_tier(t, now, trigger)
         return dispatched
@@ -286,7 +471,7 @@ class AdaServeScheduler:
             min(deadlines) - self.cfg.flush_margin_s <= now + self.cfg.est_wait_s
         )
 
-    def _due(self, queue: List[_Pending], now: float,
+    def _due(self, t: int, queue: List[_Pending], now: float,
              force: bool) -> Optional[str]:
         if force:
             return TRIGGER_FLUSH
@@ -295,7 +480,14 @@ class AdaServeScheduler:
         deadlines = [
             p.ticket.deadline_t for p in queue if p.ticket.deadline_t is not None
         ]
-        if deadlines and min(deadlines) - self.cfg.flush_margin_s <= now:
+        # With the degradation ladder armed, look ahead by the tier's
+        # predicted drain cost: a bucket whose oldest deadline falls inside
+        # the window [now, now + predicted] must dispatch *now* to have any
+        # chance of making it (waiting can only convert OK into TIMED_OUT).
+        horizon = now + (
+            self.cost_model.predict(t) if self.cfg.degrade else 0.0
+        )
+        if deadlines and min(deadlines) - self.cfg.flush_margin_s <= horizon:
             return TRIGGER_DEADLINE
         if self.cfg.work_conserving and not self._busy():
             # nothing is running: holding this bucket buys no amortization.
@@ -304,9 +496,93 @@ class AdaServeScheduler:
             return TRIGGER_IDLE
         return None
 
+    # ---------------------------------------------------------- degradation
+    def _degrade_at_risk(self, now: float) -> None:
+        """Walk queued requests down the ef-tier ladder when the cost model
+        predicts their deadline cannot survive their current rung, and
+        answer already-blown deadlines from their phase-A state as PARTIAL.
+
+        Tiers are scanned top-down, so a request appended to rung ``t-1``
+        is re-examined there in the same sweep and may walk several rungs
+        at once.  Rung 0 has nowhere lower to go — its at-risk requests are
+        left for the deadline trigger (the lookahead in :meth:`_due`
+        dispatches them as early as possible).  A cold cost model predicts
+        0.0, so nothing degrades before at least one drain was observed.
+        """
+        for t in range(len(self._queues) - 1, -1, -1):
+            queue = self._queues[t]
+            if not queue:
+                continue
+            keep: List[_Pending] = []
+            for p in queue:
+                deadline = p.ticket.deadline_t
+                if deadline is None:
+                    keep.append(p)
+                    continue
+                remaining = deadline - now
+                if remaining <= 0:
+                    self._answer_partial(p, now)
+                    continue
+                predicted = self.cost_model.predict(t)
+                if (
+                    t > 0
+                    and predicted > 0.0
+                    and predicted > remaining - self.cfg.flush_margin_s
+                ):
+                    p.ef = min(p.ef, self.router.tiers[t - 1].ef)
+                    p.stats.demotions += 1
+                    self.stats.demotions += 1
+                    self._queues[t - 1].append(p)
+                    continue
+                keep.append(p)
+            self._queues[t] = keep
+
+    def _answer_partial(self, p: _Pending, now: float) -> None:
+        """Deadline already blown: answer best-effort from the carried
+        phase-A result heap instead of spending a (pointless) tier search."""
+        states = p.est_pass.states
+        rk = np.asarray(states.rk[p.row][: p.k])
+        ri = np.asarray(states.ri[p.row][: p.k])
+        p.est_pass = None
+        finite = np.isfinite(rk)
+        sign = key_sign(self.router.base_cfg.metric)
+        ids = np.where(finite, ri, -1).astype(np.int32)
+        dists = np.where(finite, rk * sign, np.inf).astype(np.float32)
+        p.stats.status = STATUS_PARTIAL
+        p.stats.trigger = TRIGGER_PARTIAL
+        p.stats.dispatch_t = now
+        p.stats.done_t = now
+        p.stats.ndist = p.stats.est_ndist
+        self.stats.partials += 1
+        self._done.append(
+            SearchResponse(
+                ticket=p.ticket,
+                ids=ids,
+                dists=dists,
+                ndist=p.stats.est_ndist,
+                iters=0,
+                ef_used=0,
+                stats=p.stats,
+                status=STATUS_PARTIAL,
+            )
+        )
+
     # ----------------------------------------------------------- estimation
     def _estimate_admitted(self, now: float) -> None:
         entries, self._admission = self._admission, []
+        # Screen non-finite rows (corruption past the submit-time front
+        # door, e.g. injected by the chaos harness): shed exactly the
+        # offenders as REJECTED before they can poison the shared pass —
+        # cohabiting requests estimate and serve normally.
+        finite: List[_Pending] = []
+        for p in entries:
+            if np.isfinite(p.query).all():
+                finite.append(p)
+            else:
+                self._shed(p, now, "non-finite query values")
+        entries = finite
+        if not entries:
+            return
         b = len(entries)
         shape = pad_shape(b, self.min_shape)
         q = np.stack([p.query for p in entries])
@@ -330,7 +606,15 @@ class AdaServeScheduler:
             p.stats.est_batch = b
             p.stats.est_ndist = int(est_ndist[i])
             p.stats.ef_est = p.ef
-            self._queues[int(tiers[i])].append(p)
+            queue = self._queues[int(tiers[i])]
+            if self.cfg.max_tier_queue and len(queue) >= self.cfg.max_tier_queue:
+                self._shed(
+                    p, now,
+                    f"tier queue full (ef={self.router.tiers[int(tiers[i])].ef},"
+                    f" bound={self.cfg.max_tier_queue})",
+                )
+                continue
+            queue.append(p)
         st = self.stats
         st.est_passes += 1
         st.est_shape_total += shape
@@ -339,6 +623,70 @@ class AdaServeScheduler:
         st.est_wall_s += wall
 
     # -------------------------------------------------------------- dispatch
+    def _attempt_ladder(self, tier: TierSpec) -> List[Tuple[object, str]]:
+        """The (cfg, backend_label) attempts a tier drain may consume:
+        primary, primary again (one retry — transient faults), then the
+        planner's backend ladder below the primary.  ``ops`` kernels already
+        self-select interpret off-TPU, so the one rung below a kernel config
+        is the pure-jnp oracle (``use_distance_kernel=False``)."""
+        ladder: List[Tuple[object, str]] = [(tier.cfg, ""), (tier.cfg, "")]
+        if tier.cfg.use_distance_kernel:
+            ladder.append(
+                (
+                    dataclasses.replace(tier.cfg, use_distance_kernel=False),
+                    "oracle",
+                )
+            )
+        return ladder
+
+    def _count_attempt(self, attempts, ai: int) -> None:
+        """Attempt ``ai > 0`` is being consumed: same cfg as the previous
+        attempt -> retry, different cfg -> backend fallback."""
+        if attempts[ai][0] == attempts[ai - 1][0]:
+            self.stats.kernel_retries += 1
+        else:
+            self.stats.kernel_fallbacks += 1
+
+    def _materialize(self, d: _Dispatch) -> None:
+        """Block on a dispatch's device results, walking the remaining
+        backend ladder synchronously if execution failed (async dispatch
+        surfaces runtime kernel failures only at ``block_until_ready``).
+        Feeds the tier cost model on success."""
+        if d.res_np is not None:  # a sibling slot already materialized it
+            return
+        last_err: Optional[Exception] = None
+        while True:
+            if d.res_dev is not None:
+                try:
+                    d.finish(self.stats)
+                    break
+                except Exception as err:  # runtime failure: ladder below
+                    last_err = err
+                    d.res_dev = None
+            ai = d.used_ai + 1
+            if ai >= len(d.attempts):
+                raise DispatchFailedError(
+                    f"tier ef={d.tier.ef} dispatch failed on every backend "
+                    f"rung ({[lb or 'primary' for _, lb in d.attempts]})"
+                ) from last_err
+            self._count_attempt(d.attempts, ai)
+            d.used_ai = ai
+            d.backend = d.attempts[ai][1]
+            try:
+                if self._chaos is not None:
+                    self._chaos.before_attempt(d.didx, ai)
+                q_dev, states, ef_dev = d.inputs
+                d.res_dev = resume_at_ef(
+                    self.router.graph, q_dev, states, ef_dev, d.attempts[ai][0]
+                )
+            except Exception as err:
+                last_err = err
+        self.cost_model.observe(d.tier_idx, d.wall_s)
+        if d.used_ai > 0:
+            for p in d.entries:
+                p.stats.dispatch_retries = d.used_ai
+                p.stats.fallback_backend = d.backend
+
     def _dispatch_tier(self, t: int, now: float, trigger: str) -> int:
         entries, self._queues[t] = self._queues[t], []
         tier = self.router.tiers[t]
@@ -397,15 +745,37 @@ class AdaServeScheduler:
             # lets each estimation pass free its device buffers as soon as
             # the last request it admitted has dispatched
             p.est_pass = None
+        q_dev = jnp.asarray(q_b)
+        states = resize_state(states, tier.ef)
+        ef_dev = jnp.asarray(ef_b)
+        attempts = self._attempt_ladder(tier)
+        didx = -1 if self._chaos is None else self._chaos.next_dispatch()
         t0 = time.perf_counter()
-        res_dev = resume_at_ef(
-            self.router.graph,
-            jnp.asarray(q_b),
-            resize_state(states, tier.ef),
-            jnp.asarray(ef_b),
-            tier.cfg,
+        res_dev = None
+        last_err: Optional[Exception] = None
+        ai = 0
+        while ai < len(attempts):
+            if ai > 0:
+                self._count_attempt(attempts, ai)
+            try:
+                if self._chaos is not None:
+                    self._chaos.before_attempt(didx, ai)
+                res_dev = resume_at_ef(
+                    self.router.graph, q_dev, states, ef_dev, attempts[ai][0]
+                )
+                break
+            except Exception as err:  # dispatch-time failure: walk the ladder
+                last_err = err
+                ai += 1
+        if res_dev is None:
+            raise DispatchFailedError(
+                f"tier ef={tier.ef} dispatch failed on every backend rung "
+                f"({[label or 'primary' for _, label in attempts]})"
+            ) from last_err
+        dispatch = _Dispatch(
+            tier, t, entries, shape, res_dev, t0,
+            (q_dev, states, ef_dev), attempts, ai, didx,
         )
-        dispatch = _Dispatch(tier, entries, shape, res_dev, t0)
         for slot, p in enumerate(entries):
             p.stats.dispatch_t = now
             p.stats.tier_ef = tier.ef
@@ -431,11 +801,26 @@ class AdaServeScheduler:
         uids: Optional[Sequence[int]] = None,
     ) -> List[SearchResponse]:
         """Harvest completed responses.  Non-blocking by default: only
-        dispatches whose device buffers are ready materialize.  ``uids``
-        restricts harvesting to those tickets (others stay queued — e.g. an
-        engine polling its own requests on a shared scheduler)."""
+        dispatches whose device buffers are ready materialize (plus any
+        dispatch-free terminal responses — REJECTED tickets, PARTIAL
+        answers — which are always ready).  ``uids`` restricts harvesting to
+        those tickets (others stay queued — e.g. an engine polling its own
+        requests on a shared scheduler).  Raises :class:`StalePlanError` if
+        the index mutated while live work was still queued/in flight;
+        already-terminal responses of a stale scheduler remain harvestable.
+        """
+        if self._live() > 0:
+            self._check_fresh()
         want = None if uids is None else set(uids)
         out: List[SearchResponse] = []
+        if self._done:
+            still: List[SearchResponse] = []
+            for r in self._done:
+                if want is None or r.ticket.uid in want:
+                    out.append(r)
+                else:
+                    still.append(r)
+            self._done = still
         keep: List[Tuple[_Dispatch, int, _Pending]] = []
         for item in self._inflight:
             dispatch, slot, p = item
@@ -445,7 +830,7 @@ class AdaServeScheduler:
             if not (block or dispatch.ready()):
                 keep.append(item)
                 continue
-            dispatch.materialize(self.stats)
+            self._materialize(dispatch)
             out.append(self._response(dispatch, slot, p))
         self._inflight = keep
         self.stats.completed += len(out)
@@ -461,6 +846,17 @@ class AdaServeScheduler:
         res = dispatch.res_np
         p.stats.done_t = self.clock()
         p.stats.ndist = int(res.ndist[slot])
+        p.stats.ef_achieved = int(res.ef_used[slot])
+        deadline = p.ticket.deadline_t
+        if deadline is not None and p.stats.done_t > deadline:
+            status = STATUS_TIMED_OUT
+            self.stats.timed_out += 1
+        elif p.stats.demotions > 0:
+            status = STATUS_DEGRADED
+            self.stats.degraded += 1
+        else:
+            status = STATUS_OK
+        p.stats.status = status
         return SearchResponse(
             ticket=p.ticket,
             ids=res.ids[slot, : p.k].copy(),
@@ -469,17 +865,15 @@ class AdaServeScheduler:
             iters=int(res.iters[slot]),
             ef_used=int(res.ef_used[slot]),
             stats=p.stats,
+            status=status,
         )
 
     # ------------------------------------------------------------ inspection
     @property
     def pending(self) -> int:
-        """Requests submitted but not yet returned through :meth:`poll`."""
-        return (
-            len(self._admission)
-            + sum(len(q) for q in self._queues)
-            + len(self._inflight)
-        )
+        """Requests submitted but not yet returned through :meth:`poll`
+        (terminal-but-unpolled responses included)."""
+        return self._live() + len(self._done)
 
     def queue_depths(self) -> List[int]:
         """Current per-tier queue lengths (admission not included)."""
@@ -501,6 +895,43 @@ class AdaServeScheduler:
             est_pad_ndist=st.est_pad_ndist,
             tiers=list(st.tiers),
         )
+
+
+def submit_with_backoff(
+    sched: AdaServeScheduler,
+    request: SearchRequest,
+    *,
+    attempts: int = 6,
+    base_s: float = 0.002,
+    max_s: float = 0.1,
+    harvest: Optional[Callable[[List[SearchResponse]], None]] = None,
+) -> SearchTicket:
+    """Submit with capped exponential backoff against admission control.
+
+    On :class:`OverloadedError` the caller's best move is not to sleep but
+    to *make room*: tick the scheduler (dispatching whatever is due — the
+    last attempts force-flush) and block-poll for completed responses,
+    handing them to ``harvest`` so they are not dropped.  Only when that
+    freed nothing does it sleep ``base_s * 2**attempt`` (capped at
+    ``max_s``) and try again; the final failure re-raises.  This is the
+    :class:`repro.serve.engine.Engine` retry policy and usable standalone.
+    """
+    for attempt in range(attempts):
+        try:
+            return sched.submit(request)
+        except OverloadedError:
+            if attempt == attempts - 1:
+                raise
+            if attempt >= 2:
+                sched.flush()
+            else:
+                sched.step()
+            got = sched.poll(block=True)
+            if harvest is not None and got:
+                harvest(got)
+            if not got:
+                time.sleep(min(base_s * (2 ** attempt), max_s))
+    raise AssertionError("unreachable")
 
 
 def replay_trace(

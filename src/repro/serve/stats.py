@@ -20,6 +20,39 @@ from typing import Dict, List, Optional
 
 
 @dataclasses.dataclass
+class TierCostModel:
+    """EWMA of per-tier drain wall-clock, the scheduler's deadline oracle.
+
+    ``observe()`` feeds each drain's measured wall; ``predict()`` answers
+    "if this request dispatches on tier ``t`` now, how long until its
+    response materializes?".  A tier that has never drained borrows the
+    costliest *lower* rung seen so far (a lower bound — higher ef never
+    drains faster), and a fully cold model predicts 0.0, so degradation
+    never fires before at least one drain has been measured: the ladder
+    sheds work based on evidence, not priors.
+    """
+
+    alpha: float = 0.25                 # EWMA smoothing (1.0 = last sample)
+    costs: Dict[int, float] = dataclasses.field(default_factory=dict)
+
+    def observe(self, tier: int, wall_s: float) -> None:
+        prev = self.costs.get(tier)
+        if prev is None:
+            self.costs[tier] = float(wall_s)
+        else:
+            self.costs[tier] = prev + self.alpha * (float(wall_s) - prev)
+
+    def predict(self, tier: int) -> float:
+        if tier in self.costs:
+            return self.costs[tier]
+        lower = [w for t, w in self.costs.items() if t < tier]
+        return max(lower) if lower else 0.0
+
+    def as_dict(self) -> Dict:
+        return {str(t): w for t, w in sorted(self.costs.items())}
+
+
+@dataclasses.dataclass
 class TierStats:
     ef: int                # tier capacity
     beam: int              # tier beam width
@@ -101,6 +134,13 @@ class SchedulerStats:
     deadline_drains: int = 0
     flush_drains: int = 0
     idle_drains: int = 0          # work-conserving drains (device was idle)
+    rejected: int = 0             # admission control / invalid-query sheds
+    demotions: int = 0            # tier-ladder downgrades (rungs walked)
+    degraded: int = 0             # responses answered below estimated tier
+    partials: int = 0             # blown deadlines answered from phase A
+    timed_out: int = 0            # full responses that missed their deadline
+    kernel_retries: int = 0       # dispatch retried on the same backend
+    kernel_fallbacks: int = 0     # dispatch fell down the backend ladder
     tiers: List[TierStats] = dataclasses.field(default_factory=list)
     tier_mark: int = 0            # len(tiers) at snapshot time (delta cursor)
 
@@ -117,20 +157,12 @@ class SchedulerStats:
         """Counters accumulated after ``since`` (a prior :meth:`snapshot`)."""
         if since is None:
             return self
-        return SchedulerStats(
-            submitted=self.submitted - since.submitted,
-            completed=self.completed - since.completed,
-            est_passes=self.est_passes - since.est_passes,
-            est_shape_total=self.est_shape_total - since.est_shape_total,
-            est_ndist_total=self.est_ndist_total - since.est_ndist_total,
-            est_pad_ndist=self.est_pad_ndist - since.est_pad_ndist,
-            est_wall_s=self.est_wall_s - since.est_wall_s,
-            fill_drains=self.fill_drains - since.fill_drains,
-            deadline_drains=self.deadline_drains - since.deadline_drains,
-            flush_drains=self.flush_drains - since.flush_drains,
-            idle_drains=self.idle_drains - since.idle_drains,
-            tiers=self.tiers[since.tier_mark:],
-        )
+        diff = {
+            f.name: getattr(self, f.name) - getattr(since, f.name)
+            for f in dataclasses.fields(self)
+            if f.name not in ("tiers", "tier_mark")
+        }
+        return SchedulerStats(tiers=self.tiers[since.tier_mark:], **diff)
 
     def as_dict(self) -> Dict:
         d = dataclasses.asdict(self)

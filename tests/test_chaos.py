@@ -1,0 +1,188 @@
+"""Fault-injection suite: the FaultPlan harness drives the scheduler's
+*production* recovery paths — dispatch retry, backend-ladder fallback
+(bit-identical ids to the healthy path), NaN-row isolation inside a shared
+estimation pass, injected latency, clock skew, and mid-flight index mutation
+(StalePlanError)."""
+import numpy as np
+import pytest
+
+from repro.api import RouterConfig, SchedulerConfig
+from repro.serve import (
+    STATUS_OK,
+    STATUS_REJECTED,
+    TERMINAL_STATUSES,
+    AdaServeScheduler,
+    DispatchFailedError,
+    FaultInjector,
+    FaultPlan,
+    SearchRequest,
+    StalePlanError,
+)
+from tests.test_scheduler import FakeClock, _queries
+
+
+@pytest.fixture(scope="module")
+def kernel_index(small_db):
+    """A small index built *on kernels* so the runtime backend ladder has an
+    oracle rung below the primary; skipped where Pallas cannot interpret."""
+    from repro.index import build_ada_index
+    from repro.plan import probe_interpret
+
+    if not probe_interpret():
+        pytest.skip("no working Pallas interpret lowering on this host")
+    data, _, _ = small_db
+    return build_ada_index(
+        data[:1500], k=5, target_recall=0.9, m=8, ef_construction=60,
+        ef_cap=160, num_samples=32, use_distance_kernel=True,
+    )
+
+
+def _run(index, queries, chaos=None, cfg=None, **kw):
+    kw.setdefault("default_target_recall", index.target_recall)
+    sched = AdaServeScheduler(
+        index.router(RouterConfig()), cfg, chaos=chaos, **kw
+    )
+    tickets = [sched.submit(SearchRequest(query=row)) for row in queries]
+    responses = sched.drain()
+    by_uid = {r.ticket.uid: r for r in responses}
+    return sched, [by_uid[t.uid] for t in tickets]
+
+
+def test_empty_fault_plan_is_inert(small_db, small_index):
+    q = _queries(small_db, nq=4, seed=61)
+    _, healthy = _run(small_index, q)
+    chaos = FaultInjector(FaultPlan())
+    sched, faulted = _run(small_index, q, chaos=chaos)
+    for h, f in zip(healthy, faulted):
+        np.testing.assert_array_equal(h.ids, f.ids)
+        np.testing.assert_array_equal(h.dists, f.dists)
+    assert chaos.dispatches > 0 and chaos.faults_raised == 0
+    assert sched.stats.kernel_retries == 0
+    assert sched.stats.kernel_fallbacks == 0
+
+
+def test_dispatch_fault_retry_recovers(small_db, small_index):
+    """One injected failure: the retry (same backend) recovers; results are
+    bit-identical to the healthy path."""
+    q = _queries(small_db, nq=4, seed=62)
+    _, healthy = _run(small_index, q)
+    chaos = FaultInjector(FaultPlan(fail_dispatches=(0,), fail_attempts=1))
+    sched, faulted = _run(small_index, q, chaos=chaos)
+    assert chaos.faults_raised == 1
+    assert sched.stats.kernel_retries == 1
+    assert sched.stats.kernel_fallbacks == 0
+    assert all(r.status == STATUS_OK for r in faulted)
+    retried = [r for r in faulted if r.stats.dispatch_retries == 1]
+    assert retried  # the failed dispatch's requests record the retry
+    for h, f in zip(healthy, faulted):
+        np.testing.assert_array_equal(h.ids, f.ids)
+        np.testing.assert_array_equal(h.dists, f.dists)
+
+
+def test_dispatch_fault_falls_back_to_oracle(small_db, kernel_index):
+    """Two injected failures burn the primary + its retry: the dispatch falls
+    down the backend ladder to the jnp oracle, records the fallback, and the
+    returned neighbor ids are bit-identical to the healthy path."""
+    q = _queries(small_db, nq=4, seed=63)
+    _, healthy = _run(kernel_index, q)
+    chaos = FaultInjector(FaultPlan(fail_dispatches=(0,), fail_attempts=2))
+    sched, faulted = _run(kernel_index, q, chaos=chaos)
+    assert chaos.faults_raised == 2
+    assert sched.stats.kernel_retries == 1
+    assert sched.stats.kernel_fallbacks == 1
+    fell_back = [r for r in faulted if r.stats.fallback_backend == "oracle"]
+    assert fell_back and all(r.stats.dispatch_retries == 2 for r in fell_back)
+    assert all(r.status == STATUS_OK for r in faulted)
+    for h, f in zip(healthy, faulted):
+        np.testing.assert_array_equal(h.ids, f.ids)
+        np.testing.assert_allclose(h.dists, f.dists, rtol=1e-4, atol=1e-5)
+
+
+def test_ladder_exhaustion_raises_typed_error(small_db, small_index):
+    """An oracle-built index has no rung below primary+retry: a persistent
+    fault surfaces as DispatchFailedError, not a bare injected exception."""
+    q = _queries(small_db, nq=2, seed=64)
+    chaos = FaultInjector(FaultPlan(fail_dispatches=(0,), fail_attempts=5))
+    sched = AdaServeScheduler(
+        small_index.router(RouterConfig()),
+        default_target_recall=small_index.target_recall,
+        chaos=chaos,
+    )
+    for row in q:
+        sched.submit(SearchRequest(query=row))
+    with pytest.raises(DispatchFailedError):
+        sched.drain()
+
+
+def test_nan_rows_isolated_from_cohabitants(small_db, small_index):
+    """Injected NaN rows (corruption past submit validation) are shed as
+    REJECTED by the estimation-pass screen; cohabiting requests in the same
+    admission batch serve bit-identically to a healthy run."""
+    q = _queries(small_db, nq=5, seed=65)
+    _, healthy = _run(small_index, q)
+    chaos = FaultInjector(FaultPlan(nan_uids=(1, 3)))  # uids count from 0
+    sched, faulted = _run(small_index, q, chaos=chaos)
+    assert [r.status for r in faulted] == [
+        STATUS_OK, STATUS_REJECTED, STATUS_OK, STATUS_REJECTED, STATUS_OK,
+    ]
+    for i in (1, 3):
+        assert faulted[i].stats.reject_reason == "non-finite query values"
+        assert (faulted[i].ids == -1).all()
+    for i in (0, 2, 4):  # cohabitants unaffected, bit-identical
+        np.testing.assert_array_equal(healthy[i].ids, faulted[i].ids)
+        np.testing.assert_array_equal(healthy[i].dists, faulted[i].dists)
+    assert sched.stats.rejected == 2
+    assert all(r.status in TERMINAL_STATUSES for r in faulted)
+
+
+def test_injected_dispatch_latency_shows_in_walls(small_db, small_index):
+    q = _queries(small_db, nq=2, seed=66)
+    chaos = FaultInjector(FaultPlan(dispatch_latency_s=0.05))
+    sched, responses = _run(small_index, q, chaos=chaos)
+    assert all(r.status == STATUS_OK for r in responses)
+    assert max(t.wall_s for t in sched.stats.tiers) >= 0.05
+
+
+def test_clock_skew_shifts_timestamps_consistently(small_db, small_index):
+    q = _queries(small_db, nq=1, seed=67)
+    clock = FakeClock(5.0)
+    chaos = FaultInjector(FaultPlan(clock_skew_s=100.0))
+    sched = AdaServeScheduler(
+        small_index.router(RouterConfig()),
+        default_target_recall=small_index.target_recall,
+        clock=clock,
+        chaos=chaos,
+    )
+    t = sched.submit(SearchRequest(query=q[0], deadline_s=1.0))
+    assert t.submit_t == pytest.approx(105.0)
+    assert t.deadline_t == pytest.approx(106.0)  # deadline math stays
+    #   relative — a skewed-but-consistent clock never flips OK to TIMED_OUT
+    (r,) = sched.drain()
+    assert r.status == STATUS_OK
+    assert r.stats.done_t <= t.deadline_t
+
+
+def test_midflight_mutation_raises_stale_plan_error(small_db):
+    from repro.index import build_ada_index
+
+    data, _, _ = small_db
+    idx = build_ada_index(
+        data[:1200], k=5, target_recall=0.9, m=8, ef_construction=60,
+        ef_cap=160, num_samples=32,
+    )
+    chaos = FaultInjector(
+        FaultPlan(mutate_at_dispatch=0),
+        mutate_fn=lambda: idx.insert(data[1200:1205]),
+    )
+    sched = AdaServeScheduler(
+        idx.router(),
+        default_target_recall=idx.target_recall,
+        version_probe=lambda: idx._graph_version,
+        chaos=chaos,
+    )
+    q = _queries(small_db, nq=2, seed=68)
+    for row in q:
+        sched.submit(SearchRequest(query=row))
+    sched.flush()  # dispatch 0 mutates the index mid-flight
+    with pytest.raises(StalePlanError, match="graph version"):
+        sched.poll(block=True)

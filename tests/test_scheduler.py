@@ -381,3 +381,362 @@ def test_scheduler_invalidated_on_update(small_db):
     idx.scheduler(SchedulerConfig(fill=16))
     idx.insert(data[1210:1215])
     assert idx.scheduler().cfg.fill == 16
+
+
+# --------------------------------------------------------------------------
+# admission control + typed outcomes (overload-resilient serving)
+# --------------------------------------------------------------------------
+
+
+def _make_sched(small_index, cfg=None, **kw):
+    kw.setdefault("default_target_recall", small_index.target_recall)
+    return AdaServeScheduler(small_index.router(RouterConfig()), cfg, **kw)
+
+
+def test_admission_control_raise_mode(small_db, small_index):
+    from repro.serve import STATUS_OK, OverloadedError
+
+    q = _queries(small_db, nq=6, seed=21)
+    sched = _make_sched(small_index, SchedulerConfig(max_inflight=4))
+    for row in q[:4]:
+        sched.submit(SearchRequest(query=row))
+    with pytest.raises(OverloadedError):
+        sched.submit(SearchRequest(query=q[4]))
+    assert sched.stats.rejected == 1
+    assert sched.stats.submitted == 4  # the refused request never entered
+    responses = sched.drain()  # freeing capacity re-opens admission
+    assert len(responses) == 4
+    assert all(r.status == STATUS_OK for r in responses)
+    t5 = sched.submit(SearchRequest(query=q[4]))
+    res2 = sched.drain()
+    assert [r.ticket.uid for r in res2] == [t5.uid]
+
+
+def test_admission_control_ticket_mode(small_db, small_index):
+    from repro.serve import (
+        STATUS_OK, STATUS_REJECTED, TERMINAL_STATUSES,
+    )
+
+    q = _queries(small_db, nq=4, seed=22)
+    sched = _make_sched(
+        small_index, SchedulerConfig(max_inflight=2, overload="ticket")
+    )
+    tickets = [sched.submit(SearchRequest(query=row)) for row in q]
+    assert len(tickets) == 4  # never raises: 1:1 submit/poll pairing holds
+    responses = sched.drain()
+    assert len(responses) == 4
+    by_uid = {r.ticket.uid: r for r in responses}
+    statuses = [by_uid[t.uid].status for t in tickets]
+    assert statuses == [
+        STATUS_OK, STATUS_OK, STATUS_REJECTED, STATUS_REJECTED,
+    ]
+    for t in tickets[2:]:
+        r = by_uid[t.uid]
+        assert r.stats.reject_reason == "overloaded"
+        assert (r.ids == -1).all() and r.ndist == 0
+    assert all(r.status in TERMINAL_STATUSES for r in responses)
+    assert sched.stats.rejected == 2 and sched.stats.submitted == 4
+
+
+def test_submit_with_backoff_fills_bounded_scheduler(small_db, small_index):
+    from repro.serve import STATUS_OK, submit_with_backoff
+
+    q = _queries(small_db, nq=8, seed=23)
+    sched = _make_sched(small_index, SchedulerConfig(max_inflight=2))
+    got = []
+    tickets = [
+        submit_with_backoff(
+            sched, SearchRequest(query=row), harvest=got.extend
+        )
+        for row in q
+    ]
+    got.extend(sched.drain())
+    assert {r.ticket.uid for r in got} == {t.uid for t in tickets}
+    assert all(r.status == STATUS_OK for r in got)
+    assert sched.pending == 0
+
+
+def test_tier_queue_bound_sheds_overflow(small_db, small_index):
+    from repro.serve import STATUS_REJECTED
+
+    q0 = _queries(small_db, nq=1, seed=24)[0]
+    sched = _make_sched(
+        small_index,
+        SchedulerConfig(max_tier_queue=1, work_conserving=False, fill=8),
+    )
+    for _ in range(4):  # identical queries -> identical ef -> one tier
+        sched.submit(SearchRequest(query=q0))
+    sched.step()
+    assert sched.stats.rejected == 3  # bound 1: the other three shed
+    responses = sched.drain()
+    rejected = [r for r in responses if r.status == STATUS_REJECTED]
+    assert len(responses) == 4 and len(rejected) == 3
+    assert all(
+        r.stats.reject_reason.startswith("tier queue full") for r in rejected
+    )
+
+
+# --------------------------------------------------------------------------
+# input hardening (typed InvalidQueryError before the shared estimation pass)
+# --------------------------------------------------------------------------
+
+
+def test_submit_rejects_nan_query(small_db, small_index):
+    from repro.serve import InvalidQueryError
+
+    q = _queries(small_db, nq=1, seed=25)[0]
+    sched = _make_sched(small_index)
+    bad = q.copy()
+    bad[3] = np.nan
+    with pytest.raises(InvalidQueryError, match="NaN/Inf"):
+        sched.submit(SearchRequest(query=bad))
+    assert sched.pending == 0
+
+
+def test_submit_rejects_inf_query(small_db, small_index):
+    from repro.serve import InvalidQueryError
+
+    q = _queries(small_db, nq=1, seed=26)[0]
+    sched = _make_sched(small_index)
+    bad = q.copy()
+    bad[0] = np.inf
+    with pytest.raises(InvalidQueryError, match="NaN/Inf"):
+        sched.submit(SearchRequest(query=bad))
+
+
+def test_submit_rejects_non_numeric_dtype(small_index):
+    from repro.serve import InvalidQueryError
+
+    sched = _make_sched(small_index)
+    dim = int(small_index.graph.vectors.shape[1])
+    with pytest.raises(InvalidQueryError, match="dtype"):
+        sched.submit(SearchRequest(query=np.array(["x"] * dim)))
+
+
+def test_submit_rejects_wrong_dimensionality(small_index):
+    from repro.serve import InvalidQueryError
+
+    sched = _make_sched(small_index)
+    with pytest.raises(InvalidQueryError, match="dimensionality"):
+        sched.submit(SearchRequest(query=np.zeros(7, np.float32)))
+
+
+def test_invalid_query_error_is_a_value_error(small_db, small_index):
+    """Back-compat: callers catching ValueError keep working (the batch-query
+    case in test_submit_validation relies on this too)."""
+    from repro.serve import InvalidQueryError, ServeError
+
+    assert issubclass(InvalidQueryError, ValueError)
+    assert issubclass(InvalidQueryError, ServeError)
+    q = _queries(small_db, nq=2, seed=27)
+    sched = _make_sched(small_index)
+    with pytest.raises(ValueError):
+        sched.submit(SearchRequest(query=q))  # a batch, not one query
+
+
+def test_plan_search_rejects_bad_queries(small_db, small_index):
+    from repro.serve import InvalidQueryError
+
+    q = _queries(small_db, nq=4, seed=28)
+    plan = small_index.plan(SearchSpec(target_recall=0.9))
+    bad = q.copy()
+    bad[2, 5] = np.nan
+    with pytest.raises(InvalidQueryError, match=r"rows \[2\]"):
+        plan.search(bad)
+    with pytest.raises(InvalidQueryError, match="dimensionality"):
+        plan.search(np.zeros((3, 7), np.float32))
+    with pytest.raises(InvalidQueryError, match="dtype"):
+        plan.search(np.array([["y"] * q.shape[1]]))
+    res = plan.search(q)  # the clean batch still serves
+    assert res.ids.shape == (4, small_index.k)
+
+
+# --------------------------------------------------------------------------
+# deadline-aware degradation ladder (fake-clock driven)
+# --------------------------------------------------------------------------
+
+
+def _seed_costs(sched, costs):
+    for t, w in enumerate(costs):
+        if w is not None:
+            sched.cost_model.observe(t, w)
+
+
+def test_degradation_demotes_at_risk_request(small_db, small_index):
+    from repro.serve import STATUS_DEGRADED
+
+    q = _queries(small_db, nq=1, seed=31)[0]
+    clock = FakeClock()
+    # ef_margin inflates every estimate to the ef cap -> top tier,
+    # deterministically, so the ladder has rungs to walk down
+    sched = AdaServeScheduler(
+        small_index.router(RouterConfig(ef_margin=50.0)),
+        SchedulerConfig(fill=64, work_conserving=False, degrade=True),
+        default_target_recall=small_index.target_recall,
+        clock=clock,
+    )
+    ntiers = len(sched.router.tiers)
+    assert ntiers >= 2
+    # seed the cost model: every rung above 0 far too slow for the deadline
+    _seed_costs(sched, [0.02] + [0.5] * (ntiers - 1))
+    sched.submit(SearchRequest(query=q, deadline_s=0.1))
+    sched.step()
+    # demoted all the way to rung 0 (0.5s predicted vs 0.1s budget), which
+    # fits (0.02s) -- and the deadline lookahead dispatches it in time
+    clock.advance(0.085)
+    assert sched.step() == 1
+    (r,) = sched.poll(block=True)
+    assert r.status == STATUS_DEGRADED
+    assert r.stats.demotions == ntiers - 1
+    assert r.ef_used <= sched.router.tiers[0].ef < r.stats.ef_est
+    assert r.stats.ef_achieved == r.ef_used
+    assert r.stats.status == STATUS_DEGRADED
+    assert sched.stats.degraded == 1
+    assert sched.stats.demotions == ntiers - 1
+    assert r.ids.shape == (small_index.k,) and (r.ids >= 0).any()
+
+
+def test_partial_answer_on_blown_deadline(small_db, small_index):
+    from repro.serve import STATUS_PARTIAL
+
+    q = _queries(small_db, nq=1, seed=32)[0]
+    clock = FakeClock()
+    sched = AdaServeScheduler(
+        small_index.router(RouterConfig()),
+        SchedulerConfig(fill=64, work_conserving=False, degrade=True),
+        default_target_recall=small_index.target_recall,
+        clock=clock,
+    )
+    sched.submit(SearchRequest(query=q, deadline_s=0.05))
+    clock.advance(0.2)  # scheduler was busy; the deadline is already blown
+    assert sched.step() == 0  # no tier dispatch is spent on it
+    (r,) = sched.poll()
+    assert r.status == STATUS_PARTIAL
+    assert r.stats.trigger == "partial"
+    assert r.ids.shape == (small_index.k,)
+    assert (r.ids >= 0).any()  # phase A found *something* to answer with
+    assert np.isfinite(r.dists[r.ids >= 0]).all()
+    assert r.ndist == r.stats.est_ndist > 0
+    assert sched.stats.partials == 1
+    assert sched.pending == 0
+
+
+def test_timed_out_is_explicit_without_degrade(small_db, small_index):
+    """degrade=False keeps the lossless barrier semantics, but a missed
+    deadline is still *declared* (TIMED_OUT), never silent."""
+    from repro.serve import STATUS_TIMED_OUT
+
+    q = _queries(small_db, nq=1, seed=33)[0]
+    clock = FakeClock()
+    sched = _make_sched(
+        small_index,
+        SchedulerConfig(fill=64, work_conserving=False),
+        clock=clock,
+    )
+    sched.submit(SearchRequest(query=q, deadline_s=0.05))
+    clock.advance(0.2)
+    assert sched.step() == 1  # deadline trigger still drains the full search
+    (r,) = sched.poll(block=True)
+    assert r.status == STATUS_TIMED_OUT
+    assert (r.ids >= 0).any()  # the full answer rides along
+    assert sched.stats.timed_out == 1
+
+
+@pytest.mark.parametrize("seed", range(3))
+def test_terminal_status_property_random_interleavings(
+    small_db, small_index, seed
+):
+    """Property (the overload contract): over random submit/step/poll
+    interleavings with random deadlines, admission bounds and the
+    degradation ladder armed, every ticket resolves to exactly one response
+    with a terminal status, and every OK response met its deadline."""
+    from repro.serve import STATUS_OK, TERMINAL_STATUSES
+
+    rng = np.random.default_rng(2000 + seed)
+    nq = int(rng.integers(12, 32))
+    q = _queries(small_db, nq=nq, seed=40 + seed)
+    clock = FakeClock()
+    sched = AdaServeScheduler(
+        small_index.router(RouterConfig()),
+        SchedulerConfig(
+            fill=int(rng.choice([2, 8])),
+            degrade=True,
+            max_inflight=int(rng.integers(4, 12)),
+            overload="ticket",
+        ),
+        default_target_recall=small_index.target_recall,
+        clock=clock,
+    )
+    for t in range(len(sched.router.tiers)):
+        sched.cost_model.observe(t, float(rng.uniform(0.001, 0.1)))
+    tickets = []
+    responses = []
+    i = 0
+    while i < nq:
+        for _ in range(int(rng.integers(1, 5))):
+            if i >= nq:
+                break
+            deadline = (
+                None if rng.random() < 0.3 else float(rng.uniform(0.001, 0.3))
+            )
+            tickets.append(
+                sched.submit(SearchRequest(query=q[i], deadline_s=deadline))
+            )
+            i += 1
+        clock.advance(float(rng.uniform(0.0, 0.2)))
+        sched.step()
+        if rng.random() < 0.5:
+            responses.extend(sched.poll())
+    responses.extend(sched.drain())
+
+    assert len(responses) == nq and sched.pending == 0
+    by_uid = {r.ticket.uid: r for r in responses}
+    assert set(by_uid) == {t.uid for t in tickets}  # exactly one each
+    for t in tickets:
+        r = by_uid[t.uid]
+        assert r.status in TERMINAL_STATUSES
+        assert r.stats.status == r.status
+        if r.status == STATUS_OK and t.deadline_t is not None:
+            assert r.stats.done_t <= t.deadline_t  # OK means the deadline held
+    st = sched.stats
+    assert (
+        st.rejected + st.partials
+        + sum(tr.count for tr in st.tiers)
+        == nq
+    )
+
+
+# --------------------------------------------------------------------------
+# StalePlanError: poll()/submit() after insert()/delete() (regression)
+# --------------------------------------------------------------------------
+
+
+def test_stale_scheduler_raises_instead_of_losing_tickets(small_db):
+    from repro.index import build_ada_index
+    from repro.serve import StalePlanError
+
+    data, _, _ = small_db
+    idx = build_ada_index(
+        data[:1200], k=5, target_recall=0.9, m=8, ef_construction=60,
+        ef_cap=160, num_samples=32,
+    )
+    sched = idx.scheduler()
+    q = _queries(small_db, nq=2, seed=51)
+    sched.submit(SearchRequest(query=q[0]))
+    sched.flush()
+    sched.submit(SearchRequest(query=q[1]))  # one in flight, one queued
+    idx.insert(data[1200:1205])  # mutation under a live scheduler
+    with pytest.raises(StalePlanError, match="graph version"):
+        sched.poll(block=True)
+    with pytest.raises(StalePlanError, match="graph version"):
+        sched.submit(SearchRequest(query=q[0]))
+    with pytest.raises(StalePlanError, match="graph version"):
+        sched.step()
+    assert issubclass(StalePlanError, RuntimeError)
+    # a *drained* held scheduler stays harmless after mutation: nothing to
+    # lose, poll just returns empty
+    fresh = idx.scheduler()
+    fresh.submit(SearchRequest(query=q[0]))
+    fresh.drain()
+    idx.insert(data[1205:1210])
+    assert fresh.poll() == []
