@@ -27,9 +27,10 @@ recall.  Before the measured replays, a deterministic warmup compiles every
 inside a trace; the arrival horizon is *load-adaptive* (scaled to the
 measured full-batch wall) so the system runs near saturation on any
 machine.  Reported: p50/p99 request latency (arrival -> response
-materialized), total distance computations, drain-trigger counts.  Results
-persist to ``BENCH_sched.json`` at the repo root (``.smoke.json`` in smoke
-runs).
+materialized), per-terminal-status latency quantiles (merged
+:class:`repro.obs.metrics.Histogram` buckets, pooled across arrival seeds),
+total distance computations, drain-trigger counts.  Results persist to
+``BENCH_sched.json`` at the repo root (``.smoke.json`` in smoke runs).
 """
 from __future__ import annotations
 
@@ -48,6 +49,7 @@ from repro.index import (
     prepare_queries,
     recall_at_k,
 )
+from repro.obs import Histogram
 from repro.index.search import resize_state, resume_at_ef
 from repro.serve import SearchRequest
 from repro.serve.bucketing import pad_shape
@@ -126,7 +128,8 @@ def _replay_scheduler(plan, queries, arrivals, deadline_s):
     wall = time.perf_counter() - t0
     ids = np.stack([r.ids for r in responses])
     ndist = int(sum(r.ndist for r in responses))
-    return ids, latency, ndist, wall, sched.stats
+    statuses = [r.status for r in responses]
+    return ids, latency, ndist, wall, sched.stats, statuses
 
 
 def _replay_barrier(batch_fn, queries, arrivals):
@@ -153,6 +156,26 @@ def _replay_barrier(batch_fn, queries, arrivals):
         i = j
     wall = time.perf_counter() - t0
     return np.concatenate(parts), lat, ndist, wall
+
+
+def _status_latency(hists):
+    """Per-status latency quantiles out of merged :class:`repro.obs.metrics.
+    Histogram` buckets — bucketed estimates (the trade for mergeability
+    across arrival seeds), keyed by terminal status."""
+    return {
+        status: {
+            "p50_ms": None if h.count == 0 else h.p50 * 1e3,
+            "p95_ms": None if h.count == 0 else h.p95 * 1e3,
+            "p99_ms": None if h.count == 0 else h.p99 * 1e3,
+            "count": h.count,
+        }
+        for status, h in sorted(hists.items())
+    }
+
+
+def _observe_status_latency(hists, statuses, latencies):
+    for status, lat in zip(statuses, latencies):
+        hists.setdefault(status, Histogram()).observe(float(lat))
 
 
 def _record(name, lat, ndist, wall, rec, extra=None):
@@ -222,6 +245,8 @@ def _overload_sweep(idx, queries, target, fill, w_full, nq):
             )
     counts = {s: statuses.count(s) for s in TERMINAL_STATUSES}
     served = [r for r in responses if r.status == STATUS_OK]
+    hists = {}
+    _observe_status_latency(hists, statuses, latency)
     out = {
         "saturation_factor": saturation,
         "horizon_s": float(horizon),
@@ -232,6 +257,7 @@ def _overload_sweep(idx, queries, target, fill, w_full, nq):
         "silent_deadline_misses": 0,  # asserted above
         "latency_p50_ms": float(np.percentile(latency, 50) * 1e3),
         "latency_p99_ms": float(np.percentile(latency, 99) * 1e3),
+        "latency_by_status": _status_latency(hists),
         "ok_deadline_hit_rate": len(served) / nq,
     }
     for s in TERMINAL_STATUSES:
@@ -325,11 +351,13 @@ def run(k=10, target=0.95, quick=True, smoke=False):
     nd_s = nd_r = nd_m = None
     drains = {"fill": 0, "deadline": 0, "flush": 0, "idle": 0}
     est_passes = est_pad = 0
+    status_hists = {}
     for seed in seeds:
         arrivals = _poisson_arrivals(nq, horizon, seed=seed)
-        ids_s, lat_s, nd_s_i, w_s, sstats = _replay_scheduler(
+        ids_s, lat_s, nd_s_i, w_s, sstats, statuses = _replay_scheduler(
             stream_plan, queries, arrivals, deadline_s
         )
+        _observe_status_latency(status_hists, statuses, lat_s)
         ids_r, lat_r, nd_r_i, w_r = _replay_barrier(routed_batch, queries, arrivals)
         ids_m, lat_m, nd_m_i, w_m = _replay_barrier(mono_batch, queries, arrivals)
         # equal-recall guarantee: lossless config -> bit-identical ids
@@ -363,6 +391,7 @@ def run(k=10, target=0.95, quick=True, smoke=False):
             "idle_drains": drains["idle"],
             "est_passes": est_passes,
             "est_pad_ndist": est_pad,
+            "latency_by_status": _status_latency(status_hists),
         },
     )
     out["routed_sync"] = _record("routed_sync", lat_r, nd_r, wall_r, rec(ids_r))

@@ -123,6 +123,62 @@ def chaos_gate() -> None:
           f"{sched.stats.kernel_retries} fallbacks={sched.stats.kernel_fallbacks}")
 
 
+def obs_gate() -> None:
+    """Smoke gate for the observability layer: a short streaming trace on a
+    toy index with tracing and auditing both armed.  Asserts the span
+    contract — every ticket owns exactly one complete span tree whose
+    terminal status matches its response — that the recall auditor actually
+    sampled work, and that the Chrome trace export round-trips through
+    ``json.load``."""
+    import json
+    import os
+    import tempfile
+
+    import numpy as np
+
+    from repro.index import build_ada_index
+    from repro.serve import AdaServeScheduler, SchedulerConfig, SearchRequest
+
+    rng = np.random.default_rng(2)
+    centers = rng.normal(0, 1, (8, 24))
+    data = (centers[rng.integers(0, 8, 600)]
+            + 0.3 * rng.normal(0, 1, (600, 24))).astype(np.float32)
+    idx = build_ada_index(data, k=5, target_recall=0.9, m=6,
+                          ef_construction=40, ef_cap=64, num_samples=16)
+    sched = AdaServeScheduler(
+        idx.router(),
+        SchedulerConfig(fill=4, trace=True, audit_fraction=1.0),
+        default_target_recall=idx.target_recall,
+        version_probe=lambda: idx._graph_version,
+    )
+    queries = data[rng.integers(0, len(data), 10)]
+    tickets = [sched.submit(SearchRequest(query=q)) for q in queries]
+    responses = sched.drain()
+    assert len(responses) == len(tickets), "request dropped"
+    by_uid = {r.ticket.uid: r for r in responses}
+    for t in tickets:
+        # raises on missing/unclosed spans or a missing/duplicate terminal
+        status = sched.tracer.request_complete(t.uid)
+        assert status == by_uid[t.uid].status, (
+            f"uid {t.uid}: span terminal {status} != "
+            f"response {by_uid[t.uid].status}"
+        )
+    assert sched.auditor.audited >= 1, "auditor never ran a reference check"
+    fd, path = tempfile.mkstemp(suffix=".json")
+    os.close(fd)
+    try:
+        sched.tracer.export(path)
+        with open(path) as f:
+            trace = json.load(f)
+        assert trace["traceEvents"], "empty Chrome trace export"
+    finally:
+        os.unlink(path)
+    aud = sched.auditor.as_dict()
+    print(f"obs_gate,0,ok spans={len(sched.tracer.spans())} "
+          f"audited={aud['audited']} alerts={len(aud['alerts'])} "
+          f"trace_events={len(trace['traceEvents'])}")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--full", action="store_true", help="paper-scale (slow)")
@@ -170,7 +226,7 @@ def main() -> None:
     print("name,us_per_call,derived")
     failures = 0
     if args.smoke and not args.only:
-        for gate in (planner_gate, chaos_gate):
+        for gate in (planner_gate, chaos_gate, obs_gate):
             t0 = time.perf_counter()
             try:
                 gate()

@@ -8,10 +8,18 @@ API: requests arrive on a Poisson process, enter a streaming-mode
 ``ExecutionPlan`` (``submit``/``step``/``poll``; the planner derives the
 drain policy from the spec's deadline), and per-request latency is reported
 instead of one batch wall.
+
+Observability flags (stream mode): ``--metrics`` dumps the scheduler's
+metrics registry (Prometheus text format) at exit, ``--trace-out PATH``
+arms per-request span tracing and writes Chrome trace-event JSON (open in
+Perfetto), ``--audit FRACTION`` samples completed requests through the
+online recall auditor and prints the per-tier achieved-recall EWMAs +
+alert summary at exit.  See :mod:`repro.obs`.
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import time
 from collections import Counter
 
@@ -27,19 +35,32 @@ from repro.serve.scheduler import replay_trace
 
 
 def stream_retrieval(engine, index, batch, *, target_recall, arrival_rate,
-                     deadline_ms, seed):
+                     deadline_ms, seed, metrics=False, trace_out=None,
+                     audit=0.0):
     """Poisson-arrival replay of the batch's retrieval stage through a
-    streaming-mode plan; returns the responses in arrival order."""
+    streaming-mode plan; returns the responses in arrival order.
+
+    ``metrics``/``trace_out``/``audit`` arm the :mod:`repro.obs` layer on a
+    private scheduler (the plan itself is not re-lowered): registry dump,
+    Chrome trace export, and online recall audit respectively.
+    """
     plan = index.plan(SearchSpec(
         target_recall=target_recall, deadline_ms=deadline_ms, mode="streaming"
     ))
     print(plan.explain(fmt="text"))
+    scfg = dataclasses.replace(
+        plan.scheduler_cfg,
+        trace=bool(trace_out) or plan.scheduler_cfg.trace,
+        audit_fraction=max(audit, plan.scheduler_cfg.audit_fraction),
+    )
+    sched = plan.new_scheduler(scfg)
     emb = np.asarray(engine._request_embedding(batch))
     rng = np.random.default_rng(seed)
     arrivals = np.cumsum(rng.exponential(1.0 / arrival_rate, len(emb)))
-    requests = [SearchRequest(query=e) for e in emb]  # deadline from the spec
-    responses, lats = replay_trace(plan, requests, arrivals)
-    st = plan.stats
+    requests = [SearchRequest(query=e, deadline_s=plan.deadline_s)
+                for e in emb]
+    responses, lats = replay_trace(sched, requests, arrivals)
+    st = sched.stats
     print(
         f"streamed {len(responses)} requests: latency p50={np.percentile(lats, 50) * 1e3:.1f}ms "
         f"p99={np.percentile(lats, 99) * 1e3:.1f}ms (first run includes jit compiles)"
@@ -52,6 +73,29 @@ def stream_retrieval(engine, index, batch, *, target_recall, arrival_rate,
     by_status = Counter(r.status for r in responses)
     print("statuses: " + ", ".join(
         f"{s}={n}" for s, n in sorted(by_status.items())))
+    if sched.auditor is not None:
+        sched.auditor.flush()
+        aud = sched.auditor.as_dict()
+        tiers = " ".join(
+            f"ef{ef}:recall={t['recall_ewma']:.3f}(n={t['samples']})"
+            for ef, t in aud["tiers"].items()
+        )
+        print(f"recall audit: sampled={aud['sampled']} "
+              f"audited={aud['audited']} {tiers}")
+        if aud["alerts"]:
+            print(f"RECALL ALERTS ({len(aud['alerts'])}):")
+            for a in aud["alerts"]:
+                print(f"  tier ef={a['tier_ef']}: ewma={a['ewma']:.4f} < "
+                      f"target={a['target']:.4f} - margin={a['margin']}")
+        else:
+            print("recall audit: no alerts (all tiers within margin)")
+    if trace_out and sched.tracer is not None:
+        sched.tracer.export(trace_out)
+        print(f"trace: {len(sched.tracer.spans())} spans -> {trace_out} "
+              "(open in Perfetto / chrome://tracing)")
+    if metrics:
+        print("--- metrics registry ---")
+        print(sched.metrics.render_prometheus(), end="")
     return responses
 
 
@@ -74,6 +118,16 @@ def main():
                     help="streaming arrivals per second")
     ap.add_argument("--deadline-ms", type=float, default=50.0,
                     help="per-request latency budget in stream mode (0 = none)")
+    ap.add_argument("--metrics", action="store_true",
+                    help="dump the scheduler's metrics registry "
+                         "(Prometheus text) at exit (stream mode)")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="arm span tracing and write Chrome trace-event "
+                         "JSON to PATH at exit (stream mode)")
+    ap.add_argument("--audit", type=float, default=0.0, metavar="FRACTION",
+                    help="online recall audit: fraction of completed "
+                         "requests re-checked against the oracle "
+                         "(stream mode)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -134,6 +188,7 @@ def main():
             target_recall=args.target_recall,
             arrival_rate=args.arrival_rate, deadline_ms=args.deadline_ms,
             seed=args.seed + 2,
+            metrics=args.metrics, trace_out=args.trace_out, audit=args.audit,
         )
         print("retrieved ids (first request):", responses[0].ids)
         print("(run without --stream for the batched decode loop)")

@@ -1,0 +1,44 @@
+"""Serve-side observability: metrics, span tracing, online recall audit.
+
+Three pieces, all host-side and opt-in so the scheduler hot path stays
+free of device syncs (see each module's docstring):
+
+- :mod:`repro.obs.metrics` — process-wide :class:`MetricsRegistry`
+  (counters / gauges / mergeable p50-p95-p99 histograms, dict +
+  Prometheus text export).
+- :mod:`repro.obs.trace` — per-request :class:`SpanTracer` on the
+  scheduler's injectable clock, Chrome trace-event JSON export.
+- :mod:`repro.obs.audit` — :class:`RecallAuditor`: deterministic sampling
+  of completed requests, re-run through the oracle ``ef_cap`` reference on
+  idle ticks, per-tier achieved-recall EWMAs + :class:`RecallAlert`.
+
+Entry points: ``SchedulerConfig(trace=..., audit_fraction=...)``,
+``plan.explain(analyze=True)``, and ``launch/serve.py --metrics
+--trace-out``.
+"""
+from .audit import RecallAlert, RecallAuditor, oracle_topk, sample_uid
+from .metrics import (
+    LATENCY_BUCKETS_S,
+    Counter,
+    Gauge,
+    Histogram,
+    MetricsRegistry,
+    global_registry,
+)
+from .trace import Span, SpanTracer, device_annotation
+
+__all__ = [
+    "Counter",
+    "Gauge",
+    "Histogram",
+    "LATENCY_BUCKETS_S",
+    "MetricsRegistry",
+    "global_registry",
+    "Span",
+    "SpanTracer",
+    "device_annotation",
+    "RecallAlert",
+    "RecallAuditor",
+    "oracle_topk",
+    "sample_uid",
+]

@@ -1,0 +1,281 @@
+"""Online recall auditor — the paper's declarative-recall contract, measured.
+
+The Ada-ef stack *promises* a target recall per query (paper Alg. 2 +
+ESTIMATE-EF), but a promise without measurement is a config knob, not a
+contract.  :class:`RecallAuditor` closes the loop in the style DARTH
+(PAPERS.md) frames declarative recall — as a *monitored runtime property*:
+
+1. **Sample** a deterministic fraction of completed requests (hash of the
+   ticket uid, so replays audit the same requests and two auditors agree).
+2. **Re-run** each sampled query through the full-``ef_cap`` oracle ladder
+   — the same reference the bit-exactness tests trust — *off the hot path*:
+   the scheduler calls :meth:`RecallAuditor.step` only on work-conserving
+   idle ticks, so audits never compete with live tier drains.
+3. **Track** per-tier achieved-recall EWMAs against the per-request
+   ``target_recall`` EWMA; when a tier's achieved recall drops below
+   target − margin (after a minimum sample count), surface a
+   :class:`RecallAlert` in stats — an edge-triggered "this tier is breaking
+   the recall contract" signal.
+
+Partial answers (deadline blown while queued, served from the phase-A
+heap) are audited under the pseudo-tier ``ef=0`` so their — expectedly
+lower — recall never drags a real tier's EWMA below its alert line.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Callable, Dict, List, Optional
+
+import numpy as np
+
+# Knuth multiplicative hash over the ticket uid: uniform in [0, 1) for
+# sequential uids, deterministic across processes and replays.
+_HASH_MULT = 0x9E3779B1
+_HASH_MOD = 1 << 32
+
+
+def sample_uid(uid: int, fraction: float) -> bool:
+    """Deterministic sampling decision for a ticket uid."""
+    if fraction <= 0.0:
+        return False
+    if fraction >= 1.0:
+        return True
+    return ((uid * _HASH_MULT) % _HASH_MOD) / _HASH_MOD < fraction
+
+
+def oracle_topk(graph, queries: np.ndarray, cfg, ef: Optional[int] = None):
+    """Ground-truth-by-construction reference: full-``ef_cap`` search on
+    the oracle (pure-jnp) backend — the same rung the backend fallback
+    ladder and the bit-exactness property tests bottom out on.
+
+    Returns host ``(B, k)`` int ids.  Callers batch tiny (the auditor
+    audits one request per idle tick), so the compile for the ``(1, d)``
+    shape happens once and is reused for every subsequent audit.
+    """
+    import jax.numpy as jnp
+    from repro.index.search import search
+
+    ocfg = dataclasses.replace(
+        cfg,
+        use_distance_kernel=False,
+        ef_cap=int(ef or cfg.ef_cap),
+        patience=0,
+    )
+    q = np.atleast_2d(np.asarray(queries))
+    ef_arr = jnp.full((q.shape[0],), ocfg.ef_cap, jnp.int32)
+    res = search(graph, jnp.asarray(q), ef_arr, ocfg)
+    return np.asarray(res.ids)
+
+
+@dataclasses.dataclass(frozen=True)
+class RecallAlert:
+    """Edge-triggered contract violation: a tier's achieved-recall EWMA
+    crossed below its target EWMA minus ``margin``."""
+
+    tier_ef: int
+    ewma: float
+    target: float
+    margin: float
+    samples: int
+    t: float
+
+    def as_dict(self) -> Dict:
+        return dataclasses.asdict(self)
+
+    def __str__(self):
+        return (
+            f"RecallAlert(tier ef={self.tier_ef}: achieved EWMA "
+            f"{self.ewma:.4f} < target {self.target:.4f} - "
+            f"margin {self.margin:.3f} after {self.samples} samples)"
+        )
+
+
+class _TierEwma:
+    __slots__ = ("recall", "target", "n", "alerting")
+
+    def __init__(self):
+        self.recall = 0.0
+        self.target = 0.0
+        self.n = 0
+        self.alerting = False
+
+
+class RecallAuditor:
+    """Samples completed requests and audits achieved recall online.
+
+    Parameters
+    ----------
+    reference:
+        ``(query (1, d) or (d,)) -> (1, K) host ids`` — the oracle answer
+        to compare against (the scheduler wires :func:`oracle_topk` over
+        its router's graph/config).
+    fraction:
+        Deterministic sample fraction in [0, 1]
+        (``SchedulerConfig.audit_fraction``).
+    margin:
+        Alert when a tier's recall EWMA < target EWMA − margin.
+    alpha:
+        EWMA smoothing weight for new samples.
+    min_samples:
+        Per-tier sample count before alerts may fire (cold EWMAs lie).
+    max_pending:
+        Bound on the not-yet-audited queue; overflow evicts the oldest
+        sample and counts it in ``overflowed``.
+    """
+
+    def __init__(
+        self,
+        reference: Callable[[np.ndarray], np.ndarray],
+        *,
+        fraction: float,
+        margin: float = 0.02,
+        alpha: float = 0.2,
+        min_samples: int = 5,
+        max_pending: int = 256,
+        clock=time.monotonic,
+        on_alert: Optional[Callable[[RecallAlert], None]] = None,
+    ):
+        if not 0.0 <= fraction <= 1.0:
+            raise ValueError(f"fraction={fraction} not in [0, 1]")
+        if not 0.0 < alpha <= 1.0:
+            raise ValueError(f"alpha={alpha} not in (0, 1]")
+        self.reference = reference
+        self.fraction = fraction
+        self.margin = margin
+        self.alpha = alpha
+        self.min_samples = min_samples
+        self.clock = clock
+        self.on_alert = on_alert
+        self._pending: deque = deque(maxlen=max_pending)
+        self._tiers: Dict[int, _TierEwma] = {}
+        self.samples: List[Dict] = []
+        self.alerts: List[RecallAlert] = []
+        self.sampled = 0
+        self.audited = 0
+        self.overflowed = 0
+
+    # -- hot path (scheduler response emission) --------------------------
+
+    def admit(self, uid: int) -> bool:
+        """Deterministic per-uid sampling decision (pure, host-side)."""
+        return sample_uid(uid, self.fraction)
+
+    def enqueue(
+        self,
+        uid: int,
+        query: np.ndarray,
+        ids: np.ndarray,
+        *,
+        k: int,
+        tier_ef: int,
+        target: float,
+        status: str,
+    ) -> None:
+        """Record a completed request for later auditing.  Host-side
+        only: the served ids are already on host by response time, so
+        this adds no device sync to the response path."""
+        if len(self._pending) == self._pending.maxlen:
+            self.overflowed += 1
+        self._pending.append(
+            (uid, np.asarray(query), np.asarray(ids), k, tier_ef,
+             float(target), status)
+        )
+        self.sampled += 1
+
+    @property
+    def pending(self) -> int:
+        return len(self._pending)
+
+    # -- off the hot path (idle ticks / flush) ---------------------------
+
+    def step(self, budget: int = 1) -> int:
+        """Audit up to ``budget`` pending samples; returns audits done.
+        Called by the scheduler only on work-conserving idle ticks."""
+        done = 0
+        while self._pending and done < budget:
+            self._audit_one(*self._pending.popleft())
+            done += 1
+        return done
+
+    def flush(self) -> int:
+        """Audit everything still pending (drain / shutdown path)."""
+        return self.step(budget=len(self._pending))
+
+    def _audit_one(self, uid, query, ids, k, tier_ef, target, status):
+        ref_ids = np.asarray(self.reference(query[None, :]))[0]
+        served = np.asarray(ids[:k]).ravel()
+        truth = set(int(i) for i in ref_ids[:k] if i >= 0)
+        hit = sum(1 for i in served if int(i) in truth)
+        recall = hit / max(k, 1)
+        self.audited += 1
+        self.samples.append(
+            {
+                "uid": int(uid),
+                "tier_ef": int(tier_ef),
+                "recall": float(recall),
+                "target": float(target),
+                "status": status,
+            }
+        )
+        tier = self._tiers.setdefault(int(tier_ef), _TierEwma())
+        if tier.n == 0:
+            tier.recall = recall
+            tier.target = target
+        else:
+            a = self.alpha
+            tier.recall = (1 - a) * tier.recall + a * recall
+            tier.target = (1 - a) * tier.target + a * target
+        tier.n += 1
+        self._maybe_alert(int(tier_ef), tier)
+
+    def _maybe_alert(self, tier_ef: int, tier: _TierEwma) -> None:
+        # The ef=0 pseudo-tier holds partial (phase-A heap) answers whose
+        # recall is expected to trail target — never alert on it.
+        breach = (
+            tier_ef > 0
+            and tier.n >= self.min_samples
+            and tier.recall < tier.target - self.margin
+        )
+        if breach and not tier.alerting:
+            tier.alerting = True
+            alert = RecallAlert(
+                tier_ef=tier_ef,
+                ewma=float(tier.recall),
+                target=float(tier.target),
+                margin=self.margin,
+                samples=tier.n,
+                t=self.clock(),
+            )
+            self.alerts.append(alert)
+            if self.on_alert is not None:
+                self.on_alert(alert)
+        elif not breach and tier.alerting:
+            tier.alerting = False  # re-arm: recovery resets the edge
+
+    # -- export ----------------------------------------------------------
+
+    def tier_ewmas(self) -> Dict[int, Dict]:
+        return {
+            ef: {
+                "recall_ewma": t.recall,
+                "target_ewma": t.target,
+                "samples": t.n,
+                "alerting": t.alerting,
+            }
+            for ef, t in sorted(self._tiers.items())
+        }
+
+    def as_dict(self) -> Dict:
+        """JSON-able summary (stringified tier keys for round-trips)."""
+        return {
+            "fraction": self.fraction,
+            "margin": self.margin,
+            "sampled": self.sampled,
+            "audited": self.audited,
+            "pending": self.pending,
+            "overflowed": self.overflowed,
+            "tiers": {str(ef): d for ef, d in self.tier_ewmas().items()},
+            "alerts": [a.as_dict() for a in self.alerts],
+        }

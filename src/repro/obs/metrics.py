@@ -1,0 +1,309 @@
+"""Process-wide metrics: counters, gauges, fixed-bucket latency histograms.
+
+The serving stack's telemetry dataclasses (:class:`repro.serve.stats.
+SchedulerStats` / ``RouterStats``) are *snapshots* — great for one batch or
+one scheduler lifetime, but nothing aggregated them across schedulers,
+engines and benchmark runs, and nothing measured a latency *distribution*
+(only sums).  A :class:`MetricsRegistry` is the aggregation point:
+
+- :class:`Counter` — monotone accumulator (``inc``), int or float.
+- :class:`Gauge` — last-write-wins instantaneous value (``set``).
+- :class:`Histogram` — fixed-bucket distribution with p50/p95/p99 quantile
+  *estimates* (linear interpolation inside the owning bucket — resolution is
+  the bucket width, which is the standard Prometheus trade).  Histograms
+  with equal bucket layouts **merge**, so per-seed / per-shard histograms
+  pool into one distribution (``bench_scheduler`` pools arrival seeds this
+  way).
+
+Everything is plain host-side Python — recording a metric never touches a
+JAX array, so the scheduler hot path stays free of device syncs.  Export as
+a nested dict (``as_dict``, JSON-able) or Prometheus text-exposition lines
+(``render_prometheus``).
+
+Names take optional ``**labels``; the same name with different label sets
+is a metric *family* (one ``HELP``/``TYPE`` block, many series), exactly
+like Prometheus.  ``AdaServeScheduler`` binds its ``SchedulerStats`` to a
+registry (:meth:`repro.serve.stats.SchedulerStats.bind`), so every counter
+the scheduler bumps is mirrored here without a second bookkeeping path.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import threading
+from typing import Dict, Iterable, List, Optional, Tuple
+
+# Log-spaced seconds buckets covering sub-ms kernel drains to multi-second
+# stalls; the +inf overflow bucket is implicit (the last counts slot).
+LATENCY_BUCKETS_S: Tuple[float, ...] = (
+    0.0001, 0.00025, 0.0005, 0.001, 0.0025, 0.005, 0.01, 0.025,
+    0.05, 0.1, 0.25, 0.5, 1.0, 2.5, 5.0, 10.0,
+)
+
+LabelItems = Tuple[Tuple[str, str], ...]
+
+
+def _label_items(labels: Dict[str, object]) -> LabelItems:
+    return tuple(sorted((k, str(v)) for k, v in labels.items()))
+
+
+def _label_str(items: LabelItems) -> str:
+    if not items:
+        return ""
+    return "{" + ",".join(f'{k}="{v}"' for k, v in items) + "}"
+
+
+@dataclasses.dataclass
+class Counter:
+    """Monotone accumulator.  ``inc`` accepts ints and floats (walls)."""
+
+    value: float = 0.0
+
+    def inc(self, n: float = 1) -> None:
+        if n < 0:
+            raise ValueError(f"counter increment {n} must be >= 0")
+        self.value += n
+
+    def as_dict(self) -> float:
+        return self.value
+
+
+@dataclasses.dataclass
+class Gauge:
+    """Last-write-wins instantaneous value (queue depth, inflight count)."""
+
+    value: float = 0.0
+
+    def set(self, v: float) -> None:
+        self.value = float(v)
+
+    def as_dict(self) -> float:
+        return self.value
+
+
+class Histogram:
+    """Fixed-bucket histogram with quantile estimates.
+
+    ``buckets`` are ascending upper bounds; observations above the last
+    bound land in the implicit +inf overflow slot.  ``quantile`` walks the
+    cumulative counts and interpolates linearly inside the owning bucket
+    (the overflow bucket answers with the max observed value), so estimates
+    are exact at bucket edges and bounded by bucket width in between —
+    mergeable across processes/seeds, unlike a reservoir.
+    """
+
+    __slots__ = ("buckets", "counts", "count", "sum", "min", "max")
+
+    def __init__(self, buckets: Iterable[float] = LATENCY_BUCKETS_S):
+        self.buckets: Tuple[float, ...] = tuple(float(b) for b in buckets)
+        if not self.buckets or list(self.buckets) != sorted(set(self.buckets)):
+            raise ValueError("histogram buckets must be ascending and unique")
+        self.counts: List[int] = [0] * (len(self.buckets) + 1)
+        self.count = 0
+        self.sum = 0.0
+        self.min = math.inf
+        self.max = -math.inf
+
+    def observe(self, v: float) -> None:
+        v = float(v)
+        i = 0
+        for i, ub in enumerate(self.buckets):  # noqa: B007 - tiny fixed scan
+            if v <= ub:
+                break
+        else:
+            i = len(self.buckets)
+        self.counts[i] += 1
+        self.count += 1
+        self.sum += v
+        self.min = min(self.min, v)
+        self.max = max(self.max, v)
+
+    def quantile(self, q: float) -> float:
+        """Estimate the q-quantile (q in [0, 1]); NaN when empty."""
+        if not 0.0 <= q <= 1.0:
+            raise ValueError(f"q={q} not in [0, 1]")
+        if self.count == 0:
+            return math.nan
+        target = q * self.count
+        seen = 0
+        for i, c in enumerate(self.counts):
+            if c == 0:
+                continue
+            if seen + c >= target:
+                if i == len(self.buckets):  # overflow: max observed
+                    return self.max
+                lo = 0.0 if i == 0 else self.buckets[i - 1]
+                hi = self.buckets[i]
+                lo = max(lo, self.min) if self.min < hi else lo
+                hi = min(hi, self.max)
+                frac = (target - seen) / c
+                return lo + frac * max(hi - lo, 0.0)
+            seen += c
+        return self.max  # pragma: no cover - unreachable (count > 0)
+
+    @property
+    def p50(self) -> float:
+        return self.quantile(0.50)
+
+    @property
+    def p95(self) -> float:
+        return self.quantile(0.95)
+
+    @property
+    def p99(self) -> float:
+        return self.quantile(0.99)
+
+    @property
+    def mean(self) -> float:
+        return self.sum / self.count if self.count else math.nan
+
+    def merge(self, other: "Histogram") -> "Histogram":
+        """Fold ``other`` into this histogram (equal bucket layouts only)."""
+        if self.buckets != other.buckets:
+            raise ValueError("cannot merge histograms with different buckets")
+        for i, c in enumerate(other.counts):
+            self.counts[i] += c
+        self.count += other.count
+        self.sum += other.sum
+        self.min = min(self.min, other.min)
+        self.max = max(self.max, other.max)
+        return self
+
+    def as_dict(self) -> Dict:
+        empty = self.count == 0
+        return {
+            "count": self.count,
+            "sum": self.sum,
+            "mean": None if empty else self.mean,
+            "p50": None if empty else self.p50,
+            "p95": None if empty else self.p95,
+            "p99": None if empty else self.p99,
+            "min": None if empty else self.min,
+            "max": None if empty else self.max,
+            "buckets": {
+                ("+Inf" if i == len(self.buckets) else repr(self.buckets[i])): c
+                for i, c in enumerate(self.counts)
+                if c
+            },
+        }
+
+
+class MetricsRegistry:
+    """Named metric families, keyed ``(name, sorted label items)``.
+
+    ``counter``/``gauge``/``histogram`` are get-or-create (the Prometheus
+    client idiom): callers write ``registry.counter("sheds", reason=r).inc()``
+    at the event site and never hold metric objects across config changes.
+    Thread-safe creation; individual updates are plain attribute writes
+    (GIL-atomic, and the serving stack is single-threaded per scheduler).
+    """
+
+    def __init__(self):
+        self._metrics: Dict[Tuple[str, LabelItems], object] = {}
+        self._kinds: Dict[str, str] = {}
+        self._lock = threading.Lock()
+
+    def _get(self, kind: str, name: str, labels: Dict, factory):
+        key = (name, _label_items(labels))
+        got = self._metrics.get(key)
+        if got is None:
+            with self._lock:
+                got = self._metrics.get(key)
+                if got is None:
+                    prev = self._kinds.setdefault(name, kind)
+                    if prev != kind:
+                        raise ValueError(
+                            f"metric {name!r} already registered as {prev}"
+                        )
+                    got = self._metrics[key] = factory()
+        elif self._kinds.get(name) != kind:
+            raise ValueError(
+                f"metric {name!r} already registered as {self._kinds[name]}"
+            )
+        return got
+
+    def counter(self, name: str, **labels) -> Counter:
+        return self._get("counter", name, labels, Counter)
+
+    def gauge(self, name: str, **labels) -> Gauge:
+        return self._get("gauge", name, labels, Gauge)
+
+    def histogram(
+        self, name: str, buckets: Optional[Iterable[float]] = None, **labels
+    ) -> Histogram:
+        return self._get(
+            "histogram", name, labels,
+            lambda: Histogram(buckets or LATENCY_BUCKETS_S),
+        )
+
+    def merge(self, other: "MetricsRegistry") -> "MetricsRegistry":
+        """Fold another registry in: counters add, gauges take the other's
+        value, histograms merge."""
+        for (name, items), metric in other._metrics.items():
+            labels = dict(items)
+            if isinstance(metric, Counter):
+                self.counter(name, **labels).inc(metric.value)
+            elif isinstance(metric, Gauge):
+                self.gauge(name, **labels).set(metric.value)
+            else:
+                self.histogram(name, buckets=metric.buckets, **labels).merge(
+                    metric
+                )
+        return self
+
+    def as_dict(self) -> Dict:
+        """``{name: {label-string: metric dict/value}}`` — JSON-able."""
+        out: Dict[str, Dict] = {}
+        for (name, items), metric in sorted(
+            self._metrics.items(), key=lambda kv: kv[0]
+        ):
+            out.setdefault(name, {})[_label_str(items) or "_"] = (
+                metric.as_dict()
+            )
+        return out
+
+    def render_prometheus(self) -> str:
+        """Text exposition format (the ``/metrics`` endpoint payload)."""
+        lines: List[str] = []
+        seen_type = set()
+        for (name, items), metric in sorted(
+            self._metrics.items(), key=lambda kv: kv[0]
+        ):
+            kind = self._kinds[name]
+            if name not in seen_type:
+                lines.append(f"# TYPE {name} {kind}")
+                seen_type.add(name)
+            ls = _label_str(items)
+            if isinstance(metric, (Counter, Gauge)):
+                lines.append(f"{name}{ls} {metric.value:g}")
+                continue
+            cum = 0
+            for i, c in enumerate(metric.counts):
+                cum += c
+                le = (
+                    "+Inf" if i == len(metric.buckets)
+                    else f"{metric.buckets[i]:g}"
+                )
+                extra = (("le", le),) + tuple(items)
+                lines.append(
+                    f"{name}_bucket{_label_str(_label_items(dict(extra)))} "
+                    f"{cum}"
+                )
+            lines.append(f"{name}_sum{ls} {metric.sum:g}")
+            lines.append(f"{name}_count{ls} {metric.count}")
+        return "\n".join(lines) + ("\n" if lines else "")
+
+
+_GLOBAL: Optional[MetricsRegistry] = None
+_GLOBAL_LOCK = threading.Lock()
+
+
+def global_registry() -> MetricsRegistry:
+    """The process-wide registry (drivers pass it to every scheduler they
+    build so ``--metrics`` dumps one merged view)."""
+    global _GLOBAL
+    if _GLOBAL is None:
+        with _GLOBAL_LOCK:
+            if _GLOBAL is None:
+                _GLOBAL = MetricsRegistry()
+    return _GLOBAL

@@ -1,0 +1,209 @@
+"""Per-request span tracing on the scheduler's injectable clock.
+
+A request moving through :class:`repro.serve.scheduler.AdaServeScheduler`
+passes distinct stations — ``submit → screen → estimate → queue(tier) →
+[demote*] → dispatch → materialize → terminal(status)`` — and latency
+pathologies live *between* them (queue wait vs estimation vs tier drain vs
+device materialization).  :class:`SpanTracer` records that timeline as
+spans and instant events in a bounded ring buffer, stamped by the same
+injectable clock the scheduler uses for deadlines, so fake-clock tests and
+chaos harnesses see spans on the exact timeline they control.
+
+Export is Chrome trace-event JSON (``tracer.export(path)``): load the file
+in Perfetto / ``chrome://tracing`` and each request renders as its own
+track (``tid`` = ticket uid) with the queue/dispatch spans laid end to end.
+Batch-level scheduler work (estimation passes, tier drains) lands on track
+0.  :func:`device_annotation` optionally brackets kernel dispatches with a
+``jax.profiler.TraceAnnotation`` so device profiles line up with host
+spans; it degrades to a null context when the profiler is unavailable.
+
+Tracing is opt-in (``SchedulerConfig.trace``); every emission site in the
+scheduler is guarded by a single ``is None`` check, so the disabled path
+costs one attribute load and the hot path stays sync-free.
+"""
+from __future__ import annotations
+
+import contextlib
+import json
+from collections import deque
+from typing import Dict, List, Optional
+
+import time
+
+#: Span/event names emitted by the scheduler, in lifecycle order.
+LIFECYCLE = (
+    "submit", "screen", "estimate", "queue", "demote",
+    "dispatch", "materialize", "terminal",
+)
+
+
+class Span:
+    """One named interval (or instant, when ``t1 == t0``) on the trace.
+
+    ``uid`` ties the span to a request ticket; batch-level spans (shared
+    estimation pass, tier drain) carry ``uid=None`` and render on track 0.
+    ``args`` hold annotations (ef_est, tier_ef, trigger, backend, ...).
+    """
+
+    __slots__ = ("name", "uid", "t0", "t1", "args")
+
+    def __init__(self, name: str, uid: Optional[int], t0: float, **args):
+        self.name = name
+        self.uid = uid
+        self.t0 = t0
+        self.t1: Optional[float] = None
+        self.args: Dict = args
+
+    @property
+    def done(self) -> bool:
+        return self.t1 is not None
+
+    @property
+    def duration_s(self) -> float:
+        return (self.t1 - self.t0) if self.done else 0.0
+
+    def __repr__(self):  # pragma: no cover - debugging aid
+        tail = f" dur={self.duration_s:.6f}s" if self.done else " (open)"
+        return f"Span({self.name!r}, uid={self.uid}{tail})"
+
+
+class SpanTracer:
+    """Bounded ring buffer of :class:`Span` on an injectable clock.
+
+    ``begin``/``end`` bracket intervals; ``event`` records instants.  The
+    ring (``capacity`` spans, :class:`collections.deque` with ``maxlen``)
+    bounds memory under sustained traffic — ``dropped`` counts evictions so
+    an exporter can tell a truncated trace from a complete one.
+    """
+
+    def __init__(self, clock=time.monotonic, capacity: int = 4096):
+        if capacity < 1:
+            raise ValueError(f"capacity={capacity} must be >= 1")
+        self.clock = clock
+        self.capacity = capacity
+        self._spans: deque = deque(maxlen=capacity)
+        self.dropped = 0
+
+    def _push(self, span: Span) -> Span:
+        if len(self._spans) == self.capacity:
+            self.dropped += 1
+        self._spans.append(span)
+        return span
+
+    def begin(self, name: str, uid: Optional[int] = None, **args) -> Span:
+        return self._push(Span(name, uid, self.clock(), **args))
+
+    def end(self, span: Optional[Span], **args) -> Optional[Span]:
+        """Close a span (idempotent, None-tolerant so call sites stay flat)."""
+        if span is not None and span.t1 is None:
+            span.t1 = self.clock()
+            if args:
+                span.args.update(args)
+        return span
+
+    def event(self, name: str, uid: Optional[int] = None, **args) -> Span:
+        span = self._push(Span(name, uid, self.clock(), **args))
+        span.t1 = span.t0
+        return span
+
+    @contextlib.contextmanager
+    def span(self, name: str, uid: Optional[int] = None, **args):
+        s = self.begin(name, uid, **args)
+        try:
+            yield s
+        finally:
+            self.end(s)
+
+    # -- queries ---------------------------------------------------------
+
+    def spans(self, uid: Optional[int] = None) -> List[Span]:
+        """All buffered spans, or just one request's (in emission order)."""
+        if uid is None:
+            return list(self._spans)
+        return [s for s in self._spans if s.uid == uid]
+
+    def request_terminal(self, uid: int) -> Optional[str]:
+        """Terminal status recorded for ``uid`` (None while in flight)."""
+        for s in reversed(self._spans):
+            if s.uid == uid and s.name == "terminal":
+                return s.args.get("status")
+        return None
+
+    def request_complete(self, uid: int) -> str:
+        """Validate ``uid``'s span tree: spans exist, all closed, exactly
+        one ``terminal`` event.  Returns the terminal status; raises
+        ``ValueError`` describing the defect otherwise (the ``obs_gate``
+        smoke asserts through this)."""
+        got = self.spans(uid)
+        if not got:
+            raise ValueError(f"uid {uid}: no spans recorded")
+        open_spans = [s.name for s in got if not s.done]
+        if open_spans:
+            raise ValueError(f"uid {uid}: unclosed spans {open_spans}")
+        terminals = [s for s in got if s.name == "terminal"]
+        if len(terminals) != 1:
+            raise ValueError(
+                f"uid {uid}: expected exactly one terminal event, "
+                f"got {len(terminals)}"
+            )
+        status = terminals[0].args.get("status")
+        if not status:
+            raise ValueError(f"uid {uid}: terminal event missing status")
+        return status
+
+    # -- export ----------------------------------------------------------
+
+    def to_chrome(self) -> Dict:
+        """Chrome trace-event JSON object (``{"traceEvents": [...]}``).
+
+        Closed spans become complete ("X") events, instants become
+        instant ("i") events; times are µs relative to the earliest
+        buffered span so fake-clock (epoch 0) and monotonic traces both
+        render near the origin.  Open spans are exported as instants
+        flagged ``"open": true`` rather than dropped.
+        """
+        spans = list(self._spans)
+        origin = min((s.t0 for s in spans), default=0.0)
+        events = []
+        for s in spans:
+            ts = (s.t0 - origin) * 1e6
+            tid = 0 if s.uid is None else int(s.uid)
+            base = {
+                "name": s.name,
+                "pid": 0,
+                "tid": tid,
+                "ts": ts,
+                "args": dict(s.args),
+            }
+            if s.done and s.t1 > s.t0:
+                base["ph"] = "X"
+                base["dur"] = (s.t1 - s.t0) * 1e6
+            else:
+                base["ph"] = "i"
+                base["s"] = "t"
+                if not s.done:
+                    base["args"]["open"] = True
+            events.append(base)
+        return {
+            "traceEvents": events,
+            "displayTimeUnit": "ms",
+            "otherData": {"dropped": self.dropped},
+        }
+
+    def export(self, path: str) -> str:
+        """Write the Chrome trace JSON to ``path`` (Perfetto-viewable)."""
+        with open(path, "w") as f:
+            json.dump(self.to_chrome(), f)
+        return path
+
+
+def device_annotation(name: str):
+    """Context manager bracketing a kernel dispatch with a
+    ``jax.profiler.TraceAnnotation`` so device profiles (``jax.profiler.
+    trace``) line up with host-side spans; null context when the profiler
+    is unavailable (interpret-only builds, stripped wheels)."""
+    try:
+        from jax.profiler import TraceAnnotation
+        return TraceAnnotation(name)
+    except Exception:  # pragma: no cover - depends on jax build
+        return contextlib.nullcontext()

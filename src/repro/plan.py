@@ -46,8 +46,9 @@ from repro.api import (
     SearchSpec,
     register_static_config,
 )
-from repro.index.search import SearchResult, adaptive_search
+from repro.index.search import SearchResult, adaptive_search, recall_at_k
 from repro.kernels import ops
+from repro.obs import Histogram, MetricsRegistry, oracle_topk
 from repro.serve.api import (
     InvalidQueryError,
     SearchRequest,
@@ -256,6 +257,7 @@ class ExecutionPlan:
         self._version = index._graph_version
         self._router: Optional[QueryRouter] = None
         self._scheduler: Optional[AdaServeScheduler] = None
+        self._metrics: Optional[MetricsRegistry] = None
 
     # ------------------------------------------------------------- identity
     def __eq__(self, other) -> bool:
@@ -325,16 +327,35 @@ class ExecutionPlan:
             )
         return self._router
 
-    def new_scheduler(self, **kwargs) -> AdaServeScheduler:
+    @property
+    def metrics(self) -> MetricsRegistry:
+        """The plan's metrics registry (lazily built).  Every scheduler the
+        plan creates — the shared lifecycle surface, batch-call barriers,
+        engine sessions through :meth:`new_scheduler` — mirrors its counters
+        and latency histograms here, so one registry aggregates all traffic
+        this plan ever served (export via ``as_dict()`` /
+        ``render_prometheus()``; see :mod:`repro.obs.metrics`)."""
+        if self._metrics is None:
+            self._metrics = MetricsRegistry()
+        return self._metrics
+
+    def new_scheduler(self, cfg=None, **kwargs) -> AdaServeScheduler:
         """A private scheduler over this plan's router — for callers that
         must not share queues/polls with the plan's own lifecycle surface
         (e.g. one engine batch on an index whose plan a streaming driver
-        also holds).  Compile caches are shared through the router."""
+        also holds).  Compile caches are shared through the router, and the
+        scheduler reports into the plan's :attr:`metrics` registry unless a
+        caller passes its own.  ``cfg`` overrides the plan's lowered
+        ``SchedulerConfig`` (drivers use this to arm ``trace``/
+        ``audit_fraction`` without re-planning)."""
         self._check_fresh()
         kwargs.setdefault("default_target_recall", self.target_recall)
+        kwargs.setdefault("metrics", self.metrics)
         idx = self._index
         kwargs.setdefault("version_probe", lambda: idx._graph_version)
-        return AdaServeScheduler(self.router, self.scheduler_cfg, **kwargs)
+        return AdaServeScheduler(
+            self.router, cfg or self.scheduler_cfg, **kwargs
+        )
 
     @property
     def scheduler(self) -> AdaServeScheduler:
@@ -481,14 +502,32 @@ class ExecutionPlan:
         return self.scheduler.queue_depths()
 
     # -------------------------------------------------------------- explain
-    def explain(self, fmt: str = "dict"):
+    def explain(
+        self,
+        fmt: str = "dict",
+        *,
+        analyze: bool = False,
+        queries=None,
+        nq: int = 32,
+    ):
         """Every derived decision, DB-EXPLAIN style.
 
         ``fmt="dict"`` returns a JSON-able dict that round-trips the spec
         (``SearchSpec.from_dict(explain()["spec"]) == plan.spec``) and
         records each lowered config verbatim; ``fmt="text"`` renders the
-        human-readable plan.  Reading the plan never compiles or dispatches
-        a search (the router it may build is policy-only until first use).
+        human-readable plan.  Without ``analyze``, reading the plan never
+        compiles or dispatches a search (the router it may build is
+        policy-only until first use).
+
+        ``analyze=True`` is the EXPLAIN ANALYZE of this system: it
+        *executes* the plan's mode over ``queries`` (default: ``nq``
+        deterministic corpus rows) — warm-up pass first, so compile time is
+        excluded — and merges live measurements into the static tree under
+        ``"analyze"``: walls, cumulative ndist, padding waste, terminal
+        status split, request-latency quantiles, and achieved-recall
+        samples vs the oracle ``ef_cap`` reference (100%-sampled
+        :class:`repro.obs.audit.RecallAuditor` for lifecycle modes).  The
+        result stays JSON round-trippable.
         """
         router = self.router
         cfg = router.base_cfg
@@ -576,6 +615,8 @@ class ExecutionPlan:
             },
             "notes": list(self._notes),
         }
+        if analyze:
+            d["analyze"] = self._analyze(queries, nq)
         if fmt == "dict":
             return d
         if fmt != "text":
@@ -615,4 +656,133 @@ class ExecutionPlan:
         ]
         for note in self._notes:
             lines.append(f"  note: {note}")
+        if analyze:
+            a = d["analyze"]
+            lines.append(
+                f"  analyze: nq={a['nq']} wall_s={a['wall_s']:.4f} "
+                f"ndist={a['ndist_total']}"
+            )
+            if a.get("statuses"):
+                st = " ".join(f"{k}={v}" for k, v in a["statuses"].items())
+                lat = a["latency"]
+                lines.append(
+                    f"  analyze: statuses {st} | latency "
+                    f"p50={lat['p50_s'] * 1e3:.2f}ms "
+                    f"p95={lat['p95_s'] * 1e3:.2f}ms "
+                    f"p99={lat['p99_s'] * 1e3:.2f}ms"
+                )
+            if a.get("padding_waste") is not None:
+                lines.append(
+                    f"  analyze: padding_waste={a['padding_waste']:.3f}"
+                )
+            r = a["recall"]
+            lines.append(
+                f"  analyze: achieved recall mean={r['mean']:.4f} "
+                f"min={r['min']:.4f} samples={r['samples']} "
+                f"alerts={r['alerts']} (vs oracle ef_cap)"
+            )
         return "\n".join(lines)
+
+    # -------------------------------------------------------------- analyze
+    def _analyze(self, queries, nq: int) -> dict:
+        """Execute the plan's mode and measure it (the ``analyze=True``
+        payload).  Warm-up first so walls measure steady state, oracle
+        ``ef_cap`` reference for achieved recall, everything JSON-able."""
+        self._check_fresh()
+        idx = self._index
+        if queries is None:
+            # deterministic corpus-row sample: self-retrieval is a fair
+            # standing probe (no external query set required) and stable
+            # across calls, so analyze deltas track the plan, not the data
+            rng = np.random.default_rng(0)
+            n = self._shape_sig[0]
+            sel = np.sort(rng.choice(n, size=min(nq, n), replace=False))
+            queries = np.asarray(idx.graph.vectors)[sel]
+        queries = self._validate_queries(queries)
+        b = len(queries)
+        ref_ids = oracle_topk(idx.graph, queries, self.search_cfg)
+
+        if self.mode == MODE_ONESHOT:
+            self.search(queries)  # warm-up: compile excluded from the wall
+            t0 = time.perf_counter()
+            res = self.search(queries)
+            ids = np.asarray(res.ids)
+            wall = time.perf_counter() - t0
+            recalls = np.asarray(
+                recall_at_k(ids, ref_ids[:, : self.k])
+            ).astype(float)
+            return {
+                "nq": b,
+                "mode": self.mode,
+                "wall_s": float(wall),
+                "ndist_total": int(np.asarray(res.ndist).sum()),
+                "ef_used_mean": float(np.asarray(res.ef_used).mean()),
+                "statuses": None,
+                "latency": None,
+                "padding_waste": None,
+                "tiers": None,
+                "recall": {
+                    "mean": float(recalls.mean()),
+                    "min": float(recalls.min()),
+                    "samples": int(b),
+                    "alerts": 0,
+                    "per_query": [float(r) for r in recalls],
+                },
+            }
+
+        # lifecycle modes: a private 100%-audited scheduler with its own
+        # registry, so analyze traffic never pollutes the plan's metrics
+        scfg = dataclasses.replace(
+            self.scheduler_cfg, trace=True, audit_fraction=1.0
+        )
+        self.search(queries)  # warm-up through the shared router caches
+        sched = self.new_scheduler(cfg=scfg, metrics=MetricsRegistry())
+        t0 = time.perf_counter()
+        tickets = [
+            sched.submit(SearchRequest(query=q, k=self.k)) for q in queries
+        ]
+        responses = sched.drain()
+        wall = time.perf_counter() - t0
+        by_uid = {r.ticket.uid: r for r in responses}
+        ordered = [by_uid[t.uid] for t in tickets]
+        statuses: dict = {}
+        lat = Histogram()
+        for r in ordered:
+            statuses[r.status] = statuses.get(r.status, 0) + 1
+            lat.observe(r.stats.e2e_s)
+        rstats = sched.router_stats()
+        audit = sched.auditor.as_dict()
+        recalls = [s["recall"] for s in sched.auditor.samples]
+        return {
+            "nq": b,
+            "mode": self.mode,
+            "wall_s": float(wall),
+            "ndist_total": int(rstats.ndist_total),
+            "est_ndist_total": int(rstats.est_ndist_total),
+            "padding_waste": float(rstats.padding_waste),
+            "statuses": statuses,
+            "latency": {
+                "p50_s": float(lat.p50),
+                "p95_s": float(lat.p95),
+                "p99_s": float(lat.p99),
+                "mean_s": float(lat.mean),
+            },
+            "tiers": [
+                {
+                    "ef": t.ef,
+                    "count": t.count,
+                    "padded_to": t.padded_to,
+                    "ndist": t.ndist_total,
+                    "wall_s": float(t.wall_s),
+                }
+                for t in rstats.tiers
+            ],
+            "recall": {
+                "mean": float(np.mean(recalls)) if recalls else 0.0,
+                "min": float(np.min(recalls)) if recalls else 0.0,
+                "samples": len(recalls),
+                "alerts": len(audit["alerts"]),
+                "tiers": audit["tiers"],
+                "per_query": [float(r) for r in recalls],
+            },
+        }

@@ -25,6 +25,13 @@ here.  :class:`Engine` submits its batch's retrieval before the decode loop
 and polls between decode steps, overlapping retrieval with generation;
 streaming drivers (``launch/serve.py --stream``, ``examples/rag_serve.py
 --stream``) hold a plan directly.
+
+Observability rides on the same lifecycle (see :mod:`repro.obs`): every
+scheduler mirrors its counters into a ``MetricsRegistry``; setting
+``SchedulerConfig.trace`` arms per-request span tracing (Chrome trace-event
+export), ``SchedulerConfig.audit_fraction`` arms the online recall auditor;
+``plan.explain(analyze=True)`` runs both on a probe batch and merges the
+live measurements into the static explain tree.
 """
 from .api import (  # noqa: F401
     STATUS_DEGRADED,

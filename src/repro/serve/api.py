@@ -147,20 +147,44 @@ class RequestStats:
     #   walked at runtime (e.g. "oracle")
     reject_reason: str = ""        # why admission/screening shed the request
 
+    # Derived intervals.  Lifecycle stamps default to 0.0 ("never
+    # happened"): a rejected request never estimates or dispatches, a
+    # partial answer never dispatches a tier drain.  Each interval guards
+    # on both of its stamps and answers 0.0 when either is missing, so
+    # degraded/partial/rejected telemetry never reports negative walls.
+
+    @property
+    def e2e_s(self) -> float:
+        """submit -> response materialization (0.0 while in flight)."""
+        if not self.done_t:
+            return 0.0
+        return self.done_t - self.submit_t
+
     @property
     def latency_s(self) -> float:
-        """submit -> response materialization."""
-        return self.done_t - self.submit_t
+        """Alias of :attr:`e2e_s` (pre-existing name, kept for consumers)."""
+        return self.e2e_s
 
     @property
     def queue_wait_s(self) -> float:
         """Time spent parked in the tier queue (estimated -> dispatched)."""
+        if not self.est_t or not self.dispatch_t:
+            return 0.0
         return self.dispatch_t - self.est_t
+
+    @property
+    def service_s(self) -> float:
+        """Tier drain dispatch -> response materialization."""
+        if not self.dispatch_t or not self.done_t:
+            return 0.0
+        return self.done_t - self.dispatch_t
 
     def as_dict(self) -> dict:
         d = dataclasses.asdict(self)
         d["latency_s"] = self.latency_s
         d["queue_wait_s"] = self.queue_wait_s
+        d["service_s"] = self.service_s
+        d["e2e_s"] = self.e2e_s
         return d
 
 

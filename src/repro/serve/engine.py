@@ -217,6 +217,12 @@ class Engine:
             )
             router_stats = sess.router_stats().as_dict()
             router_stats["requests"] = [r.stats.as_dict() for r in ordered]
+            if sess.auditor is not None:
+                # Drain the session auditor's backlog before it is dropped
+                # with the private session, so the recall EWMAs / alerts
+                # reported here cover every sampled request of this batch.
+                sess.auditor.flush()
+                router_stats["audit"] = sess.auditor.as_dict()
 
         return ServeResult(
             tokens=np.stack(out_tokens, axis=1),

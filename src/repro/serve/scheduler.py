@@ -30,6 +30,7 @@ is exactly that barrier over a one-shot instance of this class.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import itertools
 import time
@@ -41,6 +42,9 @@ import numpy as np
 
 from repro.index.distances import key_sign
 from repro.index.search import resize_state, resume_at_ef
+from repro.obs import (
+    MetricsRegistry, RecallAuditor, SpanTracer, device_annotation, oracle_topk,
+)
 from repro.pytrees import register_static_config
 from .api import (
     STATUS_DEGRADED, STATUS_OK, STATUS_PARTIAL, STATUS_REJECTED,
@@ -97,6 +101,17 @@ class SchedulerConfig:
     #   so it must be an explicit opt-in (plan_spec arms it for deadline_ms
     #   specs, where the caller already declared latency to matter)
     cost_alpha: float = 0.25  # EWMA smoothing of the per-tier cost model
+    trace: bool = False     # arm per-request span tracing (repro.obs.trace):
+    #   submit -> estimate -> queue -> dispatch -> materialize -> terminal
+    #   spans on the injected clock, exportable as Chrome trace JSON.  Off by
+    #   default — the disabled path costs one None check per emission site
+    trace_capacity: int = 4096  # span ring-buffer bound (oldest evicted)
+    audit_fraction: float = 0.0  # online recall audit (repro.obs.audit):
+    #   deterministically sample this fraction of completed requests and
+    #   re-run them through the oracle ef_cap reference on idle ticks,
+    #   tracking per-tier achieved-recall EWMAs vs target.  0 = off
+    audit_margin: float = 0.02  # RecallAlert when a tier's achieved-recall
+    #   EWMA drops below its target EWMA minus this margin
 
     def __post_init__(self):
         if self.fill < 1 or (self.fill & (self.fill - 1)) != 0:
@@ -113,6 +128,12 @@ class SchedulerConfig:
             )
         if not 0.0 < self.cost_alpha <= 1.0:
             raise ValueError("cost_alpha must be in (0, 1]")
+        if self.trace_capacity < 1:
+            raise ValueError("trace_capacity must be >= 1")
+        if not 0.0 <= self.audit_fraction <= 1.0:
+            raise ValueError("audit_fraction must be in [0, 1]")
+        if self.audit_margin < 0:
+            raise ValueError("audit_margin must be >= 0")
 
 
 # Static pytree: zero leaves, jit-keyed by dataclass equality (same policy
@@ -138,7 +159,7 @@ class _Pending:
 
     __slots__ = (
         "ticket", "query", "target", "k", "stats",
-        "est_pass", "row", "ef",
+        "est_pass", "row", "ef", "qspan", "dspan",
     )
 
     def __init__(self, ticket: SearchTicket, query: np.ndarray,
@@ -151,6 +172,8 @@ class _Pending:
         self.est_pass: Optional[_EstPass] = None
         self.row = -1
         self.ef = -1
+        self.qspan = None   # open "queue" trace span (tracer armed only)
+        self.dspan = None   # open "dispatch" trace span
 
 
 class _Dispatch:
@@ -200,13 +223,16 @@ class _Dispatch:
             # polls every consumer ends with (drain / replay tail / engine)
             return False
 
-    def finish(self, stats: SchedulerStats) -> None:
+    def finish(self, stats: SchedulerStats,
+               clock: Callable[[], float] = time.monotonic) -> None:
         """Block, pull to host, record the drain's TierStats, release the
-        carried inputs.  Raises whatever the device execution raised."""
+        carried inputs.  Raises whatever the device execution raised.
+        ``clock`` must be the scheduler's injected clock (``t0`` was stamped
+        on it), so walls, deadlines and trace spans share one timeline."""
         if self.res_np is not None:
             return
         jax.block_until_ready(self.res_dev)
-        self.wall_s = time.perf_counter() - self.t0
+        self.wall_s = clock() - self.t0
         self.res_np = jax.tree_util.tree_map(np.asarray, self.res_dev)
         self.res_dev = None
         self.inputs = None
@@ -255,6 +281,9 @@ class AdaServeScheduler:
         version_probe: Optional[Callable[[], int]] = None,
         chaos=None,
         cost_model: Optional[TierCostModel] = None,
+        metrics: Optional[MetricsRegistry] = None,
+        tracer: Optional[SpanTracer] = None,
+        auditor: Optional[RecallAuditor] = None,
     ):
         self.router = router
         self.cfg = cfg or SchedulerConfig()
@@ -269,13 +298,76 @@ class AdaServeScheduler:
             if cost_model is not None
             else TierCostModel(alpha=self.cfg.cost_alpha)
         )
-        self.stats = SchedulerStats()
+        # Observability (repro.obs).  A caller-supplied registry (e.g. the
+        # owning plan's, or the process-global one) aggregates across
+        # schedulers; otherwise each scheduler gets its own.  Tracer and
+        # auditor stay None unless armed — every hot-path emission site is
+        # behind a single `is not None` check, so the disabled scheduler
+        # does no extra device syncs (the acceptance bar for this layer).
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        if tracer is not None:
+            self.tracer: Optional[SpanTracer] = tracer
+        elif self.cfg.trace:
+            self.tracer = SpanTracer(
+                clock=self.clock, capacity=self.cfg.trace_capacity
+            )
+        else:
+            self.tracer = None
+        if auditor is not None:
+            self.auditor: Optional[RecallAuditor] = auditor
+        elif self.cfg.audit_fraction > 0.0:
+            self.auditor = RecallAuditor(
+                self._audit_reference,
+                fraction=self.cfg.audit_fraction,
+                margin=self.cfg.audit_margin,
+                clock=self.clock,
+                on_alert=self._on_recall_alert,
+            )
+        else:
+            self.auditor = None
+        self.stats = SchedulerStats().bind(self.metrics)
         self._uids = itertools.count()
         self._admission: List[_Pending] = []
         self._queues: List[List[_Pending]] = [[] for _ in router.tiers]
         self._inflight: List[Tuple[_Dispatch, int, _Pending]] = []
         self._done: List[SearchResponse] = []  # terminal w/o dispatch
         #   (REJECTED tickets, PARTIAL answers) awaiting poll
+
+    # -------------------------------------------------------- observability
+    def _audit_reference(self, queries: np.ndarray) -> np.ndarray:
+        """The auditor's ground truth: full-``ef_cap`` oracle-backend search
+        over this scheduler's graph (the rung the fallback ladder and the
+        bit-exactness property tests already trust)."""
+        return oracle_topk(self.router.graph, queries, self.router.base_cfg)
+
+    def _on_recall_alert(self, alert) -> None:
+        self.stats.inc("recall_alerts")
+
+    def _terminal(self, p: _Pending, status: str,
+                  ids: Optional[np.ndarray] = None) -> None:
+        """Terminal bookkeeping shared by every exit path: close open trace
+        spans, emit the terminal event, observe the latency histograms, and
+        — when the request produced an answer (``ids``) — offer it to the
+        recall auditor's deterministic sample queue."""
+        tr = self.tracer
+        if tr is not None:
+            tr.end(p.qspan)
+            tr.end(p.dspan, status=status)
+            tr.event("terminal", p.ticket.uid, status=status)
+        st = p.stats
+        m = self.metrics
+        m.histogram("request_e2e_s", status=status).observe(st.e2e_s)
+        if st.dispatch_t:
+            m.histogram("request_queue_wait_s").observe(st.queue_wait_s)
+            m.histogram("request_service_s").observe(st.service_s)
+        aud = self.auditor
+        if ids is not None and aud is not None and aud.admit(p.ticket.uid):
+            # p.stats.tier_ef is 0 for PARTIAL answers (no tier search ran),
+            # which the auditor buckets as the non-alerting pseudo-tier.
+            aud.enqueue(
+                p.ticket.uid, p.query, ids,
+                k=p.k, tier_ef=st.tier_ef, target=p.target, status=status,
+            )
 
     # ------------------------------------------------------------ freshness
     def _live(self) -> int:
@@ -330,7 +422,13 @@ class AdaServeScheduler:
         rstats.status = STATUS_REJECTED
         rstats.reject_reason = reason
         rstats.done_t = now
-        self.stats.rejected += 1
+        self.stats.inc("rejected")
+        if self.tracer is not None:
+            self.tracer.event("screen", ticket.uid, reason=reason)
+            self.tracer.event("terminal", ticket.uid, status=STATUS_REJECTED)
+        self.metrics.histogram(
+            "request_e2e_s", status=STATUS_REJECTED
+        ).observe(rstats.e2e_s)
         return SearchResponse(
             ticket=ticket,
             ids=np.full(k, -1, np.int32),
@@ -349,7 +447,10 @@ class AdaServeScheduler:
         p.stats.status = STATUS_REJECTED
         p.stats.reject_reason = reason
         p.stats.done_t = now
-        self.stats.rejected += 1
+        self.stats.inc("rejected")
+        if self.tracer is not None:
+            self.tracer.event("screen", p.ticket.uid, reason=reason)
+        self._terminal(p, STATUS_REJECTED)
         self._done.append(
             SearchResponse(
                 ticket=p.ticket,
@@ -391,7 +492,7 @@ class AdaServeScheduler:
             )
         if self.cfg.max_inflight and self._live() >= self.cfg.max_inflight:
             if self.cfg.overload == OVERLOAD_RAISE:
-                self.stats.rejected += 1
+                self.stats.inc("rejected")
                 raise OverloadedError(
                     f"admission refused: {self._live()} live requests >= "
                     f"max_inflight={self.cfg.max_inflight} — poll to free "
@@ -399,7 +500,9 @@ class AdaServeScheduler:
                 )
             now = self.clock()
             ticket = SearchTicket(uid=next(self._uids), submit_t=now)
-            self.stats.submitted += 1
+            self.stats.inc("submitted")
+            if self.tracer is not None:
+                self.tracer.event("submit", ticket.uid, k=k)
             self._done.append(
                 self._rejected_response(ticket, k, "overloaded", now)
             )
@@ -415,7 +518,12 @@ class AdaServeScheduler:
         if self._chaos is not None:
             q = self._chaos.corrupt(ticket.uid, q)
         self._admission.append(_Pending(ticket, q, float(target), k))
-        self.stats.submitted += 1
+        self.stats.inc("submitted")
+        if self.tracer is not None:
+            self.tracer.event(
+                "submit", ticket.uid,
+                k=k, target=float(target), deadline_s=request.deadline_s,
+            )
         return ticket
 
     # ----------------------------------------------------------------- tick
@@ -438,6 +546,17 @@ class AdaServeScheduler:
             trigger = self._due(t, queue, now, force)
             if trigger is not None:
                 dispatched += self._dispatch_tier(t, now, trigger)
+        if (
+            self.auditor is not None
+            and self.auditor.pending
+            and dispatched == 0
+            and not self._admission
+            and not self._busy()
+        ):
+            # Work-conserving idle tick: nothing dispatched, nothing waiting,
+            # no device work in flight — spend it on one recall audit instead
+            # of returning idle.  Audits never compete with live drains.
+            self.auditor.step(budget=1)
         return dispatched
 
     def flush(self) -> int:
@@ -531,7 +650,15 @@ class AdaServeScheduler:
                 ):
                     p.ef = min(p.ef, self.router.tiers[t - 1].ef)
                     p.stats.demotions += 1
-                    self.stats.demotions += 1
+                    self.stats.inc("demotions")
+                    if self.tracer is not None:
+                        self.tracer.event(
+                            "demote", p.ticket.uid,
+                            from_ef=self.router.tiers[t].ef,
+                            to_ef=self.router.tiers[t - 1].ef,
+                            predicted_s=predicted,
+                            remaining_s=remaining,
+                        )
                     self._queues[t - 1].append(p)
                     continue
                 keep.append(p)
@@ -553,7 +680,8 @@ class AdaServeScheduler:
         p.stats.dispatch_t = now
         p.stats.done_t = now
         p.stats.ndist = p.stats.est_ndist
-        self.stats.partials += 1
+        self.stats.inc("partials")
+        self._terminal(p, STATUS_PARTIAL, ids=ids)
         self._done.append(
             SearchResponse(
                 ticket=p.ticket,
@@ -589,12 +717,20 @@ class AdaServeScheduler:
         q_pad = np.concatenate([q, np.repeat(q[:1], shape - b, axis=0)])
         targets = np.asarray([p.target for p in entries], np.float32)
         t_pad = np.concatenate([targets, np.repeat(targets[:1], shape - b)])
-        t0 = time.perf_counter()
+        tr = self.tracer
+        espan = (
+            None if tr is None
+            else tr.begin("estimate", None, batch=b, shape=shape)
+        )
+        t0 = self.clock()
         ef_np, states = self.router.estimate(
             q_pad, t_pad[:, None], num_real=b
         )
         jax.block_until_ready(states)
-        wall = time.perf_counter() - t0
+        wall = self.clock() - t0
+        if tr is not None:
+            tr.end(espan, wall_s=wall)
+        self.metrics.histogram("est_pass_wall_s").observe(wall)
         est_ndist = np.asarray(states.ndist)
         est_pass = _EstPass(states=states, queries=q_pad)
         tiers = assign_tiers(ef_np[:b], self.router._tier_efs)
@@ -606,21 +742,28 @@ class AdaServeScheduler:
             p.stats.est_batch = b
             p.stats.est_ndist = int(est_ndist[i])
             p.stats.ef_est = p.ef
-            queue = self._queues[int(tiers[i])]
+            ti = int(tiers[i])
+            if tr is not None:
+                tr.event("estimate", p.ticket.uid, ef_est=p.ef)
+            queue = self._queues[ti]
             if self.cfg.max_tier_queue and len(queue) >= self.cfg.max_tier_queue:
                 self._shed(
                     p, now,
-                    f"tier queue full (ef={self.router.tiers[int(tiers[i])].ef},"
+                    f"tier queue full (ef={self.router.tiers[ti].ef},"
                     f" bound={self.cfg.max_tier_queue})",
                 )
                 continue
+            if tr is not None:
+                p.qspan = tr.begin(
+                    "queue", p.ticket.uid, tier_ef=self.router.tiers[ti].ef
+                )
             queue.append(p)
         st = self.stats
-        st.est_passes += 1
-        st.est_shape_total += shape
-        st.est_ndist_total += int(est_ndist[:b].sum())
-        st.est_pad_ndist += int(est_ndist[b:].sum())
-        st.est_wall_s += wall
+        st.inc("est_passes")
+        st.inc("est_shape_total", shape)
+        st.inc("est_ndist_total", int(est_ndist[:b].sum()))
+        st.inc("est_pad_ndist", int(est_ndist[b:].sum()))
+        st.inc("est_wall_s", wall)
 
     # -------------------------------------------------------------- dispatch
     def _attempt_ladder(self, tier: TierSpec) -> List[Tuple[object, str]]:
@@ -643,9 +786,9 @@ class AdaServeScheduler:
         """Attempt ``ai > 0`` is being consumed: same cfg as the previous
         attempt -> retry, different cfg -> backend fallback."""
         if attempts[ai][0] == attempts[ai - 1][0]:
-            self.stats.kernel_retries += 1
+            self.stats.inc("kernel_retries")
         else:
-            self.stats.kernel_fallbacks += 1
+            self.stats.inc("kernel_fallbacks")
 
     def _materialize(self, d: _Dispatch) -> None:
         """Block on a dispatch's device results, walking the remaining
@@ -654,11 +797,16 @@ class AdaServeScheduler:
         Feeds the tier cost model on success."""
         if d.res_np is not None:  # a sibling slot already materialized it
             return
+        tr = self.tracer
+        mspan = (
+            None if tr is None
+            else tr.begin("materialize", None, tier_ef=d.tier.ef)
+        )
         last_err: Optional[Exception] = None
         while True:
             if d.res_dev is not None:
                 try:
-                    d.finish(self.stats)
+                    d.finish(self.stats, self.clock)
                     break
                 except Exception as err:  # runtime failure: ladder below
                     last_err = err
@@ -676,11 +824,24 @@ class AdaServeScheduler:
                 if self._chaos is not None:
                     self._chaos.before_attempt(d.didx, ai)
                 q_dev, states, ef_dev = d.inputs
-                d.res_dev = resume_at_ef(
-                    self.router.graph, q_dev, states, ef_dev, d.attempts[ai][0]
-                )
+                with (
+                    device_annotation(f"ada_resume_ef{d.tier.ef}_retry")
+                    if tr is not None else contextlib.nullcontext()
+                ):
+                    d.res_dev = resume_at_ef(
+                        self.router.graph, q_dev, states, ef_dev,
+                        d.attempts[ai][0],
+                    )
             except Exception as err:
                 last_err = err
+        if tr is not None:
+            tr.end(
+                mspan, wall_s=d.wall_s,
+                backend=d.backend or "primary", attempts=d.used_ai + 1,
+            )
+        self.metrics.histogram(
+            "tier_drain_wall_s", ef=d.tier.ef
+        ).observe(d.wall_s)
         self.cost_model.observe(d.tier_idx, d.wall_s)
         if d.used_ai > 0:
             for p in d.entries:
@@ -750,7 +911,15 @@ class AdaServeScheduler:
         ef_dev = jnp.asarray(ef_b)
         attempts = self._attempt_ladder(tier)
         didx = -1 if self._chaos is None else self._chaos.next_dispatch()
-        t0 = time.perf_counter()
+        tr = self.tracer
+        dspan = (
+            None if tr is None
+            else tr.begin(
+                "dispatch", None,
+                tier_ef=tier.ef, batch=b, shape=shape, trigger=trigger,
+            )
+        )
+        t0 = self.clock()
         res_dev = None
         last_err: Optional[Exception] = None
         ai = 0
@@ -760,9 +929,14 @@ class AdaServeScheduler:
             try:
                 if self._chaos is not None:
                     self._chaos.before_attempt(didx, ai)
-                res_dev = resume_at_ef(
-                    self.router.graph, q_dev, states, ef_dev, attempts[ai][0]
-                )
+                with (
+                    device_annotation(f"ada_resume_ef{tier.ef}")
+                    if tr is not None else contextlib.nullcontext()
+                ):
+                    res_dev = resume_at_ef(
+                        self.router.graph, q_dev, states, ef_dev,
+                        attempts[ai][0],
+                    )
                 break
             except Exception as err:  # dispatch-time failure: walk the ladder
                 last_err = err
@@ -772,6 +946,8 @@ class AdaServeScheduler:
                 f"tier ef={tier.ef} dispatch failed on every backend rung "
                 f"({[label or 'primary' for _, label in attempts]})"
             ) from last_err
+        if tr is not None:
+            tr.end(dspan, attempts=ai + 1)
         dispatch = _Dispatch(
             tier, t, entries, shape, res_dev, t0,
             (q_dev, states, ef_dev), attempts, ai, didx,
@@ -783,14 +959,20 @@ class AdaServeScheduler:
             p.stats.dispatch_batch = b
             p.stats.padded_to = shape
             p.stats.trigger = trigger
+            if tr is not None:
+                tr.end(p.qspan, tier_ef=tier.ef)
+                p.qspan = None
+                p.dspan = tr.begin(
+                    "dispatch", p.ticket.uid,
+                    tier_ef=tier.ef, trigger=trigger, ef=p.ef,
+                )
             self._inflight.append((dispatch, slot, p))
-        counter = {
+        self.stats.inc({
             TRIGGER_FILL: "fill_drains",
             TRIGGER_DEADLINE: "deadline_drains",
             TRIGGER_FLUSH: "flush_drains",
             TRIGGER_IDLE: "idle_drains",
-        }[trigger]
-        setattr(self.stats, counter, getattr(self.stats, counter) + 1)
+        }[trigger])
         return b
 
     # ------------------------------------------------------------------ poll
@@ -833,13 +1015,18 @@ class AdaServeScheduler:
             self._materialize(dispatch)
             out.append(self._response(dispatch, slot, p))
         self._inflight = keep
-        self.stats.completed += len(out)
+        if out:
+            self.stats.inc("completed", len(out))
         return out
 
     def drain(self) -> List[SearchResponse]:
-        """Flush everything and block for every outstanding response."""
+        """Flush everything and block for every outstanding response; any
+        recall audits still pending run to completion before returning."""
         self.flush()
-        return self.poll(block=True)
+        out = self.poll(block=True)
+        if self.auditor is not None:
+            self.auditor.flush()
+        return out
 
     def _response(self, dispatch: _Dispatch, slot: int,
                   p: _Pending) -> SearchResponse:
@@ -850,16 +1037,18 @@ class AdaServeScheduler:
         deadline = p.ticket.deadline_t
         if deadline is not None and p.stats.done_t > deadline:
             status = STATUS_TIMED_OUT
-            self.stats.timed_out += 1
+            self.stats.inc("timed_out")
         elif p.stats.demotions > 0:
             status = STATUS_DEGRADED
-            self.stats.degraded += 1
+            self.stats.inc("degraded")
         else:
             status = STATUS_OK
         p.stats.status = status
+        ids = res.ids[slot, : p.k].copy()
+        self._terminal(p, status, ids=ids)
         return SearchResponse(
             ticket=p.ticket,
-            ids=res.ids[slot, : p.k].copy(),
+            ids=ids,
             dists=res.dists[slot, : p.k].copy(),
             ndist=int(res.ndist[slot]),
             iters=int(res.iters[slot]),
@@ -951,14 +1140,17 @@ def replay_trace(
     other traffic is left alone.  Returns ``(responses, latencies)`` aligned
     with the submit order, latency = arrival -> response materialization.
     This is the one canonical submit/step/poll loop — the streaming drivers
-    and the scheduler benchmark all replay through it.
+    and the scheduler benchmark all replay through it.  Replay timing runs
+    on the scheduler's injected clock, so replay latencies, deadline
+    decisions and trace spans share one timeline.
     """
+    clock = getattr(sched, "clock", None) or time.monotonic
     n = len(requests)
     arrive = {}
     order: List[int] = []
     got = {}
     lat = {}
-    t0 = time.perf_counter()
+    t0 = clock()
 
     def harvest(block: bool = False) -> int:
         pend = [u for u in order if u not in got]
@@ -967,14 +1159,12 @@ def replay_trace(
         res = sched.poll(block=block, uids=pend)
         for r in res:
             got[r.ticket.uid] = r
-            lat[r.ticket.uid] = (
-                time.perf_counter() - t0 - arrive[r.ticket.uid]
-            )
+            lat[r.ticket.uid] = clock() - t0 - arrive[r.ticket.uid]
         return len(res)
 
     i = 0
     while i < n:
-        now = time.perf_counter() - t0
+        now = clock() - t0
         while i < n and arrivals[i] <= now:
             tk = sched.submit(requests[i])
             arrive[tk.uid] = arrivals[i]
@@ -984,7 +1174,7 @@ def replay_trace(
         sched.step()
         progressed += harvest()
         if i < n and not progressed:
-            gap = arrivals[i] - (time.perf_counter() - t0)
+            gap = arrivals[i] - (clock() - t0)
             if gap > 0:
                 time.sleep(min(gap, sleep_s))
     sched.flush()

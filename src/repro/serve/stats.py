@@ -11,6 +11,15 @@ an :class:`repro.serve.scheduler.AdaServeScheduler` (many estimation passes,
 many independent tier drains); ``snapshot()``/``delta()`` carve out the slice
 belonging to one serving call, and the scheduler can render any slice as a
 batch-compatible :class:`RouterStats` for existing consumers.
+
+That "metrics layer above the engine" is :mod:`repro.obs.metrics`:
+:meth:`SchedulerStats.bind` mirrors every counter bump into a
+:class:`repro.obs.metrics.MetricsRegistry` (which adds what snapshots
+cannot — cross-scheduler aggregation, latency *distributions* with
+p50/p95/p99, Prometheus text export), while ``as_dict()`` consumers keep
+working unchanged.  Per-request timelines live in
+:mod:`repro.obs.trace`; achieved-recall auditing in
+:mod:`repro.obs.audit`.
 """
 from __future__ import annotations
 
@@ -141,8 +150,28 @@ class SchedulerStats:
     timed_out: int = 0            # full responses that missed their deadline
     kernel_retries: int = 0       # dispatch retried on the same backend
     kernel_fallbacks: int = 0     # dispatch fell down the backend ladder
+    recall_alerts: int = 0        # RecallAuditor contract breaches surfaced
     tiers: List[TierStats] = dataclasses.field(default_factory=list)
     tier_mark: int = 0            # len(tiers) at snapshot time (delta cursor)
+
+    def bind(self, registry, prefix: str = "scheduler_") -> "SchedulerStats":
+        """Mirror subsequent :meth:`inc` bumps into a
+        :class:`repro.obs.metrics.MetricsRegistry` as ``prefix + name``
+        counters.  Stored as a plain instance attribute (not a dataclass
+        field), so ``as_dict()``/``snapshot()``/``delta()`` and every
+        existing consumer are unaffected."""
+        self._registry = registry
+        self._prefix = prefix
+        return self
+
+    def inc(self, name: str, n: float = 1) -> None:
+        """Bump counter field ``name`` by ``n``, mirroring into the bound
+        registry (if any).  The scheduler routes every increment through
+        here so snapshot consumers and the metrics layer cannot drift."""
+        setattr(self, name, getattr(self, name) + n)
+        reg = getattr(self, "_registry", None)
+        if reg is not None:
+            reg.counter(self._prefix + name).inc(n)
 
     def snapshot(self) -> "SchedulerStats":
         """A cheap counter copy marking 'now' — pass it to :meth:`delta`

@@ -1,0 +1,392 @@
+"""Observability layer: metrics registry (histogram quantiles, Prometheus
+export, merging), span tracer (lifecycle trees, ring bound, Chrome export),
+recall auditor (deterministic sampling, EWMA alerts, edge re-arm), and the
+scheduler/plan integration — trace+audit armed end to end, plus the
+"disabled costs nothing" contract (no tracer/auditor objects at all)."""
+import json
+
+import numpy as np
+import pytest
+
+from repro.obs import (
+    Counter,
+    Gauge,
+    Histogram,
+    MetricsRegistry,
+    RecallAuditor,
+    SpanTracer,
+    sample_uid,
+)
+
+
+class FakeClock:
+    def __init__(self, t: float = 0.0):
+        self.t = t
+
+    def __call__(self) -> float:
+        return self.t
+
+    def advance(self, dt: float) -> None:
+        self.t += dt
+
+
+# --------------------------------------------------------------------------
+# metrics
+# --------------------------------------------------------------------------
+
+
+def test_counter_and_gauge():
+    c = Counter()
+    c.inc()
+    c.inc(2.5)
+    assert c.value == 3.5
+    with pytest.raises(ValueError):
+        c.inc(-1)
+    g = Gauge()
+    g.set(7.0)
+    g.set(2.0)
+    assert g.value == 2.0
+
+
+def test_histogram_quantiles_bucketed():
+    h = Histogram()
+    for v in [0.001] * 50 + [0.01] * 45 + [0.1] * 5:
+        h.observe(v)
+    assert h.count == 100
+    # quantile estimates land inside the owning bucket (linear interp)
+    assert 0.0005 < h.p50 <= 0.0025
+    assert 0.005 < h.p95 <= 0.025
+    assert 0.05 < h.p99 <= 0.25
+    assert h.mean == pytest.approx((50 * 0.001 + 45 * 0.01 + 5 * 0.1) / 100)
+    assert np.isnan(Histogram().p50)
+
+
+def test_histogram_overflow_and_merge():
+    h = Histogram()
+    h.observe(100.0)  # past the top bucket bound
+    assert h.p99 == pytest.approx(100.0)  # overflow quantiles answer max
+    a, b = Histogram(), Histogram()
+    for v in (0.001, 0.002):
+        a.observe(v)
+    for v in (0.05, 0.07, 0.09):
+        b.observe(v)
+    a.merge(b)
+    assert a.count == 5
+    assert a.sum == pytest.approx(0.213)
+    assert a.min == pytest.approx(0.001)
+    assert a.max == pytest.approx(0.09)
+    with pytest.raises(ValueError):
+        a.merge(Histogram(buckets=(1.0, 2.0)))
+    json.dumps(a.as_dict())  # JSON-able
+
+
+def test_registry_get_or_create_and_kind_conflict():
+    reg = MetricsRegistry()
+    assert reg.counter("x") is reg.counter("x")
+    assert reg.counter("x", tier="a") is not reg.counter("x", tier="b")
+    with pytest.raises(ValueError):
+        reg.gauge("x")  # registered as counter
+    reg.counter("x").inc(3)
+    reg.histogram("lat").observe(0.004)
+    d = reg.as_dict()
+    assert d["x"]["_"] == 3
+    assert d["lat"]["_"]["count"] == 1
+    json.dumps(d)
+
+
+def test_registry_merge_and_prometheus():
+    a, b = MetricsRegistry(), MetricsRegistry()
+    a.counter("n").inc(1)
+    b.counter("n").inc(2)
+    b.gauge("depth").set(4)
+    b.histogram("lat", ef="64").observe(0.01)
+    a.merge(b)
+    assert a.counter("n").value == 3
+    text = a.render_prometheus()
+    assert "# TYPE n counter" in text
+    assert "n 3" in text
+    assert 'lat_bucket{ef="64",le="+Inf"} 1' in text
+    assert 'lat_count{ef="64"} 1' in text
+
+
+# --------------------------------------------------------------------------
+# tracing
+# --------------------------------------------------------------------------
+
+
+def test_tracer_spans_and_request_complete():
+    clock = FakeClock()
+    tr = SpanTracer(clock=clock)
+    tr.event("submit", uid=1, k=5)
+    s = tr.begin("queue", uid=1, tier_ef=64)
+    clock.advance(0.5)
+    tr.end(s)
+    tr.event("terminal", uid=1, status="ok")
+    assert s.duration_s == pytest.approx(0.5)
+    assert [x.name for x in tr.spans(1)] == ["submit", "queue", "terminal"]
+    assert tr.request_terminal(1) == "ok"
+    assert tr.request_complete(1) == "ok"
+    assert tr.request_terminal(2) is None
+    with pytest.raises(ValueError, match="no spans"):
+        tr.request_complete(2)
+
+
+def test_tracer_rejects_incomplete_trees():
+    tr = SpanTracer(clock=FakeClock())
+    tr.begin("queue", uid=1)  # never ended
+    tr.event("terminal", uid=1, status="ok")
+    with pytest.raises(ValueError, match="unclosed"):
+        tr.request_complete(1)
+    tr2 = SpanTracer(clock=FakeClock())
+    tr2.event("submit", uid=2)
+    with pytest.raises(ValueError, match="terminal"):
+        tr2.request_complete(2)
+    tr2.event("terminal", uid=2, status="ok")
+    tr2.event("terminal", uid=2, status="ok")
+    with pytest.raises(ValueError, match="exactly one terminal"):
+        tr2.request_complete(2)
+
+
+def test_tracer_ring_bound_and_end_idempotent():
+    tr = SpanTracer(clock=FakeClock(), capacity=4)
+    for i in range(7):
+        tr.event("e", uid=i)
+    assert len(tr.spans()) == 4
+    assert tr.dropped == 3
+    assert [s.uid for s in tr.spans()] == [3, 4, 5, 6]
+    clock = FakeClock()
+    tr2 = SpanTracer(clock=clock)
+    s = tr2.begin("x")
+    clock.advance(1.0)
+    tr2.end(s)
+    clock.advance(1.0)
+    tr2.end(s)  # idempotent: first close wins
+    assert s.duration_s == pytest.approx(1.0)
+    assert tr2.end(None) is None  # None-tolerant
+    with pytest.raises(ValueError):
+        SpanTracer(capacity=0)
+
+
+def test_tracer_chrome_export_round_trip(tmp_path):
+    clock = FakeClock(100.0)
+    tr = SpanTracer(clock=clock)
+    with tr.span("estimate", batch=4):
+        clock.advance(0.002)
+    tr.event("terminal", uid=7, status="ok")
+    tr.begin("queue", uid=7)  # left open: exported as flagged instant
+    path = tmp_path / "trace.json"
+    tr.export(str(path))
+    doc = json.loads(path.read_text())
+    events = doc["traceEvents"]
+    assert len(events) == 3
+    by_name = {e["name"]: e for e in events}
+    est = by_name["estimate"]
+    assert est["ph"] == "X" and est["dur"] == pytest.approx(2000.0)
+    assert est["ts"] == pytest.approx(0.0)  # origin-relative
+    assert by_name["terminal"]["ph"] == "i"
+    assert by_name["terminal"]["tid"] == 7
+    assert by_name["queue"]["args"]["open"] is True
+    assert doc["otherData"]["dropped"] == 0
+
+
+# --------------------------------------------------------------------------
+# recall auditor
+# --------------------------------------------------------------------------
+
+
+def test_sample_uid_deterministic():
+    assert not any(sample_uid(u, 0.0) for u in range(100))
+    assert all(sample_uid(u, 1.0) for u in range(100))
+    picks = [sample_uid(u, 0.3) for u in range(1000)]
+    assert picks == [sample_uid(u, 0.3) for u in range(1000)]  # stable
+    assert 0.15 < np.mean(picks) < 0.45  # roughly the asked fraction
+
+
+def _auditor(reference, **kw):
+    kw.setdefault("fraction", 1.0)
+    return RecallAuditor(reference, clock=FakeClock(), **kw)
+
+
+def test_auditor_recall_and_ewma():
+    ref = lambda q: np.arange(5, dtype=np.int32)[None, :]
+    aud = _auditor(ref, alpha=0.5)
+    aud.enqueue(0, np.zeros(4), np.arange(5), k=5, tier_ef=64,
+                target=0.9, status="ok")
+    aud.enqueue(1, np.zeros(4), np.array([0, 1, 9, 9, 9]), k=5, tier_ef=64,
+                target=0.9, status="ok")
+    assert aud.pending == 2
+    assert aud.step(budget=1) == 1  # budgeted: one per idle tick
+    assert aud.pending == 1
+    aud.flush()
+    assert aud.audited == 2
+    t = aud.tier_ewmas()[64]
+    # seed 1.0, then 0.5*1.0 + 0.5*0.4
+    assert t["recall_ewma"] == pytest.approx(0.7)
+    assert t["target_ewma"] == pytest.approx(0.9)
+    assert t["samples"] == 2
+    json.dumps(aud.as_dict())
+
+
+def test_auditor_alert_edge_trigger_and_rearm():
+    ref = lambda q: np.arange(5, dtype=np.int32)[None, :]
+    alerts_seen = []
+    aud = _auditor(ref, alpha=1.0, min_samples=2, margin=0.05,
+                   on_alert=alerts_seen.append)
+    bad = np.full(5, 99)
+    good = np.arange(5)
+    for uid in range(3):  # 3 bad samples, but only one (edge) alert
+        aud.enqueue(uid, np.zeros(4), bad, k=5, tier_ef=32,
+                    target=0.9, status="ok")
+    aud.flush()
+    assert len(aud.alerts) == 1 and len(alerts_seen) == 1
+    a = aud.alerts[0]
+    assert a.tier_ef == 32 and a.ewma == 0.0 and a.samples >= 2
+    # recovery re-arms the edge; the next breach fires a second alert
+    aud.enqueue(3, np.zeros(4), good, k=5, tier_ef=32, target=0.9,
+                status="ok")
+    aud.flush()
+    assert not aud.tier_ewmas()[32]["alerting"]
+    aud.enqueue(4, np.zeros(4), bad, k=5, tier_ef=32, target=0.9,
+                status="ok")
+    aud.flush()
+    assert len(aud.alerts) == 2
+
+
+def test_auditor_partial_pseudo_tier_never_alerts():
+    ref = lambda q: np.arange(5, dtype=np.int32)[None, :]
+    aud = _auditor(ref, alpha=1.0, min_samples=1, margin=0.0)
+    for uid in range(4):
+        aud.enqueue(uid, np.zeros(4), np.full(5, 99), k=5, tier_ef=0,
+                    target=0.9, status="partial")
+    aud.flush()
+    assert aud.tier_ewmas()[0]["recall_ewma"] == 0.0
+    assert aud.alerts == []
+
+
+def test_auditor_pending_bound():
+    ref = lambda q: np.arange(5, dtype=np.int32)[None, :]
+    aud = _auditor(ref, max_pending=2)
+    for uid in range(5):
+        aud.enqueue(uid, np.zeros(4), np.arange(5), k=5, tier_ef=64,
+                    target=0.9, status="ok")
+    assert aud.pending == 2
+    assert aud.overflowed == 3
+    assert aud.sampled == 5
+    aud.flush()
+    assert aud.audited == 2
+
+
+def test_auditor_validation():
+    ref = lambda q: np.arange(5)[None, :]
+    with pytest.raises(ValueError):
+        RecallAuditor(ref, fraction=1.5)
+    with pytest.raises(ValueError):
+        RecallAuditor(ref, fraction=0.5, alpha=0.0)
+
+
+# --------------------------------------------------------------------------
+# scheduler integration
+# --------------------------------------------------------------------------
+
+
+def _queries(small_db, nq, seed=3):
+    data, centers, w = small_db
+    rng = np.random.default_rng(seed)
+    qc = rng.choice(len(centers), size=nq, p=w)
+    return (centers[qc] + 0.3 * rng.normal(0, 1, (nq, centers.shape[1]))
+            ).astype(np.float32)
+
+
+def test_scheduler_trace_audit_end_to_end(small_db, small_index):
+    from repro.api import SchedulerConfig
+    from repro.serve import AdaServeScheduler, SearchRequest
+
+    q = _queries(small_db, nq=9)
+    sched = AdaServeScheduler(
+        small_index.router(),
+        SchedulerConfig(fill=4, trace=True, audit_fraction=1.0),
+        default_target_recall=small_index.target_recall,
+    )
+    tickets = [sched.submit(SearchRequest(query=x)) for x in q]
+    responses = sched.drain()
+    by_uid = {r.ticket.uid: r for r in responses}
+    # every ticket owns exactly one closed span tree ending in its status
+    for t in tickets:
+        assert sched.tracer.request_complete(t.uid) == by_uid[t.uid].status
+    # audit_fraction=1.0 + drain flush -> every request audited; any
+    # alerts the auditor raised must be mirrored into the stats counter
+    assert sched.auditor.audited == len(q)
+    aud = sched.auditor.as_dict()
+    assert sched.stats.recall_alerts == len(aud["alerts"])
+    assert all(t["recall_ewma"] > 0.5 for t in aud["tiers"].values())
+    # counters mirrored into the registry match the dataclass fields
+    reg = sched.metrics.as_dict()
+    assert reg["scheduler_submitted"]["_"] == sched.stats.submitted
+    assert reg["scheduler_completed"]["_"] == sched.stats.completed
+    # per-status e2e latency histograms recorded one sample per response
+    e2e = reg["request_e2e_s"]
+    assert sum(h["count"] for h in e2e.values()) == len(q)
+
+
+def test_scheduler_observability_disabled_is_absent(small_db, small_index):
+    from repro.api import SchedulerConfig
+    from repro.serve import AdaServeScheduler, SearchRequest
+
+    q = _queries(small_db, nq=3)
+    sched = AdaServeScheduler(
+        small_index.router(),
+        SchedulerConfig(fill=4),  # trace=False, audit_fraction=0.0
+        default_target_recall=small_index.target_recall,
+    )
+    assert sched.tracer is None
+    assert sched.auditor is None
+    for x in q:
+        sched.submit(SearchRequest(query=x))
+    assert len(sched.drain()) == 3  # lifecycle unaffected
+
+
+def test_scheduler_config_obs_validation():
+    from repro.api import SchedulerConfig
+
+    with pytest.raises(ValueError):
+        SchedulerConfig(audit_fraction=1.5)
+    with pytest.raises(ValueError):
+        SchedulerConfig(trace_capacity=0)
+    with pytest.raises(ValueError):
+        SchedulerConfig(audit_margin=-0.1)
+
+
+def test_plan_explain_analyze(small_db, small_index):
+    from repro.api import SearchSpec
+
+    plan = small_index.plan(SearchSpec(k=5, target_recall=0.9))
+    d = plan.explain()
+    assert "analyze" not in d  # static explain unchanged by default
+    d = plan.explain(analyze=True, nq=8)
+    a = d["analyze"]
+    assert a["nq"] == 8 and a["mode"] == "oneshot"
+    assert a["wall_s"] > 0 and a["ndist_total"] > 0
+    assert 0.0 <= a["recall"]["mean"] <= 1.0
+    json.dumps(d)  # acceptance: JSON round-trippable
+    text = plan.explain(fmt="text", analyze=True, nq=8)
+    assert "analyze" in text and "recall" in text
+
+
+def test_plan_explain_analyze_streaming(small_db, small_index):
+    from repro.api import SearchSpec
+
+    plan = small_index.plan(SearchSpec(
+        k=5, target_recall=0.9, mode="streaming", deadline_ms=200,
+    ))
+    before = plan.metrics.as_dict().get(
+        "scheduler_submitted", {}).get("_", 0)
+    a = plan.explain(analyze=True, nq=8)["analyze"]
+    assert a["mode"] == "streaming"
+    assert sum(a["statuses"].values()) == 8
+    assert a["latency"]["p99_s"] >= a["latency"]["p50_s"] >= 0
+    assert a["recall"]["samples"] == 8  # analyze audits every probe
+    assert a["recall"]["alerts"] == 0
+    # analyze probes through a private throwaway session: only the warm
+    # call (the plan's shared scheduler) lands in the plan's registry
+    after = plan.metrics.as_dict().get("scheduler_submitted", {}).get("_", 0)
+    assert after - before == 8

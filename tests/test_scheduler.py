@@ -740,3 +740,105 @@ def test_stale_scheduler_raises_instead_of_losing_tickets(small_db):
     fresh.drain()
     idx.insert(data[1205:1210])
     assert fresh.poll() == []
+
+
+# --------------------------------------------------------------------------
+# TierCostModel: the degradation ladder's deadline oracle
+# --------------------------------------------------------------------------
+
+
+def test_tier_cost_model_cold_predicts_zero():
+    from repro.serve import TierCostModel
+
+    m = TierCostModel()
+    # no evidence at all -> 0.0 for every tier: degradation never fires on
+    # priors (a cold model must not shed work before one drain is measured)
+    assert m.predict(32) == 0.0
+    assert m.predict(240) == 0.0
+
+
+def test_tier_cost_model_borrows_costliest_lower_rung():
+    from repro.serve import TierCostModel
+
+    m = TierCostModel()
+    m.observe(32, 0.004)
+    m.observe(64, 0.010)
+    # unseen higher tier borrows the costliest measured *lower* rung (a
+    # lower bound: higher ef never drains faster)
+    assert m.predict(128) == pytest.approx(0.010)
+    assert m.predict(240) == pytest.approx(0.010)
+    # unseen tier *below* every measurement still has no lower evidence
+    assert m.predict(16) == 0.0
+    # a measured tier answers its own EWMA, not a borrowed one
+    assert m.predict(64) == pytest.approx(0.010)
+
+
+def test_tier_cost_model_ewma_converges_alternating():
+    from repro.serve import TierCostModel
+
+    m = TierCostModel(alpha=0.25)
+    m.observe(64, 0.008)  # first sample seeds the EWMA directly
+    assert m.predict(64) == pytest.approx(0.008)
+    m.observe(64, 0.016)
+    assert m.predict(64) == pytest.approx(0.008 + 0.25 * 0.008)
+    # alternating 8ms/16ms walls: the EWMA settles strictly inside the band
+    for _ in range(200):
+        m.observe(64, 0.008)
+        m.observe(64, 0.016)
+    assert 0.008 < m.predict(64) < 0.016
+    assert m.as_dict() == {"64": m.predict(64)}
+
+
+# --------------------------------------------------------------------------
+# RequestStats derived intervals (queue_wait_s / service_s / e2e_s)
+# --------------------------------------------------------------------------
+
+
+def test_request_stats_derived_intervals():
+    from repro.serve import RequestStats
+
+    st = RequestStats(submit_t=10.0, est_t=10.5, dispatch_t=11.0,
+                      done_t=11.25)
+    assert st.queue_wait_s == pytest.approx(0.5)
+    assert st.service_s == pytest.approx(0.25)
+    assert st.e2e_s == pytest.approx(1.25)
+    assert st.latency_s == st.e2e_s
+    d = st.as_dict()
+    for key in ("latency_s", "queue_wait_s", "service_s", "e2e_s"):
+        assert d[key] == getattr(st, key)
+
+
+def test_request_stats_intervals_guard_missing_stamps():
+    from repro.serve import RequestStats
+
+    # rejected: sheds at submit -- no estimate, no dispatch, no negatives
+    rej = RequestStats(submit_t=5.0, done_t=5.001)
+    assert rej.queue_wait_s == 0.0
+    assert rej.service_s == 0.0
+    assert rej.e2e_s == pytest.approx(0.001)
+    # partial: estimated + queued but never dispatched a tier drain
+    part = RequestStats(submit_t=5.0, est_t=5.1, done_t=5.4)
+    assert part.queue_wait_s == 0.0
+    assert part.service_s == 0.0
+    assert part.e2e_s == pytest.approx(0.4)
+    # in flight: nothing terminal yet
+    live = RequestStats(submit_t=5.0, est_t=5.1, dispatch_t=5.2)
+    assert live.e2e_s == 0.0
+    assert live.service_s == 0.0
+    assert live.queue_wait_s == pytest.approx(0.1)
+
+
+def test_request_stats_wired_through_response(small_db, small_index):
+    q = _queries(small_db, nq=4, seed=61)
+    sched = AdaServeScheduler(
+        small_index.router(RouterConfig()),
+        default_target_recall=small_index.target_recall,
+    )
+    for x in q:
+        sched.submit(SearchRequest(query=x))
+    for r in sched.drain():
+        st = r.stats
+        assert st.e2e_s > 0.0
+        assert st.queue_wait_s >= 0.0 and st.service_s > 0.0
+        assert st.e2e_s >= st.queue_wait_s + st.service_s - 1e-9
+        assert r.status == st.status
