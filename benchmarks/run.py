@@ -179,6 +179,70 @@ def obs_gate() -> None:
           f"trace_events={len(trace['traceEvents'])}")
 
 
+def churn_gate() -> None:
+    """Smoke gate for the mutation seam (ISSUE 8): on a toy index, mutate
+    between submit and poll through a registered scheduler and a held plan.
+    Asserts the churn contract — zero ``StalePlanError`` on the registered
+    path, every ticket terminal, in-flight work stamped with the epoch it
+    was admitted under, empty mutations version-preserving, and the strict
+    opt-in (``on_mutation='strict'``) still refusing to survive."""
+    import numpy as np
+
+    from repro.api import SearchSpec
+    from repro.index import IndexMutationError, build_ada_index
+    from repro.serve import TERMINAL_STATUSES, SearchRequest, StalePlanError
+
+    rng = np.random.default_rng(3)
+    centers = rng.normal(0, 1, (8, 24))
+    data = (centers[rng.integers(0, 8, 650)]
+            + 0.3 * rng.normal(0, 1, (650, 24))).astype(np.float32)
+    idx = build_ada_index(data[:600], k=5, target_recall=0.9, m=6,
+                          ef_construction=40, ef_cap=64, num_samples=16)
+    v0 = idx._graph_version
+    # empty mutations are version-preserving no-ops
+    assert idx.insert(np.zeros((0, 24), np.float32)).get("noop") is True
+    assert idx.delete(np.asarray([], np.int64)).get("noop") is True
+    assert idx._graph_version == v0, "empty mutation bumped the version"
+    # mutate between submit and poll on the registered scheduler: absorbed
+    sched = idx.scheduler()
+    queries = data[rng.integers(0, 600, 6)]
+    pre = [sched.submit(SearchRequest(query=q)) for q in queries[:3]]
+    idx.insert(data[600:625])
+    idx.delete(np.asarray([3, 11]))
+    post = [sched.submit(SearchRequest(query=q)) for q in queries[3:]]
+    responses = sched.drain()
+    by_uid = {r.ticket.uid: r for r in responses}
+    assert sorted(by_uid) == sorted(t.uid for t in pre + post), "ticket lost"
+    assert all(r.status in TERMINAL_STATUSES for r in responses)
+    assert all(by_uid[t.uid].stats.epoch == v0 for t in pre), (
+        "fenced work must carry its admission epoch"
+    )
+    assert all(by_uid[t.uid].stats.epoch == v0 + 2 for t in post)
+    assert sched.stats.mutations == 2, "a mutation was not absorbed"
+    for t in post:  # nothing dispatched post-mutation surfaces a dead row
+        assert not np.isin(np.asarray(by_uid[t.uid].ids), [3, 11]).any()
+    # delete validation is typed and atomic
+    for bad in ([10**6], [3]):  # out of range; already tombstoned
+        try:
+            idx.delete(np.asarray(bad))
+            raise AssertionError(f"delete({bad}) did not raise")
+        except IndexMutationError:
+            pass
+    # the strict opt-in still refuses to survive a mutation
+    strict = idx.plan(SearchSpec(on_mutation="strict"))
+    strict.search(queries[:2])
+    idx.insert(data[625:630])
+    try:
+        strict.search(queries[:2])
+        raise AssertionError("strict plan survived a mutation")
+    except StalePlanError:
+        pass
+    assert not idx.plan(SearchSpec()).stale, "default plan not revalidated"
+    print(f"churn_gate,0,ok epochs={v0}->{idx._graph_version} "
+          f"fenced={sched.stats.fenced_requests} "
+          f"retired={idx.epochs.retired_versions}")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--full", action="store_true", help="paper-scale (slow)")
@@ -226,7 +290,7 @@ def main() -> None:
     print("name,us_per_call,derived")
     failures = 0
     if args.smoke and not args.only:
-        for gate in (planner_gate, chaos_gate, obs_gate):
+        for gate in (planner_gate, chaos_gate, obs_gate, churn_gate):
             t0 = time.perf_counter()
             try:
                 gate()

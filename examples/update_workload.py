@@ -17,9 +17,12 @@ from repro.index import (
 )
 
 
-def evaluate(idx, queries, data, k=10):
+def evaluate(idx, queries, data, k=10, ids=None):
+    """Recall vs exact GT over ``data``; ``ids`` maps GT row positions back
+    to index ids when ``data`` is a survivor subset (post-delete)."""
     qp = prepare_queries(jnp.asarray(queries), "cos_dist")
     _, gt = brute_force_topk_chunked(qp, data, k=k)
+    gt = np.asarray(gt) if ids is None else np.asarray(ids)[np.asarray(gt)]
     res = idx.query(queries)
     rec = np.asarray(recall_at_k(res.ids, jnp.asarray(gt)))
     return rec.mean(), np.percentile(rec, 5), float(np.asarray(res.ndist).mean())
@@ -53,8 +56,33 @@ def main():
     t = idx.delete(dead)
     print(f"  ada-ef update: stats={t['stats_s']:.2f}s gt={t['sample_s']:.2f}s "
           f"table={t['ef_table_s']:.2f}s")
-    avg, p5, nd = evaluate(idx, queries, full[1000:])
+    avg, p5, nd = evaluate(idx, queries, full[1000:], ids=np.arange(1000, n))
     print(f"  after delete: recall={avg:.3f} p5={p5:.2f} work={nd:.0f}")
+
+    # ---- serving through churn: mutate with tickets in flight (PR 8) ------
+    # A held streaming plan and its scheduler survive mutations: pending
+    # tickets are fenced and complete on the epoch they were admitted under
+    # (stamped in response stats); new submissions bind the new epoch.
+    from repro.api import SearchSpec
+    from repro.serve import SearchRequest
+
+    print("\nserving through churn (epoch-versioned mutation) ...")
+    more = (centers[rng.choice(nc, 200, p=w)]
+            + 0.3 * rng.normal(0, 1, (200, d))).astype(np.float32)
+    plan = idx.plan(SearchSpec(target_recall=0.95, mode="streaming"))
+    sched = plan.new_scheduler()
+    pre = [sched.submit(SearchRequest(query=q)) for q in queries[:4]]
+    idx.insert(more)               # absorbed mid-flight, not refused
+    idx.delete(np.asarray([1500]))
+    post = [sched.submit(SearchRequest(query=q)) for q in queries[4:8]]
+    by = {r.ticket.uid: r for r in sched.drain()}
+    e_pre = sorted({by[t.uid].stats.epoch for t in pre})
+    e_post = sorted({by[t.uid].stats.epoch for t in post})
+    print(f"  {len(by)}/8 tickets terminal across 2 mutations "
+          f"(0 stale-plan errors)")
+    print(f"  in-flight epochs={e_pre} post-mutation epochs={e_post} "
+          f"fenced={sched.stats.fenced_requests}")
+    print(f"  epoch ledger: {idx.epochs.as_dict()}")
 
 
 if __name__ == "__main__":

@@ -60,6 +60,13 @@ BACKEND_INTERPRET = "interpret"  # Pallas kernels in interpret mode (CPU)
 BACKEND_ORACLE = "oracle"        # pure-jnp reference scorers
 BACKENDS = (BACKEND_AUTO, BACKEND_PALLAS, BACKEND_INTERPRET, BACKEND_ORACLE)
 
+ON_MUTATION_REVALIDATE = "revalidate"  # held plans rebind (or transparently
+#   re-plan) against the post-mutation epoch; in-flight work completes on
+#   the epoch it was dispatched on
+ON_MUTATION_STRICT = "strict"          # held plans refuse to survive a
+#   mutation: any use after insert/delete raises StalePlanError
+ON_MUTATION_MODES = (ON_MUTATION_REVALIDATE, ON_MUTATION_STRICT)
+
 
 def _rebuild(cls, value):
     """Reconstruct a config dataclass from ``as_dict`` output (or pass an
@@ -136,6 +143,14 @@ class SearchSpec:
     - ``backend``: kernel dispatch; ``auto`` probes capabilities (TPU ->
       ``pallas``; otherwise the index's build-time choice, i.e. ``oracle``
       unless it was built on kernels).
+    - ``on_mutation``: what a *held* plan does when the index mutates under
+      it.  ``revalidate`` (default): the plan rebinds to the new epoch —
+      compiled executors survive when the shape signature is unchanged
+      (tombstone deletes always; inserts re-plan transparently) and live
+      schedulers are fenced so pending tickets complete against the
+      pre-mutation snapshot.  ``strict``: any use after a mutation raises
+      :class:`repro.serve.api.StalePlanError` — for callers that treat a
+      plan as a point-in-time snapshot contract.
     - ``overrides``: :class:`SpecOverrides` expert escape hatch.
     """
 
@@ -145,6 +160,7 @@ class SearchSpec:
     max_ef: int = 0
     mode: str = MODE_ONESHOT
     backend: str = BACKEND_AUTO
+    on_mutation: str = ON_MUTATION_REVALIDATE
     overrides: SpecOverrides = SpecOverrides()
 
     def __post_init__(self):
@@ -152,6 +168,10 @@ class SearchSpec:
             raise ValueError(f"mode={self.mode!r} not in {MODES}")
         if self.backend not in BACKENDS:
             raise ValueError(f"backend={self.backend!r} not in {BACKENDS}")
+        if self.on_mutation not in ON_MUTATION_MODES:
+            raise ValueError(
+                f"on_mutation={self.on_mutation!r} not in {ON_MUTATION_MODES}"
+            )
         if self.k is not None and self.k < 1:
             raise ValueError(f"k={self.k} must be >= 1")
         if self.target_recall is not None and not 0.0 < self.target_recall <= 1.0:

@@ -24,6 +24,12 @@ from .search import (  # noqa: F401
     search,
     resize_state,
 )
+from .epochs import (  # noqa: F401
+    Epoch,
+    EpochManager,
+    IndexMutationError,
+    epoch_of,
+)
 from .pipeline import AdaEfIndex, build_ada_index, collect_distances  # noqa: F401
 from .baselines import DarthBaseline, LaetBaseline, fit_darth, fit_laet  # noqa: F401
 from .distributed import (  # noqa: F401

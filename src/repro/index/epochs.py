@@ -1,0 +1,137 @@
+"""Epoch-versioned index snapshots — mutation as a first-class event.
+
+The paper's §6.3 claim is that Ada-ef is *update-friendly* (exact stats
+merge/unmerge, incremental proxy ground truth, a cheap ef-table rebuild).
+The serving stack honors that claim through **epochs**: every
+``insert``/``delete`` publishes an immutable :class:`Epoch` — a frozen
+bundle of the post-mutation graph arrays, dataset statistics, ef table and
+a monotone version — instead of yanking references out from under live
+consumers.
+
+Two properties make this cheap:
+
+1. JAX arrays are immutable.  "Pinning an epoch" is nothing more than
+   holding references to its arrays: an in-flight tier dispatch that
+   captured the pre-mutation :class:`~repro.index.search.DeviceGraph`
+   keeps those device buffers alive (ordinary refcounting) and completes
+   against the exact snapshot it was dispatched on — deleted rows cannot
+   leak into *new* work, because new work binds the new epoch.
+2. A tombstone delete preserves every compiled shape (``n`` is unchanged),
+   and an insert changes only the leading axis — so a held
+   :class:`repro.plan.ExecutionPlan` can *revalidate* (swap array
+   references, keep shape-keyed jit caches warm when the signature
+   matches) rather than die with ``StalePlanError``.
+
+The :class:`EpochManager` owns the version counter and the publication
+history; :class:`repro.index.pipeline.AdaEfIndex` holds one and routes
+every mutation through it, and schedulers stamp the epoch a request was
+served under into its :class:`repro.serve.api.RequestStats`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+
+class IndexMutationError(ValueError):
+    """A structurally invalid ``insert``/``delete`` was refused *before*
+    touching any state: out-of-range or already-tombstoned delete ids, or
+    a deletion that would leave fewer than ``k`` alive rows (no valid
+    top-k ground truth can exist for the estimation proxies).  The index
+    is untouched when this raises — no version bump, no cache drop."""
+
+
+@dataclasses.dataclass(frozen=True)
+class Epoch:
+    """One immutable index snapshot: everything a consumer (router,
+    scheduler dispatch, held plan) binds when it starts work.
+
+    Consumers pin an epoch simply by holding it (or any of its arrays);
+    the device buffers stay alive until the last pin drops.  ``alive_rows``
+    is host-side metadata for telemetry/validation — the authoritative
+    per-row mask lives in ``graph.alive``.
+    """
+
+    version: int           # monotone; mirrors AdaEfIndex._graph_version
+    graph: object          # DeviceGraph (immutable jax arrays)
+    stats: object          # DatasetStats at this epoch
+    table: object          # EfTable at this epoch
+    n: int = 0             # total rows (tombstones included)
+    alive_rows: int = 0    # rows serving results at this epoch
+
+    def as_dict(self) -> dict:
+        return {
+            "version": self.version,
+            "n": self.n,
+            "alive_rows": self.alive_rows,
+        }
+
+
+class EpochManager:
+    """Publication point for index mutations.
+
+    ``current`` is the epoch new work binds; :meth:`publish` installs the
+    post-mutation snapshot and retires the previous one (retired epochs
+    are *not* kept alive here — only consumers that pinned them do that,
+    so memory is bounded by in-flight work, not by churn history).
+    """
+
+    def __init__(self, first: Epoch):
+        self._current = first
+        self.published = 0           # publish() calls absorbed (telemetry)
+        self._retired: List[int] = []  # versions superseded, oldest first
+
+    @property
+    def current(self) -> Epoch:
+        return self._current
+
+    @property
+    def version(self) -> int:
+        return self._current.version
+
+    @property
+    def retired_versions(self) -> List[int]:
+        """Versions that have been superseded (history of churn)."""
+        return list(self._retired)
+
+    def pin(self) -> Epoch:
+        """The current epoch, for a consumer about to start work on it.
+        (Holding the returned object keeps its arrays alive.)"""
+        return self._current
+
+    def publish(self, *, version: int, graph, stats, table,
+                n: int = 0, alive_rows: int = 0) -> Epoch:
+        """Install the post-mutation snapshot as the current epoch."""
+        if version <= self._current.version:
+            raise ValueError(
+                f"epoch version must be monotone: {version} <= "
+                f"{self._current.version}"
+            )
+        self._retired.append(self._current.version)
+        self._current = Epoch(
+            version=version, graph=graph, stats=stats, table=table,
+            n=n, alive_rows=alive_rows,
+        )
+        self.published += 1
+        return self._current
+
+    def as_dict(self) -> dict:
+        d = self._current.as_dict()
+        d["published"] = self.published
+        d["retired"] = list(self._retired)
+        return d
+
+
+def epoch_of(index, version: Optional[int] = None) -> Epoch:
+    """Build an :class:`Epoch` view of an ``AdaEfIndex``'s current state
+    (used to seed the manager lazily for indexes built before any
+    mutation)."""
+    alive = index.host_index.alive[: index.host_index.n]
+    return Epoch(
+        version=index._graph_version if version is None else version,
+        graph=index.graph,
+        stats=index.stats,
+        table=index.table,
+        n=int(index.host_index.n),
+        alive_rows=int(alive.sum()),
+    )

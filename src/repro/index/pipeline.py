@@ -35,6 +35,7 @@ from repro.core import (
 from repro.core.scoring import score_query
 from repro.core.fdl import METRIC_COSINE_DIST, METRIC_COSINE_SIM
 from .distances import brute_force_topk_chunked, prepare_queries
+from .epochs import Epoch, EpochManager, IndexMutationError, epoch_of
 from .hnsw import HNSWIndex, HNSWParams, build_index
 from .search import (
     AdaEfConfig,
@@ -99,6 +100,9 @@ class AdaEfIndex:
     _graph_version: int = dataclasses.field(
         default=0, repr=False, compare=False
     )  # bumped on insert/delete so held plans can detect staleness
+    _epochs: Optional[EpochManager] = dataclasses.field(
+        default=None, repr=False, compare=False
+    )  # lazily seeded EpochManager; every mutation publishes through it
 
     # ------------------------------------------------------------- online API
     def plan(self, spec=None, **spec_kwargs):
@@ -108,8 +112,10 @@ class AdaEfIndex:
         Pass a spec, or its fields as keywords (``index.plan(k=10,
         target_recall=0.95, mode="streaming")``).  Plans are cached keyed by
         ``(spec, shape-signature)``: two equal specs share one plan (and its
-        compiled executors), and ``insert``/``delete`` drop the cache exactly
-        like the legacy router/scheduler caches."""
+        compiled executors).  ``insert``/``delete`` *revalidate* cached
+        plans against the post-mutation epoch (strict
+        ``on_mutation="strict"`` plans are dropped instead), so a plan
+        handle obtained here keeps working across mutations."""
         from repro.api import SearchSpec
         from repro.plan import plan_spec, shape_signature
 
@@ -164,10 +170,12 @@ class AdaEfIndex:
         """The (cached) continuous-batching scheduler over :meth:`router` —
         the request-lifecycle serving surface (``submit``/``step``/``poll``).
         Passing a ``SchedulerConfig`` (and/or ``RouterConfig``) installs it
-        for this and every invalidation-triggered rebuild.  Like the router,
-        the scheduler holds graph/table references: ``insert``/``delete``
-        invalidate it, and pending requests do not survive the rebuild —
-        drain before mutating the index."""
+        for this and every rebuild.  The scheduler is index-registered:
+        ``insert``/``delete`` route through its mutation seam
+        (:meth:`repro.serve.scheduler.AdaServeScheduler.absorb_mutation`),
+        so pending requests are fenced and complete against the
+        pre-mutation epoch while new submits bind the post-mutation one —
+        mutating under live traffic is supported, no drain required."""
         from repro.serve.scheduler import AdaServeScheduler
 
         if scheduler_cfg is not None:
@@ -182,24 +190,98 @@ class AdaEfIndex:
                 router,
                 self._scheduler_cfg,
                 default_target_recall=self.target_recall,
-                # a held (orphaned) scheduler detects the mutation and
-                # raises StalePlanError instead of silently losing tickets
                 version_probe=lambda: self._graph_version,
+                router_probe=lambda: self.router(),
             )
         return self._scheduler
+
+    # --------------------------------------------------------------- epochs
+    @property
+    def epochs(self) -> EpochManager:
+        """The index's epoch publication point (lazily seeded from the
+        current state).  Every ``insert``/``delete`` publishes the
+        post-mutation snapshot here; consumers pin an epoch by holding it."""
+        if self._epochs is None:
+            self._epochs = EpochManager(epoch_of(self))
+        return self._epochs
+
+    @property
+    def epoch(self) -> Epoch:
+        """The current epoch — what new work binds."""
+        return self.epochs.current
 
     def query_static(self, queries, ef: int) -> SearchResult:
         return search(self.graph, jnp.asarray(queries), ef, self.search_cfg)
 
     # -------------------------------------------------------------- updates
-    def insert(self, new_data: np.ndarray, *, refresh_table: bool = True):
-        """§6.3 insertion: index add + stats merge + incremental GT + table."""
-        new_data = np.atleast_2d(np.asarray(new_data, np.float32))
-        self._router = None  # router caches graph/stats/table references
-        self._scheduler = None  # pending requests do not survive a mutation
+    def _noop_mutation(self) -> dict:
+        """Empty insert/delete batch: nothing changed, so no version bump,
+        no cache drop, no epoch publication (held plans stay fresh)."""
+        self.timings = OfflineTimings()
+        return {
+            "index_s": 0.0, "stats_s": 0.0, "sample_s": 0.0,
+            "ef_table_s": 0.0, "noop": True,
+        }
+
+    def _mutate(self, body):
+        """Run one mutation under the epoch protocol.
+
+        Prologue: drop the reference caches that alias the pre-mutation
+        arrays and bump the version.  ``body()`` rebuilds graph/stats/table.
+        Epilogue: publish the post-mutation :class:`Epoch`, then rebind
+        every registered consumer — held plans revalidate (strict plans are
+        dropped from the cache and refuse on use), and the index scheduler
+        plus every plan session absorb through the scheduler's mutation
+        seam, so pending tickets complete against the pre-mutation epoch
+        (its arrays stay pinned by the old router/dispatches) while new
+        work binds the new one.
+        """
+        from repro.plan import shape_signature
+        from repro.serve.api import StalePlanError
+
+        self.epochs  # materialize the manager: the pre-mutation epoch exists
+        self._router = None        # router caches graph/stats/table refs
         self._probe_cache.clear()  # probe recalls depend on graph + samples
-        self._plans.clear()  # plans hold graph/table references too
-        self._graph_version += 1  # held plans detect staleness and refuse
+        self._graph_version += 1   # consumers detect the epoch swap off this
+        out = body()
+        e = epoch_of(self)
+        self._epochs.publish(
+            version=e.version, graph=e.graph, stats=e.stats, table=e.table,
+            n=e.n, alive_rows=e.alive_rows,
+        )
+        plans, self._plans = self._plans, {}
+        sig = shape_signature(self)
+        for (spec, _old_sig), plan in plans.items():
+            try:
+                plan.revalidate()
+            except StalePlanError:
+                continue  # strict plan: dropped here; held refs keep raising
+            self._plans[(spec, sig)] = plan
+        if self._scheduler is not None:
+            self._scheduler.absorb_mutation(router=self.router())
+        return out
+
+    def insert(self, new_data: np.ndarray, *, refresh_table: bool = True):
+        """§6.3 insertion: index add + stats merge + incremental GT + table.
+
+        Structurally invalid batches (wrong dimensionality, NaN/Inf rows)
+        raise :class:`IndexMutationError` before any state is touched; an
+        empty batch is a version-preserving no-op.  Under live consumers
+        (plans, schedulers) the mutation is absorbed through the epoch
+        protocol — see :meth:`_mutate`."""
+        new_data = np.atleast_2d(np.asarray(new_data, np.float32))
+        if new_data.size == 0:
+            return self._noop_mutation()
+        dim = self.raw_data.shape[1]
+        if new_data.ndim != 2 or new_data.shape[1] != dim:
+            raise IndexMutationError(
+                f"insert: expected (m, {dim}) rows, got {new_data.shape}"
+            )
+        if not np.isfinite(new_data).all():
+            raise IndexMutationError("insert: rows contain NaN/Inf values")
+        return self._mutate(lambda: self._insert_body(new_data, refresh_table))
+
+    def _insert_body(self, new_data: np.ndarray, refresh_table: bool) -> dict:
         t0 = time.perf_counter()
         self.host_index.add(new_data)
         self.graph = device_graph(self.host_index.freeze())
@@ -233,13 +315,46 @@ class AdaEfIndex:
         return {"index_s": t_index, "stats_s": t_stats, "sample_s": t_sample, "ef_table_s": t_table}
 
     def delete(self, ids: np.ndarray, *, refresh_table: bool = True):
-        """§6.3 deletion: tombstone + stats unmerge + GT refresh + table."""
-        ids = np.asarray(ids, np.int64)
-        self._router = None  # router caches graph/stats/table references
-        self._scheduler = None  # pending requests do not survive a mutation
-        self._probe_cache.clear()  # probe recalls depend on graph + samples
-        self._plans.clear()  # plans hold graph/table references too
-        self._graph_version += 1  # held plans detect staleness and refuse
+        """§6.3 deletion: tombstone + stats unmerge + GT refresh + table.
+
+        Validated before any state is touched (:class:`IndexMutationError`):
+        ids must be in range and not already tombstoned (a second stats
+        unmerge would corrupt the dataset statistics), and the deletion must
+        leave at least ``k`` alive rows (otherwise no valid top-k ground
+        truth remains for the estimation proxies).  Duplicated ids within
+        one batch are collapsed.  Deleting the HNSW entry point is *legal*:
+        search masks dead nodes at entry and expansion (``g.alive``), so a
+        tombstoned entry still routes but never surfaces as a result.  If
+        every proxy query is deleted, fresh proxies are resampled from the
+        survivors.  An empty batch is a version-preserving no-op."""
+        ids = np.asarray(ids, np.int64).ravel()
+        if ids.size == 0:
+            return self._noop_mutation()
+        n = int(self.host_index.n)
+        oob = ids[(ids < 0) | (ids >= n)]
+        if oob.size:
+            raise IndexMutationError(
+                f"delete: ids out of range [0, {n}): "
+                f"{np.unique(oob)[:8].tolist()}"
+            )
+        ids = np.unique(ids)
+        already = ids[~self.host_index.alive[ids]]
+        if already.size:
+            raise IndexMutationError(
+                f"delete: ids already tombstoned: {already[:8].tolist()} "
+                "(a second stats unmerge would corrupt the dataset "
+                "statistics)"
+            )
+        alive_after = int(self.host_index.alive[:n].sum()) - len(ids)
+        if alive_after < self.k:
+            raise IndexMutationError(
+                f"delete: {len(ids)} deletion(s) would leave {alive_after} "
+                f"alive rows < k={self.k} — no valid top-{self.k} ground "
+                "truth would remain for the estimation proxies"
+            )
+        return self._mutate(lambda: self._delete_body(ids, refresh_table))
+
+    def _delete_body(self, ids: np.ndarray, refresh_table: bool) -> dict:
         t0 = time.perf_counter()
         self.host_index.mark_deleted(ids)
         self.graph = device_graph(self.host_index.freeze())
@@ -254,22 +369,41 @@ class AdaEfIndex:
         t_stats = time.perf_counter() - t0
 
         t0 = time.perf_counter()
-        # drop deleted proxies; refresh GT rows that contained deleted ids
-        alive_mask = np.ones(len(self.raw_data), bool)
-        alive_mask[ids] = False
+        # drop deleted proxies; refresh GT rows that contained deleted ids.
+        # The authoritative mask (host_index.alive) also excludes rows
+        # tombstoned by *earlier* deletes, so a refreshed ground truth can
+        # never resurrect them.
+        alive_mask = self.host_index.alive[: self.host_index.n].copy()
         keep = alive_mask[self.sample_ids]
         self.sample_ids = self.sample_ids[keep]
         self.sample_gt = self.sample_gt[keep]
-        dirty = ~alive_mask[self.sample_gt].all(axis=1)
-        if dirty.any():
-            qs = prepare_queries(
-                jnp.asarray(self.raw_data[self.sample_ids[dirty]]), self.search_cfg.metric
+        alive_rows = np.nonzero(alive_mask)[0]
+        if len(self.sample_ids) == 0:
+            # every proxy was tombstoned: resample from the survivors so
+            # the estimation path stays serviceable (the alive-row floor in
+            # delete() guarantees a valid top-k ground truth exists)
+            rng = np.random.default_rng(self._graph_version)
+            g = min(max(len(keep), 1), len(alive_rows))
+            self.sample_ids = np.sort(
+                rng.choice(alive_rows, size=g, replace=False)
             )
-            alive_rows = np.nonzero(alive_mask)[0]
+            qs = prepare_queries(
+                jnp.asarray(self.raw_data[self.sample_ids]), self.search_cfg.metric
+            )
             _, gi = brute_force_topk_chunked(
                 qs, self.raw_data[alive_rows], k=self.k, metric=self.search_cfg.metric
             )
-            self.sample_gt[dirty] = alive_rows[gi]
+            self.sample_gt = alive_rows[gi]
+        else:
+            dirty = ~alive_mask[self.sample_gt].all(axis=1)
+            if dirty.any():
+                qs = prepare_queries(
+                    jnp.asarray(self.raw_data[self.sample_ids[dirty]]), self.search_cfg.metric
+                )
+                _, gi = brute_force_topk_chunked(
+                    qs, self.raw_data[alive_rows], k=self.k, metric=self.search_cfg.metric
+                )
+                self.sample_gt[dirty] = alive_rows[gi]
         t_sample = time.perf_counter() - t0
 
         t_table = 0.0

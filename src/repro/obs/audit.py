@@ -172,15 +172,24 @@ class RecallAuditor:
         tier_ef: int,
         target: float,
         status: str,
+        reference: Optional[Callable[[np.ndarray], np.ndarray]] = None,
+        epoch: int = -1,
     ) -> None:
         """Record a completed request for later auditing.  Host-side
         only: the served ids are already on host by response time, so
-        this adds no device sync to the response path."""
+        this adds no device sync to the response path.
+
+        ``reference`` optionally pins a per-sample oracle (falling back to
+        the auditor-wide one): under index churn a request is served
+        against the epoch it was dispatched on, so its recall must be
+        audited against *that* epoch's graph — the scheduler passes a
+        closure over the request's pinned snapshot, and pre-mutation
+        responses audited after the swap still compare apples to apples."""
         if len(self._pending) == self._pending.maxlen:
             self.overflowed += 1
         self._pending.append(
             (uid, np.asarray(query), np.asarray(ids), k, tier_ef,
-             float(target), status)
+             float(target), status, reference, int(epoch))
         )
         self.sampled += 1
 
@@ -203,8 +212,10 @@ class RecallAuditor:
         """Audit everything still pending (drain / shutdown path)."""
         return self.step(budget=len(self._pending))
 
-    def _audit_one(self, uid, query, ids, k, tier_ef, target, status):
-        ref_ids = np.asarray(self.reference(query[None, :]))[0]
+    def _audit_one(self, uid, query, ids, k, tier_ef, target, status,
+                   reference=None, epoch=-1):
+        ref = reference if reference is not None else self.reference
+        ref_ids = np.asarray(ref(query[None, :]))[0]
         served = np.asarray(ids[:k]).ravel()
         truth = set(int(i) for i in ref_ids[:k] if i >= 0)
         hit = sum(1 for i in served if int(i) in truth)
@@ -217,6 +228,7 @@ class RecallAuditor:
                 "recall": float(recall),
                 "target": float(target),
                 "status": status,
+                "epoch": int(epoch),
             }
         )
         tier = self._tiers.setdefault(int(tier_ef), _TierEwma())

@@ -29,6 +29,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
+import weakref
 from typing import List, Optional, Sequence
 
 import jax
@@ -41,6 +42,7 @@ from repro.api import (
     BACKEND_ORACLE,
     BACKEND_PALLAS,
     MODE_ONESHOT,
+    ON_MUTATION_STRICT,
     RouterConfig,
     SchedulerConfig,
     SearchSpec,
@@ -218,11 +220,17 @@ class ExecutionPlan:
     - :meth:`explain` — every derived decision as a dict or EXPLAIN string.
 
     Plans are immutable policy + lazily built executors; they hold the
-    index's graph/table references, so ``insert``/``delete`` invalidate them
-    (the index drops its plan cache and any held plan raises on use).  Two
-    plans lowered from equal specs against the same index snapshot compare
-    and hash equal — like the specs themselves, a plan is a static pytree
-    and can cross ``jit`` boundaries without retriggering compilation.
+    index's graph/table references per *epoch*.  ``insert``/``delete``
+    no longer kill a held plan: :meth:`revalidate` rebinds it to the
+    post-mutation epoch — when the shape signature and the spec's lowering
+    are unchanged (every tombstone delete) only the array references swap
+    and the shape-keyed compiled executors stay warm; otherwise the plan
+    transparently re-plans.  ``_check_fresh`` auto-revalidates on use, so
+    the only way to see :class:`StalePlanError` from a plan is to opt in
+    with ``SearchSpec(on_mutation="strict")``.  Two plans lowered from
+    equal specs against the same index snapshot compare and hash equal —
+    like the specs themselves, a plan is a static pytree and can cross
+    ``jit`` boundaries without retriggering compilation.
     """
 
     def __init__(
@@ -258,6 +266,10 @@ class ExecutionPlan:
         self._router: Optional[QueryRouter] = None
         self._scheduler: Optional[AdaServeScheduler] = None
         self._metrics: Optional[MetricsRegistry] = None
+        self._sessions: "weakref.WeakSet" = weakref.WeakSet()  # live
+        #   schedulers built through new_scheduler(); revalidation absorbs
+        #   them through the mutation seam, weak refs keep one-shot barrier
+        #   schedulers collectable
 
     # ------------------------------------------------------------- identity
     def __eq__(self, other) -> bool:
@@ -300,14 +312,76 @@ class ExecutionPlan:
         )
 
     def _check_fresh(self):
-        if self.stale:
+        """Gate every use: a fresh plan passes, a mutated-under plan either
+        auto-revalidates (the default) or — for strict specs — raises."""
+        if not self.stale:
+            return
+        if self.spec.on_mutation == ON_MUTATION_STRICT:
             raise StalePlanError(
-                f"stale ExecutionPlan: the index was mutated after this plan "
-                f"was lowered (graph version "
-                f"{self._version} -> {self._index._graph_version}; plans "
-                "hold graph/table references); call index.plan(spec) again "
-                "for a fresh one"
+                f"stale ExecutionPlan: the index was mutated after this "
+                f"plan was lowered (graph version {self._version} -> "
+                f"{self._index._graph_version}) and SearchSpec("
+                "on_mutation='strict') refuses revalidation by contract; "
+                "call index.plan(spec) again for a fresh one"
             )
+        self.revalidate()
+
+    def revalidate(self) -> str:
+        """Rebind this plan to the index's current epoch after a mutation.
+
+        Returns the outcome: ``"fresh"`` (nothing to do), ``"rebound"``
+        (shape signature and the spec's lowering are unchanged — every
+        tombstone delete — so only the graph/stats/table references swap
+        and the shape-keyed compiled executors stay warm), or
+        ``"replanned"`` (an insert moved ``n``, or the derived policy
+        changed, so the plan adopts the fresh lowering; jit caches re-key
+        by shape on first use).  Live schedulers from :meth:`new_scheduler`
+        (the shared lifecycle surface included) are absorbed through their
+        mutation seam: pending tickets complete against the pre-mutation
+        epoch, new work binds the new one.  Strict plans raise
+        :class:`StalePlanError` instead of rebinding.
+        """
+        if not self.stale:
+            return "fresh"
+        if self.spec.on_mutation == ON_MUTATION_STRICT:
+            self._check_fresh()  # raises the strict StalePlanError
+        fresh = plan_spec(self._index, self.spec)
+        rebound = (
+            fresh._shape_sig == self._shape_sig
+            and fresh.k == self.k
+            and fresh.target_recall == self.target_recall
+            and fresh.search_cfg == self.search_cfg
+            and fresh.ada_cfg == self.ada_cfg
+            and fresh.router_cfg == self.router_cfg
+            and fresh.scheduler_cfg == self.scheduler_cfg
+            and fresh.backend == self.backend
+        )
+        if not rebound:
+            self.k = fresh.k
+            self.target_recall = fresh.target_recall
+            self.deadline_s = fresh.deadline_s
+            self.search_cfg = fresh.search_cfg
+            self.ada_cfg = fresh.ada_cfg
+            self.router_cfg = fresh.router_cfg
+            self.scheduler_cfg = fresh.scheduler_cfg
+            self.backend = fresh.backend
+            self._backend_note = fresh._backend_note
+            self._notes = fresh._notes
+        # pass the staleness gate *before* touching executors: the session
+        # absorbs below re-enter through self.router
+        self._shape_sig = fresh._shape_sig
+        self._version = fresh._version
+        self._router = None
+        for sched in list(self._sessions):
+            sched.absorb_mutation(router=self.router)
+        outcome = "rebound" if rebound else "replanned"
+        self.metrics.counter("plan_revalidations", outcome=outcome).inc()
+        return outcome
+
+    def sessions(self) -> List[AdaServeScheduler]:
+        """Live schedulers created through :meth:`new_scheduler` (weakly
+        held — collected barrier schedulers drop out on their own)."""
+        return list(self._sessions)
 
     # ------------------------------------------------------------ executors
     @property
@@ -353,16 +427,21 @@ class ExecutionPlan:
         kwargs.setdefault("metrics", self.metrics)
         idx = self._index
         kwargs.setdefault("version_probe", lambda: idx._graph_version)
-        return AdaServeScheduler(
+        kwargs.setdefault("router_probe", lambda: self.router)
+        sched = AdaServeScheduler(
             self.router, cfg or self.scheduler_cfg, **kwargs
         )
+        self._sessions.add(sched)
+        return sched
 
     @property
     def scheduler(self) -> AdaServeScheduler:
         """The plan's shared scheduler (lazily built) — the surface behind
         :meth:`submit`/:meth:`poll`.  Checks freshness on every access: a
-        stale plan must not keep draining requests against the pre-mutation
-        graph (deleted rows would come back as results)."""
+        mutated-under plan revalidates (strict plans raise) before any
+        request can drain against the wrong epoch — deleted rows must not
+        come back as *new* results, while in-flight tickets complete on
+        the pre-mutation snapshot they were dispatched on."""
         self._check_fresh()
         if self._scheduler is None:
             self._scheduler = self.new_scheduler()

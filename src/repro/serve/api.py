@@ -71,9 +71,19 @@ class InvalidQueryError(ServeError, ValueError):
 
 class StalePlanError(ServeError):
     """The index was mutated (``insert``/``delete`` bumped the graph
-    version) under a held plan or scheduler.  Pending tickets cannot be
-    recovered — drain before mutating, then rebuild via ``index.plan()`` /
-    ``index.scheduler()`` and resubmit."""
+    version) under a held plan or scheduler that cannot — or must not —
+    absorb the change.
+
+    Since the epoch-versioned mutation path this is the *opt-in strict*
+    behavior, not the default: index-registered consumers (plans from
+    ``index.plan()``, schedulers from ``index.scheduler()`` /
+    ``plan.new_scheduler()``) are fenced and rebound through the mutation
+    seam — pending tickets complete against the pre-mutation epoch and new
+    work binds the new one.  This error still fires for (a) plans lowered
+    from a ``SearchSpec(on_mutation="strict")``, which refuse revalidation
+    by contract, and (b) *orphaned* schedulers constructed directly around
+    a ``version_probe`` (no index registration), which have no mutation
+    seam to absorb through — drain those before mutating, then rebuild."""
 
 
 class DispatchFailedError(ServeError):
@@ -146,6 +156,10 @@ class RequestStats:
     fallback_backend: str = ""     # non-empty when the backend ladder was
     #   walked at runtime (e.g. "oracle")
     reject_reason: str = ""        # why admission/screening shed the request
+    epoch: int = -1                # index epoch (graph version) the request
+    #   was estimated/served against; under churn a response stamped with a
+    #   pre-mutation epoch was answered from that snapshot (-1 = unversioned
+    #   scheduler, or rejected before binding an epoch)
 
     # Derived intervals.  Lifecycle stamps default to 0.0 ("never
     # happened"): a rejected request never estimates or dispatches, a

@@ -5,8 +5,9 @@ A :class:`FaultPlan` is a declarative list of failure points; a
 :class:`repro.serve.scheduler.AdaServeScheduler` (``chaos=`` keyword).  The
 scheduler calls the injector at the same three seams a real failure would
 enter through, so tests exercise the *production* recovery paths — the
-retry/fallback ladder, NaN screening, and :class:`StalePlanError` — not
-test-only shims:
+retry/fallback ladder, NaN screening, and the mutation seam (an
+index-registered scheduler absorbs a mid-flight mutation; an orphaned one
+raises :class:`StalePlanError`) — not test-only shims:
 
 - ``wrap_clock`` — skews the scheduler's clock (deadline logic under a
   misbehaving time source).
@@ -51,8 +52,11 @@ class FaultPlan:
     nan_uids: Tuple[int, ...] = ()  # ticket uids whose queries are NaN'd
     #   post-validation (estimation-pass screen must reject exactly these)
     mutate_at_dispatch: Optional[int] = None  # run the injector's
-    #   ``mutate_fn`` right before this dispatch (mid-flight index mutation
-    #   -> StalePlanError on the next version check)
+    #   ``mutate_fn`` right before this dispatch (mid-flight index mutation:
+    #   absorbed via the mutation seam when the scheduler is index-
+    #   registered — the tick completes on the pinned pre-mutation epoch,
+    #   then rebinds; an orphaned scheduler raises StalePlanError on the
+    #   next version check instead)
 
 
 class FaultInjector:

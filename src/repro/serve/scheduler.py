@@ -155,11 +155,17 @@ class _EstPass:
 
 
 class _Pending:
-    """A request in flight: admission -> (estimated) tier queue -> dispatch."""
+    """A request in flight: admission -> (estimated) tier queue -> dispatch.
+
+    ``graph`` pins the epoch's :class:`DeviceGraph` the request was
+    *estimated* against: phase-A states only resume correctly on the arrays
+    they were computed from, and under churn the request's recall audit must
+    compare against the same snapshot it was served from.  The mutation
+    fence guarantees estimation and dispatch share one epoch."""
 
     __slots__ = (
         "ticket", "query", "target", "k", "stats",
-        "est_pass", "row", "ef", "qspan", "dspan",
+        "est_pass", "row", "ef", "qspan", "dspan", "graph",
     )
 
     def __init__(self, ticket: SearchTicket, query: np.ndarray,
@@ -174,6 +180,7 @@ class _Pending:
         self.ef = -1
         self.qspan = None   # open "queue" trace span (tracer armed only)
         self.dspan = None   # open "dispatch" trace span
+        self.graph = None   # epoch-pinned DeviceGraph (set at estimation)
 
 
 class _Dispatch:
@@ -189,12 +196,12 @@ class _Dispatch:
 
     __slots__ = (
         "tier", "tier_idx", "entries", "shape", "res_dev", "res_np", "t0",
-        "wall_s", "inputs", "attempts", "used_ai", "backend", "didx",
+        "wall_s", "inputs", "attempts", "used_ai", "backend", "didx", "graph",
     )
 
     def __init__(self, tier: TierSpec, tier_idx: int, entries: List[_Pending],
                  shape: int, res_dev, t0: float, inputs, attempts, used_ai: int,
-                 didx: int):
+                 didx: int, graph=None):
         self.tier = tier
         self.tier_idx = tier_idx
         self.entries = entries
@@ -208,6 +215,9 @@ class _Dispatch:
         self.used_ai = used_ai        # index of the attempt in flight
         self.backend = attempts[used_ai][1]
         self.didx = didx              # chaos dispatch index (-1 = no chaos)
+        self.graph = graph            # epoch-pinned DeviceGraph: retry rungs
+        #   at materialize time must resume on the *same* arrays the phase-A
+        #   states were computed from, even if the index mutated in between
 
     def ready(self) -> bool:
         if self.res_np is not None:
@@ -253,9 +263,16 @@ class AdaServeScheduler:
     """Continuous-batching executor over one :class:`QueryRouter`.
 
     Owns the admission queue, the per-tier request queues, and the set of
-    in-flight dispatches.  Rebuild (or let ``AdaEfIndex.scheduler()``
-    rebuild) after index updates — it holds the router's graph/table
-    references, and pending requests do not survive an index mutation.
+    in-flight dispatches.  Index mutations are survivable: the scheduler
+    pins each request's epoch (the :class:`DeviceGraph` it was estimated
+    against) and exposes a **mutation seam** — :meth:`apply_mutation` /
+    :meth:`absorb_mutation` — that fences at a safe point between tier
+    drains, force-dispatches everything still queued against the
+    pre-mutation epoch, then rebinds to the post-mutation router.  Pending
+    tickets complete normally against the snapshot they were dispatched on
+    (JAX arrays are immutable; pinning is just holding references), and new
+    work binds the new epoch.  ``AdaEfIndex.insert``/``delete`` route
+    through this seam automatically for index-registered schedulers.
 
     ``clock`` is injectable (tests drive deadlines with a fake clock); it
     only gates *deadline draining*, degradation and telemetry timestamps,
@@ -263,9 +280,14 @@ class AdaServeScheduler:
 
     ``version_probe`` (when given, e.g. by ``AdaEfIndex.scheduler()`` /
     ``ExecutionPlan.new_scheduler()``) returns the owning index's graph
-    version; the scheduler captures it at construction and every
-    ``submit``/``step`` — and any ``poll`` that would otherwise lose live
-    work — raises :class:`StalePlanError` once the index mutates under it.
+    version; ``router_probe`` (same callers) returns a router rebuilt
+    against the index's *current* epoch, letting :meth:`absorb_mutation`
+    rebind without the caller threading the new router through.  A
+    scheduler constructed with a ``version_probe`` but **no** registration
+    (no ``router_probe``, built directly rather than via the index/plan) is
+    *orphaned*: it cannot rebind, so ``submit``/``step`` — and any ``poll``
+    that would otherwise lose live work — raise :class:`StalePlanError`
+    once the index mutates under it.
 
     ``chaos`` is an optional :class:`repro.serve.chaos.FaultInjector`; an
     absent (or empty-plan) injector leaves behavior bit-identical.
@@ -279,6 +301,7 @@ class AdaServeScheduler:
         default_target_recall: Optional[float] = None,
         clock: Callable[[], float] = time.monotonic,
         version_probe: Optional[Callable[[], int]] = None,
+        router_probe: Optional[Callable[[], object]] = None,
         chaos=None,
         cost_model: Optional[TierCostModel] = None,
         metrics: Optional[MetricsRegistry] = None,
@@ -293,6 +316,13 @@ class AdaServeScheduler:
         self.clock = chaos.wrap_clock(clock) if chaos is not None else clock
         self._version_probe = version_probe
         self._version0 = None if version_probe is None else version_probe()
+        self._router_probe = router_probe
+        self._stepping = False   # reentrancy guard: a mutation landing
+        #   mid-step (e.g. chaos mutate_fn inside a dispatch) defers its
+        #   absorb to the end of the tick instead of fencing recursively
+        self._deferred_absorb = False
+        self._absorbing = False  # suspends the staleness gate during the
+        #   fence tick, which intentionally runs on the pre-mutation epoch
         self.cost_model = (
             cost_model
             if cost_model is not None
@@ -364,9 +394,18 @@ class AdaServeScheduler:
         if ids is not None and aud is not None and aud.admit(p.ticket.uid):
             # p.stats.tier_ef is 0 for PARTIAL answers (no tier search ran),
             # which the auditor buckets as the non-alerting pseudo-tier.
+            # The oracle reference is pinned to the request's epoch: a
+            # pre-mutation response audited after an epoch swap must be
+            # compared against the snapshot it was actually served from.
+            graph, cfg = p.graph, self.router.base_cfg
+            ref = (
+                None if graph is None
+                else (lambda q, g=graph, c=cfg: oracle_topk(g, q, c))
+            )
             aud.enqueue(
                 p.ticket.uid, p.query, ids,
                 k=p.k, tier_ef=st.tier_ef, target=p.target, status=status,
+                reference=ref, epoch=st.epoch,
             )
 
     # ------------------------------------------------------------ freshness
@@ -380,17 +419,97 @@ class AdaServeScheduler:
         )
 
     def _check_fresh(self) -> None:
-        if self._version_probe is None:
+        if self._version_probe is None or self._absorbing:
             return
         v = self._version_probe()
         if v != self._version0:
             raise StalePlanError(
                 f"stale scheduler: index graph version bumped "
-                f"{self._version0} -> {v} (insert/delete under a live "
-                f"scheduler); {self._live()} pending request(s) cannot be "
-                "recovered — drain() before mutating, then rebuild via "
-                "index.scheduler() / index.plan() and resubmit"
+                f"{self._version0} -> {v} (insert/delete under an orphaned "
+                f"scheduler — one the index has no mutation seam to); "
+                f"{self._live()} pending request(s) cannot be recovered. "
+                "Either drain() before mutating, route the mutation through "
+                "apply_mutation(), or build the scheduler via "
+                "index.scheduler() / plan.new_scheduler() so mutations are "
+                "absorbed automatically"
             )
+
+    def _epoch(self) -> int:
+        """The epoch (index graph version) new requests bind; -1 when the
+        scheduler is unversioned (no ``version_probe``)."""
+        return -1 if self._version0 is None else int(self._version0)
+
+    # -------------------------------------------------------- mutation seam
+    def apply_mutation(self, fn: Callable[[], object]):
+        """Run an index mutation under this scheduler's fence and absorb
+        the resulting epoch swap; returns ``fn``'s result.
+
+        This is the manual seam for schedulers the index does not know
+        about: ``sched.apply_mutation(lambda: idx.insert(rows))`` keeps the
+        scheduler serviceable where a bare ``idx.insert(rows)`` would leave
+        it orphaned-stale.  Index-registered schedulers (``idx.scheduler()``
+        / ``plan.new_scheduler()``) are absorbed by the index itself, and a
+        second absorb here is a cheap no-op (the version already matches).
+        """
+        out = fn()
+        self.absorb_mutation()
+        return out
+
+    def absorb_mutation(self, router=None) -> int:
+        """Absorb an index mutation that already happened: fence (force-
+        dispatch everything still queued against the pre-mutation epoch the
+        old router pins), then rebind to ``router`` (or the ``router_probe``
+        result) for new work.  Returns the number of requests the fence
+        force-dispatched.  Safe mid-step: a reentrant call (mutation fired
+        inside a dispatch) defers to the end of the current tick."""
+        if self._stepping:
+            self._deferred_absorb = True
+            self._deferred_router = router
+            return 0
+        if (
+            router is None
+            and self._version_probe is not None
+            and self._version_probe() == self._version0
+        ):
+            return 0  # nothing changed (or already absorbed by the index)
+        return self._absorb_now(router)
+
+    def _absorb_now(self, router) -> int:
+        tr = self.tracer
+        pinned = len(self._inflight)
+        fenced = len(self._admission) + sum(len(q) for q in self._queues)
+        span = (
+            None if tr is None
+            else tr.begin("mutation", None, fenced=fenced, pinned=pinned)
+        )
+        old_v = self._epoch()
+        if fenced:
+            # the fence tick intentionally runs on the pre-mutation epoch
+            # (the old router's arrays are still pinned by self.router), so
+            # suspend the staleness gate and keep the old epoch stamp for
+            # everything it estimates/dispatches
+            self._absorbing = True
+            try:
+                self.step(force=True)
+            finally:
+                self._absorbing = False
+        if self._version_probe is not None:
+            self._version0 = self._version_probe()
+        if router is None and self._router_probe is not None:
+            router = self._router_probe()
+        if router is not None and router is not self.router:
+            if len(router.tiers) != len(self.router.tiers):
+                # post-fence the tier queues are empty; resize to the new
+                # ladder (an insert can change n and therefore the tiering)
+                self._queues = [[] for _ in router.tiers]
+            self.router = router
+            self.min_shape = self.cfg.min_shape or router.router_cfg.min_shape
+        self.stats.inc("mutations")
+        if fenced:
+            self.stats.inc("fenced_requests", fenced)
+        if tr is not None:
+            tr.end(span, epoch=self._epoch(), prev_epoch=old_v)
+        return fenced
 
     # --------------------------------------------------------------- submit
     def _validate_query(self, query) -> np.ndarray:
@@ -535,28 +654,40 @@ class AdaServeScheduler:
         asynchronous — harvest results with :meth:`poll`."""
         self._check_fresh()
         now = self.clock() if now is None else now
-        if self._admission and (force or self._est_due(now)):
-            self._estimate_admitted(now)
-        if self.cfg.degrade:
-            self._degrade_at_risk(now)
-        dispatched = 0
-        for t, queue in enumerate(self._queues):
-            if not queue:
-                continue
-            trigger = self._due(t, queue, now, force)
-            if trigger is not None:
-                dispatched += self._dispatch_tier(t, now, trigger)
-        if (
-            self.auditor is not None
-            and self.auditor.pending
-            and dispatched == 0
-            and not self._admission
-            and not self._busy()
-        ):
-            # Work-conserving idle tick: nothing dispatched, nothing waiting,
-            # no device work in flight — spend it on one recall audit instead
-            # of returning idle.  Audits never compete with live drains.
-            self.auditor.step(budget=1)
+        self._stepping = True
+        try:
+            if self._admission and (force or self._est_due(now)):
+                self._estimate_admitted(now)
+            if self.cfg.degrade:
+                self._degrade_at_risk(now)
+            dispatched = 0
+            for t, queue in enumerate(self._queues):
+                if not queue:
+                    continue
+                trigger = self._due(t, queue, now, force)
+                if trigger is not None:
+                    dispatched += self._dispatch_tier(t, now, trigger)
+            if (
+                self.auditor is not None
+                and self.auditor.pending
+                and dispatched == 0
+                and not self._admission
+                and not self._busy()
+            ):
+                # Work-conserving idle tick: nothing dispatched, nothing
+                # waiting, no device work in flight — spend it on one recall
+                # audit instead of returning idle.  Audits never compete
+                # with live drains.
+                self.auditor.step(budget=1)
+        finally:
+            self._stepping = False
+        if self._deferred_absorb:
+            # A mutation landed mid-tick (e.g. a chaos mutate_fn inside a
+            # dispatch attempt): every dispatch this tick already ran on the
+            # pre-mutation epoch it pinned, so absorbing now — after the
+            # tick — is equivalent to fencing before the mutation.
+            self._deferred_absorb = False
+            self._absorb_now(self.__dict__.pop("_deferred_router", None))
         return dispatched
 
     def flush(self) -> int:
@@ -734,10 +865,14 @@ class AdaServeScheduler:
         est_ndist = np.asarray(states.ndist)
         est_pass = _EstPass(states=states, queries=q_pad)
         tiers = assign_tiers(ef_np[:b], self.router._tier_efs)
+        epoch = self._epoch()
         for i, p in enumerate(entries):
             p.est_pass = est_pass
             p.row = i
             p.ef = int(ef_np[i])
+            p.graph = self.router.graph   # pin the epoch the phase-A state
+            #   was computed on; dispatch and audit must resume/compare here
+            p.stats.epoch = epoch
             p.stats.est_t = now
             p.stats.est_batch = b
             p.stats.est_ndist = int(est_ndist[i])
@@ -824,13 +959,13 @@ class AdaServeScheduler:
                 if self._chaos is not None:
                     self._chaos.before_attempt(d.didx, ai)
                 q_dev, states, ef_dev = d.inputs
+                graph = d.graph if d.graph is not None else self.router.graph
                 with (
                     device_annotation(f"ada_resume_ef{d.tier.ef}_retry")
                     if tr is not None else contextlib.nullcontext()
                 ):
                     d.res_dev = resume_at_ef(
-                        self.router.graph, q_dev, states, ef_dev,
-                        d.attempts[ai][0],
+                        graph, q_dev, states, ef_dev, d.attempts[ai][0],
                     )
             except Exception as err:
                 last_err = err
@@ -851,6 +986,14 @@ class AdaServeScheduler:
     def _dispatch_tier(self, t: int, now: float, trigger: str) -> int:
         entries, self._queues[t] = self._queues[t], []
         tier = self.router.tiers[t]
+        # Resume on the epoch the bucket's phase-A states were computed on.
+        # The mutation fence drains every queue before the router rebinds,
+        # so a bucket never mixes epochs: all entries pin the same graph.
+        graph = (
+            entries[0].graph
+            if entries[0].graph is not None
+            else self.router.graph
+        )
         b = len(entries)
         shape = pad_shape(b, self.min_shape)
         # Gather each request's carried phase-A state row.  A bucket may span
@@ -934,8 +1077,7 @@ class AdaServeScheduler:
                     if tr is not None else contextlib.nullcontext()
                 ):
                     res_dev = resume_at_ef(
-                        self.router.graph, q_dev, states, ef_dev,
-                        attempts[ai][0],
+                        graph, q_dev, states, ef_dev, attempts[ai][0],
                     )
                 break
             except Exception as err:  # dispatch-time failure: walk the ladder
@@ -950,7 +1092,7 @@ class AdaServeScheduler:
             tr.end(dspan, attempts=ai + 1)
         dispatch = _Dispatch(
             tier, t, entries, shape, res_dev, t0,
-            (q_dev, states, ef_dev), attempts, ai, didx,
+            (q_dev, states, ef_dev), attempts, ai, didx, graph=graph,
         )
         for slot, p in enumerate(entries):
             p.stats.dispatch_t = now
@@ -988,8 +1130,10 @@ class AdaServeScheduler:
         answers — which are always ready).  ``uids`` restricts harvesting to
         those tickets (others stay queued — e.g. an engine polling its own
         requests on a shared scheduler).  Raises :class:`StalePlanError` if
-        the index mutated while live work was still queued/in flight;
-        already-terminal responses of a stale scheduler remain harvestable.
+        the index mutated under an *orphaned* scheduler (no mutation seam)
+        while live work was still queued/in flight; already-terminal
+        responses of a stale scheduler remain harvestable, and absorbed
+        (index-registered) schedulers never raise here.
         """
         if self._live() > 0:
             self._check_fresh()

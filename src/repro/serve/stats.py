@@ -151,6 +151,10 @@ class SchedulerStats:
     kernel_retries: int = 0       # dispatch retried on the same backend
     kernel_fallbacks: int = 0     # dispatch fell down the backend ladder
     recall_alerts: int = 0        # RecallAuditor contract breaches surfaced
+    mutations: int = 0            # index mutations absorbed (epoch swaps):
+    #   fence -> pin in-flight state on the pre-mutation epoch -> rebind
+    fenced_requests: int = 0      # pending requests force-dispatched against
+    #   their pre-mutation epoch by a mutation fence (they complete normally)
     tiers: List[TierStats] = dataclasses.field(default_factory=list)
     tier_mark: int = 0            # len(tiers) at snapshot time (delta cursor)
 

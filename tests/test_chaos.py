@@ -186,3 +186,36 @@ def test_midflight_mutation_raises_stale_plan_error(small_db):
     sched.flush()  # dispatch 0 mutates the index mid-flight
     with pytest.raises(StalePlanError, match="graph version"):
         sched.poll(block=True)
+
+
+def test_midflight_mutation_absorbed_by_registered_scheduler(small_db):
+    """The same chaos fault against an *index-registered* scheduler is
+    absorbed, not refused: the mutation lands between dispatch and
+    materialization, the deferred seam rebinds at the end of the tick, and
+    every ticket still reaches exactly one terminal status."""
+    from repro.index import build_ada_index
+
+    data, _, _ = small_db
+    idx = build_ada_index(
+        data[:1200], k=5, target_recall=0.9, m=8, ef_construction=60,
+        ef_cap=160, num_samples=32,
+    )
+    sched = idx.scheduler()  # registered: the index absorbs it on mutation
+    sched._chaos = FaultInjector(
+        FaultPlan(mutate_at_dispatch=0),
+        mutate_fn=lambda: idx.insert(data[1200:1205]),
+    )
+    q = _queries(small_db, nq=2, seed=68)
+    tickets = [sched.submit(SearchRequest(query=row)) for row in q]
+    sched.flush()  # dispatch 0 mutates the index mid-flight: absorbed
+    rs = sched.poll(block=True)
+    assert sorted(r.ticket.uid for r in rs) == sorted(t.uid for t in tickets)
+    assert all(r.status in TERMINAL_STATUSES for r in rs)
+    # both admitted pre-mutation -> both pinned to the pre-mutation epoch
+    assert all(r.stats.epoch == rs[0].stats.epoch for r in rs)
+    assert sched.stats.mutations == 1
+    # the seam stays live: post-mutation work binds the new epoch
+    t3 = sched.submit(SearchRequest(query=q[0]))
+    (r3,) = sched.drain()
+    assert r3.ticket.uid == t3.uid
+    assert r3.stats.epoch == rs[0].stats.epoch + 1

@@ -1,0 +1,243 @@
+"""Churn robustness (PR 8): epoch-versioned mutation, delete edge cases,
+plan revalidation equivalence, and the scheduler mutation seam.
+
+The contract under test: an index mutating under live consumers never
+loses work and never serves incoherent results — in-flight requests
+complete on the epoch they were dispatched on, held plans rebind, and a
+revalidated plan is *bit-identical* to one freshly lowered against the
+post-mutation index.
+"""
+import numpy as np
+import pytest
+
+from repro.api import SearchSpec
+from repro.index import IndexMutationError, build_ada_index
+from repro.plan import plan_spec
+from repro.serve.api import SearchRequest
+
+
+def _queries(small_db, nq=8, seed=2):
+    data, centers, w = small_db
+    rng = np.random.default_rng(seed)
+    qc = rng.choice(len(centers), size=nq, p=w)
+    return (centers[qc] + 0.3 * rng.normal(0, 1, (nq, centers.shape[1]))).astype(
+        np.float32
+    )
+
+
+def _toy(small_db, n=1200, k=5, num_samples=32):
+    data, _, _ = small_db
+    return build_ada_index(
+        data[:n], k=k, target_recall=0.9, m=8, ef_construction=60,
+        ef_cap=160, num_samples=num_samples,
+    )
+
+
+# --------------------------------------------------------------------------
+# delete / insert edge cases (typed, atomic)
+# --------------------------------------------------------------------------
+
+
+def test_empty_mutations_are_version_preserving_noops(small_db):
+    idx = _toy(small_db)
+    v0 = idx._graph_version
+    p0 = idx.plan(SearchSpec())
+    out = idx.insert(np.zeros((0, idx.raw_data.shape[1]), np.float32))
+    assert out.get("noop") is True
+    out = idx.delete(np.asarray([], dtype=np.int64))
+    assert out.get("noop") is True
+    assert idx._graph_version == v0  # no version bump
+    assert idx.epochs.version == v0  # no epoch published
+    assert idx.plan(SearchSpec()) is p0 and not p0.stale  # cache untouched
+
+
+def test_delete_out_of_range_raises(small_db):
+    idx = _toy(small_db)
+    v0 = idx._graph_version
+    with pytest.raises(IndexMutationError, match="out of range"):
+        idx.delete(np.asarray([0, idx.host_index.n + 5]))
+    with pytest.raises(IndexMutationError, match="out of range"):
+        idx.delete(np.asarray([-1]))
+    assert idx._graph_version == v0  # atomic: nothing was tombstoned
+
+
+def test_delete_already_tombstoned_raises(small_db):
+    idx = _toy(small_db)
+    idx.delete(np.asarray([3]))
+    v1 = idx._graph_version
+    with pytest.raises(IndexMutationError, match="tombstoned"):
+        idx.delete(np.asarray([3]))
+    # mixed batches fail atomically: the still-alive id survives
+    with pytest.raises(IndexMutationError, match="tombstoned"):
+        idx.delete(np.asarray([3, 4]))
+    assert idx._graph_version == v1
+    assert bool(idx.host_index.alive[4])
+
+
+def test_delete_below_k_raises(small_db):
+    idx = _toy(small_db, n=40, num_samples=8)
+    v0 = idx._graph_version
+    with pytest.raises(IndexMutationError, match="k="):
+        idx.delete(np.arange(36))  # would leave 4 alive rows < k=5
+    assert idx._graph_version == v0
+    q = _queries(small_db, nq=2, seed=3)
+    assert idx.query(q).ids.shape == (2, 5)  # index still serviceable
+
+
+def test_insert_shape_and_finite_validation(small_db):
+    idx = _toy(small_db)
+    v0 = idx._graph_version
+    with pytest.raises(IndexMutationError, match="expected"):
+        idx.insert(np.zeros((3, idx.raw_data.shape[1] + 1), np.float32))
+    bad = np.zeros((2, idx.raw_data.shape[1]), np.float32)
+    bad[1, 0] = np.nan
+    with pytest.raises(IndexMutationError, match="NaN"):
+        idx.insert(bad)
+    assert idx._graph_version == v0
+
+
+def test_delete_entry_point_is_legal(small_db):
+    idx = _toy(small_db)
+    ep = int(idx.host_index.entry)
+    idx.delete(np.asarray([ep]))
+    assert not bool(idx.host_index.alive[ep])
+    q = _queries(small_db, nq=8, seed=4)
+    res = idx.query(q)
+    assert res.ids.shape == (8, 5)
+    ids = np.asarray(res.ids)
+    assert (ids >= 0).all()          # searches still complete...
+    assert not (ids == ep).any()     # ...and never surface the dead entry
+
+
+def test_proxy_resample_when_all_samples_deleted(small_db):
+    idx = _toy(small_db, num_samples=8)
+    doomed = np.asarray(idx.sample_ids).copy()
+    idx.delete(doomed)
+    # the proxy set regenerated from survivors instead of going empty
+    assert len(idx.sample_ids) > 0
+    alive = idx.host_index.alive[: idx.host_index.n]
+    assert alive[np.asarray(idx.sample_ids)].all()
+    assert not np.isin(np.asarray(idx.sample_ids), doomed).any()
+    # the regenerated ground-truth table still drives calibrated planning
+    q = _queries(small_db, nq=4, seed=5)
+    assert idx.plan(SearchSpec()).search(q).ids.shape == (4, 5)
+
+
+# --------------------------------------------------------------------------
+# epoch manager contract
+# --------------------------------------------------------------------------
+
+
+def test_epoch_manager_publishes_and_retires(small_db):
+    idx = _toy(small_db)
+    data, _, _ = small_db
+    epochs = idx.epochs
+    v0 = epochs.version
+    assert v0 == idx._graph_version
+    pinned = epochs.pin()  # a consumer holds the pre-mutation snapshot
+    idx.insert(data[1200:1205])
+    idx.delete(np.asarray([7]))
+    assert epochs.version == idx._graph_version == v0 + 2
+    assert epochs.retired_versions == [v0, v0 + 1]
+    # the pinned epoch's arrays are untouched by the mutations
+    assert pinned.version == v0
+    assert pinned.alive_rows == 1200 and pinned.n == 1200
+    assert epochs.current.n == 1205 and epochs.current.alive_rows == 1204
+    d = epochs.as_dict()
+    assert d["version"] == v0 + 2 and d["published"] == 2
+    # publishing is strictly monotone
+    with pytest.raises(ValueError, match="monotone"):
+        epochs.publish(
+            version=v0,
+            graph=pinned.graph,
+            stats=pinned.stats,
+            table=pinned.table,
+            n=pinned.n,
+            alive_rows=pinned.alive_rows,
+        )
+
+
+# --------------------------------------------------------------------------
+# revalidated plan == freshly lowered plan (the acceptance property)
+# --------------------------------------------------------------------------
+
+
+def _run_plan(plan, q):
+    """Execute a plan over a batch through its mode's native surface."""
+    if plan.spec.mode == "streaming":
+        tickets = [plan.submit(row) for row in q]
+        by = {r.ticket.uid: r for r in plan.drain()}
+        assert sorted(by) == sorted(t.uid for t in tickets)
+        ids = np.stack([np.asarray(by[t.uid].ids) for t in tickets])
+        dists = np.stack([np.asarray(by[t.uid].dists) for t in tickets])
+        return ids, dists
+    res = plan.search(q)
+    return np.asarray(res.ids), np.asarray(res.dists)
+
+
+@pytest.mark.parametrize("seed", range(3))
+@pytest.mark.parametrize("mode", ["oneshot", "routed", "streaming"])
+def test_revalidated_plan_matches_fresh_plan(small_db, seed, mode):
+    """3-seed property: after insert+delete churn, a held (revalidated)
+    plan returns bit-identical ids *and* distances to a plan freshly
+    lowered against the post-mutation index — revalidation is invisible."""
+    idx = _toy(small_db)
+    data, _, _ = small_db
+    q = _queries(small_db, nq=6, seed=100 + seed)
+    spec = SearchSpec(mode=mode)
+    held = idx.plan(spec)
+    _run_plan(held, q)  # prove pre-mutation liveness, warm the executors
+
+    rng = np.random.default_rng(seed)
+    idx.insert(data[1200 : 1205 + seed])
+    idx.delete(np.sort(rng.choice(1200, size=4, replace=False)))
+
+    fresh = plan_spec(idx, spec)  # bypass the cache: lowered from scratch
+    a_ids, a_dists = _run_plan(held, q)
+    b_ids, b_dists = _run_plan(fresh, q)
+    np.testing.assert_array_equal(a_ids, b_ids)
+    np.testing.assert_array_equal(a_dists, b_dists)
+
+
+@pytest.mark.parametrize("seed", range(3))
+def test_streaming_mutation_between_submit_and_poll(small_db, seed):
+    """Mutating between ``submit()`` and ``poll()`` loses nothing: fenced
+    tickets complete on the pre-mutation epoch, later submissions bind the
+    new one, and every ticket reaches exactly one terminal status."""
+    idx = _toy(small_db)
+    data, _, _ = small_db
+    q = _queries(small_db, nq=4, seed=200 + seed)
+    plan = idx.plan(SearchSpec(mode="streaming"))
+    pre = [plan.submit(row) for row in q[:2]]
+    idx.delete(np.asarray([5 + seed]))  # mutation with tickets pending
+    post = [plan.submit(row) for row in q[2:]]
+    by = {r.ticket.uid: r for r in plan.drain()}
+    assert sorted(by) == sorted(t.uid for t in pre + post)
+    assert all(r.status in ("ok", "partial") for r in by.values())
+    (v_pre,) = {by[t.uid].stats.epoch for t in pre}
+    (v_post,) = {by[t.uid].stats.epoch for t in post}
+    assert v_post == v_pre + 1  # fenced on the old epoch, rebound for new
+    # nothing the fence dispatched can surface the deleted row
+    for t in post:
+        assert not (np.asarray(by[t.uid].ids) == 5 + seed).any()
+
+
+# --------------------------------------------------------------------------
+# the manual mutation seam
+# --------------------------------------------------------------------------
+
+
+def test_apply_mutation_seam_is_idempotent_for_registered(small_db):
+    idx = _toy(small_db)
+    data, _, _ = small_db
+    sched = idx.scheduler()
+    q = _queries(small_db, nq=1, seed=9)
+    out = sched.apply_mutation(lambda: idx.insert(data[1200:1203]))
+    assert isinstance(out, dict) and not out.get("noop")
+    # the index already absorbed its registered scheduler; the second
+    # absorb inside apply_mutation was a version-match no-op
+    assert sched.stats.mutations == 1
+    t = sched.submit(SearchRequest(query=q[0]))
+    (r,) = sched.drain()
+    assert r.ticket.uid == t.uid
+    assert r.stats.epoch == idx._graph_version

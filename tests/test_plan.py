@@ -149,7 +149,7 @@ def test_plan_cache_equal_specs_share_entry(small_index):
         small_index.plan(SearchSpec(), k=10)  # spec and kwargs are exclusive
 
 
-def test_plan_cache_invalidated_on_update(small_db):
+def test_plan_survives_update_by_revalidation(small_db):
     idx = _toy_index(small_db)
     q = _queries(small_db, nq=8, seed=17)
     p0 = idx.plan(SearchSpec())
@@ -157,23 +157,41 @@ def test_plan_cache_invalidated_on_update(small_db):
     assert idx.plan(SearchSpec()) is p0  # cached
 
     idx.insert(small_db[0][1200:1210])
-    p1 = idx.plan(SearchSpec())
-    assert p1 is not p0  # graph changed -> cache dropped
-    assert p0.stale and not p1.stale
-    with pytest.raises(RuntimeError, match="stale"):
-        p0.search(q)  # held plans refuse to run against a mutated index
-    with pytest.raises(RuntimeError, match="stale"):
-        p0.submit(q[0])
-    with pytest.raises(RuntimeError, match="stale"):
-        p0.step(force=True)  # the whole lifecycle surface refuses, not
-    with pytest.raises(RuntimeError, match="stale"):
-        p0.drain()           # just the entry points
-    assert p1.search(q).ids.shape == (8, 5)
+    # default on_mutation="revalidate": the mutation re-keys the held plan
+    # under the new shape signature — same object, already rebound
+    assert idx.plan(SearchSpec()) is p0
+    assert not p0.stale
+    assert p0.revalidate() == "fresh"  # nothing left to do
+    assert p0.search(q).ids.shape == (8, 5)
 
-    idx.delete(np.asarray([0, 1]))
-    p2 = idx.plan(SearchSpec())
-    assert p2 is not p1 and p1.stale
-    assert p2.search(q).ids.shape == (8, 5)
+    idx.delete(np.asarray([0, 1]))  # tombstone: shape signature unchanged
+    assert idx.plan(SearchSpec()) is p0 and not p0.stale
+    res = p0.search(q)
+    assert res.ids.shape == (8, 5)
+    assert not np.isin(np.asarray(res.ids), [0, 1]).any()  # dead rows masked
+
+
+def test_strict_plan_refuses_after_mutation(small_db):
+    idx = _toy_index(small_db)
+    q = _queries(small_db, nq=4, seed=17)
+    strict = idx.plan(SearchSpec(on_mutation="strict"))
+    strict.search(q)
+    idx.insert(small_db[0][1200:1205])
+    assert strict.stale  # the mutation could not revalidate it
+    with pytest.raises(RuntimeError, match="stale"):
+        strict.search(q)  # held strict plans refuse to run post-mutation
+    with pytest.raises(RuntimeError, match="stale"):
+        strict.submit(q[0])
+    with pytest.raises(RuntimeError, match="stale"):
+        strict.step(force=True)  # the whole lifecycle surface refuses, not
+    with pytest.raises(RuntimeError, match="stale"):
+        strict.drain()           # just the entry points
+    with pytest.raises(RuntimeError, match="strict"):
+        strict.revalidate()      # even explicit revalidation is refused
+    # ...and the mutation evicted it: same spec -> a fresh plan
+    p1 = idx.plan(SearchSpec(on_mutation="strict"))
+    assert p1 is not strict and not p1.stale
+    assert p1.search(q).ids.shape == (4, 5)
 
 
 # --------------------------------------------------------------------------

@@ -353,7 +353,7 @@ def test_legacy_shims_deleted():
     assert not hasattr(AdaEfIndex, "query_routed")
 
 
-def test_scheduler_invalidated_on_update(small_db):
+def test_scheduler_rebinds_on_update(small_db):
     from repro.index import build_ada_index
 
     data, _, _ = small_db
@@ -365,21 +365,26 @@ def test_scheduler_invalidated_on_update(small_db):
     assert idx.scheduler() is s0  # cached
     assert s0.router is idx.router()
     idx.insert(data[1200:1210])
-    s1 = idx.scheduler()
-    assert s1 is not s0  # graph changed -> scheduler rebuilt
-    assert s1.router is idx.router()
+    # mutation absorbs the registered scheduler in place: same object,
+    # rebound to the post-mutation router (cost models/stats survive)
+    assert idx.scheduler() is s0
+    assert s0.router is idx.router()
+    assert s0.stats.mutations == 1
     idx.delete(np.asarray([0, 1]))
     s2 = idx.scheduler()
-    assert s2 is not s1
-    # the rebuilt scheduler serves against the updated graph
+    assert s2 is s0 and s2.stats.mutations == 2
+    # the absorbed scheduler serves against the updated graph
     q = _queries(small_db, nq=4, seed=15)
     tickets = [s2.submit(SearchRequest(query=row)) for row in q]
     responses = s2.drain()
     assert len(responses) == len(tickets)
     assert all(r.ids.shape == (5,) for r in responses)
-    # installed configs survive invalidation-triggered rebuilds
-    idx.scheduler(SchedulerConfig(fill=16))
+    assert all(r.stats.epoch == idx._graph_version for r in responses)
+    # installing a config swaps the instance; the new one absorbs onward
+    s3 = idx.scheduler(SchedulerConfig(fill=16))
+    assert s3 is not s0
     idx.insert(data[1210:1215])
+    assert idx.scheduler() is s3
     assert idx.scheduler().cfg.fill == 16
 
 
@@ -707,13 +712,12 @@ def test_terminal_status_property_random_interleavings(
 
 
 # --------------------------------------------------------------------------
-# StalePlanError: poll()/submit() after insert()/delete() (regression)
+# mutation seam: index-registered schedulers absorb, orphans raise
 # --------------------------------------------------------------------------
 
 
-def test_stale_scheduler_raises_instead_of_losing_tickets(small_db):
+def test_mutation_under_live_scheduler_absorbed(small_db):
     from repro.index import build_ada_index
-    from repro.serve import StalePlanError
 
     data, _, _ = small_db
     idx = build_ada_index(
@@ -721,11 +725,49 @@ def test_stale_scheduler_raises_instead_of_losing_tickets(small_db):
         ef_cap=160, num_samples=32,
     )
     sched = idx.scheduler()
+    q = _queries(small_db, nq=3, seed=51)
+    t0 = sched.submit(SearchRequest(query=q[0]))
+    sched.flush()
+    t1 = sched.submit(SearchRequest(query=q[1]))  # one in flight, one queued
+    idx.insert(data[1200:1205])  # mutation under a live scheduler: absorbed
+    t2 = sched.submit(SearchRequest(query=q[2]))  # new work binds new epoch
+    sched.flush()
+    rs = sched.poll(block=True)
+    # every ticket reaches exactly one terminal status — nothing is lost
+    assert sorted(r.ticket.uid for r in rs) == sorted(
+        [t0.uid, t1.uid, t2.uid]
+    )
+    assert all(r.status in ("ok", "partial") for r in rs)
+    by = {r.ticket.uid: r for r in rs}
+    # the queued request was fenced: it completes on the snapshot it was
+    # admitted against, not the post-mutation one
+    assert by[t1.uid].stats.epoch == by[t0.uid].stats.epoch
+    assert by[t2.uid].stats.epoch == by[t0.uid].stats.epoch + 1
+    assert sched.stats.mutations == 1
+    assert sched.stats.fenced_requests >= 1
+    assert idx.scheduler() is sched  # absorb rebinds in place, no rebuild
+
+
+def test_orphaned_scheduler_raises_instead_of_losing_tickets(small_db):
+    from repro.index import build_ada_index
+    from repro.serve import AdaServeScheduler, StalePlanError
+
+    data, _, _ = small_db
+    idx = build_ada_index(
+        data[:1200], k=5, target_recall=0.9, m=8, ef_construction=60,
+        ef_cap=160, num_samples=32,
+    )
+    # hand-constructed around a version probe but with no router_probe and
+    # unknown to the index: there is no seam to rebind it through
+    sched = AdaServeScheduler(
+        idx.router(), default_target_recall=idx.target_recall,
+        version_probe=lambda: idx._graph_version,
+    )
     q = _queries(small_db, nq=2, seed=51)
     sched.submit(SearchRequest(query=q[0]))
     sched.flush()
     sched.submit(SearchRequest(query=q[1]))  # one in flight, one queued
-    idx.insert(data[1200:1205])  # mutation under a live scheduler
+    idx.insert(data[1200:1205])  # mutation under an orphaned scheduler
     with pytest.raises(StalePlanError, match="graph version"):
         sched.poll(block=True)
     with pytest.raises(StalePlanError, match="graph version"):
@@ -733,8 +775,13 @@ def test_stale_scheduler_raises_instead_of_losing_tickets(small_db):
     with pytest.raises(StalePlanError, match="graph version"):
         sched.step()
     assert issubclass(StalePlanError, RuntimeError)
-    # a *drained* held scheduler stays harmless after mutation: nothing to
-    # lose, poll just returns empty
+    # the manual seam recovers it: absorb against the fresh router, then
+    # the pinned in-flight/queued work drains and new submits succeed
+    sched.absorb_mutation(router=idx.router())
+    rs = sched.poll(block=True)
+    assert len(rs) == 2 and all(r.status in ("ok", "partial") for r in rs)
+    # a *drained* registered scheduler stays harmless after mutation:
+    # nothing to fence, poll just returns empty
     fresh = idx.scheduler()
     fresh.submit(SearchRequest(query=q[0]))
     fresh.drain()
