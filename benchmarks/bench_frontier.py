@@ -193,10 +193,12 @@ def run(k=10, ef=64, quick=True, smoke=False, batch_sizes=(8, 32, 128)):
     emit("frontier.planner_backend", 0.0, f"{backend} ({note})")
 
     out["meta"] = {"quick": bool(quick), "smoke": bool(smoke)}
-    # the workload is identical across quick/smoke, so the tracked file is
-    # simply overwritten with the freshest numbers
-    BENCH_JSON.write_text(json.dumps(out, indent=2, sort_keys=True) + "\n")
-    emit("frontier.bench_json", 0.0, f"wrote {BENCH_JSON.name}")
+    # smoke exercises the plumbing but must not clobber tracked numbers (the
+    # workload is identical, but smoke runs on loaded CI hosts whose timings
+    # are not worth tracking); *.smoke.json is gitignored
+    path = BENCH_JSON.with_suffix(".smoke.json") if smoke else BENCH_JSON
+    path.write_text(json.dumps(out, indent=2, sort_keys=True) + "\n")
+    emit("frontier.bench_json", 0.0, f"wrote {path.name}")
     return out
 
 

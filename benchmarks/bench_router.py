@@ -188,6 +188,42 @@ def run(k=10, target=0.95, quick=True, smoke=False):
         "d_recall_auto_vs_beam1": auto_vs_b1,
     }
 
+    # ---- quantized estimation tier (int8 traversal + fp32 re-rank) --------
+    from repro.quant import bytes_per_distance
+
+    plan_q = idx.plan(
+        SearchSpec(target_recall=target, mode="routed", precision="int8",
+                   overrides=SpecOverrides(router=RouterConfig(est_lmax=est_lmax)))
+    )
+    res_q, st_q, wall_q = _timed_routed(plan_q, queries)
+    nd_tot = int(np.asarray(res_q.ndist).sum())
+    ndq_tot = int(np.asarray(res_q.ndist_q).sum())
+    dim = data.shape[1]
+    bytes_q = (ndq_tot * bytes_per_distance(dim, "int8")
+               + (nd_tot - ndq_tot) * bytes_per_distance(dim, "fp32"))
+    bytes_f = out["routed"]["ndist_total"] * bytes_per_distance(dim, "fp32")
+    out["quant"] = _record(
+        "quant_int8", res_q, gt, wall_q, nq,
+        {
+            "stats": st_q.as_dict(),
+            "ndist_q_total": ndq_tot,
+            "traversal_bytes": bytes_q,
+            "fp32_routed_bytes": bytes_f,
+            "bytes_saved_frac": 1.0 - bytes_q / max(bytes_f, 1),
+            "d_recall_vs_routed": None,  # filled below
+            "precision": plan_q.explain()["precision"],
+        },
+    )
+    out["quant"]["d_recall_vs_routed"] = (
+        out["quant"]["recall_at_10"] - out["routed"]["recall_at_10"]
+    )
+    emit(
+        "router.quant_vs_routed", 0.0,
+        f"d_recall={out['quant']['d_recall_vs_routed']:+.4f} "
+        f"bytes_saved={out['quant']['bytes_saved_frac']:.3f} "
+        f"ndist_q={ndq_tot}/{nd_tot}",
+    )
+
     out["meta"] = {"quick": bool(quick), "smoke": bool(smoke), "target_recall": float(target)}
     # smoke exercises the plumbing but must not clobber tracked numbers, and a
     # quick run must not overwrite paper-scale (--full) numbers either

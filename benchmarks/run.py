@@ -243,6 +243,81 @@ def churn_gate() -> None:
           f"retired={idx.epochs.retired_versions}")
 
 
+def quant_gate() -> None:
+    """Smoke gate for the quantized estimation tier (PR 9): lower fp32 and
+    int8 plans over one toy index and assert the tier's contract — measured
+    recall within 0.005 of fp32 (the fp32 re-rank recovers the traversal's
+    quantization error), the estimation pass pays >= 3x fewer traversal
+    bytes, and ``plan.explain()`` reports the resolved precision, panel
+    dtype, and resident-byte split."""
+    import numpy as np
+
+    import jax.numpy as jnp
+
+    from repro.api import SearchSpec
+    from repro.index import (
+        brute_force_topk_chunked,
+        build_ada_index,
+        prepare_queries,
+        recall_at_k,
+    )
+    from repro.quant import bytes_per_distance
+
+    rng = np.random.default_rng(4)
+    centers = rng.normal(0, 1, (8, 24))
+    data = (centers[rng.integers(0, 8, 600)]
+            + 0.3 * rng.normal(0, 1, (600, 24))).astype(np.float32)
+    idx = build_ada_index(data, k=5, target_recall=0.9, m=6,
+                          ef_construction=40, ef_cap=64, num_samples=16)
+    queries = data[rng.integers(0, 600, 32)] + 0.05 * rng.normal(
+        0, 1, (32, 24)).astype(np.float32)
+    _, gt = brute_force_topk_chunked(
+        prepare_queries(jnp.asarray(queries), "cos_dist"), data, k=5
+    )
+    plan_f = idx.plan(SearchSpec(k=5, target_recall=0.9))
+    plan_q = idx.plan(SearchSpec(k=5, target_recall=0.9, precision="int8"))
+    res_f = plan_f.search(queries)
+    res_q = plan_q.search(queries)
+    rec_f = float(np.asarray(recall_at_k(jnp.asarray(res_f.ids),
+                                         jnp.asarray(gt))).mean())
+    rec_q = float(np.asarray(recall_at_k(jnp.asarray(res_q.ids),
+                                         jnp.asarray(gt))).mean())
+    assert rec_q >= rec_f - 0.005, (
+        f"quantized recall {rec_q:.4f} vs fp32 {rec_f:.4f}: re-rank failed "
+        "to recover the quantization error"
+    )
+    assert int(np.asarray(res_q.ndist_q).sum()) > 0, "int8 plan never quantized"
+    assert int(np.asarray(res_f.ndist_q).sum()) == 0, "fp32 plan quantized"
+
+    # explain() must attribute the decision
+    d = plan_q.explain()["precision"]
+    assert d["resolved"] == "int8" and d["panel_dtype"] == "int8", d
+    assert d["rerank_depth"] > 0, "re-rank depth not reported"
+    assert 0 < d["resident_bytes"]["quantized"] < d["resident_bytes"]["fp32"]
+
+    # estimation pass: traversal bytes down >= 3x (int8 rows are 4x smaller;
+    # the phase-A collection is fully quantized, so the ratio sits near 4)
+    r_f = idx.plan(SearchSpec(k=5, target_recall=0.9, mode="routed")).router
+    r_q = idx.plan(SearchSpec(k=5, target_recall=0.9, mode="routed",
+                              precision="int8")).router
+    _, st_f = r_f.estimate(queries, 0.9)
+    _, st_q = r_q.estimate(queries, 0.9)
+    dim = data.shape[1]
+    nd_f = int(np.asarray(st_f.ndist).sum())
+    nd_q = int(np.asarray(st_q.ndist).sum())
+    ndq = int(np.asarray(st_q.ndist_q).sum())
+    bytes_f = nd_f * bytes_per_distance(dim, "fp32")
+    bytes_q = (ndq * bytes_per_distance(dim, "int8")
+               + (nd_q - ndq) * bytes_per_distance(dim, "fp32"))
+    ratio = bytes_f / max(bytes_q, 1)
+    assert ratio >= 3.0, (
+        f"estimation bytes only {ratio:.2f}x down "
+        f"(fp32 {bytes_f} vs int8 {bytes_q}, ndist_q {ndq}/{nd_q})"
+    )
+    print(f"quant_gate,0,ok recall={rec_q:.4f} (fp32 {rec_f:.4f}) "
+          f"est_bytes_saved={ratio:.1f}x ndist_q={ndq}/{nd_q}")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--full", action="store_true", help="paper-scale (slow)")
@@ -290,7 +365,8 @@ def main() -> None:
     print("name,us_per_call,derived")
     failures = 0
     if args.smoke and not args.only:
-        for gate in (planner_gate, chaos_gate, obs_gate, churn_gate):
+        for gate in (planner_gate, chaos_gate, obs_gate, churn_gate,
+                     quant_gate):
             t0 = time.perf_counter()
             try:
                 gate()

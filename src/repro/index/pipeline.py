@@ -94,6 +94,15 @@ class AdaEfIndex:
         default_factory=dict, repr=False, compare=False
     )  # {ef: per-proxy recalls} shared by main + estimation-matched table
     #   builds (the probe searches are score-independent); cleared on updates
+    _qpanels: dict = dataclasses.field(
+        default_factory=dict, repr=False, compare=False
+    )  # {precision: QuantizedPanel} lazily calibrated quantized panels;
+    #   survives mutations (insert appends rows in place of a recalibration,
+    #   tombstone deletes leave the row panel untouched)
+    _qactive: Optional[str] = dataclasses.field(
+        default=None, repr=False, compare=False
+    )  # precision of the panel currently attached to ``graph`` (one at a
+    #   time: the DeviceGraph carries a single panel)
     _plans: dict = dataclasses.field(
         default_factory=dict, repr=False, compare=False
     )  # {(SearchSpec, shape-signature): ExecutionPlan}; dropped on updates
@@ -213,6 +222,40 @@ class AdaEfIndex:
     def query_static(self, queries, ef: int) -> SearchResult:
         return search(self.graph, jnp.asarray(queries), ef, self.search_cfg)
 
+    # ------------------------------------------------------- quantized panel
+    def ensure_panel(self, precision: str):
+        """Materialize (and attach) the quantized estimation panel.
+
+        Lazily calibrates an int8/fp8 :class:`repro.quant.QuantizedPanel`
+        over the prepared vector table, caches it per precision, and
+        attaches it to ``self.graph`` — from then on every consumer that
+        binds the graph (router tiers, scheduler dispatches, epochs, held
+        plans) carries the panel; fp32 searches ignore it.  Calibration is
+        *not* a mutation: same data, no version bump, no epoch publication
+        — only the router/scheduler caches are dropped so new dispatches
+        bind the panel-carrying graph.  ``fp32`` detaches.  Idempotent per
+        precision.  Returns the attached panel (or ``None`` for fp32).
+        """
+        from repro.quant import attach_panel, calibrate_panel
+
+        if precision == self._qactive:
+            from repro.quant import panel_of
+
+            return panel_of(self.graph)
+        if precision == "fp32":
+            self.graph = attach_panel(self.graph, None)
+            self._qactive = None
+            self._router = None
+            return None
+        panel = self._qpanels.get(precision)
+        if panel is None:
+            panel = calibrate_panel(self.graph.vectors, precision=precision)
+            self._qpanels[precision] = panel
+        self.graph = attach_panel(self.graph, panel)
+        self._qactive = precision
+        self._router = None  # next router()/scheduler() binds the new graph
+        return panel
+
     # -------------------------------------------------------------- updates
     def _noop_mutation(self) -> dict:
         """Empty insert/delete batch: nothing changed, so no version bump,
@@ -281,10 +324,36 @@ class AdaEfIndex:
             raise IndexMutationError("insert: rows contain NaN/Inf values")
         return self._mutate(lambda: self._insert_body(new_data, refresh_table))
 
+    def _refresh_panels(self, inserted_from: Optional[int] = None):
+        """Carry the quantized panels across a mutation.
+
+        ``inserted_from`` = row count before an insert: each cached panel
+        gets the appended (prepared) rows quantized under its frozen
+        calibration — append-exact per-row scales, no recalibration of the
+        resident codes (see :func:`repro.quant.append_rows`).  Tombstone
+        deletes pass ``None``: the row panel is untouched (rows stay
+        resident; ``g.alive`` masks them at admission).  Either way the
+        active panel is re-attached to the freshly rebuilt graph so the
+        post-mutation epoch snapshot carries it."""
+        if not self._qpanels:
+            return
+        from repro.quant import append_rows, attach_panel
+
+        if inserted_from is not None:
+            new_rows = self.graph.vectors[inserted_from:]
+            self._qpanels = {
+                p: append_rows(panel, new_rows)
+                for p, panel in self._qpanels.items()
+            }
+        if self._qactive is not None:
+            self.graph = attach_panel(self.graph, self._qpanels[self._qactive])
+
     def _insert_body(self, new_data: np.ndarray, refresh_table: bool) -> dict:
         t0 = time.perf_counter()
+        old_n = int(self.host_index.n)
         self.host_index.add(new_data)
         self.graph = device_graph(self.host_index.freeze())
+        self._refresh_panels(inserted_from=old_n)
         t_index = time.perf_counter() - t0
 
         t0 = time.perf_counter()
@@ -358,6 +427,7 @@ class AdaEfIndex:
         t0 = time.perf_counter()
         self.host_index.mark_deleted(ids)
         self.graph = device_graph(self.host_index.freeze())
+        self._refresh_panels()
         t_index = time.perf_counter() - t0
 
         t0 = time.perf_counter()
@@ -456,28 +526,37 @@ class AdaEfIndex:
         )
         return np.asarray(scores)
 
-    def _recall_probe(self):
+    def _recall_probe(self, precision: str = "fp32"):
         """``(ef, subset) -> recalls`` closure for :func:`build_ef_table` —
         always probes the *full-budget* search: the score axis is what an
         estimation-matched table changes, not the ef/recall relationship.
 
         Probes the whole sample batch per ef and memoizes it in
-        ``_probe_cache``: the adaptive ladder would otherwise recompile the
-        vmapped search per shrinking subset shape (so the original already
-        padded every probe to the full batch — same device work), and
-        per-proxy recall at a given ef is subset-independent, so the main
-        table build and any estimation-matched builds for lossy routers
-        share one set of searches instead of each paying the full ladder."""
+        ``_probe_cache`` keyed ``(ef, precision)``: the adaptive ladder
+        would otherwise recompile the vmapped search per shrinking subset
+        shape (so the original already padded every probe to the full batch
+        — same device work), and per-proxy recall at a given ef is
+        subset-independent, so the main table build and any
+        estimation-matched builds for lossy routers share one set of
+        searches instead of each paying the full ladder.  A non-fp32
+        ``precision`` probes the quantized search (panel traversal + fp32
+        re-rank) so a quantized router's table reflects the ef->recall
+        curve it will actually serve; quantized and fp32 builds coexist in
+        the one cache."""
         qs = jnp.asarray(self.raw_data[self.sample_ids])
         gt = jnp.asarray(self.sample_gt)
+        cfg = (
+            self.search_cfg
+            if precision == "fp32"
+            else dataclasses.replace(self.search_cfg, precision=precision)
+        )
 
         def recall_at_ef(ef: int, subset: np.ndarray) -> np.ndarray:
-            if int(ef) not in self._probe_cache:
-                res = search(self.graph, qs, int(ef), self.search_cfg)
-                self._probe_cache[int(ef)] = np.asarray(
-                    recall_at_k(res.ids, gt)
-                )
-            return self._probe_cache[int(ef)][subset]
+            key = (int(ef), precision)
+            if key not in self._probe_cache:
+                res = search(self.graph, qs, int(ef), cfg)
+                self._probe_cache[key] = np.asarray(recall_at_k(res.ids, gt))
+            return self._probe_cache[key][subset]
 
         return recall_at_ef
 
@@ -492,12 +571,14 @@ class AdaEfIndex:
         table's full 2-hop collections; scoring the proxies through the same
         truncated ``est_cfg``/``est_ada`` puts the table's score axis in the
         router's units, so ``ef_margin`` no longer has to compensate for the
-        bias.  Recall probing is unchanged (the search itself is not lossy).
+        bias.  Recall probing keeps the full search budget (the search
+        itself is not lossy) but inherits the router's scoring precision,
+        sharing the memoized probes with every same-precision build.
         """
         scores = self._proxy_scores(cfg=est_cfg, ada=est_ada)
         return build_ef_table(
             scores,
-            self._recall_probe(),
+            self._recall_probe(est_cfg.precision),
             target_recall=self.target_recall,
             ef_ladder=default_ef_ladder(self.k, ef_max=self.search_cfg.ef_cap),
         )

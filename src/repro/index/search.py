@@ -94,6 +94,13 @@ class DeviceGraph(NamedTuple):
     entry: Array      # () int32
     vectors: Array    # (n, d) float32 prepared
     alive: Array      # (n,) bool
+    # Optional quantized panel (repro.quant.attach_panel): int8/fp8 codes +
+    # scales for the estimation tier.  None fields are empty pytree nodes, so
+    # a panel-free graph jits exactly as before.
+    qcodes: Optional[Array] = None      # (n, d) int8 / fp8 codes
+    qrow_scale: Optional[Array] = None  # (n,) float32 per-row scale
+    qdim_scale: Optional[Array] = None  # (d,) float32 per-dim scale
+    qzero: Optional[Array] = None       # (d,) float32 per-dim zero-point
 
 
 def device_graph(g: HNSWGraph) -> DeviceGraph:
@@ -116,6 +123,9 @@ class SearchConfig:
     beam: int = 1                 # candidates popped + expanded per iteration
     use_distance_kernel: bool = False  # route frontier scoring through Pallas
     batch_hoisted: bool = False   # single batched loop instead of vmap(while)
+    precision: str = "fp32"       # estimation/frontier scoring: fp32|int8|fp8
+    #   (non-fp32 requires a graph with an attached quantized panel and adds
+    #    an fp32 re-rank of the final ef candidates before top-k emission)
 
     def iters(self) -> int:
         return self.max_iters if self.max_iters > 0 else 4 * self.ef_cap + 64
@@ -125,6 +135,8 @@ class SearchConfig:
             raise ValueError(f"k={self.k} > ef_cap={self.ef_cap}")
         if not 1 <= self.beam <= self.ef_cap:
             raise ValueError(f"beam={self.beam} not in [1, ef_cap={self.ef_cap}]")
+        if self.precision not in ("fp32", "int8", "fp8"):
+            raise ValueError(f"unknown precision {self.precision!r}")
 
 
 def auto_beam(ef: int, max_beam: int = 8) -> int:
@@ -162,6 +174,7 @@ class SearchState(NamedTuple):
     lgoal: Array     # () int32 collection goal (|2-hop(ep)| by default)
     stale: Array     # () int32 PiP staleness counter
     bound_prev: Array  # () float32 previous top-k bound (PiP)
+    ndist_q: Array   # () int32 quantized-tier distances (subset of ndist)
 
 
 class SearchResult(NamedTuple):
@@ -170,6 +183,8 @@ class SearchResult(NamedTuple):
     ndist: Array     # (B,) distance computations (the paper's cost proxy)
     iters: Array     # (B,)
     ef_used: Array   # (B,) effective ef at termination
+    ndist_q: Optional[Array] = None  # (B,) quantized-tier distances (None
+    #   when the producer predates / bypasses the quantized estimation tier)
 
 
 # --------------------------------------------------------------------------
@@ -182,6 +197,28 @@ def _gather_keys(g: DeviceGraph, q: Array, ids: Array, sign: float):
     safe = jnp.maximum(ids, 0)
     sims = g.vectors[safe] @ q
     vals = 1.0 - sims if sign > 0 else sims  # cos_dist vs similarity
+    keys = vals * 1.0 if sign > 0 else -vals
+    return jnp.where(ids >= 0, keys, INF), jnp.where(ids >= 0, vals, INF * sign)
+
+
+def _use_quant(g: DeviceGraph, cfg: "SearchConfig") -> bool:
+    """Frontier scoring goes through the quantized panel (trace-time switch)."""
+    return cfg.precision != "fp32" and g.qcodes is not None
+
+
+def _gather_keys_q(g: DeviceGraph, q: Array, ids: Array, sign: float):
+    """Quantized-panel analogue of :func:`_gather_keys` (per-query vmap path).
+
+    Dequantize-and-score in fp32 against the fp32 query — the batch-hoisted
+    loop instead routes through the fused int8 kernel with the query itself
+    quantized (``ops.frontier_keys_batch``); both land within the panel's
+    round-trip bound of the fp32 keys.
+    """
+    safe = jnp.maximum(ids, 0)
+    rows = g.qcodes[safe].astype(jnp.float32) * g.qrow_scale[safe][..., None]
+    rows = g.qzero[None, :] + g.qdim_scale[None, :] * rows
+    sims = rows @ q
+    vals = 1.0 - sims if sign > 0 else sims
     keys = vals * 1.0 if sign > 0 else -vals
     return jnp.where(ids >= 0, keys, INF), jnp.where(ids >= 0, vals, INF * sign)
 
@@ -344,14 +381,21 @@ def _expand(
     visited = s.visited.at[write_idx].set(True)
 
     ids_new = jnp.where(valid, nbrs, -1)
-    if cfg.use_distance_kernel:
+    quant = _use_quant(g, cfg)
+    if quant:
+        # quantized estimation tier: the fused int8 kernel is batch-only, so
+        # the per-query path scores via the jnp dequantize scorer
+        keys, _ = _gather_keys_q(g, q, ids_new, sign)
+    elif cfg.use_distance_kernel:
         keys = ops.frontier_keys(
             ids_new, q, g.vectors, metric=cfg.metric, use_kernel=True
         )
     else:
         keys, _ = _gather_keys(g, q, ids_new, sign)
     vals = keys * sign  # metric orientation (exact: sign is +-1)
-    ndist = s.ndist + jnp.sum(valid).astype(jnp.int32)
+    nnew = jnp.sum(valid).astype(jnp.int32)
+    ndist = s.ndist + nnew
+    ndist_q = s.ndist_q + nnew if quant else s.ndist_q
 
     # admission: key < W[ef_dyn - 1]  (inf while W not full  => always admit)
     admit_c = valid & (keys < bound)
@@ -382,6 +426,7 @@ def _expand(
         ri=ri,
         visited=visited,
         ndist=ndist,
+        ndist_q=ndist_q,
         iters=s.iters + 1,
         dbuf=dbuf,
         dcount=dcount,
@@ -452,7 +497,16 @@ def _expand_batch(
     visited = s.visited.at[rows[:, None], write_idx].set(True)
 
     ids_new = jnp.where(valid, nbrs, -1)
-    if cfg.use_distance_kernel:
+    quant = _use_quant(g, cfg)
+    if quant:
+        # quantized estimation tier: same compaction + ladder as the fp32
+        # batch path, scored through the int8 kernel (or its jnp oracle)
+        keys = ops.frontier_keys_batch(
+            ids_new, qs, g.vectors, metric=cfg.metric,
+            use_kernel=cfg.use_distance_kernel,
+            qpanel=(g.qcodes, g.qrow_scale, g.qdim_scale, g.qzero),
+        )
+    elif cfg.use_distance_kernel:
         keys = ops.frontier_keys_batch(
             ids_new, qs, g.vectors, metric=cfg.metric, use_kernel=True
         )
@@ -461,7 +515,9 @@ def _expand_batch(
             lambda ids1, q1: _gather_keys(g, q1, ids1, sign)[0]
         )(ids_new, qs)
     vals = keys * sign
-    ndist = s.ndist + jnp.sum(valid, axis=-1).astype(jnp.int32)
+    nnew = jnp.sum(valid, axis=-1).astype(jnp.int32)
+    ndist = s.ndist + nnew
+    ndist_q = s.ndist_q + nnew if quant else s.ndist_q
 
     admit_c = valid & (keys < bound[:, None])
     admit_w = admit_c & g.alive[jnp.maximum(nbrs, 0)]
@@ -495,6 +551,7 @@ def _expand_batch(
         ri=ri,
         visited=visited,
         ndist=ndist,
+        ndist_q=ndist_q,
         iters=s.iters + active.astype(jnp.int32),
         dbuf=dbuf,
         dcount=dcount,
@@ -619,6 +676,7 @@ def _init_state(
         lgoal=_two_hop_goal(g, ep, hops, lmax),
         stale=jnp.asarray(0, jnp.int32),
         bound_prev=jnp.asarray(INF, jnp.float32),
+        ndist_q=jnp.asarray(0, jnp.int32),
     )
 
 
@@ -633,6 +691,30 @@ def _extract(s: SearchState, cfg: SearchConfig, sign: float) -> SearchResult:
         ndist=s.ndist,
         iters=s.iters,
         ef_used=s.ef_dyn,
+        ndist_q=s.ndist_q,
+    )
+
+
+def _rerank_fp32(g: DeviceGraph, q: Array, s: SearchState, sign: float) -> SearchState:
+    """Multi-stage re-rank: fp32 re-score + re-sort of the result heap.
+
+    Closes the quantized search: traversal admitted W under approximate int8
+    keys, so the final ef candidates (the whole W array — re-rank depth = the
+    tier's ``ef_cap``) are re-scored against the fp32 vector panel and
+    re-sorted before top-k emission.  The fp32 re-scores count toward
+    ``ndist`` (they read full-precision rows) but not ``ndist_q``.  Shape-
+    polymorphic over a single ``(W,)`` state and a batched ``(B, W)`` state.
+    """
+    safe = jnp.maximum(s.ri, 0)
+    sims = jnp.einsum("...wd,...d->...w", g.vectors[safe], q)
+    keys = (1.0 - sims) if sign > 0 else -sims
+    live = (s.ri >= 0) & jnp.isfinite(s.rk)
+    keys = jnp.where(live, keys, INF)
+    rk, ri = jax.lax.sort((keys, s.ri), num_keys=1)
+    return s._replace(
+        rk=rk,
+        ri=ri,
+        ndist=s.ndist + jnp.sum(live, axis=-1).astype(jnp.int32),
     )
 
 
@@ -653,6 +735,7 @@ def search(g: DeviceGraph, queries: Array, ef: Array, cfg: SearchConfig) -> Sear
     ef_b = jnp.broadcast_to(jnp.asarray(ef, jnp.int32), queries.shape[:1])
     ef_b = jnp.clip(ef_b, cfg.k, cfg.ef_cap)
 
+    quant = _use_quant(g, cfg)
     if cfg.batch_hoisted:
         s = jax.vmap(lambda q, e: _init_state(g, q, cfg, e, lmax=1, hops=1))(
             queries, ef_b
@@ -660,6 +743,8 @@ def search(g: DeviceGraph, queries: Array, ef: Array, cfg: SearchConfig) -> Sear
         s = _run_hoisted(
             g, queries, s, cfg, sign, collect=False, lmax=1, patience=True
         )
+        if quant:
+            s = _rerank_fp32(g, queries, s, sign)
         return _extract(s, cfg, sign)
 
     def one(q, ef1):
@@ -683,6 +768,8 @@ def search(g: DeviceGraph, queries: Array, ef: Array, cfg: SearchConfig) -> Sear
             return s2
 
         s = jax.lax.while_loop(cond, body, s)
+        if quant:
+            s = _rerank_fp32(g, q, s, sign)
         return _extract(s, cfg, sign)
 
     return jax.vmap(one)(queries, ef_b)
@@ -822,10 +909,13 @@ def _phase_b_batch(
     dynamically through ``ef_dyn``."""
     sign = key_sign(cfg.metric)
     lmax = states.dbuf.shape[-1]
+    quant = _use_quant(g, cfg)
 
     if cfg.batch_hoisted:
         s = states._replace(ef_dyn=ef.astype(jnp.int32))
         s = _run_hoisted(g, queries, s, cfg, sign, collect=False, lmax=lmax)
+        if quant:
+            s = _rerank_fp32(g, queries, s, sign)
         return _extract(s, cfg, sign)._replace(ef_used=ef)
 
     def one(s: SearchState, q, ef1):
@@ -838,6 +928,8 @@ def _phase_b_batch(
             return _expand(g, q, s, cfg, sign, collect=False, lmax=lmax)
 
         s = jax.lax.while_loop(cond, body, s)
+        if quant:
+            s = _rerank_fp32(g, q, s, sign)
         return _extract(s, cfg, sign)
 
     res = jax.vmap(one)(states, queries, ef)

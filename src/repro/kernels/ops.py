@@ -19,6 +19,7 @@ from .flash_attention import decode_attention as _decode_kernel
 from .flash_attention import flash_attention as _flash_kernel
 from .frontier import frontier_batch_distance as _frontier_batch_kernel
 from .frontier import frontier_distance as _frontier_kernel
+from .frontier_q import frontier_batch_distance_q as _frontier_batch_q_kernel
 from .qform import quadratic_form as _qform_kernel
 from .tiling import round_up  # noqa: F401  (re-export: the shared helper)
 
@@ -83,7 +84,8 @@ def compact_frontier(ids: Array):
 
 def frontier_keys_batch(ids, q, vectors, *, metric: str = "cos_dist",
                         use_kernel: bool = False,
-                        interpret: Optional[bool] = None) -> Array:
+                        interpret: Optional[bool] = None,
+                        qpanel=None) -> Array:
     """Cross-query masked frontier keys for the batch-hoisted search loop.
 
     ``ids`` (B, F) gathered candidate ids (-1 = padded / visited / done
@@ -96,11 +98,36 @@ def frontier_keys_batch(ids, q, vectors, *, metric: str = "cos_dist",
     sink to the tail and contribute no fresh gather rows, their panel slots
     re-read row 0), and scored as **one** ``(B*F, d) x (d, B)`` MXU matmul
     with the per-row owner select fused into the kernel epilogue.
+
+    ``qpanel`` routes scoring through the quantized estimation tier: a
+    ``(codes, row_scale, dim_scale, zero)`` tuple (the
+    :class:`repro.quant.QuantizedPanel` fields) scored by the int8 Pallas
+    kernel when ``use_kernel`` and the codes are int8, else by the quantized
+    jnp oracle — the same pallas→interpret→oracle ladder as the fp32 path,
+    and both rungs share the query-quantization math so a mid-flight
+    fallback stays bit-comparable.
     """
     b, f = ids.shape
     flat = ids.reshape(-1).astype(jnp.int32)
     compact_ids, owner_slots, dest, nvalid = compact_frontier(flat)
     owners = owner_slots // f  # owning query of each compacted row
+    if qpanel is not None:
+        from repro.quant.calibrate import QuantizedPanel, quantize_queries
+
+        panel = QuantizedPanel(*qpanel)
+        q_codes, q_scale, corr = quantize_queries(panel, q)
+        if use_kernel and panel.codes.dtype == jnp.int8:
+            keys_c = _frontier_batch_q_kernel(
+                compact_ids, owners, nvalid, q_codes, q_scale, corr,
+                panel.codes, panel.row_scale, metric=metric,
+                interpret=(not _ON_TPU) if interpret is None else interpret,
+            )
+        else:
+            keys_c = ref.frontier_batch_q_ref(
+                compact_ids, owners, q_codes, q_scale, corr,
+                panel.codes, panel.row_scale, metric=metric,
+            )
+        return keys_c[dest].reshape(b, f)
     if use_kernel:
         keys_c = _frontier_batch_kernel(
             compact_ids, owners, nvalid, q, vectors, metric=metric,

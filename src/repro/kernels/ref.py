@@ -56,6 +56,38 @@ def frontier_batch_ref(
     return jnp.where(ids >= 0, keys, jnp.inf)
 
 
+def frontier_batch_q_ref(
+    ids: Array,
+    owners: Array,
+    q_codes: Array,
+    q_scale: Array,
+    corr: Array,
+    codes: Array,
+    row_scale: Array,
+    *,
+    metric: str = "cos_dist",
+) -> Array:
+    """Quantized cross-query frontier keys over a flat row panel.
+
+    Semantic ground truth of :func:`repro.kernels.frontier_q.
+    frontier_batch_distance_q`, sharing its factored inner product
+
+        sim = corr_b + row_scale[i] * q_scale_b * (q_codes_b · codes_i)
+
+    so kernel and oracle sum the same exact small integers in fp32 (bit-
+    comparable while ``d * 127^2 < 2^24``).  ``codes`` may be int8 or fp8
+    (the fp8 path always scores here — the Pallas kernel is int8-only).
+    """
+    safe = jnp.maximum(ids, 0)
+    ow = jnp.clip(owners, 0, q_codes.shape[0] - 1)
+    rows = codes[safe].astype(jnp.float32)                          # (R, d)
+    qo = q_codes[ow].astype(jnp.float32)                            # (R, d)
+    raw = jnp.einsum("rd,rd->r", rows, qo)
+    sims = raw * row_scale[safe] * q_scale[ow] + corr[ow]
+    keys = (1.0 - sims) if metric == "cos_dist" else -sims
+    return jnp.where(ids >= 0, keys, jnp.inf)
+
+
 def qform_ref(q: Array, sigma: Array) -> Array:
     """Quadratic form q Sigma q^T, batched: q (B, d), sigma (d, d) -> (B,)."""
     q = q.astype(jnp.float32)

@@ -62,6 +62,8 @@ def oracle_topk(graph, queries: np.ndarray, cfg, ef: Optional[int] = None):
         use_distance_kernel=False,
         ef_cap=int(ef or cfg.ef_cap),
         patience=0,
+        precision="fp32",  # quantized plans audit against the fp32 oracle:
+        #   the reference must not share the quantization error under test
     )
     q = np.atleast_2d(np.asarray(queries))
     ef_arr = jnp.full((q.shape[0],), ocfg.ef_cap, jnp.int32)

@@ -167,6 +167,27 @@ def plan_spec(index, spec: SearchSpec) -> "ExecutionPlan":
         cfg = dataclasses.replace(cfg, batch_hoisted=True)
     cfg = dataclasses.replace(cfg, use_distance_kernel=use_kernel)
 
+    # quantized estimation tier: a pinned search config owns precision
+    # outright; otherwise the spec's request lowers here.  Materializing the
+    # panel attaches it to the index graph, so every executor this plan
+    # builds (router tiers, schedulers, epochs) carries it transparently.
+    precision = ov.search.precision if ov.search is not None else spec.precision
+    if precision != "fp32":
+        from repro.quant import supported_precisions
+
+        if precision not in supported_precisions():
+            notes.append(
+                f"precision {precision} unsupported in this jax build -> fp32"
+            )
+            precision = "fp32"
+        else:
+            index.ensure_panel(precision)
+            notes.append(
+                f"quantized estimation tier: {precision} panel, "
+                "fp32 re-rank of the final ef candidates"
+            )
+    cfg = dataclasses.replace(cfg, precision=precision)
+
     ada = ov.ada if ov.ada is not None else index.ada_cfg
     if ov.router is not None:
         rcfg = ov.router
@@ -494,6 +515,7 @@ class ExecutionPlan:
             ndist=np.asarray([r.ndist for r in ordered], np.int32),
             iters=np.asarray([r.iters for r in ordered], np.int32),
             ef_used=np.asarray([r.ef_used for r in ordered], np.int32),
+            ndist_q=np.asarray([r.ndist_q for r in ordered], np.int32),
         )
         if not with_stats:
             return out
@@ -626,6 +648,29 @@ class ExecutionPlan:
             dispatch = (
                 "ref.frontier_batch_ref" if cfg.batch_hoisted else "_gather_keys"
             )
+        from repro.quant import graph_resident_bytes, panel_of
+
+        quantized = cfg.precision != "fp32"
+        panel = panel_of(router.graph)
+        if quantized:
+            if cfg.use_distance_kernel and cfg.batch_hoisted:
+                frontier = frontier.replace("pallas", "pallas-int8")
+            dispatch = (
+                "ops.frontier_keys_batch[qpanel]"
+                if cfg.batch_hoisted
+                else "_gather_keys_q"
+            )
+        precision_d = {
+            "requested": self.spec.precision,
+            "resolved": cfg.precision,
+            "panel_dtype": (
+                str(np.dtype(panel.codes.dtype)) if panel is not None else "float32"
+            ),
+            "resident_bytes": graph_resident_bytes(router.graph),
+            # fp32 re-rank depth = the W capacity of the tier a query lands
+            # on (its ef); cfg.ef_cap is the cross-tier maximum
+            "rerank_depth": cfg.ef_cap if quantized else 0,
+        }
         d = {
             "spec": self.spec.as_dict(),
             "mode": self.mode,
@@ -644,6 +689,7 @@ class ExecutionPlan:
                 ),
             },
             "kernels": {"frontier": frontier, "dispatch": dispatch},
+            "precision": precision_d,
             "k": {"index": self._index.k, "request": self.k},
             "target_recall": self.target_recall,
             "deadline_s": self.deadline_s,
@@ -724,6 +770,12 @@ class ExecutionPlan:
             f"lossless={d['estimation']['lossless']} "
             f"matched_table={d['estimation']['matched_table']} "
             f"ef_margin={d['estimation']['ef_margin']}",
+            f"  precision: {self.spec.precision}->{cfg.precision} "
+            f"panel={precision_d['panel_dtype']} "
+            f"rerank_depth={precision_d['rerank_depth']} resident_bytes="
+            + " ".join(
+                f"{k}={v}" for k, v in precision_d["resident_bytes"].items()
+            ),
             f"  tiers: {tiers}  (pad=pow2 min_shape={d['pad']['min_shape']})",
             f"  scheduler: fill={self.scheduler_cfg.fill} "
             f"est_wait_s={self.scheduler_cfg.est_wait_s} "

@@ -1,0 +1,46 @@
+"""Quantized estimation tier: panel calibration + multi-stage re-rank support.
+
+See :mod:`repro.quant.calibrate` for the quantization scheme and
+:mod:`repro.kernels.frontier_q` for the int8 Pallas scorer it feeds.
+"""
+from .calibrate import (
+    PRECISION_FP32,
+    PRECISION_FP8,
+    PRECISION_INT8,
+    PRECISIONS,
+    QuantizedPanel,
+    append_rows,
+    attach_panel,
+    bytes_per_distance,
+    calibrate_panel,
+    dequantize_panel,
+    fp8_dtype,
+    graph_resident_bytes,
+    panel_bytes,
+    panel_of,
+    panel_precision,
+    quantize_queries,
+    roundtrip_bound,
+    supported_precisions,
+)
+
+__all__ = [
+    "PRECISION_FP32",
+    "PRECISION_FP8",
+    "PRECISION_INT8",
+    "PRECISIONS",
+    "QuantizedPanel",
+    "append_rows",
+    "attach_panel",
+    "bytes_per_distance",
+    "calibrate_panel",
+    "dequantize_panel",
+    "fp8_dtype",
+    "graph_resident_bytes",
+    "panel_bytes",
+    "panel_of",
+    "panel_precision",
+    "quantize_queries",
+    "roundtrip_bound",
+    "supported_precisions",
+]

@@ -1,0 +1,276 @@
+"""Quantized vector panels for the estimation tier (multi-stage re-rank).
+
+The phase-A estimation pass and the coarse frontier scoring inside phase B
+exist only to *rank* candidates — they never emit final neighbors — so they
+do not need fp32 distance bandwidth.  This module calibrates an immutable
+:class:`QuantizedPanel` over the database panel:
+
+    x[i, j]  ≈  zero[j] + dim_scale[j] * row_scale[i] * codes[i, j]
+
+- ``zero`` (per-dimension zero-point) centers each dimension (all-zeros in
+  the symmetric default, the per-dim mean in asymmetric mode),
+- ``dim_scale`` (per-dimension scale) normalizes dimensions to a comparable
+  range so one int8 grid covers skewed per-dim distributions,
+- ``row_scale`` (per-row scale) absorbs per-vector magnitude, which makes
+  the scheme **append-exact**: a row inserted after calibration gets its own
+  ``row_scale`` from the frozen ``zero``/``dim_scale``, so incremental
+  re-quantization touches only the appended rows and never clips.
+
+Scoring folds cleanly onto an int8 MXU matmul: with the query pre-scaled by
+``dim_scale`` and itself quantized (``q' = q * dim_scale ≈ q_scale * q_codes``),
+
+    q · x̂[i]  =  q · zero  +  row_scale[i] * q_scale * (q_codes · codes[i])
+
+so the inner product is a pure ``int8 x int8 -> fp32`` contraction with a
+per-row scale + per-query (scale, correction) epilogue — exactly the shape
+:mod:`repro.kernels.frontier_q` implements.  ``int8`` is the default;
+``fp8`` (e4m3) is available where the installed jax exposes the dtype and
+runs through the jnp reference scorer (the Pallas kernel is int8-only).
+
+Everything here is plain jnp on immutable arrays; the panel is a pytree
+(NamedTuple of arrays) so it rides inside :class:`DeviceGraph` snapshots and
+``EpochManager`` epochs without special handling.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+PRECISION_FP32 = "fp32"
+PRECISION_INT8 = "int8"
+PRECISION_FP8 = "fp8"
+PRECISIONS = (PRECISION_FP32, PRECISION_INT8, PRECISION_FP8)
+
+_EPS = 1e-12
+_INT8_MAX = 127.0
+
+
+def fp8_dtype():
+    """The fp8 storage dtype, or None when this jax build lacks it."""
+    return getattr(jnp, "float8_e4m3fn", None)
+
+
+def supported_precisions() -> Tuple[str, ...]:
+    """Quantized precisions this environment can actually calibrate."""
+    out = [PRECISION_FP32, PRECISION_INT8]
+    if fp8_dtype() is not None:
+        out.append(PRECISION_FP8)
+    return tuple(out)
+
+
+class QuantizedPanel(NamedTuple):
+    """Immutable quantized database panel (see module docstring for the
+    dequantization identity).  ``codes.dtype`` carries the precision."""
+
+    codes: Array       # (n, d) int8 (or fp8) codes
+    row_scale: Array   # (n,) float32 per-row scale
+    dim_scale: Array   # (d,) float32 per-dimension scale
+    zero: Array        # (d,) float32 per-dimension zero-point
+
+    @property
+    def n(self) -> int:
+        return self.codes.shape[0]
+
+    @property
+    def d(self) -> int:
+        return self.codes.shape[1]
+
+
+def panel_precision(panel: Optional[QuantizedPanel]) -> str:
+    if panel is None:
+        return PRECISION_FP32
+    if panel.codes.dtype == jnp.int8:
+        return PRECISION_INT8
+    return PRECISION_FP8
+
+
+def _encode_rows(
+    x: Array, zero: Array, dim_scale: Array, precision: str
+) -> Tuple[Array, Array]:
+    """Quantize rows against frozen (zero, dim_scale); returns (codes,
+    row_scale).  Per-row scales are computed from the rows themselves, so
+    this is exact for calibration rows and appended rows alike (no clip)."""
+    y = (x - zero[None, :]) / dim_scale[None, :]
+    if precision == PRECISION_INT8:
+        row_scale = jnp.maximum(jnp.abs(y).max(axis=1), _EPS) / _INT8_MAX
+        codes = jnp.clip(
+            jnp.round(y / row_scale[:, None]), -_INT8_MAX, _INT8_MAX
+        ).astype(jnp.int8)
+        return codes, row_scale.astype(jnp.float32)
+    dt = fp8_dtype()
+    if dt is None:
+        raise ValueError(
+            "fp8 panels need a jax build with float8_e4m3fn; "
+            "use precision='int8'"
+        )
+    # fp8 e4m3 covers [-448, 448] with best resolution near 1: normalize
+    # rows into [-1, 1] so every element sits in the dense mantissa range.
+    row_scale = jnp.maximum(jnp.abs(y).max(axis=1), _EPS)
+    codes = (y / row_scale[:, None]).astype(dt)
+    return codes, row_scale.astype(jnp.float32)
+
+
+def calibrate_panel(
+    vectors: Array, *, precision: str = PRECISION_INT8, symmetric: bool = True
+) -> QuantizedPanel:
+    """Calibrate a quantized panel over the (prepared) database vectors.
+
+    ``symmetric=False`` centers each dimension on its mean (asymmetric
+    zero-point) — better code utilization for uncentered data at the cost of
+    one per-query correction term in the scorer (computed automatically).
+    """
+    if precision not in (PRECISION_INT8, PRECISION_FP8):
+        raise ValueError(
+            f"precision={precision!r} not in ('int8', 'fp8') "
+            "(fp32 needs no panel)"
+        )
+    x = jnp.asarray(vectors, jnp.float32)
+    if x.ndim != 2 or x.shape[0] == 0:
+        raise ValueError(f"expected a nonempty (n, d) panel, got {x.shape}")
+    zero = (
+        jnp.zeros((x.shape[1],), jnp.float32)
+        if symmetric
+        else x.mean(axis=0).astype(jnp.float32)
+    )
+    dim_scale = jnp.maximum(
+        jnp.abs(x - zero[None, :]).max(axis=0), _EPS
+    ).astype(jnp.float32)
+    codes, row_scale = _encode_rows(x, zero, dim_scale, precision)
+    return QuantizedPanel(
+        codes=codes, row_scale=row_scale, dim_scale=dim_scale, zero=zero
+    )
+
+
+def append_rows(panel: QuantizedPanel, new_vectors: Array) -> QuantizedPanel:
+    """Quantize appended rows against the panel's frozen calibration.
+
+    This is the incremental-insert path: only the appended rows are encoded
+    (each gets its own ``row_scale``, so nothing clips even when new rows
+    fall outside the calibration range), and the existing codes are shared
+    by reference — an epoch snapshot taken before the insert still sees its
+    own exact panel.
+    """
+    x = jnp.asarray(new_vectors, jnp.float32)
+    if x.ndim != 2 or x.shape[1] != panel.d:
+        raise ValueError(
+            f"appended rows {x.shape} do not match panel dim {panel.d}"
+        )
+    if x.shape[0] == 0:
+        return panel
+    codes, row_scale = _encode_rows(
+        x, panel.zero, panel.dim_scale, panel_precision(panel)
+    )
+    return panel._replace(
+        codes=jnp.concatenate([panel.codes, codes]),
+        row_scale=jnp.concatenate([panel.row_scale, row_scale]),
+    )
+
+
+def dequantize_panel(panel: QuantizedPanel) -> Array:
+    """Reconstruct the fp32 panel (the oracle the parity tests score)."""
+    y = panel.codes.astype(jnp.float32) * panel.row_scale[:, None]
+    return panel.zero[None, :] + panel.dim_scale[None, :] * y
+
+
+def roundtrip_bound(panel: QuantizedPanel) -> Array:
+    """Elementwise |x - dequant(x)| upper bound for int8 panels: half a code
+    step, ``0.5 * dim_scale[j] * row_scale[i]``."""
+    return 0.5 * panel.row_scale[:, None] * panel.dim_scale[None, :]
+
+
+def quantize_queries(
+    panel: QuantizedPanel, queries: Array
+) -> Tuple[Array, Array, Array]:
+    """Quantize a (B, d) query block for scoring against ``panel``.
+
+    Returns ``(q_codes, q_scale, corr)`` with
+    ``q · x̂[i] ≈ corr_b + row_scale[i] * q_scale_b * (q_codes_b · codes_i)``.
+    For fp8 panels the query stays fp32 (``q_codes`` fp32, ``q_scale`` the
+    identity fold) — fp8 scoring runs through the jnp reference anyway.
+    """
+    q = jnp.asarray(queries, jnp.float32)
+    qp = q * panel.dim_scale[None, :]
+    corr = q @ panel.zero
+    if panel_precision(panel) == PRECISION_INT8:
+        q_scale = jnp.maximum(jnp.abs(qp).max(axis=1), _EPS) / _INT8_MAX
+        q_codes = jnp.clip(
+            jnp.round(qp / q_scale[:, None]), -_INT8_MAX, _INT8_MAX
+        ).astype(jnp.int8)
+        return q_codes, q_scale.astype(jnp.float32), corr
+    return qp, jnp.ones((q.shape[0],), jnp.float32), corr
+
+
+# ---------------------------------------------------------------------------
+# resident-byte accounting (the memory lever the ROADMAP item is about)
+# ---------------------------------------------------------------------------
+
+
+def _nbytes(a: Optional[Array]) -> int:
+    return 0 if a is None else int(a.size) * a.dtype.itemsize
+
+
+def panel_bytes(panel: Optional[QuantizedPanel]) -> int:
+    """Resident bytes of the quantized panel (codes + all scales)."""
+    if panel is None:
+        return 0
+    return sum(_nbytes(a) for a in panel)
+
+
+def bytes_per_distance(d: int, precision: str) -> int:
+    """Vector bytes touched per distance evaluation at a given precision."""
+    itemsize = {PRECISION_FP32: 4, PRECISION_INT8: 1}.get(precision, 1)
+    return int(d) * itemsize
+
+
+def graph_resident_bytes(graph) -> dict:
+    """Per-panel resident bytes of a :class:`DeviceGraph`-shaped snapshot:
+    the fp32 vector panel, the quantized panel (0 when absent), and the
+    graph structure arrays (adjacency / entry / alive)."""
+    return {
+        "fp32": _nbytes(graph.vectors),
+        "quantized": sum(
+            _nbytes(getattr(graph, f, None))
+            for f in ("qcodes", "qrow_scale", "qdim_scale", "qzero")
+        ),
+        "graph": (
+            _nbytes(graph.base_adj)
+            + _nbytes(graph.upper_adj)
+            + _nbytes(graph.entry)
+            + _nbytes(graph.alive)
+        ),
+    }
+
+
+def attach_panel(graph, panel: Optional[QuantizedPanel]):
+    """Bind a quantized panel onto a :class:`DeviceGraph` snapshot (returns
+    a new graph tuple sharing every array).  ``panel=None`` detaches."""
+    if panel is None:
+        return graph._replace(
+            qcodes=None, qrow_scale=None, qdim_scale=None, qzero=None
+        )
+    if panel.n != graph.vectors.shape[0]:
+        raise ValueError(
+            f"panel rows {panel.n} != graph rows {graph.vectors.shape[0]}"
+        )
+    return graph._replace(
+        qcodes=panel.codes,
+        qrow_scale=panel.row_scale,
+        qdim_scale=panel.dim_scale,
+        qzero=panel.zero,
+    )
+
+
+def panel_of(graph) -> Optional[QuantizedPanel]:
+    """The quantized panel bound to a graph snapshot, or None."""
+    if getattr(graph, "qcodes", None) is None:
+        return None
+    return QuantizedPanel(
+        codes=graph.qcodes,
+        row_scale=graph.qrow_scale,
+        dim_scale=graph.qdim_scale,
+        zero=graph.qzero,
+    )

@@ -146,6 +146,8 @@ class RequestStats:
     dispatch_batch: int = 0        # real rows sharing the drain dispatch
     padded_to: int = 0             # pow2 shape the drain was padded to
     ndist: int = 0                 # cumulative est + search cost
+    ndist_q: int = 0               # quantized-tier distances within ndist
+    #   (0 for fp32 plans; the fp32 re-rank and descent are in ndist only)
     trigger: str = ""              # what drained the bucket:
     #   fill | deadline | flush | idle (work-conserving drain) | partial
     status: str = ""               # terminal status (mirrors SearchResponse)
@@ -218,3 +220,4 @@ class SearchResponse:
     ef_used: int                   # effective ef the tier search ran at
     stats: RequestStats
     status: str = STATUS_OK
+    ndist_q: int = 0               # quantized-tier distances within ndist

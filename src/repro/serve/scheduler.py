@@ -356,6 +356,7 @@ class AdaServeScheduler:
         else:
             self.auditor = None
         self.stats = SchedulerStats().bind(self.metrics)
+        self._export_resident_bytes()
         self._uids = itertools.count()
         self._admission: List[_Pending] = []
         self._queues: List[List[_Pending]] = [[] for _ in router.tiers]
@@ -364,6 +365,16 @@ class AdaServeScheduler:
         #   (REJECTED tickets, PARTIAL answers) awaiting poll
 
     # -------------------------------------------------------- observability
+    def _export_resident_bytes(self) -> None:
+        """Per-panel device memory gauges for the graph this scheduler
+        serves: fp32 vector table, quantized estimation panel (0 when no
+        panel is attached), adjacency.  Refreshed on every rebind so the
+        ``--metrics`` surface tracks the live epoch."""
+        from repro.quant import graph_resident_bytes
+
+        for panel, nbytes in graph_resident_bytes(self.router.graph).items():
+            self.metrics.gauge("resident_bytes", panel=panel).set(nbytes)
+
     def _audit_reference(self, queries: np.ndarray) -> np.ndarray:
         """The auditor's ground truth: full-``ef_cap`` oracle-backend search
         over this scheduler's graph (the rung the fallback ladder and the
@@ -504,6 +515,7 @@ class AdaServeScheduler:
                 self._queues = [[] for _ in router.tiers]
             self.router = router
             self.min_shape = self.cfg.min_shape or router.router_cfg.min_shape
+            self._export_resident_bytes()
         self.stats.inc("mutations")
         if fenced:
             self.stats.inc("fenced_requests", fenced)
@@ -863,6 +875,7 @@ class AdaServeScheduler:
             tr.end(espan, wall_s=wall)
         self.metrics.histogram("est_pass_wall_s").observe(wall)
         est_ndist = np.asarray(states.ndist)
+        est_ndist_q = np.asarray(states.ndist_q)
         est_pass = _EstPass(states=states, queries=q_pad)
         tiers = assign_tiers(ef_np[:b], self.router._tier_efs)
         epoch = self._epoch()
@@ -876,6 +889,7 @@ class AdaServeScheduler:
             p.stats.est_t = now
             p.stats.est_batch = b
             p.stats.est_ndist = int(est_ndist[i])
+            p.stats.ndist_q = int(est_ndist_q[i])
             p.stats.ef_est = p.ef
             ti = int(tiers[i])
             if tr is not None:
@@ -1177,6 +1191,8 @@ class AdaServeScheduler:
         res = dispatch.res_np
         p.stats.done_t = self.clock()
         p.stats.ndist = int(res.ndist[slot])
+        if res.ndist_q is not None:
+            p.stats.ndist_q = int(res.ndist_q[slot])
         p.stats.ef_achieved = int(res.ef_used[slot])
         deadline = p.ticket.deadline_t
         if deadline is not None and p.stats.done_t > deadline:
@@ -1199,6 +1215,7 @@ class AdaServeScheduler:
             ef_used=int(res.ef_used[slot]),
             stats=p.stats,
             status=status,
+            ndist_q=p.stats.ndist_q,
         )
 
     # ------------------------------------------------------------ inspection

@@ -1,0 +1,301 @@
+"""Quantized estimation tier: calibration bounds, kernel parity, re-rank
+recall, and epoch-snapshot invariance under mutation (PR 9)."""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import SearchConfig, SearchSpec
+from repro.index import build_ada_index, recall_at_k, search
+from repro.kernels import ops, ref
+from repro.quant import (
+    QuantizedPanel,
+    append_rows,
+    attach_panel,
+    bytes_per_distance,
+    calibrate_panel,
+    dequantize_panel,
+    graph_resident_bytes,
+    panel_bytes,
+    panel_of,
+    quantize_queries,
+    roundtrip_bound,
+    supported_precisions,
+)
+
+RNG = np.random.default_rng(0)
+
+
+def _vectors(n=400, d=48, seed=0, scale=1.0):
+    rng = np.random.default_rng(seed)
+    return (scale * rng.normal(0, 1, (n, d))).astype(np.float32)
+
+
+# ------------------------------------------------------------- calibration
+
+@pytest.mark.parametrize("precision", [p for p in ("int8", "fp8")
+                                       if p in supported_precisions()])
+@pytest.mark.parametrize("scale", [1.0, 0.01, 50.0])
+def test_roundtrip_within_bound(precision, scale):
+    """Dequantized rows stay within the panel's analytic round-trip bound."""
+    x = _vectors(scale=scale)
+    panel = calibrate_panel(jnp.asarray(x), precision=precision)
+    back = np.asarray(dequantize_panel(panel))
+    err = np.abs(back - x)
+    bound = np.asarray(roundtrip_bound(panel))
+    if precision == "int8":
+        # per-element bound is exact for affine int8 (round-to-nearest)
+        assert (err <= bound + 1e-6).all()
+    else:
+        # fp8 rounding is relative, not absolute: the half-ULP analytic
+        # bound holds in aggregate, with per-element slack for the mantissa
+        assert np.mean(err <= bound + 1e-6) > 0.95
+        assert (err <= 4 * bound + 1e-6).all()
+
+
+def test_roundtrip_bound_shrinks_with_spread():
+    """Tighter per-dim spread -> tighter bound (calibration is per-dim)."""
+    x = _vectors()
+    x[:, :8] *= 0.05  # eight low-spread dims
+    panel = calibrate_panel(jnp.asarray(x))
+    bound = np.asarray(roundtrip_bound(panel))
+    assert bound[:, :8].mean() < 0.2 * bound[:, 8:].mean()
+
+
+def test_constant_dim_is_exact():
+    """A constant dimension has zero spread: absorbed by the zero-point."""
+    x = _vectors()
+    x[:, 0] = 3.25
+    panel = calibrate_panel(jnp.asarray(x))
+    back = np.asarray(dequantize_panel(panel))
+    np.testing.assert_allclose(back[:, 0], 3.25, atol=1e-5)
+
+
+def test_append_rows_prefix_frozen():
+    """Appending re-quantizes only the new rows: prefix codes, dim scales
+    and zero-points are bit-identical (epoch snapshots stay valid)."""
+    x = _vectors(n=300)
+    extra = _vectors(n=50, seed=1)
+    panel = calibrate_panel(jnp.asarray(x))
+    grown = append_rows(panel, jnp.asarray(extra))
+    assert grown.codes.shape[0] == 350
+    np.testing.assert_array_equal(np.asarray(grown.codes[:300]),
+                                  np.asarray(panel.codes))
+    np.testing.assert_array_equal(np.asarray(grown.row_scale[:300]),
+                                  np.asarray(panel.row_scale))
+    np.testing.assert_array_equal(np.asarray(grown.dim_scale),
+                                  np.asarray(panel.dim_scale))
+    np.testing.assert_array_equal(np.asarray(grown.zero),
+                                  np.asarray(panel.zero))
+    # appended rows still round-trip within the (frozen-grid) bound
+    back = np.asarray(dequantize_panel(grown))[300:]
+    bound = np.asarray(roundtrip_bound(grown))[300:]
+    # rows outside the calibrated range clip — the frozen grid bounds only
+    # in-range values, so allow the clipped tail a loose multiple
+    assert np.mean(np.abs(back - extra) <= bound + 1e-6) > 0.9
+
+
+def test_panel_byte_accounting():
+    x = _vectors(n=256, d=32)
+    panel = calibrate_panel(jnp.asarray(x))
+    # codes n*d bytes + row_scale 4n + dim_scale/zero 4d each
+    assert panel_bytes(panel) == 256 * 32 + 4 * 256 + 4 * 32 + 4 * 32
+    assert bytes_per_distance(32, "int8") == 32
+    assert bytes_per_distance(32, "fp32") == 128
+
+
+# ---------------------------------------------------------- kernel parity
+
+@pytest.mark.parametrize("b,f,d", [(8, 64, 32), (13, 48, 100), (3, 200, 64)])
+@pytest.mark.parametrize("metric", ["cos_dist", "ip"])
+def test_quant_kernel_matches_oracle(b, f, d, metric):
+    """int8 Pallas kernel (interpret) vs the quantized jnp oracle: both sum
+    the same exact small integers in fp32, so parity is bitwise."""
+    n = 777
+    vec = jnp.asarray(RNG.normal(0, 1, (n, d)).astype(np.float32))
+    q = jnp.asarray(RNG.normal(0, 1, (b, d)).astype(np.float32))
+    panel = calibrate_panel(vec)
+    qpanel = (panel.codes, panel.row_scale, panel.dim_scale, panel.zero)
+    ids = RNG.integers(0, n, (b, f)).astype(np.int32)
+    ids[:, ::5] = -1
+    ids[:, 3::7] = -1
+    ids[0] = -1  # a converged query: whole row masked
+    ids = jnp.asarray(ids)
+    got = ops.frontier_keys_batch(
+        ids, q, vec, metric=metric, use_kernel=True, interpret=True,
+        qpanel=qpanel,
+    )
+    want = ops.frontier_keys_batch(
+        ids, q, vec, metric=metric, use_kernel=False, qpanel=qpanel,
+    )
+    masked = np.asarray(ids) < 0
+    assert np.isposinf(np.asarray(got)[masked]).all()
+    np.testing.assert_array_equal(
+        np.asarray(got)[~masked], np.asarray(want)[~masked]
+    )
+
+
+def test_quant_kernel_all_masked():
+    vec = jnp.asarray(RNG.normal(0, 1, (50, 32)).astype(np.float32))
+    panel = calibrate_panel(vec)
+    q = jnp.asarray(RNG.normal(0, 1, (2, 32)).astype(np.float32))
+    ids = jnp.full((2, 64), -1, jnp.int32)
+    got = ops.frontier_keys_batch(
+        ids, q, vec, use_kernel=True, interpret=True,
+        qpanel=(panel.codes, panel.row_scale, panel.dim_scale, panel.zero),
+    )
+    assert np.isposinf(np.asarray(got)).all()
+
+
+def test_quant_keys_approximate_fp32_keys():
+    """Quantized frontier keys track the fp32 keys within the score-space
+    error implied by the round-trip bound (the traversal sees a slightly
+    perturbed metric, not a different one)."""
+    n, d, b, f = 500, 48, 8, 64
+    vec = RNG.normal(0, 1, (n, d)).astype(np.float32)
+    vec /= np.linalg.norm(vec, axis=1, keepdims=True)
+    q = RNG.normal(0, 1, (b, d)).astype(np.float32)
+    q /= np.linalg.norm(q, axis=1, keepdims=True)
+    vec, q = jnp.asarray(vec), jnp.asarray(q)
+    panel = calibrate_panel(vec)
+    ids = jnp.asarray(RNG.integers(0, n, (b, f)).astype(np.int32))
+    fp32 = ops.frontier_keys_batch(ids, q, vec)
+    quant = ops.frontier_keys_batch(
+        ids, q, vec,
+        qpanel=(panel.codes, panel.row_scale, panel.dim_scale, panel.zero),
+    )
+    assert float(jnp.max(jnp.abs(quant - fp32))) < 0.05
+
+
+# ------------------------------------------------- re-rank recall property
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_rerank_recovers_fp32_recall(seed):
+    """Quantized traversal + fp32 re-rank of the final ef candidates lands
+    within 1 recall point of the all-fp32 search (3 seeds)."""
+    rng = np.random.default_rng(seed)
+    data = rng.normal(0, 1, (800, 32)).astype(np.float32)
+    idx = build_ada_index(
+        data, k=10, m=8, ef_construction=60, ef_cap=96, num_samples=16,
+        seed=seed,
+    )
+    idx.ensure_panel("int8")
+    qs = jnp.asarray(rng.normal(0, 1, (32, 32)).astype(np.float32))
+    ef = jnp.full((32,), 96, jnp.int32)
+    cfg_f = idx.search_cfg
+    cfg_q = dataclasses.replace(cfg_f, precision="int8")
+    res_f = search(idx.graph, qs, ef, cfg_f)
+    res_q = search(idx.graph, qs, ef, cfg_q)
+    from repro.index import brute_force_topk_chunked, prepare_queries
+
+    _, gt = brute_force_topk_chunked(
+        prepare_queries(qs, cfg_f.metric), data, k=10
+    )
+    rec_f = float(np.asarray(recall_at_k(res_f.ids, jnp.asarray(gt))).mean())
+    rec_q = float(np.asarray(recall_at_k(res_q.ids, jnp.asarray(gt))).mean())
+    assert rec_q >= rec_f - 0.01
+    # the quantized run actually traversed on the panel...
+    assert int(np.asarray(res_q.ndist_q).sum()) > 0
+    # ...and the fp32 run never touched it
+    assert int(np.asarray(res_f.ndist_q).sum()) == 0
+
+
+def test_quant_requires_panel():
+    """precision != fp32 with no panel attached degrades to fp32 scoring
+    (ndist_q stays 0) rather than erroring — the trace-time switch."""
+    data = RNG.normal(0, 1, (300, 24)).astype(np.float32)
+    idx = build_ada_index(
+        data, k=5, m=6, ef_construction=40, ef_cap=48, num_samples=8
+    )
+    cfg_q = dataclasses.replace(idx.search_cfg, precision="int8")
+    qs = jnp.asarray(RNG.normal(0, 1, (4, 24)).astype(np.float32))
+    res = search(idx.graph, qs, jnp.full((4,), 48, jnp.int32), cfg_q)
+    assert int(np.asarray(res.ndist_q).sum()) == 0
+
+
+def test_invalid_precision_rejected():
+    with pytest.raises(ValueError):
+        SearchConfig(k=5, ef_cap=32, precision="int4")
+    with pytest.raises(ValueError):
+        SearchSpec(target_recall=0.9, precision="int4")
+
+
+# ------------------------------------- epoch snapshots under insert/delete
+
+def test_epoch_snapshot_invariance_under_mutation():
+    """A graph snapshot captured before insert/delete answers identically
+    afterwards — the panel rides the immutable DeviceGraph, and the live
+    index's panel grows append-only (prefix codes frozen)."""
+    rng = np.random.default_rng(3)
+    data = rng.normal(0, 1, (500, 24)).astype(np.float32)
+    idx = build_ada_index(
+        data, k=5, m=6, ef_construction=40, ef_cap=48, num_samples=8
+    )
+    idx.ensure_panel("int8")
+    g0 = idx.graph
+    p0 = panel_of(g0)
+    assert p0 is not None and p0.codes.shape[0] == 500
+    cfg_q = dataclasses.replace(idx.search_cfg, precision="int8")
+    qs = jnp.asarray(rng.normal(0, 1, (8, 24)).astype(np.float32))
+    ef = jnp.full((8,), 48, jnp.int32)
+    before = search(g0, qs, ef, cfg_q)
+
+    idx.insert(rng.normal(0, 1, (40, 24)).astype(np.float32))
+    p1 = panel_of(idx.graph)
+    assert p1 is not None and p1.codes.shape[0] == idx.graph.vectors.shape[0]
+    # live panel grew append-only: the pre-insert prefix is bit-identical
+    np.testing.assert_array_equal(np.asarray(p1.codes[:500]),
+                                  np.asarray(p0.codes))
+    np.testing.assert_array_equal(np.asarray(p1.dim_scale),
+                                  np.asarray(p0.dim_scale))
+
+    idx.delete(np.arange(10))
+    p2 = panel_of(idx.graph)
+    assert p2 is not None and p2.codes.shape[0] == idx.graph.vectors.shape[0]
+
+    # the old snapshot still answers bit-identically (panel and all)
+    after = search(g0, qs, ef, cfg_q)
+    np.testing.assert_array_equal(np.asarray(before.ids),
+                                  np.asarray(after.ids))
+    np.testing.assert_array_equal(np.asarray(before.dists),
+                                  np.asarray(after.dists))
+    assert panel_of(g0).codes.shape[0] == 500  # snapshot panel untouched
+
+
+def test_resident_bytes_accounting():
+    data = RNG.normal(0, 1, (300, 24)).astype(np.float32)
+    idx = build_ada_index(
+        data, k=5, m=6, ef_construction=40, ef_cap=48, num_samples=8
+    )
+    rb = graph_resident_bytes(idx.graph)
+    assert rb["quantized"] == 0
+    assert rb["fp32"] == idx.graph.vectors.size * 4
+    idx.ensure_panel("int8")
+    rb = graph_resident_bytes(idx.graph)
+    assert rb["quantized"] == panel_bytes(panel_of(idx.graph))
+    assert 0 < rb["quantized"] < rb["fp32"]
+    # detach restores the fp32-only footprint
+    idx.ensure_panel("fp32")
+    assert graph_resident_bytes(idx.graph)["quantized"] == 0
+
+
+def test_attach_detach_roundtrip():
+    data = jnp.asarray(RNG.normal(0, 1, (100, 16)).astype(np.float32))
+    from repro.index.search import DeviceGraph
+
+    g = DeviceGraph(
+        base_adj=jnp.zeros((100, 4), jnp.int32),
+        upper_adj=jnp.zeros((1, 100, 2), jnp.int32),
+        entry=jnp.asarray(0, jnp.int32),
+        vectors=data,
+        alive=jnp.ones((100,), bool),
+    )
+    assert panel_of(g) is None
+    panel = calibrate_panel(data)
+    g2 = attach_panel(g, panel)
+    got = panel_of(g2)
+    assert isinstance(got, QuantizedPanel)
+    np.testing.assert_array_equal(np.asarray(got.codes),
+                                  np.asarray(panel.codes))
+    assert panel_of(attach_panel(g2, None)) is None
