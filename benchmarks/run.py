@@ -318,6 +318,128 @@ def quant_gate() -> None:
           f"est_bytes_saved={ratio:.1f}x ndist_q={ndq}/{nd_q}")
 
 
+def filter_gate() -> None:
+    """Smoke gate for filtered & multi-tenant search (ISSUE 10): a
+    mixed-selectivity trace over one attributed toy index.  Asserts the
+    filter contract — the planner attributes its pre/post lowering choice
+    (with the selectivity estimate) in ``explain()["filter"]``, every served
+    row passes the predicate, filtered recall lands within the gate of the
+    target under both lowerings — and the tenancy contract: every ticket is
+    terminal, a saturating tenant is capped at its own admission quota, and
+    the quiet tenant's worst-case latency stays inside its SLO deadline."""
+    import numpy as np
+
+    import jax.numpy as jnp
+
+    from repro.api import SearchSpec
+    from repro.filter import FilterSpec
+    from repro.index import build_ada_index
+    from repro.obs.audit import oracle_topk
+    from repro.serve import (
+        STATUS_REJECTED,
+        TERMINAL_STATUSES,
+        AdaServeScheduler,
+        SchedulerConfig,
+        SearchRequest,
+        TenantSLO,
+    )
+
+    rng = np.random.default_rng(5)
+    centers = rng.normal(0, 1, (8, 24))
+    assign = rng.integers(0, 8, 600)
+    data = (centers[assign]
+            + 0.3 * rng.normal(0, 1, (600, 24))).astype(np.float32)
+    idx = build_ada_index(data, k=5, target_recall=0.9, m=6,
+                          ef_construction=40, ef_cap=64, num_samples=16)
+    idx.attach_attributes(
+        tenant=["noisy" if a % 2 else "quiet" for a in assign],
+        categorical={"cluster": [str(a) for a in assign]},
+        numeric={"date": 19000.0 + rng.uniform(0, 365, 600)},
+    )
+
+    # -- mixed-selectivity trace: one selective (pre) and one broad (post)
+    # predicate; queries target valid rows (a tenant querying its own data)
+    gate = 0.05
+    cases = {}
+    for name, filt, mode in (
+        ("selective", FilterSpec(attrs={"cluster": ("0",)}), "oneshot"),
+        ("broad", FilterSpec(ranges={"date": (19000.0, 19330.0)}), "routed"),
+    ):
+        plan = idx.plan(SearchSpec(k=5, target_recall=0.9, filter=filt,
+                                   mode=mode))
+        d = plan.explain()["filter"]
+        mask = idx.attributes.compile_mask(filt)
+        rows = np.flatnonzero(mask)
+        queries = (data[rng.choice(rows, 16)]
+                   + 0.05 * rng.normal(0, 1, (16, 24))).astype(np.float32)
+        gt = oracle_topk(idx.graph, queries, idx.search_cfg,
+                         valid=jnp.asarray(mask))
+        ids = np.asarray(plan.search(queries).ids)
+        assert mask[ids[ids >= 0]].all(), f"{name}: served an invalid row"
+        recalls = []
+        for row, g in zip(ids, np.asarray(gt)):
+            g = g[g >= 0]
+            recalls.append(
+                len(set(row.tolist()) & set(g.tolist())) / max(len(g), 1))
+        recall = float(np.mean(recalls))
+        assert recall >= idx.target_recall - gate, (
+            f"{name}: filtered recall {recall:.3f} < "
+            f"{idx.target_recall} - {gate} under {d['mode']}-filter"
+        )
+        cases[name] = (d["mode"], float(d["selectivity_estimate"]), recall)
+    assert cases["selective"][0] == "pre", cases
+    assert cases["broad"][0] == "post", cases
+
+    # -- tenancy: a saturating tenant hits its own quota, not the others'
+    quota, slo_deadline = 3, 5.0
+    sched = AdaServeScheduler(
+        idx.router(),
+        SchedulerConfig(fill=4, overload="ticket", tenants={
+            "noisy": TenantSLO(max_inflight=quota),
+            "quiet": TenantSLO(deadline_s=slo_deadline, target_recall=0.9),
+        }),
+        default_target_recall=idx.target_recall,
+        version_probe=lambda: idx._graph_version,
+    )
+    sched.submit(SearchRequest(query=data[0]))
+    sched.drain()  # warm the dispatch path: compile walls stay out of SLOs
+    noisy_q = data[rng.integers(0, 600, 24)]
+    quiet_q = iter(data[rng.integers(0, 600, 6)])
+    tickets = {"noisy": [], "quiet": []}
+    for i, q in enumerate(noisy_q):
+        tickets["noisy"].append(
+            sched.submit(SearchRequest(query=q, tenant="noisy")))
+        if i % 4 == 0:
+            tickets["quiet"].append(
+                sched.submit(SearchRequest(query=next(quiet_q),
+                                           tenant="quiet")))
+    responses = sched.drain()
+    by_uid = {r.ticket.uid: r for r in responses}
+    assert all(r.status in TERMINAL_STATUSES for r in responses)
+    noisy = [by_uid[t.uid] for t in tickets["noisy"]]
+    quiet = [by_uid[t.uid] for t in tickets["quiet"]]
+    n_shed = sum(r.status == STATUS_REJECTED for r in noisy)
+    assert n_shed == len(noisy) - quota, (
+        f"quota: {n_shed} shed of {len(noisy)} (max_inflight={quota})"
+    )
+    assert all(r.status != STATUS_REJECTED for r in quiet), (
+        "saturating tenant consumed the quiet tenant's admission headroom"
+    )
+    quiet_worst = max(r.stats.e2e_s for r in quiet)
+    assert quiet_worst <= slo_deadline, (
+        f"quiet tenant p99 {quiet_worst:.3f}s blew its "
+        f"{slo_deadline}s SLO under a saturating neighbor"
+    )
+    reqs = sched.metrics.as_dict()["requests"]
+    assert reqs['{tenant="noisy"}'] == len(noisy)
+    assert reqs['{tenant="quiet"}'] == len(quiet)
+    print(f"filter_gate,0,ok pre_sel={cases['selective'][1]:.3f} "
+          f"post_sel={cases['broad'][1]:.3f} "
+          f"recall_pre={cases['selective'][2]:.3f} "
+          f"recall_post={cases['broad'][2]:.3f} "
+          f"noisy_shed={n_shed}/{len(noisy)} quiet_worst={quiet_worst:.3f}s")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--full", action="store_true", help="paper-scale (slow)")
@@ -366,7 +488,7 @@ def main() -> None:
     failures = 0
     if args.smoke and not args.only:
         for gate in (planner_gate, chaos_gate, obs_gate, churn_gate,
-                     quant_gate):
+                     quant_gate, filter_gate):
             t0 = time.perf_counter()
             try:
                 gate()

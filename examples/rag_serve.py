@@ -9,6 +9,13 @@ arrive one by one (Poisson), are submitted to a streaming-mode
 ``ExecutionPlan`` (the declarative facade over the continuous-batching
 scheduler), and responses are polled as their ef tier drains — no batch
 barrier, per-request latency telemetry.
+
+``--filtered`` demos metadata-filtered retrieval: the corpus carries
+per-document attributes (tenant namespace + ingest date), the request's
+``SearchSpec.filter`` declares the predicate (this tenant's documents from
+the last ~90 days), and the planner compiles it to a validity mask and
+picks pre-filter vs post-filter-with-overquery from the estimated
+selectivity — see ``plan.explain()["filter"]``.
 """
 import argparse
 import time
@@ -51,6 +58,36 @@ def stream_demo(engine, index, batch, *, rate_rps=64.0, deadline_ms=50.0):
         f"{s}={n}" for s, n in sorted(by_status.items())))
 
 
+def filtered_demo(engine, index, batch, rng):
+    """Metadata-filtered retrieval: tenant + date-window predicate."""
+    from repro.filter import FilterSpec
+
+    n = len(index.graph.alive)
+    # per-document metadata: owning tenant + ingest date (epoch days)
+    index.attach_attributes(
+        tenant=rng.choice(["acme", "globex", "initech"], n).tolist(),
+        numeric={"ingest_day": 19000.0 + rng.uniform(0, 365, n)},
+    )
+    filt = FilterSpec(
+        tenant="acme", ranges={"ingest_day": (19275.0, 19365.0)}
+    )
+    plan = index.plan(SearchSpec(target_recall=0.95, filter=filt))
+    print(plan.explain(fmt="text"))
+    fd = plan.explain()["filter"]
+    print(f"planner: {fd['mode']}-filter at estimated selectivity "
+          f"{fd['selectivity_estimate']:.3f} "
+          f"(ef x{fd['ef_inflation']:.2f} overquery)")
+    emb = np.asarray(engine._request_embedding(batch))
+    res = plan.search(emb)
+    store = index.attributes
+    for i, row in enumerate(np.asarray(res.ids)[:4]):
+        kept = row[row >= 0]
+        days = store._nums["ingest_day"][kept]
+        print(f"  request {i}: ids={kept[:5]}... tenants="
+              f"{sorted(set(store._cats['tenant'][kept]))} "
+              f"ingest_day=[{days.min():.0f}, {days.max():.0f}]")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--requests", type=int, default=4)
@@ -63,6 +100,9 @@ def main():
     ap.add_argument("--stream", action="store_true",
                     help="streaming-arrival demo of the request-lifecycle "
                          "serving API (submit/step/poll)")
+    ap.add_argument("--filtered", action="store_true",
+                    help="metadata-filtered retrieval demo (tenant + date "
+                         "predicate compiled to a validity mask)")
     args = ap.parse_args()
 
     cfg = ARCHS["qwen2-0.5b"].reduced()
@@ -84,6 +124,9 @@ def main():
         rng.integers(0, cfg.vocab_size, (args.requests, args.prompt_len)), jnp.int32)}
     if args.stream:
         stream_demo(engine, index, batch)
+        return
+    if args.filtered:
+        filtered_demo(engine, index, batch, rng)
         return
     t0 = time.perf_counter()
     res = engine.serve(batch)

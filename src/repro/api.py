@@ -44,6 +44,7 @@ from typing import Optional
 # Re-exports: the four legacy config dataclasses are reachable from here (and
 # only from here, outside serve/+index/) so `SpecOverrides` can be built
 # without importing serving internals.
+from repro.filter import FilterSpec  # noqa: F401
 from repro.index.search import AdaEfConfig, SearchConfig  # noqa: F401
 from repro.pytrees import register_static_config  # noqa: F401  (re-export)
 from repro.serve.router import RouterConfig  # noqa: F401
@@ -90,6 +91,13 @@ def _rebuild(cls, value):
         kw["estimator"] = EstimatorConfig(**kw["estimator"])
     if cls is RouterConfig and "tier_efs" in kw:
         kw["tier_efs"] = tuple(kw["tier_efs"])
+    if cls is SchedulerConfig and kw.get("tenants"):
+        from repro.serve.api import TenantSLO
+
+        kw["tenants"] = tuple(
+            (name, slo if isinstance(slo, TenantSLO) else TenantSLO(**slo))
+            for name, slo in kw["tenants"]
+        )
     return cls(**kw)
 
 
@@ -167,6 +175,16 @@ class SearchSpec:
       pre-mutation snapshot.  ``strict``: any use after a mutation raises
       :class:`repro.serve.api.StalePlanError` — for callers that treat a
       plan as a point-in-time snapshot contract.
+    - ``filter``: optional :class:`repro.filter.FilterSpec` predicate
+      (tenant / categorical attrs / numeric-date ranges / id range).  The
+      planner compiles it against the index's attribute store into a
+      per-node validity mask, estimates its selectivity from attribute
+      histograms, and lowers to pre-filter (dense mask rides the tombstone
+      admission seam) or post-filter-with-overquery (ef inflated by
+      ~1/selectivity, heap epilogue) — recorded in
+      ``plan.explain()["filter"]``.  The recall contract then holds over
+      the *filtered* ground truth.  A ``filter.tenant`` also labels the
+      request for per-tenant SLO/quota resolution in streaming mode.
     - ``overrides``: :class:`SpecOverrides` expert escape hatch.
     """
 
@@ -178,6 +196,7 @@ class SearchSpec:
     backend: str = BACKEND_AUTO
     precision: str = PRECISION_FP32
     on_mutation: str = ON_MUTATION_REVALIDATE
+    filter: Optional[FilterSpec] = None
     overrides: SpecOverrides = SpecOverrides()
 
     def __post_init__(self):
@@ -203,14 +222,23 @@ class SearchSpec:
             raise ValueError(f"deadline_ms={self.deadline_ms} must be >= 0")
         if self.max_ef < 0:
             raise ValueError(f"max_ef={self.max_ef} must be >= 0")
+        if self.filter is not None and not isinstance(self.filter, FilterSpec):
+            raise ValueError(
+                f"filter must be a FilterSpec, got {type(self.filter).__name__}"
+            )
+        if self.filter is not None and self.filter.trivial:
+            # a no-op predicate lowers identically to no predicate; normalize
+            # so both spell the same plan-cache key
+            object.__setattr__(self, "filter", None)
 
     def as_dict(self) -> dict:
         """JSON-friendly form; ``from_dict`` round-trips it exactly."""
         d = {
             f.name: getattr(self, f.name)
             for f in dataclasses.fields(self)
-            if f.name != "overrides"
+            if f.name not in ("overrides", "filter")
         }
+        d["filter"] = None if self.filter is None else self.filter.as_dict()
         d["overrides"] = self.overrides.as_dict()
         return d
 
@@ -218,4 +246,7 @@ class SearchSpec:
     def from_dict(d: dict) -> "SearchSpec":
         d = dict(d)
         overrides = SpecOverrides.from_dict(d.pop("overrides", None) or {})
-        return SearchSpec(overrides=overrides, **d)
+        filt = d.pop("filter", None)
+        if filt is not None and not isinstance(filt, FilterSpec):
+            filt = FilterSpec.from_dict(filt)
+        return SearchSpec(overrides=overrides, filter=filt, **d)

@@ -1,0 +1,28 @@
+"""Filtered & multi-tenant search: predicate specs, attribute store, masks.
+
+The vertical slice (ISSUE 10): :class:`FilterSpec` declares the predicate,
+:class:`AttributeStore` compiles it to a per-node validity bitmask and
+estimates its selectivity from attribute histograms, and the planner lowers
+``SearchSpec.filter`` to either **pre-filter** (mask rides the tombstone
+admission seam, ``SearchConfig.filter_mode="pre"``) or **post-filter with
+overquery** (``"post"``: unmasked traversal at inflated ef + heap
+epilogue).  ``attach_mask`` pins the compiled mask onto an immutable
+:class:`repro.index.DeviceGraph` copy, so epoch snapshots and unfiltered
+plans never see it.
+"""
+from .spec import FilterSpec  # noqa: F401
+from .store import AttributeStore, FilterCompileError  # noqa: F401
+
+
+def attach_mask(graph, mask):
+    """Return a ``DeviceGraph`` copy carrying ``mask`` as its predicate
+    validity bitmask (``fmask``).  The input graph is untouched — filtered
+    plans hold their own masked copy, sharing every other array."""
+    import jax.numpy as jnp
+
+    mask = jnp.asarray(mask, bool)
+    if mask.shape != graph.alive.shape:
+        raise ValueError(
+            f"mask shape {mask.shape} != graph rows {graph.alive.shape}"
+        )
+    return graph._replace(fmask=mask)

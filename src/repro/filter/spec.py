@@ -1,0 +1,121 @@
+"""Declarative predicate specs for filtered search.
+
+A :class:`FilterSpec` names *what* must be true of a result row — tenant
+ownership, categorical attribute membership, numeric/date ranges, an id
+range — without saying *how* the engine enforces it.  The planner
+(:func:`repro.plan.plan_spec`) compiles the spec against the index's
+:class:`repro.filter.store.AttributeStore` into a per-node validity bitmask
+(``DeviceGraph.fmask``) and picks the lowering from the estimated
+selectivity: **pre-filter** (the mask joins the W admission logic, tombstone
+semantics) when few rows pass, **post-filter with overquery** (unmasked
+traversal, inflated ef, heap epilogue) when most rows pass.
+
+Specs are immutable, hashable, and dict-round-trippable so they can ride
+:class:`repro.api.SearchSpec` through the static-pytree plan cache.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+AttrValues = Tuple[Tuple[str, Tuple[str, ...]], ...]
+NumRanges = Tuple[Tuple[str, float, float], ...]
+
+
+def _canon_attrs(attrs) -> AttrValues:
+    """Canonicalize ``{name: value-or-values}`` / tuple forms into a sorted
+    nested tuple (hash- and equality-stable regardless of insertion order)."""
+    if not attrs:
+        return ()
+    items = attrs.items() if isinstance(attrs, dict) else attrs
+    out = []
+    for name, vals in items:
+        if isinstance(vals, (str, bytes)):
+            vals = (vals,)
+        vv = tuple(sorted(str(v) for v in vals))
+        if not vv:
+            raise ValueError(f"attr {name!r}: empty allowed-value set")
+        out.append((str(name), vv))
+    return tuple(sorted(out))
+
+
+def _canon_ranges(ranges) -> NumRanges:
+    """Canonicalize ``{name: (lo, hi)}`` / tuple forms; bounds are inclusive
+    (``lo <= value <= hi`` — date predicates express "between day A and B")."""
+    if not ranges:
+        return ()
+    items = ranges.items() if isinstance(ranges, dict) else ()
+    if not isinstance(ranges, dict):
+        items = [(r[0], (r[1], r[2])) for r in ranges]
+    out = []
+    for name, (lo, hi) in items:
+        lo, hi = float(lo), float(hi)
+        if hi < lo:
+            raise ValueError(f"range {name!r}: hi={hi} < lo={lo}")
+        out.append((str(name), lo, hi))
+    return tuple(sorted(out))
+
+
+@dataclasses.dataclass(frozen=True)
+class FilterSpec:
+    """Predicate over index rows; all clauses AND together.
+
+    - ``tenant``: row must belong to this tenant namespace (the scheduler
+      also uses it to resolve per-tenant SLOs/quotas).
+    - ``attrs``: categorical membership, ``{"category": ("news", "blog")}``.
+    - ``ranges``: inclusive numeric ranges, ``{"date": (19000, 19365)}`` —
+      date predicates are numeric attributes (e.g. epoch days).
+    - ``id_range``: half-open row-id interval ``[lo, hi)`` — needs no
+      attribute store (ids are positional).
+    """
+
+    tenant: Optional[str] = None
+    attrs: AttrValues = ()
+    ranges: NumRanges = ()
+    id_range: Optional[Tuple[int, int]] = None
+
+    def __post_init__(self):
+        object.__setattr__(self, "attrs", _canon_attrs(self.attrs))
+        object.__setattr__(self, "ranges", _canon_ranges(self.ranges))
+        if self.id_range is not None:
+            lo, hi = self.id_range
+            lo, hi = int(lo), int(hi)
+            if lo < 0 or hi < lo:
+                raise ValueError(f"id_range [{lo}, {hi}) is invalid")
+            object.__setattr__(self, "id_range", (lo, hi))
+        if self.tenant is not None and not str(self.tenant):
+            raise ValueError("tenant must be a non-empty string or None")
+
+    @property
+    def trivial(self) -> bool:
+        """True when no clause constrains anything (no mask needed)."""
+        return (
+            self.tenant is None
+            and not self.attrs
+            and not self.ranges
+            and self.id_range is None
+        )
+
+    def needs_store(self) -> bool:
+        """True when evaluation requires an attribute store (anything beyond
+        the positional ``id_range`` clause)."""
+        return self.tenant is not None or bool(self.attrs) or bool(self.ranges)
+
+    def as_dict(self) -> Dict:
+        return {
+            "tenant": self.tenant,
+            "attrs": {name: list(vals) for name, vals in self.attrs},
+            "ranges": {name: [lo, hi] for name, lo, hi in self.ranges},
+            "id_range": None if self.id_range is None else list(self.id_range),
+        }
+
+    @classmethod
+    def from_dict(cls, d: Dict) -> "FilterSpec":
+        return cls(
+            tenant=d.get("tenant"),
+            attrs=d.get("attrs") or (),
+            ranges=d.get("ranges") or (),
+            id_range=(
+                None if d.get("id_range") is None else tuple(d["id_range"])
+            ),
+        )

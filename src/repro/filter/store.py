@@ -1,0 +1,233 @@
+"""Per-row attribute store: mask compilation + histogram selectivity.
+
+Host-side numpy columns keyed by attribute name, aligned with the index's
+row ids (row ``i`` of every column describes graph node ``i``).  Two jobs:
+
+- :meth:`AttributeStore.compile_mask` — evaluate a :class:`FilterSpec`
+  exactly, producing the ``(n,)`` bool validity mask the search loop
+  composes with ``g.alive`` (this is the *correctness* path; it runs once
+  per plan, not per query).
+- :meth:`AttributeStore.estimate_selectivity` — answer "what fraction of
+  rows would pass?" from **pre-built histograms** without touching the
+  columns (the *planning* path: equi-depth value counts for categorical
+  columns, fixed-bin histograms for numeric ones, clause independence
+  assumed).  The planner picks pre-filter vs post-filter-with-overquery
+  from this estimate and records it in ``plan.explain()["filter"]``.
+
+Mutation contract mirrors the vector panels: :meth:`append` extends every
+column for inserted rows (missing attributes get never-matching fills), and
+deletes need no call at all — tombstoned rows keep their attributes and the
+``alive`` mask already excludes them from results.
+"""
+from __future__ import annotations
+
+from typing import Dict, Iterable, Optional, Sequence
+
+import numpy as np
+
+from .spec import FilterSpec
+
+_NUM_BINS = 64
+_CAT_TOP = 256  # histogram tracks the top-K values exactly; the tail pools
+
+
+class FilterCompileError(ValueError):
+    """A FilterSpec references an attribute the store does not have."""
+
+
+class AttributeStore:
+    """Columnar per-row attributes (tenant + categorical + numeric)."""
+
+    def __init__(
+        self,
+        n: int,
+        *,
+        tenant: Optional[Sequence[str]] = None,
+        categorical: Optional[Dict[str, Sequence[str]]] = None,
+        numeric: Optional[Dict[str, Sequence[float]]] = None,
+    ):
+        self.n = int(n)
+        self._cats: Dict[str, np.ndarray] = {}
+        self._nums: Dict[str, np.ndarray] = {}
+        if tenant is not None:
+            self._cats["tenant"] = self._cat_col(tenant)
+        for name, col in (categorical or {}).items():
+            self._cats[str(name)] = self._cat_col(col)
+        for name, col in (numeric or {}).items():
+            arr = np.asarray(col, np.float64)
+            if arr.shape != (self.n,):
+                raise ValueError(
+                    f"numeric column {name!r}: shape {arr.shape} != ({self.n},)"
+                )
+            self._nums[str(name)] = arr
+        self._hist_cache: Dict[str, object] = {}
+
+    def _cat_col(self, col: Sequence[str]) -> np.ndarray:
+        arr = np.asarray([str(v) for v in col], object)
+        if arr.shape != (self.n,):
+            raise ValueError(f"categorical column shape {arr.shape} != ({self.n},)")
+        return arr
+
+    # ---- introspection ----------------------------------------------------
+
+    @property
+    def columns(self) -> Dict[str, str]:
+        """``{name: kind}`` over every stored column."""
+        out = {name: "categorical" for name in self._cats}
+        out.update({name: "numeric" for name in self._nums})
+        return out
+
+    def tenants(self) -> Iterable[str]:
+        col = self._cats.get("tenant")
+        return () if col is None else sorted(set(col.tolist()))
+
+    # ---- mutation (insert appends; delete is a no-op — tombstones keep
+    # their attributes and `alive` already hides them) ----------------------
+
+    def append(
+        self,
+        m: int,
+        *,
+        tenant: Optional[Sequence[str]] = None,
+        categorical: Optional[Dict[str, Sequence[str]]] = None,
+        numeric: Optional[Dict[str, Sequence[float]]] = None,
+    ) -> None:
+        """Extend every column by ``m`` inserted rows.  Columns the caller
+        does not provide are filled with never-matching values ("" for
+        categorical, NaN for numeric) so unattributed rows fail every
+        predicate instead of silently passing one."""
+        m = int(m)
+        if m < 0:
+            raise ValueError(f"append({m}) rows")
+        new_cats = dict(categorical or {})
+        if tenant is not None:
+            new_cats["tenant"] = tenant
+        for name, col in self._cats.items():
+            add = new_cats.pop(name, None)
+            if add is None:
+                add = np.asarray([""] * m, object)
+            else:
+                add = np.asarray([str(v) for v in add], object)
+            if add.shape != (m,):
+                raise ValueError(f"append column {name!r}: {add.shape} != ({m},)")
+            self._cats[name] = np.concatenate([col, add])
+        for name, col in self._nums.items():
+            add = (numeric or {}).get(name)
+            arr = (
+                np.full((m,), np.nan)
+                if add is None
+                else np.asarray(add, np.float64)
+            )
+            if arr.shape != (m,):
+                raise ValueError(f"append column {name!r}: {arr.shape} != ({m},)")
+            self._nums[name] = np.concatenate([col, arr])
+        unknown = set(new_cats) | (
+            set(numeric or {}) - set(self._nums)
+        )
+        if unknown:
+            raise ValueError(f"append: unknown columns {sorted(unknown)}")
+        self.n += m
+        self._hist_cache.clear()
+
+    # ---- exact mask -------------------------------------------------------
+
+    def compile_mask(self, spec: FilterSpec, n: Optional[int] = None) -> np.ndarray:
+        """Evaluate ``spec`` exactly over every row -> ``(n,) bool``."""
+        n = self.n if n is None else int(n)
+        if n != self.n:
+            raise ValueError(f"store has {self.n} rows, index has {n}")
+        mask = np.ones(self.n, bool)
+        clauses = list(spec.attrs)
+        if spec.tenant is not None:
+            clauses.append(("tenant", (spec.tenant,)))
+        for name, allowed in clauses:
+            col = self._cats.get(name)
+            if col is None:
+                raise FilterCompileError(
+                    f"categorical attribute {name!r} not in store "
+                    f"(have {sorted(self.columns)})"
+                )
+            mask &= np.isin(col, np.asarray(allowed, object))
+        for name, lo, hi in spec.ranges:
+            col = self._nums.get(name)
+            if col is None:
+                raise FilterCompileError(
+                    f"numeric attribute {name!r} not in store "
+                    f"(have {sorted(self.columns)})"
+                )
+            mask &= (col >= lo) & (col <= hi)  # NaN fills fail both
+        if spec.id_range is not None:
+            lo, hi = spec.id_range
+            ids = np.arange(self.n)
+            mask &= (ids >= lo) & (ids < hi)
+        return mask
+
+    # ---- histogram selectivity -------------------------------------------
+
+    def _cat_hist(self, name: str):
+        got = self._hist_cache.get(("cat", name))
+        if got is None:
+            vals, counts = np.unique(self._cats[name], return_counts=True)
+            order = np.argsort(counts)[::-1]
+            vals, counts = vals[order], counts[order]
+            top = dict(zip(vals[:_CAT_TOP].tolist(), counts[:_CAT_TOP].tolist()))
+            tail = int(counts[_CAT_TOP:].sum())
+            tail_kinds = max(len(vals) - _CAT_TOP, 1)
+            got = (top, tail, tail_kinds)
+            self._hist_cache[("cat", name)] = got
+        return got
+
+    def _num_hist(self, name: str):
+        got = self._hist_cache.get(("num", name))
+        if got is None:
+            col = self._nums[name]
+            finite = col[np.isfinite(col)]
+            if finite.size == 0:
+                got = (np.zeros(_NUM_BINS), np.linspace(0, 1, _NUM_BINS + 1))
+            else:
+                got = np.histogram(finite, bins=_NUM_BINS)
+            self._hist_cache[("num", name)] = got
+        return got
+
+    def estimate_selectivity(self, spec: FilterSpec) -> float:
+        """Estimated pass fraction in [0, 1] under clause independence."""
+        if self.n == 0:
+            return 0.0
+        sel = 1.0
+        clauses = list(spec.attrs)
+        if spec.tenant is not None:
+            clauses.append(("tenant", (spec.tenant,)))
+        for name, allowed in clauses:
+            if name not in self._cats:
+                raise FilterCompileError(f"attribute {name!r} not in store")
+            top, tail, tail_kinds = self._cat_hist(name)
+            hits = 0.0
+            for v in allowed:
+                if v in top:
+                    hits += top[v]
+                else:  # unseen-or-tail value: assume a uniform tail share
+                    hits += tail / tail_kinds
+            sel *= min(hits / self.n, 1.0)
+        for name, lo, hi in spec.ranges:
+            if name not in self._nums:
+                raise FilterCompileError(f"attribute {name!r} not in store")
+            counts, edges = self._num_hist(name)
+            total = counts.sum()
+            if total == 0:
+                return 0.0
+            # fractional overlap of [lo, hi] with each bin
+            bin_lo, bin_hi = edges[:-1], edges[1:]
+            width = np.maximum(bin_hi - bin_lo, 1e-300)
+            overlap = np.clip(
+                (np.minimum(bin_hi, hi) - np.maximum(bin_lo, lo)) / width,
+                0.0,
+                1.0,
+            )
+            # point bins (lo == hi inside one bin) still contribute
+            if hi == lo:
+                overlap = np.where((bin_lo <= lo) & (lo <= bin_hi), 1.0, overlap)
+            sel *= float((counts * overlap).sum() / total)
+        if spec.id_range is not None:
+            lo, hi = spec.id_range
+            sel *= max(min(hi, self.n) - max(lo, 0), 0) / self.n
+        return float(min(max(sel, 0.0), 1.0))

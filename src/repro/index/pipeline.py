@@ -103,6 +103,11 @@ class AdaEfIndex:
         default=None, repr=False, compare=False
     )  # precision of the panel currently attached to ``graph`` (one at a
     #   time: the DeviceGraph carries a single panel)
+    _attributes: Optional[object] = dataclasses.field(
+        default=None, repr=False, compare=False
+    )  # repro.filter.AttributeStore — per-row metadata for filtered search;
+    #   attached via attach_attributes(), appended on insert, untouched by
+    #   tombstone deletes (alive already hides dead rows)
     _plans: dict = dataclasses.field(
         default_factory=dict, repr=False, compare=False
     )  # {(SearchSpec, shape-signature): ExecutionPlan}; dropped on updates
@@ -222,6 +227,40 @@ class AdaEfIndex:
     def query_static(self, queries, ef: int) -> SearchResult:
         return search(self.graph, jnp.asarray(queries), ef, self.search_cfg)
 
+    # ------------------------------------------------------ attribute store
+    @property
+    def attributes(self):
+        """The per-row :class:`repro.filter.AttributeStore` (``None`` until
+        :meth:`attach_attributes`).  The planner compiles ``SearchSpec.
+        filter`` predicates against it and reads its histograms for
+        selectivity-aware lowering."""
+        return self._attributes
+
+    def attach_attributes(
+        self, *, tenant=None, categorical=None, numeric=None
+    ):
+        """Attach per-row metadata columns for filtered search.
+
+        Columns must cover every current row (tombstoned rows included —
+        ``alive`` already hides them from results).  Like
+        :meth:`ensure_panel`, attachment is *not* a mutation: same vectors,
+        no version bump, no epoch publication.  Cached *filtered* plans are
+        dropped (their selectivity estimates may change); unfiltered plans
+        and their warm executors are untouched.  Subsequent ``insert``
+        batches extend the store — pass their attributes through
+        ``insert(..., attributes=...)`` or the new rows get never-matching
+        fills.  Returns the attached store."""
+        from repro.filter import AttributeStore
+
+        n = int(self.graph.alive.shape[0])
+        self._attributes = AttributeStore(
+            n, tenant=tenant, categorical=categorical, numeric=numeric
+        )
+        self._plans = {
+            key: p for key, p in self._plans.items() if key[0].filter is None
+        }
+        return self._attributes
+
     # ------------------------------------------------------- quantized panel
     def ensure_panel(self, precision: str):
         """Materialize (and attach) the quantized estimation panel.
@@ -304,14 +343,27 @@ class AdaEfIndex:
             self._scheduler.absorb_mutation(router=self.router())
         return out
 
-    def insert(self, new_data: np.ndarray, *, refresh_table: bool = True):
+    def insert(
+        self,
+        new_data: np.ndarray,
+        *,
+        refresh_table: bool = True,
+        attributes: Optional[dict] = None,
+    ):
         """§6.3 insertion: index add + stats merge + incremental GT + table.
 
         Structurally invalid batches (wrong dimensionality, NaN/Inf rows)
         raise :class:`IndexMutationError` before any state is touched; an
         empty batch is a version-preserving no-op.  Under live consumers
         (plans, schedulers) the mutation is absorbed through the epoch
-        protocol — see :meth:`_mutate`."""
+        protocol — see :meth:`_mutate`.
+
+        ``attributes`` carries the inserted rows' metadata when an
+        :class:`repro.filter.AttributeStore` is attached — a dict with any
+        of ``tenant`` (sequence), ``categorical`` (name -> sequence),
+        ``numeric`` (name -> sequence).  Columns left out get
+        never-matching fills, so unattributed rows fail predicates instead
+        of silently passing them."""
         new_data = np.atleast_2d(np.asarray(new_data, np.float32))
         if new_data.size == 0:
             return self._noop_mutation()
@@ -322,7 +374,14 @@ class AdaEfIndex:
             )
         if not np.isfinite(new_data).all():
             raise IndexMutationError("insert: rows contain NaN/Inf values")
-        return self._mutate(lambda: self._insert_body(new_data, refresh_table))
+        if attributes and self._attributes is None:
+            raise IndexMutationError(
+                "insert: attributes passed but no AttributeStore is "
+                "attached; call attach_attributes(...) first"
+            )
+        return self._mutate(
+            lambda: self._insert_body(new_data, refresh_table, attributes)
+        )
 
     def _refresh_panels(self, inserted_from: Optional[int] = None):
         """Carry the quantized panels across a mutation.
@@ -348,12 +407,25 @@ class AdaEfIndex:
         if self._qactive is not None:
             self.graph = attach_panel(self.graph, self._qpanels[self._qactive])
 
-    def _insert_body(self, new_data: np.ndarray, refresh_table: bool) -> dict:
+    def _insert_body(
+        self,
+        new_data: np.ndarray,
+        refresh_table: bool,
+        attributes: Optional[dict] = None,
+    ) -> dict:
         t0 = time.perf_counter()
         old_n = int(self.host_index.n)
         self.host_index.add(new_data)
         self.graph = device_graph(self.host_index.freeze())
         self._refresh_panels(inserted_from=old_n)
+        if self._attributes is not None:
+            attrs = attributes or {}
+            self._attributes.append(
+                len(new_data),
+                tenant=attrs.get("tenant"),
+                categorical=attrs.get("categorical"),
+                numeric=attrs.get("numeric"),
+            )
         t_index = time.perf_counter() - t0
 
         t0 = time.perf_counter()

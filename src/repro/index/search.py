@@ -101,6 +101,13 @@ class DeviceGraph(NamedTuple):
     qrow_scale: Optional[Array] = None  # (n,) float32 per-row scale
     qdim_scale: Optional[Array] = None  # (d,) float32 per-dim scale
     qzero: Optional[Array] = None       # (d,) float32 per-dim zero-point
+    # Optional predicate validity mask (repro.filter): True = row passes the
+    # query's FilterSpec.  Composes with ``alive`` exactly like tombstones —
+    # masked-out rows stay traversable (C) but never surface in results (W)
+    # under ``SearchConfig.filter_mode == "pre"``; under ``"post"`` the
+    # traversal ignores it and a heap epilogue drops failing rows.  None (the
+    # default) is an empty pytree node, so unfiltered graphs jit unchanged.
+    fmask: Optional[Array] = None       # (n,) bool predicate validity
 
 
 def device_graph(g: HNSWGraph) -> DeviceGraph:
@@ -126,6 +133,11 @@ class SearchConfig:
     precision: str = "fp32"       # estimation/frontier scoring: fp32|int8|fp8
     #   (non-fp32 requires a graph with an attached quantized panel and adds
     #    an fp32 re-rank of the final ef candidates before top-k emission)
+    filter_mode: str = "off"      # predicate lowering: off|pre|post
+    #   "pre"  - g.fmask joins the W admission mask (tombstone semantics:
+    #            failing rows traverse but never surface); "post" - traversal
+    #            runs unfiltered and a heap epilogue drops failing rows (the
+    #            planner overqueries ef to compensate).  Requires g.fmask.
 
     def iters(self) -> int:
         return self.max_iters if self.max_iters > 0 else 4 * self.ef_cap + 64
@@ -137,6 +149,8 @@ class SearchConfig:
             raise ValueError(f"beam={self.beam} not in [1, ef_cap={self.ef_cap}]")
         if self.precision not in ("fp32", "int8", "fp8"):
             raise ValueError(f"unknown precision {self.precision!r}")
+        if self.filter_mode not in ("off", "pre", "post"):
+            raise ValueError(f"unknown filter_mode {self.filter_mode!r}")
 
 
 def auto_beam(ef: int, max_beam: int = 8) -> int:
@@ -204,6 +218,12 @@ def _gather_keys(g: DeviceGraph, q: Array, ids: Array, sign: float):
 def _use_quant(g: DeviceGraph, cfg: "SearchConfig") -> bool:
     """Frontier scoring goes through the quantized panel (trace-time switch)."""
     return cfg.precision != "fp32" and g.qcodes is not None
+
+
+def _filter_mode(g: DeviceGraph, cfg: "SearchConfig") -> str:
+    """Active predicate lowering (trace-time switch): ``cfg.filter_mode``
+    applies only when the graph actually carries a mask (``g.fmask``)."""
+    return cfg.filter_mode if g.fmask is not None else "off"
 
 
 def _gather_keys_q(g: DeviceGraph, q: Array, ids: Array, sign: float):
@@ -400,6 +420,10 @@ def _expand(
     # admission: key < W[ef_dyn - 1]  (inf while W not full  => always admit)
     admit_c = valid & (keys < bound)
     admit_w = admit_c & g.alive[jnp.maximum(nbrs, 0)]
+    if _filter_mode(g, cfg) == "pre":
+        # predicate mask rides the tombstone seam: failing rows keep routing
+        # the traversal through C but never enter the result heap
+        admit_w = admit_w & g.fmask[jnp.maximum(nbrs, 0)]
 
     keys_w = jnp.where(admit_w, keys, INF)
     keys_c = jnp.where(admit_c, keys, INF)
@@ -521,6 +545,8 @@ def _expand_batch(
 
     admit_c = valid & (keys < bound[:, None])
     admit_w = admit_c & g.alive[jnp.maximum(nbrs, 0)]
+    if _filter_mode(g, cfg) == "pre":
+        admit_w = admit_w & g.fmask[jnp.maximum(nbrs, 0)]
 
     keys_w = jnp.where(admit_w, keys, INF)
     keys_c = jnp.where(admit_c, keys, INF)
@@ -657,6 +683,8 @@ def _init_state(
     ck = jnp.full((cap,), INF).at[0].set(ep_key)
     ci = jnp.full((cap,), -1, jnp.int32).at[0].set(ep)
     ep_alive = g.alive[ep]
+    if _filter_mode(g, cfg) == "pre":
+        ep_alive = ep_alive & g.fmask[ep]
     rk = jnp.full((cap,), INF).at[0].set(jnp.where(ep_alive, ep_key, INF))
     ri = jnp.full((cap,), -1, jnp.int32).at[0].set(jnp.where(ep_alive, ep, -1))
     rk, ri = jax.lax.sort((rk, ri), num_keys=1)
@@ -718,6 +746,22 @@ def _rerank_fp32(g: DeviceGraph, q: Array, s: SearchState, sign: float) -> Searc
     )
 
 
+def _filter_heap(g: DeviceGraph, s: SearchState) -> SearchState:
+    """Post-filter epilogue: drop result-heap entries failing ``g.fmask``.
+
+    The ``filter_mode == "post"`` lowering runs the traversal unfiltered (the
+    planner inflates ef by ~1/selectivity to overquery), then this epilogue
+    masks failing rows to (+inf, -1) and re-sorts the heap so the passing
+    subset forms the result prefix — same shape polymorphism over ``(W,)``
+    and ``(B, W)`` states as :func:`_rerank_fp32`.
+    """
+    ok = (s.ri >= 0) & g.fmask[jnp.maximum(s.ri, 0)]
+    rk, ri = jax.lax.sort(
+        (jnp.where(ok, s.rk, INF), jnp.where(ok, s.ri, -1)), num_keys=1
+    )
+    return s._replace(rk=rk, ri=ri)
+
+
 # --------------------------------------------------------------------------
 # policy: static ef (+ optional PiP patience)
 # --------------------------------------------------------------------------
@@ -736,6 +780,7 @@ def search(g: DeviceGraph, queries: Array, ef: Array, cfg: SearchConfig) -> Sear
     ef_b = jnp.clip(ef_b, cfg.k, cfg.ef_cap)
 
     quant = _use_quant(g, cfg)
+    fpost = _filter_mode(g, cfg) == "post"
     if cfg.batch_hoisted:
         s = jax.vmap(lambda q, e: _init_state(g, q, cfg, e, lmax=1, hops=1))(
             queries, ef_b
@@ -745,6 +790,8 @@ def search(g: DeviceGraph, queries: Array, ef: Array, cfg: SearchConfig) -> Sear
         )
         if quant:
             s = _rerank_fp32(g, queries, s, sign)
+        if fpost:
+            s = _filter_heap(g, s)
         return _extract(s, cfg, sign)
 
     def one(q, ef1):
@@ -770,6 +817,8 @@ def search(g: DeviceGraph, queries: Array, ef: Array, cfg: SearchConfig) -> Sear
         s = jax.lax.while_loop(cond, body, s)
         if quant:
             s = _rerank_fp32(g, q, s, sign)
+        if fpost:
+            s = _filter_heap(g, s)
         return _extract(s, cfg, sign)
 
     return jax.vmap(one)(queries, ef_b)
@@ -910,12 +959,15 @@ def _phase_b_batch(
     sign = key_sign(cfg.metric)
     lmax = states.dbuf.shape[-1]
     quant = _use_quant(g, cfg)
+    fpost = _filter_mode(g, cfg) == "post"
 
     if cfg.batch_hoisted:
         s = states._replace(ef_dyn=ef.astype(jnp.int32))
         s = _run_hoisted(g, queries, s, cfg, sign, collect=False, lmax=lmax)
         if quant:
             s = _rerank_fp32(g, queries, s, sign)
+        if fpost:
+            s = _filter_heap(g, s)
         return _extract(s, cfg, sign)._replace(ef_used=ef)
 
     def one(s: SearchState, q, ef1):
@@ -930,6 +982,8 @@ def _phase_b_batch(
         s = jax.lax.while_loop(cond, body, s)
         if quant:
             s = _rerank_fp32(g, q, s, sign)
+        if fpost:
+            s = _filter_heap(g, s)
         return _extract(s, cfg, sign)
 
     res = jax.vmap(one)(states, queries, ef)

@@ -9,7 +9,11 @@ metric epilogue and the id mask:
                = -<q_owner, v_id>          similarity metrics (key orientation)
 
 so the search loop consumes *keys* (smaller = better) directly and never
-materializes unmasked distances.  Candidate rows are gathered outside the
+materializes unmasked distances.  Predicate masking (filtered search) rides
+this same convention: ``ops._apply_valid`` rewrites mask-failing ids to
+``-1`` *before* the kernel (and before compaction, in the batch path), so a
+filtered query costs zero extra MXU work and no kernel-internal change
+(the "epilogue-level" mask contract).  Candidate rows are gathered outside the
 kernel (XLA gather, amortized over the whole frontier); in-kernel HBM->VMEM
 DMA by id is the ROADMAP follow-up.  Two kernels share the epilogue:
 

@@ -13,8 +13,9 @@ inner product as
 
 so the kernel only needs the integer contraction plus a per-row scale; the
 cheap per-*query* epilogue (``q_scale``/``corr`` gather, metric orientation,
-``ids < 0`` masking) runs as O(R) jnp in the wrapper, keeping the kernel
-minimal and making the jnp oracle (:func:`repro.kernels.ref.
+``ids < 0`` masking — predicate-masked ids arrive already rewritten to
+``-1`` by ``ops._apply_valid``, so filtered search is free here) runs as
+O(R) jnp in the wrapper, keeping the kernel minimal and making the jnp oracle (:func:`repro.kernels.ref.
 frontier_batch_q_ref`) bit-comparable: both paths sum exact small integers
 in fp32, so kernel and oracle agree to the last ulp for any ``d`` where
 ``d * 127^2 < 2^24``.

@@ -37,15 +37,33 @@ def pairwise_distance(q, v, *, metric: str = "cos_dist", use_kernel: bool = Fals
     return ref.distance_ref(q, v, metric=metric)
 
 
+def _apply_valid(ids: Array, valid: Optional[Array]) -> Array:
+    """Fold a per-node validity bitmask into the id mask convention.
+
+    ``valid`` (n,) bool indexed by node id; rows failing it are rewritten to
+    ``-1`` so every downstream kernel/oracle emits +inf for them through the
+    *existing* padded-id machinery — predicate masking costs zero extra MXU
+    work and no kernel-internal change (the ISSUE-10 "epilogue-level"
+    contract, shared by the Pallas kernels and the jnp refs alike).
+    """
+    if valid is None:
+        return ids
+    return jnp.where(valid[jnp.maximum(ids, 0)], ids, -1)
+
+
 def frontier_keys(ids, q, vectors, *, metric: str = "cos_dist",
                   use_kernel: bool = False,
-                  interpret: Optional[bool] = None) -> Array:
+                  interpret: Optional[bool] = None,
+                  valid: Optional[Array] = None) -> Array:
     """Masked frontier keys for beamed HNSW expansion.
 
     ``ids`` (B, F) or (F,) gathered candidate ids (-1 = padded/masked),
     ``q`` (B, d) or (d,) prepared queries, ``vectors`` (n, d) prepared table.
+    ``valid`` is an optional (n,) per-node validity bitmask (predicate /
+    alive composition): ids failing it score +inf, exactly like padded ids.
     Returns keys shaped like ``ids`` (smaller = better, masked -> +inf).
     """
+    ids = _apply_valid(ids, valid)
     squeeze = ids.ndim == 1
     ids2 = ids[None] if squeeze else ids
     q2 = q[None] if squeeze else q
@@ -85,12 +103,16 @@ def compact_frontier(ids: Array):
 def frontier_keys_batch(ids, q, vectors, *, metric: str = "cos_dist",
                         use_kernel: bool = False,
                         interpret: Optional[bool] = None,
-                        qpanel=None) -> Array:
+                        qpanel=None,
+                        valid: Optional[Array] = None) -> Array:
     """Cross-query masked frontier keys for the batch-hoisted search loop.
 
     ``ids`` (B, F) gathered candidate ids (-1 = padded / visited / done
     query), ``q`` (B, d) prepared queries, ``vectors`` (n, d) prepared table.
-    Returns (B, F) keys (smaller = better, masked -> +inf).
+    ``valid`` is an optional (n,) per-node validity bitmask: failing ids are
+    folded into the ``-1`` convention *before* compaction, so masked rows
+    sink to the tail with the done-query rows and the kernel skips their
+    tiles outright.  Returns (B, F) keys (smaller = better, masked -> +inf).
 
     Unlike :func:`frontier_keys` (one ``(F, d)`` contraction per query), the
     whole batch is flattened to ``(B*F,)`` rows, compacted so valid rows form
@@ -108,6 +130,7 @@ def frontier_keys_batch(ids, q, vectors, *, metric: str = "cos_dist",
     fallback stays bit-comparable.
     """
     b, f = ids.shape
+    ids = _apply_valid(ids, valid)
     flat = ids.reshape(-1).astype(jnp.int32)
     compact_ids, owner_slots, dest, nvalid = compact_frontier(flat)
     owners = owner_slots // f  # owning query of each compacted row

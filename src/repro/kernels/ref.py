@@ -2,6 +2,12 @@
 
 Each function is the semantic ground truth the kernels are tested against
 (interpret mode on CPU, shape/dtype sweeps in tests/test_kernels_*.py).
+
+All frontier oracles share the ``ids < 0 -> +inf`` masking convention, so
+predicate masks (filtered search) need no oracle change: ``ops.
+_apply_valid`` rewrites mask-failing ids to ``-1`` before scoring, and the
+existing guard emits +inf for them — oracle and kernel stay bit-identical
+under any validity mask.
 """
 from __future__ import annotations
 

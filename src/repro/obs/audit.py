@@ -45,18 +45,36 @@ def sample_uid(uid: int, fraction: float) -> bool:
     return ((uid * _HASH_MULT) % _HASH_MOD) / _HASH_MOD < fraction
 
 
-def oracle_topk(graph, queries: np.ndarray, cfg, ef: Optional[int] = None):
+def oracle_topk(graph, queries: np.ndarray, cfg, ef: Optional[int] = None,
+                valid=None):
     """Ground-truth-by-construction reference: full-``ef_cap`` search on
     the oracle (pure-jnp) backend — the same rung the backend fallback
     ladder and the bit-exactness property tests bottom out on.
 
-    Returns host ``(B, k)`` int ids.  Callers batch tiny (the auditor
-    audits one request per idle tick), so the compile for the ``(1, d)``
-    shape happens once and is reused for every subsequent audit.
+    ``valid`` is an optional per-node validity bitmask (a compiled
+    FilterSpec): it composes into ``graph.alive`` so the oracle's results
+    honor the predicate — filtered queries must never be graded against
+    unfiltered ground truth.  When ``graph`` already carries a predicate
+    mask (``fmask``), it is folded in the same way automatically, so
+    auditor closures built over a filtered plan's graph need no extra
+    plumbing.  Returns host ``(B, k)`` int ids.  Callers batch tiny (the
+    auditor audits one request per idle tick), so the compile for the
+    ``(1, d)`` shape happens once and is reused for every subsequent audit.
     """
     import jax.numpy as jnp
     from repro.index.search import search
 
+    alive = graph.alive
+    if valid is not None:
+        alive = alive & jnp.asarray(valid, bool)
+    if graph.fmask is not None:
+        alive = alive & graph.fmask
+    if alive is not graph.alive:
+        # tombstone semantics: masked-out rows stay traversable but never
+        # surface — exactly the filtered ground truth contract.  The mask
+        # moves into `alive` (and fmask clears) so the oracle result is
+        # independent of cfg.filter_mode.
+        graph = graph._replace(alive=alive, fmask=None)
     ocfg = dataclasses.replace(
         cfg,
         use_distance_kernel=False,
@@ -64,6 +82,7 @@ def oracle_topk(graph, queries: np.ndarray, cfg, ef: Optional[int] = None):
         patience=0,
         precision="fp32",  # quantized plans audit against the fp32 oracle:
         #   the reference must not share the quantization error under test
+        filter_mode="off",  # the mask (if any) is already folded into alive
     )
     q = np.atleast_2d(np.asarray(queries))
     ef_arr = jnp.full((q.shape[0],), ocfg.ef_cap, jnp.int32)

@@ -48,6 +48,7 @@ from repro.api import (
     SearchSpec,
     register_static_config,
 )
+from repro.filter import FilterCompileError, attach_mask
 from repro.index.search import SearchResult, adaptive_search, recall_at_k
 from repro.kernels import ops
 from repro.obs import Histogram, MetricsRegistry, oracle_topk
@@ -62,6 +63,16 @@ from repro.serve.router import QueryRouter
 from repro.serve.scheduler import AdaServeScheduler
 
 _probe_cache: dict = {}
+
+# Filtered-search lowering policy (ISSUE 10): selectivity = pass fraction.
+# Below the threshold the predicate is selective enough that the dense mask
+# (pre-filter on the tombstone admission seam) wins — the W bound stays loose
+# so traversal widens on its own and the estimation pass runs under the mask.
+# Above it, most rows pass, so unmasked traversal at inflated ef plus a heap
+# epilogue (post-filter with overquery) keeps the masked scoring cost off the
+# hot loop; the inflation is ~1/selectivity, capped.
+FILTER_PRE_THRESHOLD = 0.5
+FILTER_MAX_INFLATE = 64.0
 
 
 def probe_interpret() -> bool:
@@ -213,6 +224,66 @@ def plan_spec(index, spec: SearchSpec) -> "ExecutionPlan":
     else:
         scfg = SchedulerConfig()
 
+    # filtered search (ISSUE 10): policy only — the mask itself compiles
+    # lazily on first executor build (ExecutionPlan._filter_mask).  The
+    # attribute store's histograms estimate the predicate's pass fraction
+    # and pick the lowering; either way the recall contract is over the
+    # *filtered* ground truth (pre: the estimation pass runs under the
+    # mask; post: ef_margin overqueries so ~ef passing rows survive the
+    # heap epilogue).
+    filter_plan = None
+    if spec.filter is not None:
+        filt = spec.filter
+        store = index.attributes
+        if filt.needs_store() and store is None:
+            raise FilterCompileError(
+                "SearchSpec.filter references attributes (tenant/"
+                "categorical/numeric ranges) but the index has no attribute "
+                "store; call index.attach_attributes(...) first"
+            )
+        n = shape_signature(index)[0]
+        if store is not None:
+            sel = float(store.estimate_selectivity(filt))
+        else:  # id_range-only predicates are positional: exact, no store
+            lo, hi = filt.id_range
+            sel = max(min(hi, n) - max(lo, 0), 0) / max(n, 1)
+        pinned = ov.search is not None and ov.search.filter_mode != "off"
+        if pinned:
+            fmode = ov.search.filter_mode
+            notes.append(f"filter_mode={fmode!r} pinned by overrides.search")
+        else:
+            fmode = "pre" if sel < FILTER_PRE_THRESHOLD else "post"
+            if fmode == "post" and spec.mode == MODE_ONESHOT:
+                # the fused oneshot path has no ef-margin seam to overquery
+                # through — lower to the (always-correct) dense mask instead
+                fmode = "pre"
+                notes.append("oneshot filter -> pre (no overquery seam)")
+        inflate = 1.0
+        if fmode == "post":
+            inflate = float(
+                np.clip(1.0 / max(sel, 1e-3), 1.0, FILTER_MAX_INFLATE)
+            )
+            if ov.router is None:
+                rcfg = dataclasses.replace(
+                    rcfg, ef_margin=max(rcfg.ef_margin, inflate)
+                )
+            else:
+                notes.append(
+                    "pinned router: post-filter keeps its ef_margin as-is"
+                )
+        cfg = dataclasses.replace(cfg, filter_mode=fmode)
+        notes.append(
+            f"filter: selectivity~{sel:.4f} -> {fmode}-filter"
+            + (f" (ef_margin -> {rcfg.ef_margin:.2f})" if fmode == "post" else "")
+        )
+        filter_plan = {
+            "mode": fmode,
+            "selectivity_estimate": sel,
+            "ef_inflation": inflate,
+            "pinned": bool(pinned),
+            "tenant": filt.tenant,
+        }
+
     return ExecutionPlan(
         index,
         spec,
@@ -225,6 +296,7 @@ def plan_spec(index, spec: SearchSpec) -> "ExecutionPlan":
         backend=backend,
         backend_note=backend_note,
         notes=notes,
+        filter_plan=filter_plan,
     )
 
 
@@ -268,6 +340,7 @@ class ExecutionPlan:
         backend: str,
         backend_note: str = "",
         notes: Sequence[str] = (),
+        filter_plan: Optional[dict] = None,
     ):
         self._index = index
         self.spec = spec
@@ -282,8 +355,10 @@ class ExecutionPlan:
         self.backend = backend
         self._backend_note = backend_note
         self._notes = list(notes)
+        self.filter_plan = filter_plan
         self._shape_sig = shape_signature(index)
         self._version = index._graph_version
+        self._fmask = None  # compiled predicate mask (lazy; see _filter_mask)
         self._router: Optional[QueryRouter] = None
         self._scheduler: Optional[AdaServeScheduler] = None
         self._metrics: Optional[MetricsRegistry] = None
@@ -376,6 +451,7 @@ class ExecutionPlan:
             and fresh.router_cfg == self.router_cfg
             and fresh.scheduler_cfg == self.scheduler_cfg
             and fresh.backend == self.backend
+            and fresh.filter_plan == self.filter_plan
         )
         if not rebound:
             self.k = fresh.k
@@ -388,11 +464,13 @@ class ExecutionPlan:
             self.backend = fresh.backend
             self._backend_note = fresh._backend_note
             self._notes = fresh._notes
+            self.filter_plan = fresh.filter_plan
         # pass the staleness gate *before* touching executors: the session
         # absorbs below re-enter through self.router
         self._shape_sig = fresh._shape_sig
         self._version = fresh._version
         self._router = None
+        self._fmask = None  # mask recompiles over the new epoch's rows
         for sched in list(self._sessions):
             sched.absorb_mutation(router=self.router)
         outcome = "rebound" if rebound else "replanned"
@@ -405,14 +483,49 @@ class ExecutionPlan:
         return list(self._sessions)
 
     # ------------------------------------------------------------ executors
+    def _filter_mask(self):
+        """The spec's compiled per-node validity bitmask (lazy; dropped on
+        revalidate so it always describes the index's current rows)."""
+        if self.spec.filter is None:
+            return None
+        if self._fmask is None:
+            filt = self.spec.filter
+            store = self._index.attributes
+            n = self._shape_sig[0]
+            if store is not None:
+                mask = store.compile_mask(filt, n)
+            else:  # id_range-only (plan_spec rejects store-needing specs)
+                mask = np.zeros(n, bool)
+                lo, hi = filt.id_range
+                mask[max(lo, 0): max(hi, 0)] = True
+            self._fmask = jnp.asarray(mask, bool)
+        return self._fmask
+
+    @property
+    def _tenant(self) -> Optional[str]:
+        """The spec's tenant namespace (labels lifecycle requests so the
+        scheduler resolves per-tenant SLOs/quotas without extra plumbing)."""
+        return None if self.spec.filter is None else self.spec.filter.tenant
+
+    def _graph(self):
+        """The graph this plan executes against: the index's current epoch,
+        carrying the compiled predicate mask for filtered plans (an
+        immutable masked copy — the shared index graph is never touched)."""
+        g = self._index.graph
+        mask = self._filter_mask()
+        return g if mask is None else attach_mask(g, mask)
+
     @property
     def router(self) -> QueryRouter:
-        """The lowered routing policy + executor (lazily built)."""
+        """The lowered routing policy + executor (lazily built).  Filtered
+        plans hand the router a mask-attached graph copy, so every executor
+        built from it (tier drains, schedulers, epoch snapshots, the
+        auditor's oracle) sees the predicate without extra plumbing."""
         if self._router is None:
             self._check_fresh()
             idx = self._index
             self._router = QueryRouter(
-                idx.graph,
+                self._graph(),
                 idx.stats,
                 idx.table,
                 self.search_cfg,
@@ -489,7 +602,7 @@ class ExecutionPlan:
         if self.mode == MODE_ONESHOT:
             idx = self._index
             res = adaptive_search(
-                idx.graph,
+                self._graph(),  # filtered plans search the masked copy
                 jnp.asarray(queries),
                 idx.stats,
                 idx.table,
@@ -505,7 +618,8 @@ class ExecutionPlan:
         # (submit/poll) keeps its own queues untouched by batch calls
         sched = self.new_scheduler(default_target_recall=target)
         tickets = [
-            sched.submit(SearchRequest(query=q, k=self.k)) for q in queries
+            sched.submit(SearchRequest(query=q, k=self.k, tenant=self._tenant))
+            for q in queries
         ]
         by_uid = {r.ticket.uid: r for r in sched.drain()}
         ordered = [by_uid[t.uid] for t in tickets]
@@ -570,6 +684,8 @@ class ExecutionPlan:
             patch["k"] = self.k
         if request.deadline_s is None and self.deadline_s is not None:
             patch["deadline_s"] = self.deadline_s
+        if request.tenant is None and self._tenant is not None:
+            patch["tenant"] = self._tenant
         if patch:
             request = dataclasses.replace(request, **patch)
         return self.scheduler.submit(request)
@@ -707,7 +823,13 @@ class ExecutionPlan:
                 "patience": cfg.patience,
                 "batch_hoisted": cfg.batch_hoisted,
                 "use_distance_kernel": cfg.use_distance_kernel,
+                "filter_mode": cfg.filter_mode,
             },
+            "filter": (
+                None
+                if self.filter_plan is None
+                else {"spec": self.spec.filter.as_dict(), **self.filter_plan}
+            ),
             "estimation": {
                 "cap": router.est_cfg.ef_cap,
                 "lmax": router.est_ada.buf(m0),
@@ -728,6 +850,7 @@ class ExecutionPlan:
                 "max_tier_queue": self.scheduler_cfg.max_tier_queue,
                 "overload": self.scheduler_cfg.overload,
                 "degrade": self.scheduler_cfg.degrade,
+                "tenants": [name for name, _ in self.scheduler_cfg.tenants],
             },
             "pad": {
                 "policy": "pow2",
@@ -785,6 +908,14 @@ class ExecutionPlan:
             f"overload={self.scheduler_cfg.overload} "
             f"degrade={self.scheduler_cfg.degrade}",
         ]
+        if d["filter"] is not None:
+            fd = d["filter"]
+            lines.append(
+                f"  filter: mode={fd['mode']} "
+                f"selectivity~{fd['selectivity_estimate']:.4f} "
+                f"ef_inflation={fd['ef_inflation']:.2f} "
+                f"tenant={fd['tenant']}"
+            )
         for note in self._notes:
             lines.append(f"  note: {note}")
         if analyze:
@@ -831,7 +962,9 @@ class ExecutionPlan:
             queries = np.asarray(idx.graph.vectors)[sel]
         queries = self._validate_queries(queries)
         b = len(queries)
-        ref_ids = oracle_topk(idx.graph, queries, self.search_cfg)
+        # filtered plans grade against the masked oracle (oracle_topk folds
+        # the graph's fmask into alive) — never unfiltered ground truth
+        ref_ids = oracle_topk(self._graph(), queries, self.search_cfg)
 
         if self.mode == MODE_ONESHOT:
             self.search(queries)  # warm-up: compile excluded from the wall
@@ -870,7 +1003,8 @@ class ExecutionPlan:
         sched = self.new_scheduler(cfg=scfg, metrics=MetricsRegistry())
         t0 = time.perf_counter()
         tickets = [
-            sched.submit(SearchRequest(query=q, k=self.k)) for q in queries
+            sched.submit(SearchRequest(query=q, k=self.k, tenant=self._tenant))
+            for q in queries
         ]
         responses = sched.drain()
         wall = time.perf_counter() - t0

@@ -49,6 +49,7 @@ from .api import (  # noqa: F401
     SearchTicket,
     ServeError,
     StalePlanError,
+    TenantSLO,
 )
 from .chaos import FaultInjector, FaultPlan, InjectedFault  # noqa: F401
 from .engine import Engine, ServeConfig, ServeResult  # noqa: F401

@@ -93,6 +93,33 @@ class DispatchFailedError(ServeError):
 
 
 @dataclasses.dataclass(frozen=True)
+class TenantSLO:
+    """Per-tenant serving contract (``SchedulerConfig.tenants``).
+
+    ``target_recall``/``deadline_s`` fill a request's unset fields when it
+    carries this tenant (request-level values still win); ``max_inflight``
+    caps the tenant's concurrently admitted requests (0 = unlimited) so one
+    saturating tenant cannot starve the ladder for the others — a breach is
+    handled exactly like global admission control (``SchedulerConfig.
+    overload``: raise :class:`OverloadedError` or answer REJECTED).
+    """
+
+    target_recall: Optional[float] = None
+    deadline_s: Optional[float] = None
+    max_inflight: int = 0
+
+    def __post_init__(self):
+        if self.target_recall is not None and not 0.0 < self.target_recall <= 1.0:
+            raise ValueError(
+                f"target_recall={self.target_recall} not in (0, 1]"
+            )
+        if self.deadline_s is not None and self.deadline_s <= 0:
+            raise ValueError(f"deadline_s={self.deadline_s} must be > 0")
+        if self.max_inflight < 0:
+            raise ValueError(f"max_inflight={self.max_inflight} must be >= 0")
+
+
+@dataclasses.dataclass(frozen=True)
 class SearchRequest:
     """One retrieval request.
 
@@ -102,12 +129,17 @@ class SearchRequest:
     latency budget in seconds **relative to submit time**: the request's tier
     bucket is drained no later than the deadline even if the bucket has not
     reached its fill, trading batch efficiency for tail latency.
+    ``tenant`` names the request's namespace: the scheduler resolves unset
+    ``target_recall``/``deadline_s`` from the tenant's :class:`TenantSLO`
+    (before falling back to scheduler defaults), enforces its admission
+    quota, and labels metrics/spans with it.
     """
 
     query: np.ndarray                     # (d,) float32 retrieval embedding
     target_recall: Optional[float] = None # None -> scheduler default
     k: Optional[int] = None               # None -> index k (must be <= it)
     deadline_s: Optional[float] = None    # None -> drain on fill/flush only
+    tenant: Optional[str] = None          # None -> the default namespace
 
 
 @dataclasses.dataclass(frozen=True)
@@ -162,6 +194,9 @@ class RequestStats:
     #   was estimated/served against; under churn a response stamped with a
     #   pre-mutation epoch was answered from that snapshot (-1 = unversioned
     #   scheduler, or rejected before binding an epoch)
+    tenant: str = ""               # namespace the request was served under
+    #   ("" = the default namespace).  The raw string; the scheduler's
+    #   metric labels are separately bounded (configured tenants + "other")
 
     # Derived intervals.  Lifecycle stamps default to 0.0 ("never
     # happened"): a rejected request never estimates or dispatches, a

@@ -50,6 +50,7 @@ from .api import (
     STATUS_DEGRADED, STATUS_OK, STATUS_PARTIAL, STATUS_REJECTED,
     STATUS_TIMED_OUT, DispatchFailedError, InvalidQueryError, OverloadedError,
     RequestStats, SearchRequest, SearchResponse, SearchTicket, StalePlanError,
+    TenantSLO,
 )
 from .bucketing import assign_tiers, pad_shape
 from .stats import SchedulerStats, TierCostModel, TierStats
@@ -112,6 +113,15 @@ class SchedulerConfig:
     #   tracking per-tier achieved-recall EWMAs vs target.  0 = off
     audit_margin: float = 0.02  # RecallAlert when a tier's achieved-recall
     #   EWMA drops below its target EWMA minus this margin
+    tenants: Tuple[Tuple[str, TenantSLO], ...] = ()  # per-tenant namespaces:
+    #   ((name, TenantSLO), ...).  A request carrying a configured tenant
+    #   resolves unset target_recall/deadline_s from its SLO (request values
+    #   win, scheduler defaults are the last fallback) and is bounded by the
+    #   SLO's max_inflight admission quota, so one saturating tenant cannot
+    #   occupy the whole ladder.  Tenants also bound the metrics label set:
+    #   configured names pass through, anything else labels as "other",
+    #   no tenant labels as "default".  A dict {name: TenantSLO} is
+    #   accepted and canonicalized (sorted) for hash stability
 
     def __post_init__(self):
         if self.fill < 1 or (self.fill & (self.fill - 1)) != 0:
@@ -134,6 +144,21 @@ class SchedulerConfig:
             raise ValueError("audit_fraction must be in [0, 1]")
         if self.audit_margin < 0:
             raise ValueError("audit_margin must be >= 0")
+        t = self.tenants
+        t = tuple(sorted(t.items())) if isinstance(t, dict) else tuple(
+            (str(name), slo) for name, slo in t
+        )
+        for name, slo in t:
+            if not name:
+                raise ValueError("tenant names must be non-empty")
+            if not isinstance(slo, TenantSLO):
+                raise ValueError(
+                    f"tenants[{name!r}] must be a TenantSLO, "
+                    f"got {type(slo).__name__}"
+                )
+        if len({name for name, _ in t}) != len(t):
+            raise ValueError("duplicate tenant names in SchedulerConfig.tenants")
+        object.__setattr__(self, "tenants", t)
 
 
 # Static pytree: zero leaves, jit-keyed by dataclass equality (same policy
@@ -164,17 +189,18 @@ class _Pending:
     fence guarantees estimation and dispatch share one epoch."""
 
     __slots__ = (
-        "ticket", "query", "target", "k", "stats",
+        "ticket", "query", "target", "k", "tenant", "stats",
         "est_pass", "row", "ef", "qspan", "dspan", "graph",
     )
 
     def __init__(self, ticket: SearchTicket, query: np.ndarray,
-                 target: float, k: int):
+                 target: float, k: int, tenant: str = ""):
         self.ticket = ticket
         self.query = query
         self.target = target
         self.k = k
-        self.stats = RequestStats(submit_t=ticket.submit_t)
+        self.tenant = tenant
+        self.stats = RequestStats(submit_t=ticket.submit_t, tenant=tenant)
         self.est_pass: Optional[_EstPass] = None
         self.row = -1
         self.ef = -1
@@ -358,6 +384,10 @@ class AdaServeScheduler:
         self.stats = SchedulerStats().bind(self.metrics)
         self._export_resident_bytes()
         self._uids = itertools.count()
+        self._tenant_slos = dict(self.cfg.tenants)
+        self._tenant_live: dict = {}  # tenant -> admitted-and-live count
+        #   (incremented only on actual admission, decremented in _terminal
+        #   — submit-time overload rejections never touch it)
         self._admission: List[_Pending] = []
         self._queues: List[List[_Pending]] = [[] for _ in router.tiers]
         self._inflight: List[Tuple[_Dispatch, int, _Pending]] = []
@@ -384,6 +414,15 @@ class AdaServeScheduler:
     def _on_recall_alert(self, alert) -> None:
         self.stats.inc("recall_alerts")
 
+    def _tenant_label(self, tenant: str) -> str:
+        """Bounded-cardinality metrics label: configured tenants pass
+        through, anything unconfigured pools under "other", no tenant is
+        "default" — an adversarial tenant string cannot mint unbounded
+        metric series."""
+        if not tenant:
+            return "default"
+        return tenant if tenant in self._tenant_slos else "other"
+
     def _terminal(self, p: _Pending, status: str,
                   ids: Optional[np.ndarray] = None) -> None:
         """Terminal bookkeeping shared by every exit path: close open trace
@@ -397,10 +436,18 @@ class AdaServeScheduler:
             tr.event("terminal", p.ticket.uid, status=status)
         st = p.stats
         m = self.metrics
-        m.histogram("request_e2e_s", status=status).observe(st.e2e_s)
+        m.histogram(
+            "request_e2e_s", status=status, tenant=self._tenant_label(p.tenant)
+        ).observe(st.e2e_s)
         if st.dispatch_t:
             m.histogram("request_queue_wait_s").observe(st.queue_wait_s)
             m.histogram("request_service_s").observe(st.service_s)
+        live = self._tenant_live.get(p.tenant)
+        if live is not None:  # every admitted request exits through here
+            if live <= 1:
+                self._tenant_live.pop(p.tenant, None)
+            else:
+                self._tenant_live[p.tenant] = live - 1
         aud = self.auditor
         if ids is not None and aud is not None and aud.admit(p.ticket.uid):
             # p.stats.tier_ef is 0 for PARTIAL answers (no tier search ran),
@@ -547,9 +594,10 @@ class AdaServeScheduler:
         return q
 
     def _rejected_response(
-        self, ticket: SearchTicket, k: int, reason: str, now: float
+        self, ticket: SearchTicket, k: int, reason: str, now: float,
+        tenant: str = "",
     ) -> SearchResponse:
-        rstats = RequestStats(submit_t=ticket.submit_t)
+        rstats = RequestStats(submit_t=ticket.submit_t, tenant=tenant)
         rstats.status = STATUS_REJECTED
         rstats.reject_reason = reason
         rstats.done_t = now
@@ -558,7 +606,8 @@ class AdaServeScheduler:
             self.tracer.event("screen", ticket.uid, reason=reason)
             self.tracer.event("terminal", ticket.uid, status=STATUS_REJECTED)
         self.metrics.histogram(
-            "request_e2e_s", status=STATUS_REJECTED
+            "request_e2e_s", status=STATUS_REJECTED,
+            tenant=self._tenant_label(tenant),
         ).observe(rstats.e2e_s)
         return SearchResponse(
             ticket=ticket,
@@ -601,9 +650,15 @@ class AdaServeScheduler:
         tick is cheap).
 
         Raises :class:`InvalidQueryError` for unusable query vectors and —
-        at the ``max_inflight`` admission bound under ``overload="raise"`` —
-        :class:`OverloadedError`; under ``overload="ticket"`` an over-bound
-        submit instead returns a ticket whose response is already REJECTED.
+        at the ``max_inflight`` admission bound (global, or the request's
+        tenant quota) under ``overload="raise"`` — :class:`OverloadedError`;
+        under ``overload="ticket"`` an over-bound submit instead returns a
+        ticket whose response is already REJECTED.
+
+        A request carrying a ``tenant`` resolves unset ``target_recall``/
+        ``deadline_s`` from the tenant's :class:`TenantSLO` (request values
+        win, scheduler defaults are the final fallback) and counts against
+        the tenant's ``max_inflight`` admission quota.
         """
         self._check_fresh()
         q = self._validate_query(request.query)
@@ -612,48 +667,74 @@ class AdaServeScheduler:
             raise ValueError(
                 f"k={k} not in [1, index k={self.router.base_cfg.k}]"
             )
-        target = (
-            self.default_target_recall
-            if request.target_recall is None
-            else request.target_recall
-        )
+        tenant = request.tenant or ""
+        slo = self._tenant_slos.get(tenant)
+        target = request.target_recall
+        if target is None and slo is not None:
+            target = slo.target_recall
+        if target is None:
+            target = self.default_target_recall
         if target is None:
             raise ValueError(
                 "request has no target_recall and the scheduler has no default"
             )
+        deadline_s = request.deadline_s
+        if deadline_s is None and slo is not None:
+            deadline_s = slo.deadline_s
+        self.metrics.counter(
+            "requests", tenant=self._tenant_label(tenant)
+        ).inc()
+        shed_reason = None
         if self.cfg.max_inflight and self._live() >= self.cfg.max_inflight:
+            shed_reason = (
+                f"admission refused: {self._live()} live requests >= "
+                f"max_inflight={self.cfg.max_inflight} — poll to free "
+                "capacity or retry with backoff (submit_with_backoff)"
+            )
+        elif (
+            slo is not None
+            and slo.max_inflight
+            and self._tenant_live.get(tenant, 0) >= slo.max_inflight
+        ):
+            shed_reason = (
+                f"tenant {tenant!r} quota: "
+                f"{self._tenant_live.get(tenant, 0)} live requests >= "
+                f"tenant max_inflight={slo.max_inflight} — other tenants "
+                "keep their admission headroom"
+            )
+        if shed_reason is not None:
             if self.cfg.overload == OVERLOAD_RAISE:
                 self.stats.inc("rejected")
-                raise OverloadedError(
-                    f"admission refused: {self._live()} live requests >= "
-                    f"max_inflight={self.cfg.max_inflight} — poll to free "
-                    "capacity or retry with backoff (submit_with_backoff)"
-                )
+                raise OverloadedError(shed_reason)
             now = self.clock()
             ticket = SearchTicket(uid=next(self._uids), submit_t=now)
             self.stats.inc("submitted")
             if self.tracer is not None:
-                self.tracer.event("submit", ticket.uid, k=k)
+                self.tracer.event("submit", ticket.uid, k=k, tenant=tenant)
             self._done.append(
-                self._rejected_response(ticket, k, "overloaded", now)
+                self._rejected_response(
+                    ticket, k, "overloaded", now, tenant=tenant
+                )
             )
             return ticket
         now = self.clock()
         ticket = SearchTicket(
             uid=next(self._uids),
             submit_t=now,
-            deadline_t=(
-                None if request.deadline_s is None else now + request.deadline_s
-            ),
+            deadline_t=(None if deadline_s is None else now + deadline_s),
         )
         if self._chaos is not None:
             q = self._chaos.corrupt(ticket.uid, q)
-        self._admission.append(_Pending(ticket, q, float(target), k))
+        self._admission.append(
+            _Pending(ticket, q, float(target), k, tenant=tenant)
+        )
+        self._tenant_live[tenant] = self._tenant_live.get(tenant, 0) + 1
         self.stats.inc("submitted")
         if self.tracer is not None:
             self.tracer.event(
                 "submit", ticket.uid,
-                k=k, target=float(target), deadline_s=request.deadline_s,
+                k=k, target=float(target), deadline_s=deadline_s,
+                tenant=tenant,
             )
         return ticket
 
@@ -809,11 +890,28 @@ class AdaServeScheduler:
 
     def _answer_partial(self, p: _Pending, now: float) -> None:
         """Deadline already blown: answer best-effort from the carried
-        phase-A result heap instead of spending a (pointless) tier search."""
+        phase-A result heap instead of spending a (pointless) tier search.
+
+        Under a **post-filter** plan the phase-A heap is unfiltered by
+        design (the predicate is enforced by the tier search's heap
+        epilogue, which never ran here), so the partial answer filters the
+        full heap row host-side before slicing top-k — a partial response
+        may be short of k, never wrong."""
         states = p.est_pass.states
-        rk = np.asarray(states.rk[p.row][: p.k])
-        ri = np.asarray(states.ri[p.row][: p.k])
+        rk = np.asarray(states.rk[p.row])
+        ri = np.asarray(states.ri[p.row])
         p.est_pass = None
+        graph = p.graph if p.graph is not None else self.router.graph
+        fmask = getattr(graph, "fmask", None)
+        if self.router.base_cfg.filter_mode == "post" and fmask is not None:
+            fm = np.asarray(fmask)
+            ok = (ri >= 0) & fm[np.maximum(ri, 0)]
+            rk = np.where(ok, rk, np.inf)
+            ri = np.where(ok, ri, -1)
+            order = np.argsort(rk, kind="stable")
+            rk, ri = rk[order], ri[order]
+        rk = rk[: p.k]
+        ri = ri[: p.k]
         finite = np.isfinite(rk)
         sign = key_sign(self.router.base_cfg.metric)
         ids = np.where(finite, ri, -1).astype(np.int32)

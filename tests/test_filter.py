@@ -1,0 +1,581 @@
+"""Filtered & multi-tenant search: FilterSpec canonicalization/round-trip,
+AttributeStore mask compilation + histogram selectivity, the planner's
+pre-filter vs post-filter-with-overquery lowering, the selectivity-sweep
+recall property under *both* lowerings, bit-identity of masked kernels vs
+the masked oracle, and per-tenant SLO resolution / admission quotas /
+bounded metric labels in the scheduler."""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import RouterConfig, SchedulerConfig, SearchSpec, SpecOverrides
+from repro.filter import (
+    AttributeStore,
+    FilterCompileError,
+    FilterSpec,
+    attach_mask,
+)
+from repro.index import build_ada_index
+from repro.obs.audit import oracle_topk
+from repro.serve import (
+    AdaServeScheduler,
+    OverloadedError,
+    SearchRequest,
+    TenantSLO,
+)
+
+NC = 40  # clusters in the filtered-search fixture (each ~2.5% of rows)
+
+
+@pytest.fixture(scope="module")
+def fdb():
+    """Clustered vectors with known cluster assignment + attribute columns.
+
+    Built separately from ``small_db`` because the filter tests need the
+    per-row cluster id to construct masks of controlled selectivity that
+    stay *correlated with query locality* (a tenant querying its own data —
+    the regime where post-filter-with-overquery is actually sound)."""
+    rng = np.random.default_rng(11)
+    n, d = 3000, 32
+    centers = rng.normal(0, 1, (NC, d))
+    assign = rng.integers(0, NC, n)
+    data = (centers[assign] + 0.25 * rng.normal(0, 1, (n, d))).astype(np.float32)
+    rvals = rng.uniform(0, 1, n)
+    return data, centers, assign, rvals
+
+
+@pytest.fixture(scope="module")
+def fidx(fdb):
+    data, centers, assign, rvals = fdb
+    idx = build_ada_index(
+        data, k=5, target_recall=0.9, m=8, ef_construction=60, ef_cap=160,
+        num_samples=32,
+    )
+    idx.attach_attributes(
+        tenant=[f"t{a % 4}" for a in assign],
+        categorical={"cluster": [str(a) for a in assign]},
+        numeric={"r": rvals, "date": 19000.0 + 365.0 * rvals},
+    )
+    return idx
+
+
+def _fqueries(centers, nq=16, seed=0):
+    """Queries near cluster 0's center (the always-valid cluster below)."""
+    rng = np.random.default_rng(100 + seed)
+    return (
+        centers[0][None] + 0.25 * rng.normal(0, 1, (nq, centers.shape[1]))
+    ).astype(np.float32)
+
+
+def _queries(small_db, nq=8, seed=1):
+    data, centers, w = small_db
+    rng = np.random.default_rng(seed)
+    qc = rng.choice(len(centers), size=nq, p=w)
+    return (centers[qc] + 0.3 * rng.normal(0, 1, (nq, centers.shape[1]))).astype(
+        np.float32
+    )
+
+
+def _recall(ids, gt) -> float:
+    out = []
+    for row, g in zip(np.asarray(ids), np.asarray(gt)):
+        g = g[g >= 0]
+        out.append(len(set(row.tolist()) & set(g.tolist())) / max(len(g), 1))
+    return float(np.mean(out))
+
+
+# --------------------------------------------------------------------------
+# FilterSpec: canonicalization, hashability, round-trip, trivial collapse
+# --------------------------------------------------------------------------
+
+
+def test_filterspec_canonicalization_and_hash():
+    a = FilterSpec(
+        tenant="acme",
+        attrs={"cat": ("b", "a"), "kind": "x"},  # scalar + unordered values
+        ranges={"date": (19000, 19365)},
+    )
+    b = FilterSpec(
+        tenant="acme",
+        attrs=(("kind", ("x",)), ("cat", ("a", "b"))),  # tuple form, reordered
+        ranges=(("date", 19000.0, 19365.0),),
+    )
+    assert a == b and hash(a) == hash(b)
+    assert a.attrs == (("cat", ("a", "b")), ("kind", ("x",)))
+    assert a.needs_store() and not a.trivial
+    assert FilterSpec.from_dict(a.as_dict()) == a
+    only_ids = FilterSpec(id_range=(10, 90))
+    assert not only_ids.needs_store() and not only_ids.trivial
+    with pytest.raises(ValueError):
+        FilterSpec(id_range=(-1, 5))
+    with pytest.raises(ValueError):
+        FilterSpec(ranges={"x": (2.0, 1.0)})
+    with pytest.raises(ValueError):
+        FilterSpec(tenant="")
+    with pytest.raises(ValueError):
+        FilterSpec(attrs={"cat": ()})
+
+
+def test_searchspec_collapses_trivial_filter_and_roundtrips():
+    assert SearchSpec(filter=FilterSpec()).filter is None  # trivial -> None
+    spec = SearchSpec(
+        k=5,
+        mode="streaming",
+        filter=FilterSpec(tenant="a", ranges={"date": (1.0, 2.0)}),
+        overrides=SpecOverrides(
+            scheduler=SchedulerConfig(
+                fill=16,
+                tenants={"a": TenantSLO(target_recall=0.95, max_inflight=4)},
+            )
+        ),
+    )
+    # dict round-trip reconstructs FilterSpec and the TenantSLO tuple alike
+    assert SearchSpec.from_dict(spec.as_dict()) == spec
+    twin = SearchSpec.from_dict(spec.as_dict())
+    assert hash(twin) == hash(spec)
+
+
+def test_scheduler_config_tenant_validation():
+    cfg = SchedulerConfig(tenants={"b": TenantSLO(), "a": TenantSLO()})
+    assert [name for name, _ in cfg.tenants] == ["a", "b"]  # canonical order
+    with pytest.raises(ValueError):
+        SchedulerConfig(tenants=(("a", TenantSLO()), ("a", TenantSLO())))
+    with pytest.raises(ValueError):
+        SchedulerConfig(tenants=(("", TenantSLO()),))
+    with pytest.raises(ValueError):
+        SchedulerConfig(tenants=(("a", {"max_inflight": 1}),))
+    with pytest.raises(ValueError):
+        TenantSLO(target_recall=1.5)
+    with pytest.raises(ValueError):
+        TenantSLO(deadline_s=0.0)
+    with pytest.raises(ValueError):
+        TenantSLO(max_inflight=-1)
+
+
+# --------------------------------------------------------------------------
+# AttributeStore: exact masks, histogram estimates, append semantics
+# --------------------------------------------------------------------------
+
+
+def test_attribute_store_mask_matches_brute_force():
+    n = 1000
+    rng = np.random.default_rng(3)
+    tenant = rng.choice(["a", "b", "c"], n)
+    cat = rng.choice(["u", "v", "w", "x"], n)
+    x = rng.uniform(0, 1, n)
+    x[::17] = np.nan  # unattributed rows must fail range clauses
+    store = AttributeStore(
+        n, tenant=tenant, categorical={"cat": cat}, numeric={"x": x}
+    )
+    spec = FilterSpec(
+        tenant="a", attrs={"cat": ("u", "v")}, ranges={"x": (0.2, 0.7)},
+        id_range=(100, 900),
+    )
+    mask = store.compile_mask(spec)
+    ref = (
+        (tenant == "a")
+        & np.isin(cat, ["u", "v"])
+        & (x >= 0.2) & (x <= 0.7)
+        & (np.arange(n) >= 100) & (np.arange(n) < 900)
+    )
+    np.testing.assert_array_equal(mask, ref)
+    # histogram estimate: clauses here really are independent draws, so the
+    # independence-product estimate lands near the exact pass fraction
+    est = store.estimate_selectivity(spec)
+    assert abs(est - ref.mean()) < 0.05
+    with pytest.raises(FilterCompileError):
+        store.compile_mask(FilterSpec(attrs={"nope": ("a",)}))
+    with pytest.raises(FilterCompileError):
+        store.estimate_selectivity(FilterSpec(ranges={"nope": (0, 1)}))
+    with pytest.raises(ValueError):
+        store.compile_mask(spec, n + 5)  # store/index row-count drift
+
+
+def test_attribute_store_append_fills_never_match():
+    store = AttributeStore(
+        4, tenant=["a", "a", "b", "b"], numeric={"d": [1.0, 2.0, 3.0, 4.0]}
+    )
+    store.append(2, tenant=["a", "b"], numeric={"d": [5.0, 6.0]})
+    store.append(2)  # unattributed rows: "" tenant, NaN numeric
+    assert store.n == 8
+    np.testing.assert_array_equal(
+        store.compile_mask(FilterSpec(tenant="a")),
+        [True, True, False, False, True, False, False, False],
+    )
+    np.testing.assert_array_equal(
+        store.compile_mask(FilterSpec(ranges={"d": (1.0, 99.0)}))[-2:],
+        [False, False],
+    )
+    with pytest.raises(ValueError):
+        store.append(1, categorical={"unknown": ["x"]})
+    with pytest.raises(ValueError):
+        store.append(1, numeric={"d": [1.0, 2.0]})  # wrong length
+
+
+# --------------------------------------------------------------------------
+# masked kernels vs masked oracle: bit-identity
+# --------------------------------------------------------------------------
+
+
+def test_masked_frontier_kernels_bit_identical_to_masked_oracle(fidx):
+    from repro.kernels import ops, ref
+
+    g = fidx.graph
+    n = int(g.alive.shape[0])
+    rng = np.random.default_rng(5)
+    valid = jnp.asarray(rng.random(n) < 0.3)
+    ids = jnp.asarray(rng.integers(0, n, (4, 64)), jnp.int32)
+    ids = ids.at[0, :5].set(-1)  # pre-existing pad/visited masking survives
+    qn = g.vectors[:4]  # prepared rows double as prepared queries
+
+    masked_ids = jnp.where(valid[jnp.maximum(ids, 0)], ids, -1)
+    want = np.asarray(ref.frontier_ref(masked_ids, qn, g.vectors))
+    fin = np.isfinite(want)
+    # the per-query jnp-oracle rung IS frontier_ref: bit-identical
+    got_oracle = ops.frontier_keys(ids, qn, g.vectors, valid=valid)
+    np.testing.assert_array_equal(np.asarray(got_oracle), want)
+
+    # every rung (per-query/batch x oracle/Pallas): scoring through valid=
+    # is bit-identical to hand-masking the ids on the same path, masked
+    # slots are exactly +inf where the masked oracle says so, and finite
+    # keys match the oracle at the kernel suite's tolerance
+    for fn in (ops.frontier_keys, ops.frontier_keys_batch):
+        for use_kernel in (False, True):
+            got = np.asarray(
+                fn(ids, qn, g.vectors, use_kernel=use_kernel, valid=valid)
+            )
+            pre = np.asarray(
+                fn(masked_ids, qn, g.vectors, use_kernel=use_kernel)
+            )
+            np.testing.assert_array_equal(got, pre)
+            np.testing.assert_array_equal(np.isinf(got), ~fin)
+            np.testing.assert_allclose(
+                got[fin], want[fin], rtol=3e-4, atol=3e-4
+            )
+
+
+def test_premode_search_bit_identical_to_masked_oracle(fdb, fidx):
+    """filter_mode="pre" + g.fmask is the same search as folding the mask
+    into ``alive`` (tombstone semantics) — ids AND distances, bit-exact."""
+    from repro.index.search import search
+
+    data, centers, assign, rvals = fdb
+    filt = FilterSpec(attrs={"cluster": tuple(str(c) for c in range(8))})
+    mask = fidx.attributes.compile_mask(filt)
+    q = _fqueries(centers, nq=6, seed=3)
+    gt = oracle_topk(fidx.graph, q, fidx.search_cfg, valid=jnp.asarray(mask))
+
+    cfg = dataclasses.replace(
+        fidx.search_cfg,
+        filter_mode="pre", patience=0, precision="fp32",
+        use_distance_kernel=False,
+    )
+    g = attach_mask(fidx.graph, jnp.asarray(mask))
+    ef = jnp.full((q.shape[0],), cfg.ef_cap, jnp.int32)
+    res = search(g, jnp.asarray(q), ef, cfg)
+    np.testing.assert_array_equal(np.asarray(res.ids), gt)
+
+
+def test_oracle_topk_valid_mask_changes_ground_truth(fdb, fidx):
+    """Satellite fix: GT builders must grade filtered queries against
+    *filtered* ground truth — the valid= mask is honored, and a graph
+    already carrying fmask folds it automatically."""
+    data, centers, assign, rvals = fdb
+    q = _fqueries(centers, nq=4, seed=7)
+    mask = np.asarray(assign != 0)  # exclude the query cluster entirely
+    plain = oracle_topk(fidx.graph, q, fidx.search_cfg)
+    masked = oracle_topk(fidx.graph, q, fidx.search_cfg, valid=jnp.asarray(mask))
+    assert not np.array_equal(plain, masked)
+    assert mask[masked[masked >= 0]].all()  # every graded id passes the mask
+    # fmask-carrying graph == explicit valid=, with no extra plumbing
+    via_fmask = oracle_topk(
+        attach_mask(fidx.graph, jnp.asarray(mask)), q, fidx.search_cfg
+    )
+    np.testing.assert_array_equal(masked, via_fmask)
+
+
+# --------------------------------------------------------------------------
+# planner lowering: selectivity estimate -> pre vs post, explain record
+# --------------------------------------------------------------------------
+
+
+def test_planner_picks_pre_for_selective_filters(fidx):
+    plan = fidx.plan(SearchSpec(filter=FilterSpec(attrs={"cluster": ("0",)})))
+    d = plan.explain()["filter"]
+    assert d["mode"] == "pre" and not d["pinned"]
+    assert d["selectivity_estimate"] < 0.5
+    assert plan.search_cfg.filter_mode == "pre"
+    assert FilterSpec.from_dict(d["spec"]) == FilterSpec(
+        attrs={"cluster": ("0",)}
+    )
+    assert plan.explain()["search"]["filter_mode"] == "pre"
+
+
+def test_planner_picks_post_overquery_for_broad_filters(fidx):
+    filt = FilterSpec(ranges={"r": (0.0, 0.95)})
+    plan = fidx.plan(SearchSpec(filter=filt, mode="routed"))
+    d = plan.explain()["filter"]
+    assert d["mode"] == "post"
+    assert d["selectivity_estimate"] > 0.5
+    # overquery: ef_margin inflated toward 1/selectivity
+    assert d["ef_inflation"] == pytest.approx(
+        1.0 / d["selectivity_estimate"], rel=1e-6
+    )
+    assert plan.router_cfg.ef_margin >= d["ef_inflation"]
+    assert plan.search_cfg.filter_mode == "post"
+    # ...but the fused oneshot path has no overquery seam: forced to pre
+    one = fidx.plan(SearchSpec(filter=filt))
+    assert one.explain()["filter"]["mode"] == "pre"
+    assert any("oneshot" in n for n in one.explain()["notes"])
+
+
+def test_filter_without_store(fdb):
+    data, centers, assign, rvals = fdb
+    idx = build_ada_index(
+        data[:400], k=5, target_recall=0.9, m=6, ef_construction=40,
+        ef_cap=64, num_samples=16,
+    )
+    # attribute predicates need a store
+    with pytest.raises(FilterCompileError, match="attach_attributes"):
+        idx.plan(SearchSpec(filter=FilterSpec(tenant="a")))
+    # ...but positional id_range works storeless (exact selectivity)
+    plan = idx.plan(SearchSpec(filter=FilterSpec(id_range=(0, 40))))
+    d = plan.explain()["filter"]
+    assert d["mode"] == "pre"
+    assert d["selectivity_estimate"] == pytest.approx(0.1)
+    res = plan.search(_fqueries(centers, nq=4, seed=1))
+    ids = np.asarray(res.ids)
+    assert (ids[ids >= 0] < 40).all()
+
+
+def test_filtered_plans_cache_by_spec(fidx):
+    a = fidx.plan(SearchSpec(filter=FilterSpec(tenant="t0")))
+    b = fidx.plan(SearchSpec(filter=FilterSpec(tenant="t0")))
+    c = fidx.plan(SearchSpec(filter=FilterSpec(tenant="t1")))
+    assert a is b and c is not a
+
+
+# --------------------------------------------------------------------------
+# the acceptance property: selectivity sweep x seeds, both lowerings
+# --------------------------------------------------------------------------
+
+
+def _sweep_filter(sel, seed):
+    """A mask of ~``sel`` pass fraction that keeps cluster 0 (the query
+    cluster) well-populated with valid rows — predicate correlated with
+    query locality, the regime both lowerings must serve at target."""
+    if sel == 0.01:
+        off = 0.3 * seed
+        return FilterSpec(
+            attrs={"cluster": ("0",)}, ranges={"r": (off, off + 0.4)}
+        )
+    if sel == 0.1:
+        keep = ("0",) + tuple(str(c) for c in range(3 * seed + 1, 3 * seed + 4))
+        return FilterSpec(attrs={"cluster": keep})
+    off = 0.25 * seed if sel == 0.5 else 0.05 * seed
+    return FilterSpec(ranges={"r": (off, off + sel)})
+
+
+@pytest.mark.parametrize("seed", range(3))
+@pytest.mark.parametrize("sel", [0.01, 0.1, 0.5, 0.9])
+def test_filtered_recall_sweep_both_lowerings(fdb, fidx, sel, seed):
+    data, centers, assign, rvals = fdb
+    filt = _sweep_filter(sel, seed)
+    mask = fidx.attributes.compile_mask(filt)
+    assert abs(mask.mean() - sel) < max(0.6 * sel, 0.01)  # construction sanity
+    q = _fqueries(centers, nq=16, seed=seed)
+    gt = oracle_topk(fidx.graph, q, fidx.search_cfg, valid=jnp.asarray(mask))
+    target = fidx.target_recall
+
+    pre = fidx.plan(SearchSpec(
+        filter=filt,
+        overrides=SpecOverrides(
+            search=dataclasses.replace(fidx.search_cfg, filter_mode="pre")
+        ),
+    ))
+    assert pre.search_cfg.filter_mode == "pre"
+    ids_pre = np.asarray(pre.search(q).ids)
+    assert mask[ids_pre[ids_pre >= 0]].all()  # never an invalid result
+    assert _recall(ids_pre, gt) >= target
+
+    post = fidx.plan(SearchSpec(
+        filter=filt, mode="routed",
+        overrides=SpecOverrides(
+            search=dataclasses.replace(fidx.search_cfg, filter_mode="post")
+        ),
+    ))
+    assert post.search_cfg.filter_mode == "post"
+    assert post.explain()["filter"]["pinned"]
+    ids_post = np.asarray(post.search(q).ids)
+    assert mask[ids_post[ids_post >= 0]].all()
+    assert _recall(ids_post, gt) >= target
+
+
+# --------------------------------------------------------------------------
+# mutation: attribute append rides insert; filtered plans revalidate
+# --------------------------------------------------------------------------
+
+
+def test_insert_with_attributes_revalidates_filtered_plan(fdb):
+    data, centers, assign, rvals = fdb
+    idx = build_ada_index(
+        data[:600], k=5, target_recall=0.9, m=6, ef_construction=40,
+        ef_cap=64, num_samples=16,
+    )
+    idx.attach_attributes(tenant=["a" if i % 2 else "b" for i in range(600)])
+    q = _fqueries(centers, nq=4, seed=2)
+    plan = idx.plan(SearchSpec(filter=FilterSpec(tenant="a")))
+    ids0 = np.asarray(plan.search(q).ids)
+    assert (ids0[ids0 >= 0] % 2 == 1).all()  # odd rows are tenant "a"
+
+    idx.insert(data[600:610], attributes={"tenant": ["a"] * 10})
+    res = plan.search(q)  # default on_mutation: revalidated in place
+    assert np.asarray(res.ids).shape == (4, 5)
+    assert idx.attributes.n == 610
+    # the recompiled mask covers the inserted rows and admits them
+    assert np.asarray(plan._filter_mask()).shape == (610,)
+    assert np.asarray(plan._filter_mask())[600:610].all()
+
+    idx.insert(data[610:615])  # no attributes: never-matching fills
+    assert not np.asarray(plan._filter_mask())[610:615].any()
+    ids2 = np.asarray(plan.search(q).ids)
+    assert not np.isin(ids2, np.arange(610, 615)).any()
+
+
+def test_insert_attributes_without_store_raises(fdb):
+    from repro.index import IndexMutationError
+
+    data, centers, assign, rvals = fdb
+    idx = build_ada_index(
+        data[:300], k=5, target_recall=0.9, m=6, ef_construction=40,
+        ef_cap=64, num_samples=16,
+    )
+    with pytest.raises(IndexMutationError):
+        idx.insert(data[300:305], attributes={"tenant": ["a"] * 5})
+
+
+# --------------------------------------------------------------------------
+# multi-tenancy: SLO resolution, admission quotas, bounded metric labels
+# --------------------------------------------------------------------------
+
+
+class FakeClock:
+    def __init__(self, t: float = 0.0):
+        self.t = t
+
+    def __call__(self) -> float:
+        return self.t
+
+    def advance(self, dt: float) -> None:
+        self.t += dt
+
+
+def test_tenant_slo_resolution(small_db, small_index):
+    clock = FakeClock(5.0)
+    sched = AdaServeScheduler(
+        small_index.router(RouterConfig()),
+        SchedulerConfig(
+            fill=64,
+            tenants={"gold": TenantSLO(target_recall=0.95, deadline_s=2.0)},
+        ),
+        default_target_recall=0.9,
+        clock=clock,
+    )
+    q = _queries(small_db, nq=3, seed=41)
+    t_slo = sched.submit(SearchRequest(query=q[0], tenant="gold"))
+    assert t_slo.deadline_t == pytest.approx(7.0)  # SLO deadline applied
+    t_req = sched.submit(
+        SearchRequest(query=q[1], tenant="gold", deadline_s=0.5)
+    )
+    assert t_req.deadline_t == pytest.approx(5.5)  # request wins over SLO
+    t_def = sched.submit(SearchRequest(query=q[2]))
+    assert t_def.deadline_t is None  # default namespace: no SLO deadline
+    by_uid = {r.ticket.uid: r for r in sched.drain()}
+    assert by_uid[t_slo.uid].stats.tenant == "gold"
+    assert by_uid[t_def.uid].stats.tenant == ""
+
+
+def test_tenant_quota_prevents_cross_tenant_starvation(small_db, small_index):
+    sched = AdaServeScheduler(
+        small_index.router(RouterConfig()),
+        SchedulerConfig(
+            fill=64, tenants={"noisy": TenantSLO(max_inflight=2)}
+        ),
+        default_target_recall=0.9,
+    )
+    q = _queries(small_db, nq=8, seed=43)
+    sched.submit(SearchRequest(query=q[0], tenant="noisy"))
+    sched.submit(SearchRequest(query=q[1], tenant="noisy"))
+    with pytest.raises(OverloadedError, match="tenant"):
+        sched.submit(SearchRequest(query=q[2], tenant="noisy"))
+    # the saturating tenant does not consume the other tenants' headroom
+    sched.submit(SearchRequest(query=q[3], tenant="quiet"))
+    sched.submit(SearchRequest(query=q[4]))
+    responses = sched.drain()
+    assert len(responses) == 4
+    assert all(r.status != "rejected" for r in responses)
+    # quota frees when the tenant's requests reach a terminal state
+    sched.submit(SearchRequest(query=q[5], tenant="noisy"))
+    assert len(sched.drain()) == 1
+
+
+def test_tenant_quota_ticket_mode_and_metric_labels(small_db, small_index):
+    sched = AdaServeScheduler(
+        small_index.router(RouterConfig()),
+        SchedulerConfig(
+            fill=64, overload="ticket",
+            tenants={"gold": TenantSLO(max_inflight=1)},
+        ),
+        default_target_recall=0.9,
+    )
+    q = _queries(small_db, nq=4, seed=47)
+    t0 = sched.submit(SearchRequest(query=q[0], tenant="gold"))
+    t_shed = sched.submit(SearchRequest(query=q[1], tenant="gold"))
+    sched.submit(SearchRequest(query=q[2]))              # default namespace
+    sched.submit(SearchRequest(query=q[3], tenant="rando"))  # unconfigured
+    by_uid = {r.ticket.uid: r for r in sched.drain()}
+    shed = by_uid[t_shed.uid]
+    assert shed.status == "rejected" and shed.stats.tenant == "gold"
+    assert by_uid[t0.uid].status == "ok"
+
+    # bounded label cardinality: configured names + "default" + "other"
+    req = sched.metrics.as_dict()["requests"]
+    assert req['{tenant="gold"}'] == 2
+    assert req['{tenant="default"}'] == 1
+    assert req['{tenant="other"}'] == 1
+    e2e = sched.metrics.as_dict()["request_e2e_s"]
+    assert any('tenant="gold"' in k for k in e2e)
+    text = sched.metrics.render_prometheus()
+    assert 'requests{tenant="gold"} 2' in text
+    assert 'tenant="rando"' not in text  # unconfigured never mints a label
+
+
+def test_plan_submits_carry_filter_tenant(fdb, fidx):
+    data, centers, assign, rvals = fdb
+    plan = fidx.plan(
+        SearchSpec(filter=FilterSpec(tenant="t0"), mode="streaming")
+    )
+    q = _fqueries(centers, nq=2, seed=6)
+    tickets = [plan.submit(row) for row in q]
+    plan.flush()
+    by_uid = {r.ticket.uid: r for r in plan.poll(block=True)}
+    mask = fidx.attributes.compile_mask(FilterSpec(tenant="t0"))
+    for t in tickets:
+        r = by_uid[t.uid]
+        assert r.stats.tenant == "t0"  # the spec's tenant rides the request
+        ids = np.asarray(r.ids)
+        assert mask[ids[ids >= 0]].all()
+
+
+def test_explain_lists_configured_tenants(fidx):
+    plan = fidx.plan(SearchSpec(
+        mode="streaming",
+        overrides=SpecOverrides(
+            scheduler=SchedulerConfig(
+                tenants={"b": TenantSLO(), "a": TenantSLO(max_inflight=2)}
+            )
+        ),
+    ))
+    assert plan.explain()["scheduler"]["tenants"] == ["a", "b"]
